@@ -1,0 +1,48 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class MeshShim:
+    """Stand-in with the (axis_names, devices.shape) interface that the
+    analytic transfer-cost model needs — lets the Tables 2–3 benchmark sweep
+    Cori-scale node counts on a 1-CPU container without building real
+    device meshes."""
+
+    shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+
+    class _Dev:
+        def __init__(self, shape):
+            self.shape = shape
+            n = 1
+            for s in shape:
+                n *= s
+            self.size = n
+
+    @property
+    def devices(self):
+        return MeshShim._Dev(self.shape)
+
+
+def timeit(fn: Callable[[], None], *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds over repeats."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,87 @@
+"""Paper Table 1: matrix multiplication, Spark vs Spark+Alchemist.
+
+The paper multiplies m x n by n x k dense matrices (dims in the thousands,
+up to 144 GB results) on up to 4 Cori nodes; Spark's explode-and-shuffle
+BlockMatrix path takes 160–809 s where it completes at all, and fails on
+multi-node runs, while Alchemist's Send/Compute/Receive totals stay under
+~310 s.
+
+Here: the same operand *aspect ratios* scaled to container size, measured
+three ways —
+  (1) wall-clock on this container for both paths,
+  (2) the Spark-side overhead model (stages, tasks, shuffle bytes) projected
+      onto the paper's cluster constants,
+  (3) the engine's Send/Compute/Receive split, the paper's own reporting
+      format.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+import repro
+from benchmarks.common import csv_row
+from repro.sparklike import IndexedRowMatrix, SparkLikeContext, mllib
+
+
+# paper dims scaled by /40 -> container-size operands with the same aspect
+CASES = [
+    (10_000, 10_000, 10_000),
+    (50_000, 10_000, 30_000),
+    (100_000, 10_000, 70_000),
+]
+SCALE = 40  # m up to 2500: numpy GEMM ~0.1-0.5 s, Spark-path overheads visible
+
+
+def run(report: List[str]) -> None:
+    rng = np.random.default_rng(0)
+    engine = repro.AlchemistEngine()
+
+    for m_k, n_k, k_k in CASES:
+        m, n, k = (max(d // SCALE, 8) for d in (m_k, n_k, k_k))
+        a = rng.standard_normal((m, n)).astype(np.float64)
+        b = rng.standard_normal((n, k)).astype(np.float64)
+
+        # --- Spark path (the paper's explode-shuffle-multiply recipe) ---
+        ctx = SparkLikeContext(num_partitions=4)
+        ir_a = IndexedRowMatrix.from_numpy(ctx, a)
+        ir_b = IndexedRowMatrix.from_numpy(ctx, b)
+        ctx.reset_stats()
+        t0 = time.perf_counter()
+        c_spark = mllib.multiply(ir_a, ir_b, block_size=max(m // 8, 16))
+        t_spark = time.perf_counter() - t0
+        spark_stats = ctx.stats
+        modeled_spark = ctx.modeled_seconds(mllib.gemm_flops(m, n, k))
+
+        # --- Alchemist path ---
+        ac = repro.AlchemistContext(engine, name="gemm_bench")
+        ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+        ha = ac.send(a.astype(np.float32), name="A")
+        hb = ac.send(b.astype(np.float32), name="B")
+        ac.run("elemental", "gemm", ha, hb)  # warm the jit cache: the paper's
+        # MPI side is a persistent server; one-time compile is not per-call cost
+        t0 = time.perf_counter()
+        ha2 = ac.send(a.astype(np.float32), name="A2")
+        hb2 = ac.send(b.astype(np.float32), name="B2")
+        hc = ac.run("elemental", "gemm", ha2, hb2)
+        c_alch = np.asarray(ac.collect(hc))
+        t_alch = time.perf_counter() - t0
+        s = ac.stats.summary()
+        ac.stop()
+
+        assert np.allclose(c_alch, c_spark.to_numpy(), atol=1e-2), "paths disagree"
+
+        name = f"gemm_table1_m{m_k//1000}k_n{n_k//1000}k_k{k_k//1000}k"
+        derived = (
+            f"spark_wall_s={t_spark:.3f};alchemist_wall_s={t_alch:.3f};"
+            f"speedup={t_spark/max(t_alch,1e-9):.1f}x;"
+            f"spark_modeled_cori_s={modeled_spark:.1f};"
+            f"send_s={s['send_seconds']:.3f};compute_s={s['compute_seconds']:.3f};"
+            f"recv_s={s['recv_seconds']:.3f};"
+            f"spark_shuffle_MB={spark_stats.shuffle_bytes/1e6:.1f};"
+            f"spark_stages={spark_stats.stages}"
+        )
+        report.append(csv_row(name, t_alch * 1e6, derived))

@@ -1,0 +1,45 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  gemm_table1        Table 1  (matrix multiply, Spark vs Spark+Alchemist)
+  svd_fig34          Figs 3-4 (rank-20 truncated SVD + overhead split)
+  transfer_tables23  Tables 2-3 (tall-skinny vs short-wide transfers)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only gemm|svd|transfer]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=("gemm", "svd", "transfer"))
+    args = ap.parse_args()
+
+    from benchmarks import gemm_table1, svd_fig34, transfer_tables23
+
+    suites = {
+        "gemm": gemm_table1.run,
+        "svd": svd_fig34.run,
+        "transfer": transfer_tables23.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    report: List[str] = ["name,us_per_call,derived"]
+    t0 = time.perf_counter()
+    for name, fn in suites.items():
+        sys.stderr.write(f"[benchmarks] running {name} ...\n")
+        fn(report)
+    sys.stderr.write(f"[benchmarks] done in {time.perf_counter()-t0:.1f}s\n")
+    print("\n".join(report))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Paper Figures 3–4: rank-20 truncated SVD, Spark vs Spark+Alchemist.
+
+Paper setup: m x 10,000 matrices (m up to 5e6; 25–400 GB), rank 20, on 22
+Spark + 8 Alchemist Cori nodes; Spark fails the 30-minute limit for all but
+the smallest matrix, Alchemist completes all with transfer overhead ≈ 20 %
+of total runtime (Fig. 3).
+
+Here: the same column count *aspect* scaled down; the reproduced claims —
+  (a) engine completes with send+receive overhead a modest fraction of
+      total (Fig. 3's decomposition, printed as a fraction),
+  (b) the MLlib-style path's driver-synchronized matvec loop costs far more
+      in modeled cluster time (Fig. 4's gap),
+  (c) both agree with numpy sigmas (correctness).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+import repro
+from benchmarks.common import csv_row
+from repro.sparklike import IndexedRowMatrix, SparkLikeContext, mllib
+
+ROWS = [8_000, 16_000]  # paper: 312k..5M rows x 10k cols, scaled /~300
+COLS = 256              # keeps CPU runtime civil; aspect stays tall-skinny
+RANK = 20
+
+
+def _decaying(rng, m, n, decay=0.9):
+    u, _ = np.linalg.qr(rng.standard_normal((m, n)))
+    v, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    s = decay ** np.arange(n) * 100
+    return ((u * s) @ v.T).astype(np.float64)
+
+
+def run(report: List[str]) -> None:
+    rng = np.random.default_rng(1)
+    engine = repro.AlchemistEngine()
+
+    for m in ROWS:
+        a = _decaying(rng, m, COLS)
+        s_ref = np.linalg.svd(a, compute_uv=False)[:RANK]
+
+        # --- Spark+Alchemist (steady state: the engine is a persistent
+        # server; jit compile is one-time, like the paper's compiled MPI) ---
+        ac = repro.AlchemistContext(engine, name="svd_bench")
+        ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+        warm = ac.send(a.astype(np.float32))
+        ac.run("elemental", "truncated_svd", warm, k=RANK)
+        ac.free(warm)
+        t0 = time.perf_counter()
+        ha = ac.send(a.astype(np.float32))
+        hu, sig, hv = ac.run("elemental", "truncated_svd", ha, k=RANK)
+        u_back = np.asarray(ac.collect(hu))
+        t_alch = time.perf_counter() - t0
+        stats = ac.stats.summary()
+        overhead_frac = (
+            (stats["send_seconds"] + stats["recv_seconds"]) / max(t_alch, 1e-9)
+        )
+        ac.stop()
+        assert np.allclose(sig, s_ref, rtol=5e-2), "engine sigmas off"
+
+        # --- Spark MLlib-style ---
+        ctx = SparkLikeContext(num_partitions=4)
+        ir = IndexedRowMatrix.from_numpy(ctx, a)
+        ctx.reset_stats()
+        t0 = time.perf_counter()
+        _, sig_s, _ = mllib.compute_svd(ir, RANK)
+        t_spark = time.perf_counter() - t0
+        modeled_spark = ctx.modeled_seconds(mllib.svd_flops(m, COLS, RANK + 10))
+        assert np.allclose(sig_s, s_ref, rtol=5e-2), "mllib sigmas off"
+
+        # modeled at the paper's full scale (5e6 x 1e4, rank 20, Cori):
+        # MPI side: flops at 8 nodes x 0.5 TF sustained + 400 GB transfer at
+        # ~1.25 GB/s/node over 22 sender nodes; Spark side: same flops at 22
+        # executor nodes plus per-iteration driver sync + stage overheads.
+        full_flops = mllib.svd_flops(5_000_000, 10_000, RANK + 10)
+        alch_modeled = full_flops / (8 * 5e11) + 400e9 / (1.25e9 * 22)
+        spark_modeled_full = full_flops / (22 * 5e11) + (RANK + 10) * 2 * (
+            0.1 + 22 * 0.005 + 0.02
+        ) + (RANK + 10) * 400e9 / (1.25e9 * 22)  # re-reads A per matvec epoch
+
+        name = f"svd_fig34_m{m}"
+        derived = (
+            f"alchemist_wall_s={t_alch:.3f};overhead_frac={overhead_frac:.2f};"
+            f"spark_wall_s={t_spark:.3f};"
+            f"spark_modeled_cori_s={modeled_spark:.1f};"
+            f"alch_modeled_cori_full_s={alch_modeled:.0f};"
+            f"spark_modeled_cori_full_s={spark_modeled_full:.0f};"
+            f"driver_syncs={ctx.stats.driver_syncs};"
+            f"send_s={stats['send_seconds']:.3f};compute_s={stats['compute_seconds']:.3f};"
+            f"recv_s={stats['recv_seconds']:.3f}"
+        )
+        report.append(csv_row(name, t_alch * 1e6, derived))

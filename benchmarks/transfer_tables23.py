@@ -1,0 +1,67 @@
+"""Paper Tables 2–3: 400 GB matrix transfer times, tall-skinny vs short-wide,
+across Spark/Alchemist node splits.
+
+Paper finding: the tall-skinny matrix (5.12e6 x 1e4) transfers *slower and
+with more variance* than the short-wide one (4e4 x 1.28e6) at equal bytes,
+because the wire format streams row-at-a-time — more rows = more messages.
+Short-wide times improve steadily with more Alchemist nodes.
+
+TPU adaptation (DESIGN.md §2): the relayout's analytic cost model exposes
+the same mechanics fabric-natively — message counts and per-message sizes of
+the ROW->GRID redistribution. We sweep worker-grid sizes at the paper's
+exact matrix shapes (no allocation needed: the model is geometric) and
+report bytes moved, messages, row-fragments (the per-row-send analogue),
+and the ICI lower-bound seconds.
+
+A small measured companion runs real relayouts at container scale to tie
+the model to wall-clock.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+import repro
+from benchmarks.common import MeshShim, csv_row
+from repro.core.layouts import GRID, ROW
+from repro.core.relayout import transfer_cost
+
+TALL = (5_120_000, 10_000)   # paper Table 2
+WIDE = (40_000, 1_280_000)   # paper Table 3
+GRIDS = [(8, 8), (8, 16), (16, 16), (16, 32)]  # worker grids to sweep
+
+
+def run(report: List[str]) -> None:
+    # --- analytic sweep at the paper's exact 400 GB shapes -----------------
+    for label, shape in (("tall", TALL), ("wide", WIDE)):
+        for r, c in GRIDS:
+            mesh = MeshShim(shape=(r, c), axis_names=("data", "model"))
+            cost = transfer_cost(shape, "float64", ROW, GRID, mesh)
+            name = f"transfer_t23_{label}_{r}x{c}"
+            derived = (
+                f"GB_moved={cost.bytes_moved/1e9:.1f};messages={cost.messages};"
+                f"row_fragments={cost.row_fragments};"
+                f"max_msg_MB={cost.max_message_bytes/1e6:.2f};"
+                f"ici_lower_bound_s={cost.ici_seconds():.2f}"
+            )
+            report.append(csv_row(name, cost.ici_seconds() * 1e6, derived))
+
+    # --- measured companion at container scale -----------------------------
+    engine = repro.AlchemistEngine()
+    rng = np.random.default_rng(2)
+    for label, (m, n) in (("tall", (16_384, 64)), ("wide", (64, 16_384))):
+        a = rng.standard_normal((m, n)).astype(np.float32)
+        ac = repro.AlchemistContext(engine, name=f"transfer_{label}")
+        t0 = time.perf_counter()
+        h = ac.send(a)
+        t_send = time.perf_counter() - t0
+        rec = ac.stats.transfers[-1]
+        name = f"transfer_measured_{label}_{m}x{n}"
+        derived = (
+            f"send_s={t_send:.4f};bytes={rec.cost.bytes_total};devices=1"
+        )
+        report.append(csv_row(name, t_send * 1e6, derived))
+        ac.stop()

@@ -1,0 +1,26 @@
+"""repro: Alchemist-on-TPU — a JAX offload engine for distributed dense
+linear algebra, embedded in a multi-pod training/serving framework.
+
+Reproduction of: Gittens, Rothauge, et al., "Alchemist: An Apache Spark <=>
+MPI Interface" (CS.DC 2018), adapted from Spark/MPI/Cori to JAX/XLA/TPU.
+
+Public API (mirrors the paper's ACI):
+
+    from repro import AlchemistContext, AlchemistEngine, AlMatrix
+"""
+
+from repro.core.engine import AlchemistContext, AlchemistEngine
+from repro.core.handles import AlMatrix
+from repro.core.layouts import GRID, REPLICATED, ROW, LayoutSpec
+
+__version__ = "1.0.0"
+
+__all__ = [
+    "AlchemistContext",
+    "AlchemistEngine",
+    "AlMatrix",
+    "LayoutSpec",
+    "ROW",
+    "GRID",
+    "REPLICATED",
+]

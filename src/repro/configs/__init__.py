@@ -1,0 +1,24 @@
+"""Architecture configs — one module per assigned architecture, plus the
+paper's own workload configs.
+
+Use :func:`repro.configs.base.get_config` / :func:`list_configs` to resolve
+by ``--arch <id>``.
+"""
+
+from repro.configs.base import (
+    ArchConfig,
+    InputShape,
+    INPUT_SHAPES,
+    get_config,
+    get_input_shape,
+    list_configs,
+)
+
+__all__ = [
+    "ArchConfig",
+    "InputShape",
+    "INPUT_SHAPES",
+    "get_config",
+    "get_input_shape",
+    "list_configs",
+]

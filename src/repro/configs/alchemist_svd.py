@@ -1,0 +1,37 @@
+"""The paper's own workload: truncated SVD / GEMM / transfer matrices (§4).
+
+Not a language model — this config drives the engine benchmarks at the
+paper's matrix shapes (scaled variants selectable for the CPU container).
+"""
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperWorkload:
+    # §4.2: rank-20 SVD of m x 10_000 matrices, m up to 5.12e6 (400 GB f64)
+    svd_rows: Tuple[int, ...] = (312_500, 625_000, 1_250_000, 2_500_000, 5_000_000)
+    svd_cols: int = 10_000
+    svd_rank: int = 20
+    # §4.1 Table 1 (dims in units of 1000)
+    gemm_cases: Tuple[Tuple[int, int, int], ...] = (
+        (10_000, 10_000, 10_000),
+        (50_000, 10_000, 30_000),
+        (100_000, 10_000, 70_000),
+        (300_000, 10_000, 60_000),
+    )
+    # §4.3 Tables 2-3: 400 GB transfer matrices
+    transfer_tall: Tuple[int, int] = (5_120_000, 10_000)
+    transfer_wide: Tuple[int, int] = (40_000, 1_280_000)
+
+    # CPU-container scale factor for wall-clock benchmarks
+    bench_scale: int = 1000  # divide rows by this in local runs
+
+
+CONFIG = PaperWorkload()
+SMOKE = PaperWorkload(
+    svd_rows=(2_000,), svd_cols=64, svd_rank=8,
+    gemm_cases=((256, 128, 192),),
+    transfer_tall=(4_096, 64), transfer_wide=(64, 4_096),
+)

@@ -1,0 +1,38 @@
+"""arctic-480b [moe] — 128 experts top-2 with a dense residual MLP.
+
+Assigned: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128e top-2 + dense residual [hf:Snowflake/snowflake-arctic-base].
+Optimizer moments run bf16: f32 moments for 468B params exceed a single
+v5e pod's HBM (EXPERIMENTS.md §Dry-run memory notes).
+"""
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    arch_id="arctic-480b",
+    family="moe",
+    source="hf:Snowflake/snowflake-arctic-base (Arctic model card)",
+    n_layers=35,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=4864,
+    vocab=32000,
+    moe=MoEConfig(num_experts=128, top_k=2, d_expert=4864, dense_residual=True),
+    optimizer_dtype="bfloat16",
+    sliding_window=4096,
+)
+
+SMOKE = ArchConfig(
+    arch_id="arctic-480b-smoke",
+    family="moe",
+    source=CONFIG.source,
+    n_layers=2,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab=512,
+    moe=MoEConfig(num_experts=4, top_k=2, d_expert=192, dense_residual=True),
+    sliding_window=32,
+)

@@ -1,0 +1,262 @@
+"""Config schema + registry for the assigned architectures and input shapes.
+
+Every architecture from the assignment pool is a module in this package
+defining ``CONFIG`` (exact dims, source cited) and ``SMOKE`` (a reduced
+variant of the same family: <=2 layers, d_model<=512, <=4 experts, used by
+CPU smoke tests). ``get_config(arch_id)`` resolves them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_input_shape(name: str) -> InputShape:
+    try:
+        return INPUT_SHAPES[name]
+    except KeyError:
+        raise KeyError(f"unknown input shape {name!r}; known: {sorted(INPUT_SHAPES)}") from None
+
+
+# ---------------------------------------------------------------------------
+# Architecture config
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                # expert FFN hidden dim
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # arctic: dense MLP in parallel with experts
+    router_aux_weight: float = 0.01
+    every_k_layers: int = 1       # jamba: MoE every 2nd layer
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 64
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One architecture. Dims follow the assignment block verbatim."""
+
+    arch_id: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    source: str                      # citation from the assignment
+    n_layers: int
+    d_model: int
+    n_heads: int                     # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: Optional[int] = None   # defaults to d_model // n_heads
+    qkv_bias: bool = False           # qwen2
+    qk_norm: bool = False            # qwen3
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-5
+    tie_embeddings: bool = False
+    mlp_variant: str = "swiglu"      # "swiglu" (3 mats) | "gelu" (2 mats, whisper)
+    norm_variant: str = "rmsnorm"    # "rmsnorm" | "layernorm" (whisper)
+    pos_emb: str = "rope"            # "rope" | "learned" (whisper decoder)
+
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # hybrid (jamba): one attention layer per `attn_period` layers, rest SSM
+    attn_period: int = 0             # 0 = not hybrid
+    attn_offset: int = 0             # index of the attention layer in a period
+
+    # enc-dec (whisper): encoder depth; n_layers is the decoder depth
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # frames the encoder consumes (stub frontend)
+    decoder_max_seq: int = 0         # whisper decoder context (448)
+
+    # vlm (internvl): patch embeddings prepended to the token sequence
+    vision_tokens: int = 0
+
+    # sliding-window attention (enables long_500k for dense archs)
+    sliding_window: Optional[int] = None
+
+    # dtype policy
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    optimizer_dtype: str = "float32"  # moment dtype (arctic uses bf16)
+
+    # vocab padding for even sharding (beyond-paper optimization; None = faithful)
+    pad_vocab_to_multiple: Optional[int] = None
+
+    # MoE expert-weight sharding: False = shard D (ZeRO-style; decode must
+    # all-gather weights), True = shard the expert FF dim (Megatron-in-expert;
+    # decode reduces activations instead — the arctic hillclimb variant)
+    moe_shard_expert_ff: bool = False
+
+    def __post_init__(self):
+        if self.n_heads and self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def padded_vocab(self) -> int:
+        if not self.pad_vocab_to_multiple:
+            return self.vocab
+        m = self.pad_vocab_to_multiple
+        return ((self.vocab + m - 1) // m) * m
+
+    # ---- parameter counting (for roofline MODEL_FLOPS = 6·N·D) -------------
+    def param_count(self, active_only: bool = False) -> int:
+        """Total (or active-per-token) parameter count, embeddings included."""
+        d = self.d_model
+        n = 0
+        # embeddings (+ untied head)
+        n += self.vocab * d
+        if not self.tie_embeddings:
+            n += self.vocab * d
+
+        def attn_params() -> int:
+            hd = self.head_dim or 0
+            p = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+            if self.qkv_bias:
+                p += (self.n_heads + 2 * self.n_kv_heads) * hd
+            if self.qk_norm:
+                p += 2 * hd
+            return p
+
+        def mlp_params(ff: int) -> int:
+            return (3 if self.mlp_variant == "swiglu" else 2) * d * ff
+
+        def moe_params(active: bool) -> int:
+            assert self.moe is not None
+            e = self.moe.top_k if active else self.moe.num_experts
+            p = e * 3 * d * self.moe.d_expert + d * self.moe.num_experts  # + router
+            if self.moe.dense_residual:
+                p += mlp_params(self.d_ff)
+            return p
+
+        def ssm_params() -> int:
+            assert self.ssm is not None
+            di = self.ssm.d_inner(d)
+            g, s = self.ssm.n_groups, self.ssm.d_state
+            nh = self.ssm.n_heads(d)
+            p = d * (2 * di + 2 * g * s + nh)       # in_proj (x, z, B, C, dt)
+            p += self.ssm.conv_width * (di + 2 * g * s)  # conv over x,B,C
+            p += nh * 2                              # A_log, D skip
+            p += di * d                              # out_proj
+            p += di                                  # gated norm scale
+            return p
+
+        per_layer_norms = 2 * d
+        for layer in range(self.n_layers):
+            n += per_layer_norms
+            if self.family == "ssm":
+                n += ssm_params()
+                continue
+            is_attn_layer = (
+                self.attn_period == 0 or layer % self.attn_period == self.attn_offset
+            )
+            n += attn_params() if is_attn_layer else ssm_params()
+            if self.is_enc_dec:
+                n += attn_params() + d  # cross-attention + its norm
+            if self.moe is not None and (layer % max(self.moe.every_k_layers, 1) == (self.moe.every_k_layers - 1) if self.moe.every_k_layers > 1 else True):
+                n += moe_params(active_only)
+            else:
+                n += mlp_params(self.d_ff)
+        # encoder stack (attention + MLP per layer, fully dense)
+        for _ in range(self.encoder_layers):
+            n += per_layer_norms + attn_params() + mlp_params(self.d_ff)
+        n += d  # final norm
+        return n
+
+    def supports_shape(self, shape: InputShape) -> Tuple[bool, str]:
+        """(supported, reason-if-not) — encodes the assignment's skip rules."""
+        if shape.name == "long_500k":
+            sub_quadratic = (
+                self.family in ("ssm", "hybrid") or self.sliding_window is not None
+            )
+            if self.is_enc_dec:
+                return False, (
+                    "enc-dec audio model: decoder context is hard-capped at "
+                    f"{self.decoder_max_seq} tokens (30s audio window); a 524k-token "
+                    "decode is undefined for this architecture (DESIGN.md §5)"
+                )
+            if not sub_quadratic:
+                return False, "full-attention arch without sliding-window variant"
+        return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+ARCH_IDS = (
+    "whisper-large-v3",
+    "qwen2-1.5b",
+    "deepseek-coder-33b",
+    "qwen3-14b",
+    "internvl2-26b",
+    "olmoe-1b-7b",
+    "mamba2-130m",
+    "jamba-v0.1-52b",
+    "arctic-480b",
+    "deepseek-7b",
+    # paper's own workload (not an LM): engine linear-algebra config
+    "alchemist-svd",
+)
+
+_MODULES = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch_id: str, *, smoke: bool = False) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+    return getattr(mod, "SMOKE" if smoke else "CONFIG")
+
+
+def list_configs() -> Tuple[str, ...]:
+    return ARCH_IDS

@@ -1,0 +1,34 @@
+"""deepseek-7b [dense] — llama-arch, full MHA (kv = heads).
+
+Assigned: 30L d_model=4096 32H (GQA kv=32) d_ff=11008 vocab=102400
+[arXiv:2401.02954].
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="deepseek-7b",
+    family="dense",
+    source="arXiv:2401.02954 (DeepSeek LLM); hf:deepseek-ai/deepseek-llm-7b-base",
+    n_layers=30,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=11008,
+    vocab=102400,
+    rope_theta=10_000.0,
+    sliding_window=4096,
+)
+
+SMOKE = ArchConfig(
+    arch_id="deepseek-7b-smoke",
+    family="dense",
+    source=CONFIG.source,
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=512,
+    vocab=512,
+    sliding_window=32,
+)

@@ -1,0 +1,34 @@
+"""deepseek-coder-33b [dense] — llama-arch GQA.
+
+Assigned: 62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256
+[arXiv:2401.14196].
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="deepseek-coder-33b",
+    family="dense",
+    source="arXiv:2401.14196 (DeepSeek-Coder); hf:deepseek-ai/deepseek-coder-33b-base",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=19200,
+    vocab=32256,
+    rope_theta=100_000.0,
+    sliding_window=4096,
+)
+
+SMOKE = ArchConfig(
+    arch_id="deepseek-coder-33b-smoke",
+    family="dense",
+    source=CONFIG.source,
+    n_layers=2,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=704,
+    vocab=512,
+    sliding_window=32,
+)

@@ -1,0 +1,38 @@
+"""internvl2-26b [vlm] — InternViT (stub) + InternLM2 language backbone.
+
+Assigned: 48L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=92553
+[arXiv:2404.16821]. The ViT + MLP projector is a stub per the assignment
+carve-out: ``input_specs()`` provides 1024 precomputed patch embeddings
+prepended to the token sequence.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="internvl2-26b",
+    family="vlm",
+    source="arXiv:2404.16821 (InternVL2); hf:OpenGVLab/InternVL2-26B",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    rope_theta=1_000_000.0,
+    vision_tokens=1024,
+    sliding_window=4096,
+)
+
+SMOKE = ArchConfig(
+    arch_id="internvl2-26b-smoke",
+    family="vlm",
+    source=CONFIG.source,
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=512,
+    vocab=512,
+    vision_tokens=16,
+    sliding_window=32,
+)

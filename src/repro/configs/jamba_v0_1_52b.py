@@ -1,0 +1,40 @@
+"""jamba-v0.1-52b [hybrid] — Mamba + attention 1:7 interleave, 16e top-2 MoE.
+
+Assigned: 32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536,
+MoE 16e top-2 [arXiv:2403.19887]. Period-8 blocks with the attention layer
+at in-block index 4; MoE replaces the MLP on every second layer.
+"""
+
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    arch_id="jamba-v0.1-52b",
+    family="hybrid",
+    source="arXiv:2403.19887 (Jamba); hf:ai21labs/Jamba-v0.1",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=65536,
+    moe=MoEConfig(num_experts=16, top_k=2, d_expert=14336, every_k_layers=2),
+    ssm=SSMConfig(d_state=128, expand=2, head_dim=64, n_groups=1, conv_width=4),
+    attn_period=8,
+    attn_offset=4,
+)
+
+SMOKE = ArchConfig(
+    arch_id="jamba-v0.1-52b-smoke",
+    family="hybrid",
+    source=CONFIG.source,
+    n_layers=4,            # one period of 4 with attn at index 2
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=512,
+    vocab=512,
+    moe=MoEConfig(num_experts=4, top_k=2, d_expert=512, every_k_layers=2),
+    ssm=SSMConfig(d_state=32, expand=2, head_dim=32, n_groups=1, conv_width=4),
+    attn_period=4,
+    attn_offset=2,
+)

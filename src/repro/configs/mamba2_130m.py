@@ -1,0 +1,35 @@
+"""mamba2-130m [ssm] — SSD (state-space duality), attention-free.
+
+Assigned: 24L d_model=768 (attn-free) d_ff=0 vocab=50280, ssm_state=128
+[arXiv:2405.21060].
+"""
+
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    arch_id="mamba2-130m",
+    family="ssm",
+    source="arXiv:2405.21060 (Mamba-2/SSD); hf:state-spaces/mamba2-130m",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50280,
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, expand=2, head_dim=64, n_groups=1, conv_width=4),
+)
+
+SMOKE = ArchConfig(
+    arch_id="mamba2-130m-smoke",
+    family="ssm",
+    source=CONFIG.source,
+    n_layers=2,
+    d_model=256,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=512,
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=32, expand=2, head_dim=32, n_groups=1, conv_width=4),
+)

@@ -1,0 +1,37 @@
+"""olmoe-1b-7b [moe] — 64 experts, top-8.
+
+Assigned: 16L d_model=2048 16H (GQA kv=16) d_ff=1024 vocab=50304,
+MoE 64e top-8 [arXiv:2409.02060]. d_ff is the per-expert FFN dim.
+"""
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    arch_id="olmoe-1b-7b",
+    family="moe",
+    source="arXiv:2409.02060 (OLMoE); hf:allenai/OLMoE-1B-7B-0924",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab=50304,
+    qk_norm=True,
+    moe=MoEConfig(num_experts=64, top_k=8, d_expert=1024),
+    sliding_window=4096,
+)
+
+SMOKE = ArchConfig(
+    arch_id="olmoe-1b-7b-smoke",
+    family="moe",
+    source=CONFIG.source,
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    vocab=512,
+    qk_norm=True,
+    moe=MoEConfig(num_experts=4, top_k=2, d_expert=128),
+    sliding_window=32,
+)

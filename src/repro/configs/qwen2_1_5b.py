@@ -1,0 +1,38 @@
+"""qwen2-1.5b [dense] — GQA with QKV bias.
+
+Assigned: 28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936
+[arXiv:2407.10671].
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen2-1.5b",
+    family="dense",
+    source="arXiv:2407.10671 (Qwen2); hf:Qwen/Qwen2-1.5B",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    sliding_window=4096,    # enables long_500k (variant flag; off for train)
+)
+
+SMOKE = ArchConfig(
+    arch_id="qwen2-1.5b-smoke",
+    family="dense",
+    source=CONFIG.source,
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=512,
+    vocab=512,
+    qkv_bias=True,
+    tie_embeddings=True,
+    sliding_window=32,
+)

@@ -1,0 +1,38 @@
+"""qwen3-14b [dense] — GQA with per-head qk-norm.
+
+Assigned: 40L d_model=5120 40H (GQA kv=8) d_ff=17408 vocab=151936
+[hf:Qwen/Qwen3-8B family].
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen3-14b",
+    family="dense",
+    source="hf:Qwen/Qwen3-14B (Qwen3 family card)",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=17408,
+    vocab=151936,
+    qk_norm=True,
+    head_dim=128,
+    rope_theta=1_000_000.0,
+    sliding_window=4096,
+)
+
+SMOKE = ArchConfig(
+    arch_id="qwen3-14b-smoke",
+    family="dense",
+    source=CONFIG.source,
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=512,
+    vocab=512,
+    qk_norm=True,
+    head_dim=64,
+    sliding_window=32,
+)

@@ -1,0 +1,46 @@
+"""whisper-large-v3 [audio] — enc-dec transformer, conv/mel frontend stubbed.
+
+Assigned: 32L d_model=1280 20H (GQA kv=20) d_ff=5120 vocab=51866
+[arXiv:2212.04356]. 32 encoder + 32 decoder layers; the mel-spectrogram +
+conv feature extractor is a stub per the assignment carve-out —
+``input_specs()`` provides the 1500 precomputed frame embeddings.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="whisper-large-v3",
+    family="audio",
+    source="arXiv:2212.04356 (Whisper); hf:openai/whisper-large-v3",
+    n_layers=32,            # decoder depth
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,          # full MHA
+    d_ff=5120,
+    vocab=51866,
+    mlp_variant="gelu",
+    norm_variant="layernorm",
+    pos_emb="learned",
+    rope_theta=0.0,
+    encoder_layers=32,
+    encoder_seq=1500,       # 30 s of audio at 50 frames/s after conv stub
+    decoder_max_seq=448,
+)
+
+SMOKE = ArchConfig(
+    arch_id="whisper-large-v3-smoke",
+    family="audio",
+    source=CONFIG.source,
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=512,
+    vocab=512,
+    mlp_variant="gelu",
+    norm_variant="layernorm",
+    pos_emb="learned",
+    encoder_layers=2,
+    encoder_seq=64,
+    decoder_max_seq=64,
+)

@@ -1,0 +1,38 @@
+"""core — the Alchemist engine: the paper's primary contribution, in JAX.
+
+Pieces (paper terminology in brackets):
+
+- ``engine.py``     — :class:`AlchemistEngine` (the Alchemist server: driver +
+                      worker pool) and :class:`AlchemistContext` (the ACI, the
+                      client-side handle a "Spark application" holds).
+- ``session.py``    — per-client sessions with dedicated worker groups
+                      [dedicated MPI communicator per connected application].
+- ``handles.py``    — :class:`AlMatrix` matrix handles [AlMatrix proxies].
+- ``layouts.py``    — layout descriptors: row-partitioned [Spark
+                      IndexedRowMatrix], 2D grid [Elemental DistMatrix],
+                      replicated; block-cyclic emulation.
+- ``relayout.py``   — the bridge itself: resharding between layouts
+                      [TCP socket transfer between executors and workers],
+                      plus an analytic transfer-cost model [Tables 2–3].
+- ``registry.py``   — dynamic library registry [ALI shared objects].
+- ``params.py``     — typed scalar parameter packing [Parameters header].
+- ``sharding.py``   — mesh-axis conventions shared by the whole framework.
+- ``errors.py``     — structured error hierarchy.
+"""
+
+from repro.core.engine import AlchemistContext, AlchemistEngine
+from repro.core.handles import AlMatrix
+from repro.core.layouts import GRID, REPLICATED, ROW, LayoutSpec
+from repro.core.registry import Library, Routine
+
+__all__ = [
+    "AlchemistEngine",
+    "AlchemistContext",
+    "AlMatrix",
+    "LayoutSpec",
+    "ROW",
+    "GRID",
+    "REPLICATED",
+    "Library",
+    "Routine",
+]

@@ -1,0 +1,276 @@
+"""AlchemistEngine (the server) and AlchemistContext (the ACI, client side).
+
+Paper §2/§3: Alchemist runs as a driver + worker-pool server; a Spark
+application connects through the Alchemist-Client Interface, requests a
+number of workers, registers the MPI libraries it needs, ships matrices over,
+invokes routines by (library, routine) name, and collects results back.
+
+TPU adaptation (DESIGN.md §2): the server's worker pool is the device set of
+a mesh; a worker group is a mesh slice; the socket transfer is a relayout;
+``dlopen`` is import-by-path. The client-visible API is kept nearly
+line-for-line with the paper's Scala listings (§3.3):
+
+    engine = AlchemistEngine()                         # start the server
+    ac = AlchemistContext(engine, num_workers=4)       # connect
+    ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+    al_a = ac.send(A)                                  # RDD -> AlMatrix
+    (al_u, s, al_v) = ac.run("elemental", "truncated_svd", al_a, k=20)
+    U = ac.collect(al_u)                               # AlMatrix -> RDD
+    ac.stop()
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import params as params_codec
+from repro.core.errors import LibraryError, SessionError, WorkerAllocationError
+from repro.core.handles import AlMatrix
+from repro.core.layouts import AXIS_DATA, AXIS_MODEL, GRID, ROW, LayoutSpec
+from repro.core.registry import Library, LibrarySpec, load_library
+from repro.core.relayout import timed_relayout
+from repro.core.session import Session
+
+
+def _near_square_grid(n: int) -> Tuple[int, int]:
+    """Largest divisor pair (r, c), r <= sqrt(n) <= c — Elemental's default
+    process-grid heuristic."""
+    r = int(np.floor(np.sqrt(n)))
+    while n % r:
+        r -= 1
+    return r, n // r
+
+
+class AlchemistEngine:
+    """The Alchemist server: owns the worker (device) pool, hands out
+    sessions with dedicated worker-group mesh slices."""
+
+    def __init__(self, devices: Optional[Sequence[jax.Device]] = None, name: str = "alchemist"):
+        self.name = name
+        self.devices: List[jax.Device] = list(devices if devices is not None else jax.devices())
+        if not self.devices:
+            raise WorkerAllocationError("engine started with an empty device pool")
+        self._free: List[jax.Device] = list(self.devices)
+        self._lock = threading.Lock()
+        self.sessions: Dict[int, Session] = {}
+
+    # -- worker allocation ---------------------------------------------------
+    @property
+    def num_workers(self) -> int:
+        return len(self.devices)
+
+    @property
+    def available_workers(self) -> int:
+        return len(self._free)
+
+    def allocate(
+        self, num_workers: Optional[int] = None, grid: Optional[Tuple[int, int]] = None
+    ) -> Tuple[Mesh, List[jax.Device]]:
+        with self._lock:
+            if grid is not None:
+                r, c = grid
+                n = r * c
+            else:
+                n = num_workers if num_workers is not None else len(self._free)
+                if n <= 0:
+                    raise WorkerAllocationError(f"requested {n} workers")
+                r, c = _near_square_grid(n)
+            if n > len(self._free):
+                raise WorkerAllocationError(
+                    f"requested {n} workers but only {len(self._free)} of "
+                    f"{self.num_workers} are available"
+                )
+            devs = self._free[:n]
+            self._free = self._free[n:]
+        mesh = Mesh(np.asarray(devs, dtype=object).reshape(r, c), (AXIS_DATA, AXIS_MODEL))
+        return mesh, devs
+
+    def release(self, session: Session) -> None:
+        with self._lock:
+            if session.id in self.sessions:
+                del self.sessions[session.id]
+                self._free.extend(session.worker_devices)
+        session.close()
+
+    def connect(
+        self,
+        name: str = "app",
+        num_workers: Optional[int] = None,
+        grid: Optional[Tuple[int, int]] = None,
+    ) -> Session:
+        mesh, devs = self.allocate(num_workers, grid)
+        session = Session(name=name, mesh=mesh, worker_devices=devs)
+        self.sessions[session.id] = session
+        return session
+
+
+class AlchemistContext:
+    """The ACI — what the client application imports and talks to."""
+
+    def __init__(
+        self,
+        engine: AlchemistEngine,
+        num_workers: Optional[int] = None,
+        *,
+        name: str = "app",
+        grid: Optional[Tuple[int, int]] = None,
+        client_layout: LayoutSpec = ROW,
+        engine_layout: LayoutSpec = GRID,
+    ):
+        self.engine = engine
+        self.session = engine.connect(name=name, num_workers=num_workers, grid=grid)
+        self.client_layout = client_layout
+        self.engine_layout = engine_layout
+        self._stopped = False
+
+    # -- libraries -----------------------------------------------------------
+    def register_library(self, name: str, spec: LibrarySpec) -> Library:
+        """Load a library into this session (the paper's registerLibrary).
+
+        ``spec`` may be a Library instance/class or an import-path string
+        ``"repro.linalg.library:ElementalLib"`` — resolved only now, the
+        runtime-dynamic-linking analogue.
+        """
+        self._check()
+        lib = load_library(spec)
+        if name != lib.name:
+            # allow aliasing but keep it explicit in the session table
+            lib.name = name
+        self.session.libraries[name] = lib
+        return lib
+
+    def library(self, name: str) -> Library:
+        self._check()
+        try:
+            return self.session.libraries[name]
+        except KeyError:
+            raise LibraryError(
+                f"library {name!r} not registered in session {self.session.id}; "
+                f"registered: {sorted(self.session.libraries)}"
+            ) from None
+
+    # -- matrix movement (the bridge) -----------------------------------------
+    def send(self, array: Union[jax.Array, np.ndarray], name: str = "") -> AlMatrix:
+        """Ship a client-side (row-partitioned) matrix to the engine's grid
+        layout and return its handle. The paper's RDD→Alchemist transfer."""
+        self._check()
+        mesh = self.session.mesh
+        x = jnp.asarray(array)
+        if x.ndim != 2:
+            raise SessionError(f"send() expects a 2D matrix, got shape {tuple(x.shape)}")
+        # Stage on the client layout first (rows over all session workers) so
+        # the recorded transfer is the genuine ROW->GRID redistribution.
+        x = jax.device_put(x, self.client_layout.sharding(mesh))
+        out, rec = timed_relayout(
+            x, self.engine_layout, mesh, src=self.client_layout, direction="send"
+        )
+        self.session.stats.record_transfer(rec)
+        return self.session.new_handle(out, self.engine_layout, name=name)
+
+    def collect(self, h: AlMatrix) -> jax.Array:
+        """Materialize an engine-resident matrix back on the client layout.
+        The only path that moves bulk data engine→client (paper §3.3)."""
+        self._check()
+        live = self.session.resolve(h)
+        out, rec = timed_relayout(
+            live.data(),
+            self.client_layout,
+            self.session.mesh,
+            src=live.layout,
+            direction="receive",
+        )
+        self.session.stats.record_transfer(rec)
+        return out
+
+    def free(self, h: AlMatrix) -> None:
+        self.session.free_handle(h)
+
+    # -- routine invocation ----------------------------------------------------
+    def run(self, library: str, routine: str, *args: Any, **params: Any) -> Any:
+        """Invoke ``library.routine`` on the engine (the paper's ``ac.run``).
+
+        Positional args may be AlMatrix handles (resolved engine-side) or
+        plain scalars; keyword params must be scalars/small lists and travel
+        through the Parameters codec, exactly like the paper's driver-to-
+        driver metadata channel.
+        """
+        self._check()
+        lib = self.library(library)
+        sess = self.session
+
+        # Drive every scalar through the wire codec: this is the
+        # driver->driver parameter frame of §2.1 (and catches unserializable
+        # arguments at the API boundary, as the real system would).
+        frame = params_codec.pack(
+            {f"__pos_{i}": a for i, a in enumerate(args)} | dict(params)
+        )
+        decoded = params_codec.unpack(frame)
+
+        call_args = []
+        for i, a in enumerate(args):
+            v = decoded[f"__pos_{i}"]
+            if isinstance(v, params_codec.HandleRef):
+                call_args.append(sess.get_handle(v.id).data())
+            else:
+                call_args.append(v)
+        call_kwargs = {
+            k: (sess.get_handle(v.id).data() if isinstance(v, params_codec.HandleRef) else v)
+            for k, v in decoded.items()
+            if not k.startswith("__pos_")
+        }
+
+        r = lib.routine(routine)
+        if "mesh" in r.signature().parameters:
+            call_kwargs["mesh"] = sess.mesh
+
+        t0 = time.perf_counter()
+        with sess.mesh:
+            result = r.fn(*call_args, **call_kwargs)
+        result = jax.block_until_ready(result)
+        sess.stats.record_compute(time.perf_counter() - t0)
+
+        return self._wrap_outputs(result, f"{library}.{routine}")
+
+    def _wrap_outputs(self, result: Any, label: str) -> Any:
+        """Array outputs become engine-resident handles; scalars/vectors are
+        non-distributed outputs and return to the driver directly."""
+        if isinstance(result, (tuple, list)):
+            wrapped = tuple(self._wrap_outputs(r, label) for r in result)
+            return type(result)(wrapped) if isinstance(result, list) else wrapped
+        if isinstance(result, jax.Array) and result.ndim == 2:
+            return self.session.new_handle(result, self.engine_layout, name=label)
+        if isinstance(result, jax.Array) and result.ndim <= 1:
+            return np.asarray(result)
+        return result
+
+    # -- lifecycle ---------------------------------------------------------------
+    @property
+    def stats(self):
+        return self.session.stats
+
+    @property
+    def mesh(self) -> Mesh:
+        return self.session.mesh
+
+    def stop(self) -> None:
+        """Disconnect and release the worker group (paper's ``ac.stop()``)."""
+        if not self._stopped:
+            self.engine.release(self.session)
+            self._stopped = True
+
+    def __enter__(self) -> "AlchemistContext":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _check(self) -> None:
+        if self._stopped:
+            raise SessionError("AlchemistContext has been stopped")

@@ -1,0 +1,35 @@
+"""Structured error hierarchy for the Alchemist engine."""
+
+from __future__ import annotations
+
+
+class AlchemistError(Exception):
+    """Base class for all engine errors."""
+
+
+class SessionError(AlchemistError):
+    """Session lifecycle problems (stopped context, double-stop, ...)."""
+
+
+class WorkerAllocationError(AlchemistError):
+    """Not enough free workers to satisfy an allocation request.
+
+    Mirrors the paper's "assuming a sufficient number of workers is
+    available" failure mode (§2.4, §3.2 step 3).
+    """
+
+
+class LibraryError(AlchemistError):
+    """Unknown library / routine, or a routine signature mismatch."""
+
+
+class HandleError(AlchemistError):
+    """Invalid or foreign AlMatrix handle (wrong session, freed, ...)."""
+
+
+class LayoutError(AlchemistError):
+    """Illegal layout conversion or a layout/mesh mismatch."""
+
+
+class ParameterError(AlchemistError):
+    """Bad scalar-parameter pack/unpack (Parameters header analogue)."""

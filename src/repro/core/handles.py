@@ -1,0 +1,83 @@
+"""AlMatrix handles — proxies for engine-resident distributed matrices.
+
+Paper §3.3: "Alchemist uses matrix handles in the form of AlMatrix objects,
+which act as proxies for the distributed data sets stored on Alchemist. ...
+Only when the user explicitly converts this object into an RDD will the data
+in the matrix be sent between Alchemist to Spark."
+
+Here the handle wraps an engine-resident ``jax.Array`` plus its layout tag.
+Chained library calls pass handles; `AlchemistContext.collect()` is the only
+path that reshards data back to the client's row layout — so, exactly as in
+the paper, the bridge is crossed only on explicit request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional, Tuple
+
+import jax
+
+from repro.core.errors import HandleError
+from repro.core.layouts import LayoutSpec
+
+_ID_COUNTER = itertools.count(1)
+
+
+@dataclasses.dataclass
+class AlMatrix:
+    """Handle to a matrix resident on the engine's worker group.
+
+    Attributes:
+      id: unique handle id (per engine process).
+      shape/dtype: logical matrix metadata (always known to the client).
+      layout: engine-side layout the data is stored in.
+      session_id: owning session; handles are session-scoped like the paper's
+        per-application matrix namespaces.
+      name: optional human label for logs.
+    """
+
+    shape: Tuple[int, int]
+    dtype: jax.numpy.dtype
+    layout: LayoutSpec
+    session_id: int
+    name: str = ""
+    id: int = dataclasses.field(default_factory=lambda: next(_ID_COUNTER))
+    _data: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
+    _freed: bool = dataclasses.field(default=False, repr=False)
+
+    @property
+    def num_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def num_cols(self) -> int:
+        return self.shape[1]
+
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n * jax.numpy.dtype(self.dtype).itemsize
+
+    def data(self) -> jax.Array:
+        """Engine-internal accessor. Client code should use ctx.collect()."""
+        if self._freed:
+            raise HandleError(f"AlMatrix {self.id} ({self.name!r}) has been freed")
+        if self._data is None:
+            raise HandleError(f"AlMatrix {self.id} ({self.name!r}) has no resident data")
+        return self._data
+
+    def free(self) -> None:
+        """Release engine-side storage (the client keeps only metadata)."""
+        self._data = None
+        self._freed = True
+
+    def __repr__(self) -> str:  # keep reprs small in logs
+        return (
+            f"AlMatrix(id={self.id}, shape={self.shape}, dtype={jax.numpy.dtype(self.dtype).name}, "
+            f"layout={self.layout.name}, session={self.session_id}"
+            + (f", name={self.name!r}" if self.name else "")
+            + ")"
+        )

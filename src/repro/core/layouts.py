@@ -1,0 +1,139 @@
+"""Layout descriptors for distributed matrices.
+
+The paper bridges two layout worlds:
+
+- Spark's ``IndexedRowMatrix``: rows partitioned contiguously across
+  executors (a 1D row decomposition).
+- Elemental's ``DistMatrix``: elements distributed cyclically over a 2D
+  ``MC x MR`` process grid.
+
+On TPU both worlds are shardings of one device mesh, so a "layout" here is a
+named :class:`LayoutSpec` that resolves to a :class:`jax.sharding.PartitionSpec`
+against the mesh-axis conventions in :mod:`repro.core.sharding`:
+
+- :data:`ROW`        — ``P(('pod','data','model'), None)``: the Spark/ingest
+  side — a pure 1D row decomposition over every device, which is what a
+  per-host data pipeline naturally produces (each "executor" owns a slab of
+  rows and all columns).
+- :data:`GRID`       — ``P(('pod','data'), 'model')``: the Elemental side —
+  a 2D block decomposition over the full mesh; ROW→GRID is a genuine
+  all-to-all redistribution, the TPU analogue of the paper's socket transfer.
+- :data:`COLUMN`     — ``P(None, ('pod','data','model'))``: column-partitioned
+  (Spark's post-"explosion" layout when it transposes for multiplies).
+- :data:`REPLICATED` — ``P(None, None)``: small operands / results.
+
+Elemental's layout is block-*cyclic* to balance load for algorithms that walk
+the matrix (LU, QR panels). XLA shardings are block-contiguous; we provide a
+cyclic *emulation* (an explicit row/column permutation before a GRID layout)
+for workloads with skewed row norms, and document that on TPU the MXU favours
+contiguous 128-aligned tiles, so block layout is the native choice
+(DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.errors import LayoutError
+
+# Canonical mesh axis names used across the framework.
+AXIS_POD = "pod"
+AXIS_DATA = "data"
+AXIS_MODEL = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSpec:
+    """A named distributed-matrix layout.
+
+    Attributes:
+      name: human-readable layout name.
+      row_axes: mesh axes the row dimension is sharded over.
+      col_axes: mesh axes the column dimension is sharded over.
+      cyclic: if True, the layout is the block-cyclic emulation — the matrix
+        rows are stored permuted (see :func:`cyclic_permutation`) and the
+        physical sharding is the same as the non-cyclic variant.
+    """
+
+    name: str
+    row_axes: Tuple[str, ...]
+    col_axes: Tuple[str, ...]
+    cyclic: bool = False
+
+    def partition_spec(self, mesh: Mesh, *, leading_batch: int = 0) -> P:
+        """Resolve to a PartitionSpec, keeping only axes present in ``mesh``.
+
+        ``leading_batch`` prepends that many unsharded dimensions (for
+        stacked/batched matrices).
+        """
+        present = set(mesh.axis_names)
+        rows = tuple(a for a in self.row_axes if a in present)
+        cols = tuple(a for a in self.col_axes if a in present)
+        row_entry = rows if len(rows) > 1 else (rows[0] if rows else None)
+        col_entry = cols if len(cols) > 1 else (cols[0] if cols else None)
+        return P(*([None] * leading_batch), row_entry, col_entry)
+
+    def sharding(self, mesh: Mesh, *, leading_batch: int = 0) -> NamedSharding:
+        return NamedSharding(mesh, self.partition_spec(mesh, leading_batch=leading_batch))
+
+    def grid_shape(self, mesh: Mesh) -> Tuple[int, int]:
+        """(row shards, col shards) under ``mesh`` — the process-grid shape."""
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        r = int(np.prod([sizes[a] for a in self.row_axes if a in sizes], dtype=np.int64)) if self.row_axes else 1
+        c = int(np.prod([sizes[a] for a in self.col_axes if a in sizes], dtype=np.int64)) if self.col_axes else 1
+        return max(r, 1), max(c, 1)
+
+    def validate(self, shape: Sequence[int], mesh: Mesh) -> None:
+        """Check the matrix is shardable under this layout (with padding XLA
+        would insert, any shape is *legal*; we reject only rank problems)."""
+        if len(shape) != 2:
+            raise LayoutError(
+                f"layout {self.name!r} applies to 2D matrices, got shape {tuple(shape)}"
+            )
+
+    def with_cyclic(self) -> "LayoutSpec":
+        return dataclasses.replace(self, name=self.name + "_cyclic", cyclic=True)
+
+
+# The four canonical layouts (axis names absent from a mesh are dropped at
+# resolution time, so the same specs work on (data, model) and
+# (pod, data, model) meshes, and on small test meshes).
+ROW = LayoutSpec("row", row_axes=(AXIS_POD, AXIS_DATA, AXIS_MODEL), col_axes=())
+GRID = LayoutSpec("grid", row_axes=(AXIS_POD, AXIS_DATA), col_axes=(AXIS_MODEL,))
+COLUMN = LayoutSpec("column", row_axes=(), col_axes=(AXIS_POD, AXIS_DATA, AXIS_MODEL))
+REPLICATED = LayoutSpec("replicated", row_axes=(), col_axes=())
+
+_BY_NAME = {l.name: l for l in (ROW, GRID, COLUMN, REPLICATED)}
+
+
+def by_name(name: str) -> LayoutSpec:
+    base = name.removesuffix("_cyclic")
+    if base not in _BY_NAME:
+        raise LayoutError(f"unknown layout {name!r}; known: {sorted(_BY_NAME)}")
+    spec = _BY_NAME[base]
+    return spec.with_cyclic() if name.endswith("_cyclic") else spec
+
+
+def cyclic_permutation(n: int, n_shards: int) -> np.ndarray:
+    """Permutation emulating Elemental's element-cyclic distribution.
+
+    ``perm[i]`` is the source row stored at physical position ``i``: physical
+    shard ``s`` holds logical rows ``s, s + n_shards, s + 2*n_shards, ...``.
+    Applying ``x[perm]`` then sharding block-contiguously over ``n_shards``
+    reproduces the cyclic assignment.
+    """
+    if n_shards <= 0:
+        raise LayoutError(f"n_shards must be positive, got {n_shards}")
+    pad = (-n) % n_shards
+    idx = np.arange(n + pad).reshape(-1, n_shards).T.reshape(-1)
+    return idx[idx < n]
+
+
+def inverse_permutation(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.shape[0])
+    return inv

@@ -1,0 +1,161 @@
+"""Typed scalar-parameter packing — the ``Parameters`` header analogue.
+
+Paper §2.1/§3.5: non-distributed inputs (step sizes, iteration counts,
+cut-offs, routine names) travel driver-to-driver via serialization, separate
+from the worker-to-worker distributed payloads. §3.5: "The Parameters header
+file performs the serialization and deserialization of a wide array of
+standard types, as well as pointers to Elemental distributed matrices."
+
+Here the pack format is a compact, versioned binary frame (struct-packed),
+and "pointers to distributed matrices" serialize as handle ids — exactly the
+paper's split: metadata crosses as bytes, matrix payloads never do.
+
+This layer is also what a real multi-controller deployment would put on the
+wire between the client process and the engine controller, so it is
+implemented and tested as a genuine codec, not a dict passthrough.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.errors import ParameterError
+from repro.core.handles import AlMatrix
+
+_MAGIC = b"ALPK"
+_VERSION = 2
+
+# type tags
+_T_INT = 0x01
+_T_FLOAT = 0x02
+_T_BOOL = 0x03
+_T_STR = 0x04
+_T_MATRIX_HANDLE = 0x05
+_T_INT_LIST = 0x06
+_T_FLOAT_LIST = 0x07
+_T_NONE = 0x08
+
+
+def _pack_str(s: str) -> bytes:
+    b = s.encode("utf-8")
+    return struct.pack("<I", len(b)) + b
+
+
+def _unpack_str(buf: memoryview, off: int) -> Tuple[str, int]:
+    (n,) = struct.unpack_from("<I", buf, off)
+    off += 4
+    return bytes(buf[off : off + n]).decode("utf-8"), off + n
+
+
+def pack(params: Dict[str, Any]) -> bytes:
+    """Serialize a flat dict of scalars / small lists / AlMatrix handles."""
+    out = [_MAGIC, struct.pack("<HI", _VERSION, len(params))]
+    for key, val in params.items():
+        out.append(_pack_str(key))
+        if val is None:
+            out.append(struct.pack("<B", _T_NONE))
+        elif isinstance(val, bool):  # before int: bool is an int subclass
+            out.append(struct.pack("<BB", _T_BOOL, int(val)))
+        elif isinstance(val, (int, np.integer)):
+            out.append(struct.pack("<Bq", _T_INT, int(val)))
+        elif isinstance(val, (float, np.floating)):
+            out.append(struct.pack("<Bd", _T_FLOAT, float(val)))
+        elif isinstance(val, str):
+            out.append(struct.pack("<B", _T_STR) + _pack_str(val))
+        elif isinstance(val, AlMatrix):
+            out.append(
+                struct.pack(
+                    "<Bqqqq",
+                    _T_MATRIX_HANDLE,
+                    val.id,
+                    val.session_id,
+                    val.shape[0],
+                    val.shape[1],
+                )
+                + _pack_str(np.dtype(val.dtype).name)
+                + _pack_str(val.layout.name)
+            )
+        elif isinstance(val, (list, tuple)) and all(
+            isinstance(v, (int, np.integer)) and not isinstance(v, bool) for v in val
+        ):
+            out.append(struct.pack(f"<BI{len(val)}q", _T_INT_LIST, len(val), *[int(v) for v in val]))
+        elif isinstance(val, (list, tuple)) and all(isinstance(v, (float, np.floating)) for v in val):
+            out.append(struct.pack(f"<BI{len(val)}d", _T_FLOAT_LIST, len(val), *[float(v) for v in val]))
+        else:
+            raise ParameterError(
+                f"cannot pack parameter {key!r} of type {type(val).__name__}; "
+                "supported: int, float, bool, str, None, AlMatrix, int/float lists"
+            )
+    return b"".join(out)
+
+
+class HandleRef:
+    """Deserialized stand-in for an AlMatrix — carries only metadata.
+
+    The engine resolves it back to the live handle via its session table;
+    this is the 'pointer to a DistMatrix' of the paper.
+    """
+
+    def __init__(self, handle_id: int, session_id: int, shape: Tuple[int, int], dtype: str, layout: str):
+        self.id = handle_id
+        self.session_id = session_id
+        self.shape = shape
+        self.dtype = dtype
+        self.layout = layout
+
+    def __repr__(self) -> str:
+        return f"HandleRef(id={self.id}, session={self.session_id}, shape={self.shape})"
+
+
+def unpack(buf: bytes) -> Dict[str, Any]:
+    """Inverse of :func:`pack`. AlMatrix entries come back as HandleRef."""
+    mv = memoryview(buf)
+    if bytes(mv[:4]) != _MAGIC:
+        raise ParameterError("bad magic — not an ALPK parameter frame")
+    version, count = struct.unpack_from("<HI", mv, 4)
+    if version > _VERSION:
+        raise ParameterError(f"frame version {version} newer than supported {_VERSION}")
+    off = 10
+    out: Dict[str, Any] = {}
+    for _ in range(count):
+        key, off = _unpack_str(mv, off)
+        (tag,) = struct.unpack_from("<B", mv, off)
+        off += 1
+        if tag == _T_NONE:
+            out[key] = None
+        elif tag == _T_BOOL:
+            (v,) = struct.unpack_from("<B", mv, off)
+            off += 1
+            out[key] = bool(v)
+        elif tag == _T_INT:
+            (v,) = struct.unpack_from("<q", mv, off)
+            off += 8
+            out[key] = v
+        elif tag == _T_FLOAT:
+            (v,) = struct.unpack_from("<d", mv, off)
+            off += 8
+            out[key] = v
+        elif tag == _T_STR:
+            out[key], off = _unpack_str(mv, off)
+        elif tag == _T_MATRIX_HANDLE:
+            hid, sid, r, c = struct.unpack_from("<qqqq", mv, off)
+            off += 32
+            dtype, off = _unpack_str(mv, off)
+            layout, off = _unpack_str(mv, off)
+            out[key] = HandleRef(hid, sid, (r, c), dtype, layout)
+        elif tag == _T_INT_LIST:
+            (n,) = struct.unpack_from("<I", mv, off)
+            off += 4
+            out[key] = list(struct.unpack_from(f"<{n}q", mv, off))
+            off += 8 * n
+        elif tag == _T_FLOAT_LIST:
+            (n,) = struct.unpack_from("<I", mv, off)
+            off += 4
+            out[key] = list(struct.unpack_from(f"<{n}d", mv, off))
+            off += 8 * n
+        else:
+            raise ParameterError(f"unknown type tag 0x{tag:02x} for key {key!r}")
+    return out

@@ -1,0 +1,110 @@
+"""Library registry — the Alchemist-Library Interface (ALI) analogue.
+
+Paper §2.3/§3.5: each MPI library is wrapped by a thin shared object that
+Alchemist ``dlopen``s at runtime; the wrapper's ``run`` function receives the
+routine name plus serialized input/output parameter arrays and dispatches
+into the library. Alchemist itself has *no* compiled-in knowledge of any
+library.
+
+The TPU adaptation keeps the late-binding-by-name contract and drops the
+POSIX mechanism: a :class:`Library` subclass registers named
+:class:`Routine` objects; libraries are resolved at runtime either from an
+instance or from an import-path string ``"pkg.module:ClassName"`` — the
+``dlopen`` analogue (the engine imports the module only when a client
+registers it, so adding a library never touches engine code).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import inspect
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+from repro.core.errors import LibraryError
+
+
+@dataclasses.dataclass(frozen=True)
+class Routine:
+    """One callable exposed by a library.
+
+    ``fn`` receives distributed matrices as jax.Arrays (already resident in
+    the session's GRID layout) plus scalar keyword parameters, and returns a
+    single array, a tuple of arrays, scalars, or a mix. The engine wraps
+    array outputs back into AlMatrix handles.
+    """
+
+    name: str
+    fn: Callable[..., Any]
+    doc: str = ""
+
+    def signature(self) -> inspect.Signature:
+        return inspect.signature(self.fn)
+
+
+class Library:
+    """Base class for engine libraries (the ALI contract).
+
+    Subclasses set ``name`` and call :meth:`register` (typically in
+    ``__init__``) for each exposed routine — the analogue of implementing the
+    paper's ``Library``/``Parameters`` headers.
+    """
+
+    name: str = ""
+
+    def __init__(self) -> None:
+        if not self.name:
+            raise LibraryError(f"{type(self).__name__} must set a class-level name")
+        self._routines: Dict[str, Routine] = {}
+
+    def register(self, name: str, fn: Callable[..., Any], doc: str = "") -> None:
+        if name in self._routines:
+            raise LibraryError(f"routine {name!r} already registered in library {self.name!r}")
+        self._routines[name] = Routine(name=name, fn=fn, doc=doc or (fn.__doc__ or ""))
+
+    def routine(self, name: str) -> Routine:
+        try:
+            return self._routines[name]
+        except KeyError:
+            raise LibraryError(
+                f"library {self.name!r} has no routine {name!r}; "
+                f"available: {sorted(self._routines)}"
+            ) from None
+
+    def routine_names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._routines))
+
+    # The paper's ALI `run(name, in_params, out_params)` entry point.
+    def run(self, name: str, *args: Any, **kwargs: Any) -> Any:
+        return self.routine(name).fn(*args, **kwargs)
+
+
+LibrarySpec = Union[Library, type, str]
+
+
+def load_library(spec: LibrarySpec) -> Library:
+    """Resolve a library spec — instance, class, or ``"module:attr"`` string.
+
+    The string form is the runtime-dynamic-linking analogue: the module is
+    imported only now, at registration time.
+    """
+    if isinstance(spec, Library):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, Library):
+        return spec()
+    if isinstance(spec, str):
+        mod_name, sep, attr = spec.partition(":")
+        if not sep:
+            raise LibraryError(
+                f"library path {spec!r} must look like 'package.module:ClassName'"
+            )
+        try:
+            mod = importlib.import_module(mod_name)
+        except ImportError as e:
+            raise LibraryError(f"cannot import library module {mod_name!r}: {e}") from e
+        try:
+            cls = getattr(mod, attr)
+        except AttributeError:
+            raise LibraryError(f"module {mod_name!r} has no attribute {attr!r}") from None
+        return load_library(cls)
+    raise LibraryError(f"cannot load library from {type(spec).__name__}")

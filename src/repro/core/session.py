@@ -1,0 +1,148 @@
+"""Sessions — per-client worker groups, handle tables, and transfer stats.
+
+Paper §2.4/§3.2: each connected Spark application gets a dedicated worker
+group (its own MPI communicator spanning the Alchemist driver plus the
+allocated workers), its own loaded libraries, and its own matrix namespace.
+Here a worker group is a **mesh slice**: a contiguous block of the engine's
+devices arranged as a ('data','model') grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.core.errors import HandleError, SessionError
+from repro.core.handles import AlMatrix
+from repro.core.layouts import LayoutSpec
+from repro.core.registry import Library
+from repro.core.relayout import TransferRecord
+
+_SESSION_IDS = itertools.count(1)
+
+
+@dataclasses.dataclass
+class SessionStats:
+    """Send/Compute/Receive accounting — the paper's Table 1 columns."""
+
+    send_bytes: int = 0
+    send_seconds: float = 0.0
+    recv_bytes: int = 0
+    recv_seconds: float = 0.0
+    compute_seconds: float = 0.0
+    num_sends: int = 0
+    num_receives: int = 0
+    num_runs: int = 0
+    transfers: List[TransferRecord] = dataclasses.field(default_factory=list)
+
+    def record_transfer(self, rec: TransferRecord) -> None:
+        self.transfers.append(rec)
+        if rec.direction == "send":
+            self.send_bytes += rec.cost.bytes_total
+            self.send_seconds += rec.seconds
+            self.num_sends += 1
+        else:
+            self.recv_bytes += rec.cost.bytes_total
+            self.recv_seconds += rec.seconds
+            self.num_receives += 1
+
+    def record_compute(self, seconds: float) -> None:
+        self.compute_seconds += seconds
+        self.num_runs += 1
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "send_bytes": self.send_bytes,
+            "send_seconds": round(self.send_seconds, 6),
+            "compute_seconds": round(self.compute_seconds, 6),
+            "recv_bytes": self.recv_bytes,
+            "recv_seconds": round(self.recv_seconds, 6),
+            "num_sends": self.num_sends,
+            "num_receives": self.num_receives,
+            "num_runs": self.num_runs,
+        }
+
+
+class Session:
+    """One client application's state on the engine."""
+
+    def __init__(self, name: str, mesh: Mesh, worker_devices: List[jax.Device]):
+        self.id = next(_SESSION_IDS)
+        self.name = name
+        self.mesh = mesh
+        self.worker_devices = worker_devices
+        self.handles: Dict[int, AlMatrix] = {}
+        self.libraries: Dict[str, Library] = {}
+        self.stats = SessionStats()
+        self.closed = False
+
+    # -- handle table -------------------------------------------------------
+    def new_handle(
+        self,
+        data: jax.Array,
+        layout: LayoutSpec,
+        name: str = "",
+    ) -> AlMatrix:
+        self._check_open()
+        h = AlMatrix(
+            shape=tuple(data.shape),
+            dtype=data.dtype,
+            layout=layout,
+            session_id=self.id,
+            name=name,
+            _data=data,
+        )
+        self.handles[h.id] = h
+        return h
+
+    def get_handle(self, handle_id: int) -> AlMatrix:
+        self._check_open()
+        try:
+            return self.handles[handle_id]
+        except KeyError:
+            raise HandleError(
+                f"session {self.id} has no AlMatrix with id {handle_id}"
+            ) from None
+
+    def resolve(self, h: AlMatrix) -> AlMatrix:
+        """Validate a client-held handle belongs to this session and is live."""
+        self._check_open()
+        if h.session_id != self.id:
+            raise HandleError(
+                f"AlMatrix {h.id} belongs to session {h.session_id}, not {self.id} "
+                "(handles are not shareable across applications)"
+            )
+        if h.id not in self.handles:
+            raise HandleError(f"AlMatrix {h.id} is not registered in session {self.id}")
+        return self.handles[h.id]
+
+    def free_handle(self, h: AlMatrix) -> None:
+        live = self.resolve(h)
+        live.free()
+        del self.handles[live.id]
+
+    # -- lifecycle ----------------------------------------------------------
+    def close(self) -> None:
+        for h in list(self.handles.values()):
+            h.free()
+        self.handles.clear()
+        self.libraries.clear()
+        self.closed = True
+
+    def _check_open(self) -> None:
+        if self.closed:
+            raise SessionError(f"session {self.id} ({self.name!r}) is closed")
+
+    @property
+    def num_workers(self) -> int:
+        return len(self.worker_devices)
+
+    def __repr__(self) -> str:
+        return (
+            f"Session(id={self.id}, name={self.name!r}, workers={self.num_workers}, "
+            f"grid={tuple(self.mesh.devices.shape)}, handles={len(self.handles)})"
+        )

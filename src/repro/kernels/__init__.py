@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+- ``matmul.py``          — tiled local GEMM (the SUMMA inner kernel; the
+                           paper's Elemental-GEMM hot spot)
+- ``flash_attention.py`` — online-softmax attention (full/causal/window, GQA)
+- ``ssd_scan.py``        — Mamba2 SSD chunked scan
+- ``ops.py``             — dispatching wrappers (pallas on TPU, oracle on CPU)
+- ``ref.py``             — pure-jnp oracles (correctness ground truth)
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,146 @@
+"""Flash attention Pallas kernel (full / causal / sliding-window, GQA-aware).
+
+Used by every attention-bearing assigned architecture. Online-softmax
+formulation: KV blocks stream as the innermost grid dimension while the
+output accumulator, running max and running denominator stay in VMEM
+scratch — O(Lq·D) memory instead of O(Lq·Lk).
+
+GQA is handled in the BlockSpec index maps: the KV specs map query head
+``h`` to KV head ``h // group``, so no materialized ``repeat`` of K/V.
+
+Block sizes: (block_q=512, block_k=512) by default — q/k/v tiles are
+(512·D)·2B each (D≤256 → ≤512 KiB), acc is (512·D)·4B; the VPU-heavy
+exp/max run on (512,512) f32 tiles (1 MiB), total well under VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+_NEG_INF = -1e30  # finite sentinel: keeps masked-all-block math NaN-free
+
+
+def _flash_kernel(
+    q_ref,  # [1, 1, bq, D]
+    k_ref,  # [1, 1, bk, D]
+    v_ref,  # [1, 1, bk, D]
+    o_ref,  # [1, 1, bq, D]
+    acc_ref,  # VMEM [bq, D] f32
+    m_ref,  # VMEM [bq] f32 running max
+    l_ref,  # VMEM [bq] f32 running denom
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int,
+    bq: int,
+    bk: int,
+):
+    kv_idx = pl.program_id(3)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]  # [bq, D]
+    k = k_ref[0, 0]  # [bk, D]
+    v = v_ref[0, 0]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+
+    q_pos = pl.program_id(2) * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    k_pos = kv_idx * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    # Exact masking: exp(_NEG_INF - m) underflows to 0 already, but be sure.
+    p = jnp.where(mask, p, 0.0)
+
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(kv_idx == pl.num_programs(3) - 1)
+    def _final():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0, :, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Hq, Lq, D]
+    k: jax.Array,  # [B, Hkv, Lk, D]
+    v: jax.Array,  # [B, Hkv, Lk, D]
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}")
+    group = hq // hkv
+    scale_val = scale if scale is not None else 1.0 / (d**0.5)
+
+    bq_ = min(bq, lq)
+    bk_ = min(bk, lk)
+    if lq % bq_ or lk % bk_:
+        raise ValueError(
+            f"Lq={lq} / Lk={lk} must be divisible by block sizes ({bq_}, {bk_})"
+        )
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale_val,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        bq=bq_,
+        bk=bk_,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, lq // bq_, lk // bk_),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq_, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk_, d), lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk_, d), lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq_, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, d), jnp.float32),
+            pltpu.VMEM((bq_,), jnp.float32),
+            pltpu.VMEM((bq_,), jnp.float32),
+        ],
+        interpret=interpret,
+        name="repro_flash_attention",
+    )(q, k, v)

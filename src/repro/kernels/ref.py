@@ -1,0 +1,278 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness references (``assert_allclose`` targets in tests)
+AND the CPU execution path: ``ops.py`` dispatches to these when not running
+on TPU, so the whole framework runs and is testable on CPU while lowering to
+the Pallas kernels on real hardware.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Tiled matmul oracle
+# ---------------------------------------------------------------------------
+
+def matmul(a: jax.Array, b: jax.Array, *, out_dtype=None) -> jax.Array:
+    """C = A @ B with f32 accumulation (the MXU contract)."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(
+        a, b, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention oracle (full / causal / sliding-window)
+# ---------------------------------------------------------------------------
+
+def attention(
+    q: jax.Array,  # [B, Hq, Lq, D]
+    k: jax.Array,  # [B, Hkv, Lk, D]
+    v: jax.Array,  # [B, Hkv, Lk, D]
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference scaled-dot-product attention with GQA head grouping.
+
+    ``window``: sliding-window width — query i attends to keys in
+    ``(i_abs - window, i_abs]`` where ``i_abs = i + q_offset`` (decode uses
+    q_offset = position of the first query token).
+    """
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, f"GQA requires Hq % Hkv == 0, got {hq} % {hkv}"
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    qk = jnp.einsum(
+        "bhgqd,bhkd->bhgqk",
+        q.reshape(b, hkv, group, lq, d),
+        k,
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+    lk = k.shape[2]
+    q_pos = jnp.arange(lq)[:, None] + q_offset
+    k_pos = jnp.arange(lk)[None, :]
+    mask = jnp.ones((lq, lk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    qk = jnp.where(mask[None, None, None], qk, -jnp.inf)
+
+    p = jax.nn.softmax(qk, axis=-1)
+    # Rows that mask out everything (can happen with window=0) -> zeros.
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return out.reshape(b, hq, lq, d)
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = False,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    q_chunk: Optional[int] = None,
+) -> jax.Array:
+    """Query-chunked attention (flash-structured XLA program).
+
+    Streams query blocks through a ``lax.scan`` so peak memory is
+    O(qc · Lk) instead of O(Lq · Lk) — this is what the real Pallas kernel
+    does on TPU, and what the dry-run's memory analysis should see.
+    Numerics match :func:`attention` exactly (same masked softmax per row).
+    """
+    b, hq, lq, d = q.shape
+    hkv, lk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / (d**0.5)
+
+    qc = q_chunk or max(min(lq, (1 << 22) // max(lk, 1)), 16)
+    while lq % qc:
+        qc //= 2
+    nq = lq // qc
+    if nq <= 1:
+        return attention(q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset)
+
+    qr = q.reshape(b, hkv, group, nq, qc, d)
+    k_pos = jnp.arange(lk)[None, :]
+
+    @jax.checkpoint  # flash-style backward: recompute scores per chunk
+    def chunk_out(qi, idx):
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qi, k, preferred_element_type=jnp.float32) * scale
+        q_pos = (idx * qc + jnp.arange(qc))[:, None] + q_offset
+        mask = jnp.ones((qc, lk), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+
+    def chunk(carry, inputs):
+        qi, idx = inputs                                   # [B,Hkv,G,qc,D], []
+        return carry, chunk_out(qi, idx)
+
+    _, outs = jax.lax.scan(
+        chunk, None, (jnp.moveaxis(qr, 3, 0), jnp.arange(nq))
+    )                                                      # [nq, B, Hkv, G, qc, D]
+    out = jnp.moveaxis(outs, 0, 3).reshape(b, hq, lq, d)
+    return out
+
+
+def attention_stub(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Shape/dtype-correct O(L·D) stand-in for attention.
+
+    Used ONLY by the dry-run's cost-fit variant compiles: the fit then
+    measures everything-but-attention exactly, and the roofline adds the
+    analytic flash-attention terms (repro.roofline.attention_model) back.
+    Never used in a program that produces real numbers.
+    """
+    b, hq, lq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    kv = (k.mean(axis=2, keepdims=True) + v.mean(axis=2, keepdims=True))  # [B,Hkv,1,D]
+    kv = jnp.repeat(kv, group, axis=1)                                    # [B,Hq,1,D]
+    return (q * kv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) chunked-scan oracle
+# ---------------------------------------------------------------------------
+
+def ssd_scan(
+    x: jax.Array,      # [B, L, H, P]   inputs per head
+    dt: jax.Array,     # [B, L, H]      softplus-activated step sizes (>0)
+    a: jax.Array,      # [H]            negative decay rates (A = -exp(a_log))
+    b_mat: jax.Array,  # [B, L, G, N]   input projections (G groups)
+    c_mat: jax.Array,  # [B, L, G, N]   output projections
+    *,
+    init_state: Optional[jax.Array] = None,  # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Reference SSD recurrence (sequential scan over time).
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * x_t ⊗ b_t
+    y_t = <h_t, c_t>
+
+    Returns (y [B, L, H, P], final_state [B, H, P, N]).
+    """
+    B, L, H, P = x.shape
+    G, N = b_mat.shape[2], b_mat.shape[3]
+    assert H % G == 0
+    rep = H // G
+    bh = jnp.repeat(b_mat, rep, axis=2)  # [B, L, H, N]
+    ch = jnp.repeat(c_mat, rep, axis=2)  # [B, L, H, N]
+
+    decay = jnp.exp(dt * a[None, None, :])          # [B, L, H]
+    inp = (dt[..., None, None] * x[..., :, None]) * bh[..., None, :]  # [B,L,H,P,N]
+
+    h0 = init_state if init_state is not None else jnp.zeros((B, H, P, N), x.dtype)
+
+    def step(h, t):
+        d_t, u_t, c_t = t
+        h = d_t[..., None, None] * h + u_t
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(decay, 1, 0),
+        jnp.moveaxis(inp, 1, 0),
+        jnp.moveaxis(ch, 1, 0),
+    )
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)  # [B, L, H, P]
+    return y, h_final.astype(x.dtype)
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_mat: jax.Array,
+    c_mat: jax.Array,
+    *,
+    chunk: int = 64,
+    init_state: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD (the parallel form the Pallas kernel implements).
+
+    Within a chunk the recurrence is computed as masked "attention"
+    (the duality); across chunks states are passed by a short scan. This is
+    the algorithm of Dao & Gu (arXiv:2405.21060) §6, and the oracle for the
+    kernel's internal structure; it must agree with :func:`ssd_scan`.
+    """
+    B, L, H, P = x.shape
+    G, N = b_mat.shape[2], b_mat.shape[3]
+    rep = H // G
+    assert L % chunk == 0, f"L={L} must be divisible by chunk={chunk}"
+    nc = L // chunk
+
+    bh = jnp.repeat(b_mat, rep, axis=2)
+    ch = jnp.repeat(c_mat, rep, axis=2)
+
+    # reshape into chunks: [B, nc, chunk, H, ...]
+    xr = x.reshape(B, nc, chunk, H, P)
+    dtr = dt.reshape(B, nc, chunk, H)
+    br = bh.reshape(B, nc, chunk, H, N)
+    cr = ch.reshape(B, nc, chunk, H, N)
+
+    la = dtr * a[None, None, None, :]          # log-decay per step  [B,nc,c,H]
+    seg = jnp.cumsum(la, axis=2)               # within-chunk cumulative log decay
+
+    # Intra-chunk ("attention") term: y_intra[t] = sum_{s<=t} C_t.B_s
+    #   * exp(seg_t - seg_s) * dt_s * x_s
+    att = jnp.einsum("bkthn,bkshn->bkhts", cr, br, preferred_element_type=jnp.float32)
+    dseg = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # [B,nc,t,s,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(mask[None, None, :, :, None], jnp.exp(dseg), 0.0)
+    att = att * jnp.moveaxis(w, -1, 2)                     # [B,nc,H,t,s]
+    y_intra = jnp.einsum(
+        "bkhts,bkshp->bkthp", att, (dtr[..., None] * xr).astype(jnp.float32)
+    )
+
+    # Chunk-final states: h_chunk = sum_s exp(seg_last - seg_s) dt_s x_s b_s
+    last = seg[:, :, -1:, :]                               # [B,nc,1,H]
+    wst = jnp.exp(last - seg)                              # [B,nc,c,H]
+    state_c = jnp.einsum(
+        "bkshp,bkshn->bkhpn",
+        (wst[..., None] * dtr[..., None] * xr).astype(jnp.float32),
+        br.astype(jnp.float32),
+    )                                                      # per-chunk state contribution
+    chunk_decay = jnp.exp(jnp.sum(la, axis=2))             # [B,nc,H]
+
+    h0 = (init_state if init_state is not None else jnp.zeros((B, H, P, N), jnp.float32)).astype(jnp.float32)
+
+    def pass_state(h, t):
+        dec, sc = t
+        h_in = h                                          # state entering this chunk
+        h = dec[..., None, None] * h + sc
+        return h, h_in
+
+    h_final, h_enter = jax.lax.scan(
+        pass_state,
+        h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(state_c, 1, 0)),
+    )
+    h_enter = jnp.moveaxis(h_enter, 0, 1)                  # [B,nc,H,P,N]
+
+    # Inter-chunk term: y_inter[t] = C_t . (exp(seg_t) * h_enter)
+    y_inter = jnp.einsum(
+        "bkthn,bkhpn->bkthp", (cr * jnp.exp(seg)[..., None]).astype(jnp.float32), h_enter
+    )
+
+    y = (y_intra + y_inter).reshape(B, L, H, P).astype(x.dtype)
+    return y, h_final.astype(x.dtype)

@@ -1,0 +1,1 @@
+"""launch — production meshes, the multi-pod dry-run, train/serve CLIs."""

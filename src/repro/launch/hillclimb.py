@@ -1,0 +1,256 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Perf hillclimb driver: evaluate sharding/precision variants of selected
+(arch x shape) pairs and log hypothesis -> change -> before/after.
+
+Each variant is one experiment in the §Perf methodology: a hypothesis with a
+napkin-math prediction (recorded in VARIANTS below), implemented as a
+ShardingRules / config change, re-lowered, re-analysed with the same
+machinery as the baseline dry-run.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --pair deepseek-coder-33b:train_4k \
+      --variants baseline,zero3,seq_parallel,bf16_params --out results/hc.json
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig, INPUT_SHAPES, get_config
+from repro.core.sharding import ShardingRules
+from repro.launch.dryrun import lower_combo
+from repro.launch.mesh import make_production_mesh
+
+
+@dataclasses.dataclass
+class Variant:
+    name: str
+    hypothesis: str
+    prediction: str
+    rules_fn: Optional[Callable] = None            # mesh -> ShardingRules
+    cfg_fn: Optional[Callable] = None              # cfg -> cfg
+    remat: str = "full"
+
+
+def _bf16_params(cfg: ArchConfig) -> ArchConfig:
+    return dataclasses.replace(cfg, param_dtype="bfloat16")
+
+
+def _pad_vocab(cfg: ArchConfig) -> ArchConfig:
+    return dataclasses.replace(cfg, pad_vocab_to_multiple=256)
+
+
+def _pad_heads(cfg: ArchConfig) -> ArchConfig:
+    """Pad query/kv head counts up to multiples of 16 so attention shards
+    over the tensor axis (zero-init extra heads; exact for inference,
+    near-exact for training)."""
+    def up(h):
+        return ((h + 15) // 16) * 16 if h else h
+    return dataclasses.replace(cfg, n_heads=up(cfg.n_heads), n_kv_heads=up(cfg.n_kv_heads))
+
+
+def _moe_ff_sharding(cfg: ArchConfig) -> ArchConfig:
+    return dataclasses.replace(cfg, moe_shard_expert_ff=True)
+
+
+def _moe_fine_groups(cfg: ArchConfig) -> ArchConfig:
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0)
+    )
+
+
+VARIANTS: Dict[str, Variant] = {
+    "baseline": Variant(
+        "baseline",
+        "paper-faithful: FSDP(data) x TP(model), f32 params, full remat",
+        "reference point",
+    ),
+    "zero3": Variant(
+        "zero3",
+        "activation all-reduces (≈6 x 1.9 GB f32/layer at TP16) dominate; "
+        "ZeRO-3 replaces them with per-layer param all-gathers "
+        "(≈3 passes x layer-params/256 x 255 ≈ 6 GB/layer bf16-equiv but in "
+        "much smaller units and no f32 activation traffic)",
+        "collective term down 3-6x for wide dense models",
+        rules_fn=ShardingRules.zero3,
+    ),
+    "seq_parallel": Variant(
+        "seq_parallel",
+        "Megatron sequence parallelism: residuals shard over 'model' between "
+        "blocks, so TP boundary all-reduces become reduce-scatter+all-gather "
+        "pairs at 1/TP the tensor size",
+        "collective term down ~2x vs baseline; memory term also down "
+        "(sequence-sharded saved activations)",
+        rules_fn=ShardingRules.seq_parallel,
+    ),
+    "bf16_params": Variant(
+        "bf16_params",
+        "parameter all-gathers and gradient reductions move f32 today; "
+        "bf16 master params halve every param-carrying collective",
+        "collective term down up to 2x where param traffic dominates",
+        cfg_fn=_bf16_params,
+    ),
+    "zero3_full": Variant(
+        "zero3_full",
+        "zero3 with the model axis folded into batch (true 256-way DP): "
+        "fixes the first attempt's 8.7x per-device compute inflation while "
+        "keeping the activation-all-reduce elimination",
+        "collective down ~4x vs baseline at baseline-level compute",
+        rules_fn=ShardingRules.zero3_full,
+    ),
+    "zero3_full_bf16": Variant(
+        "zero3_full_bf16",
+        "zero3_full + bf16 params: param all-gathers are now the dominant "
+        "collective, so halving their width should nearly halve the term",
+        "collective down ~8x vs baseline",
+        rules_fn=ShardingRules.zero3_full,
+        cfg_fn=_bf16_params,
+    ),
+    "zero3_bf16": Variant(
+        "zero3_bf16",
+        "compose zero3 + bf16 params",
+        "multiplicative composition of the two wins",
+        rules_fn=ShardingRules.zero3,
+        cfg_fn=_bf16_params,
+    ),
+    "seq_parallel_bf16": Variant(
+        "seq_parallel_bf16",
+        "compose seq_parallel + bf16 params",
+        "collective term down 2-4x vs baseline",
+        rules_fn=ShardingRules.seq_parallel,
+        cfg_fn=_bf16_params,
+    ),
+    "pad_vocab": Variant(
+        "pad_vocab",
+        "odd vocab (e.g. 51866/92553) forces replicated logits; padding to a "
+        "multiple of 256 lets the unembed matmul and softmax shard 16-way",
+        "memory + collective terms down on logit-heavy (short-seq) models",
+        cfg_fn=_pad_vocab,
+    ),
+    "pad_heads": Variant(
+        "pad_heads",
+        "head counts not divisible by 16 leave attention un-TP-sharded; "
+        "padding heads to 16k multiples restores head-parallel attention",
+        "attention per-device flops/bytes down ~TP-fold for 56/20-head archs",
+        cfg_fn=_pad_heads,
+    ),
+    "no_remat": Variant(
+        "no_remat",
+        "full remat re-forwards every layer (+1x forward flops); with ZeRO "
+        "freeing HBM, dropping remat trades memory for compute",
+        "compute term down ~25% (train), memory term up",
+        remat="none",
+    ),
+    "moe_ff_sharding": Variant(
+        "moe_ff_sharding",
+        "MoE decode all-gathers every D-sharded expert weight (~params bytes "
+        "per step); sharding the expert FF dim instead turns the boundary "
+        "into an activation reduce-scatter, tiny at 128 tokens/step",
+        "arctic decode collective term down >10x",
+        cfg_fn=_moe_ff_sharding,
+    ),
+    "moe_tight_capacity": Variant(
+        "moe_tight_capacity",
+        "capacity factor 1.25 pads expert buffers; cf=1.0 shrinks the "
+        "all-to-all dispatch volume by 20%",
+        "collective term down ~20% on MoE dispatch traffic",
+        cfg_fn=_moe_fine_groups,
+    ),
+}
+
+
+def run_pair(arch: str, shape: str, variant_names, multi_pod=False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    out = []
+    base_report = None
+    for vn in variant_names:
+        v = VARIANTS[vn]
+        cfg = get_config(arch)
+        if vn.startswith("moe") and cfg.moe is None:
+            continue  # variant inapplicable to this family
+        if v.cfg_fn:
+            cfg = v.cfg_fn(cfg)
+        rules = v.rules_fn(mesh) if v.rules_fn else None
+
+        # monkey-patch get_config used inside lower_combo for cfg overrides
+        import repro.launch.dryrun as dr
+
+        orig = dr.get_config
+        dr.get_config = lambda a, **kw: cfg if a == arch else orig(a, **kw)
+        try:
+            t0 = time.perf_counter()
+            res = lower_combo(arch, shape, mesh, rules=rules, remat=v.remat, verbose=False)
+            dt = time.perf_counter() - t0
+        except Exception as e:
+            traceback.print_exc()
+            out.append({
+                "variant": vn, "hypothesis": v.hypothesis, "ok": False,
+                "error": f"{type(e).__name__}: {e}",
+            })
+            continue
+        finally:
+            dr.get_config = orig
+
+        r = res.report
+        rec = {
+            "variant": vn,
+            "hypothesis": v.hypothesis,
+            "prediction": v.prediction,
+            "ok": res.ok,
+            "compute_s": r["compute_seconds"],
+            "memory_s": r["memory_seconds"],
+            "collective_s": r["collective_seconds"],
+            "dominant": r["dominant"],
+            "flops_per_device": r["flops_per_device"],
+            "hbm_bytes_per_device": r["hbm_bytes_per_device"],
+            "collective_bytes_per_device": r["collective_bytes_per_device"],
+            "temp_bytes": r.get("temp_bytes", 0),
+            "eval_seconds": dt,
+        }
+        if vn == "baseline":
+            base_report = rec
+        if base_report:
+            for term in ("compute_s", "memory_s", "collective_s"):
+                if base_report[term]:
+                    rec[f"{term}_vs_base"] = rec[term] / base_report[term]
+        bottleneck = max(("compute_s", "memory_s", "collective_s"), key=lambda t: rec[t])
+        rec["step_lower_bound_s"] = rec[bottleneck]
+        out.append(rec)
+        print(f"[{arch} x {shape}] {vn}: compute={rec['compute_s']*1e3:.0f}ms "
+              f"memory={rec['memory_s']*1e3:.0f}ms collective={rec['collective_s']*1e3:.0f}ms "
+              f"temp={rec['temp_bytes']/2**30:.1f}GiB ({dt:.0f}s eval)")
+        sys.stdout.flush()
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", action="append", required=True,
+                    help="arch:shape[:v1|v2|...], repeatable")
+    ap.add_argument("--variants", default="baseline,zero3,seq_parallel,bf16_params")
+    ap.add_argument("--out", default="results/hillclimb.json")
+    args = ap.parse_args()
+
+    results = {}
+    for pair in args.pair:
+        parts = pair.split(":")
+        arch, shape = parts[0], parts[1]
+        variants = parts[2].split("|") if len(parts) > 2 else args.variants.split(",")
+        results[f"{arch}:{shape}"] = run_pair(arch, shape, variants)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

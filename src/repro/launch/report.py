@@ -1,0 +1,119 @@
+"""Generate the EXPERIMENTS.md roofline/dry-run tables from results JSON.
+
+  PYTHONPATH=src python -m repro.launch.report \
+      --single results/dryrun_single_pod.json \
+      --multi results/dryrun_multi_pod.json \
+      --hillclimb results/hillclimb.json --out EXPERIMENTS_tables.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+
+def _gib(b) -> str:
+    return f"{b/2**30:.2f}"
+
+
+def roofline_table(records: List[Dict]) -> str:
+    rows = [
+        "| arch | shape | compute ms | memory ms | collective ms | bound | "
+        "useful-flops | peak GiB/dev | method |",
+        "|---|---|---:|---:|---:|---|---:|---:|---|",
+    ]
+    for r in records:
+        if r["skipped"]:
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP | — | — | {r['reason'][:60]} |"
+            )
+            continue
+        if not r["ok"]:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAIL | — | — | {r['error'][:60]} |")
+            continue
+        p = r["report"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {p['compute_seconds']*1e3:.1f} | "
+            f"{p['memory_seconds']*1e3:.1f} | {p['collective_seconds']*1e3:.1f} | "
+            f"**{p['dominant']}** | {p['useful_flops_ratio']:.2f} | "
+            f"{_gib(p.get('argument_bytes',0)+p.get('temp_bytes',0))} | {p.get('cost_method','')[:24]} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(records: List[Dict]) -> str:
+    rows = [
+        "| arch | shape | mesh | status | args GiB | temp GiB | FLOPs/dev | coll B/dev | compile s |",
+        "|---|---|---|---|---:|---:|---:|---:|---:|",
+    ]
+    for r in records:
+        if r["skipped"]:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP ({r['reason'][:48]}) | | | | | |")
+            continue
+        if not r["ok"]:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** {r['error'][:48]} | | | | | |")
+            continue
+        p = r["report"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{_gib(p.get('argument_bytes', 0))} | {_gib(p.get('temp_bytes', 0))} | "
+            f"{p['flops_per_device']:.2e} | {p['collective_bytes_per_device']:.2e} | "
+            f"{p.get('compile_seconds', 0):.0f} |"
+        )
+    return "\n".join(rows)
+
+
+def hillclimb_table(results: Dict) -> str:
+    out = []
+    for pair, recs in results.items():
+        out.append(f"\n#### {pair}\n")
+        out.append("| variant | compute ms | memory ms | collective ms | bound | temp GiB | vs baseline (c/m/coll) |")
+        out.append("|---|---:|---:|---:|---|---:|---|")
+        for r in recs:
+            if not r.get("ok"):
+                out.append(f"| {r['variant']} | — | — | — | FAIL | — | {r.get('error','')[:50]} |")
+                continue
+            vs = (
+                f"{r.get('compute_s_vs_base', 1):.2f}/"
+                f"{r.get('memory_s_vs_base', 1):.2f}/"
+                f"{r.get('collective_s_vs_base', 1):.2f}"
+            )
+            out.append(
+                f"| {r['variant']} | {r['compute_s']*1e3:.0f} | {r['memory_s']*1e3:.0f} | "
+                f"{r['collective_s']*1e3:.0f} | {r['dominant']} | "
+                f"{r['temp_bytes']/2**30:.1f} | {vs} |"
+            )
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--single", default=None)
+    ap.add_argument("--multi", default=None)
+    ap.add_argument("--hillclimb", default=None)
+    ap.add_argument("--out", default="EXPERIMENTS_tables.md")
+    args = ap.parse_args()
+
+    parts = []
+    if args.single:
+        recs = json.load(open(args.single))
+        parts.append("## §Roofline — single-pod 16x16 (256 chips), per (arch x shape)\n")
+        parts.append(roofline_table(recs))
+        parts.append("\n\n## §Dry-run — single-pod details\n")
+        parts.append(dryrun_table(recs))
+    if args.multi:
+        recs = json.load(open(args.multi))
+        parts.append("\n\n## §Dry-run — multi-pod 2x16x16 (512 chips)\n")
+        parts.append(dryrun_table(recs))
+    if args.hillclimb:
+        parts.append("\n\n## §Perf — hillclimb variants\n")
+        parts.append(hillclimb_table(json.load(open(args.hillclimb))))
+
+    with open(args.out, "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Serving launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --requests 4 --new-tokens 16
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.sharding import single_device_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.serve import Request, ServeEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--context", type=int, default=256)
+    ap.add_argument("--mesh", default="auto", choices=("auto", "single-pod", "multi-pod"))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.mesh == "auto":
+        mesh = single_device_mesh() if len(jax.devices()) == 1 else make_production_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi-pod"))
+
+    model = build_model(cfg, mesh)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, mesh, params, batch_size=args.requests, context=args.context)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab, size=rng.integers(3, 12)).astype(np.int32),
+                max_new_tokens=args.new_tokens)
+        for _ in range(args.requests)
+    ]
+    for i, comp in enumerate(engine.serve(reqs)):
+        print(f"req{i}: {comp.tokens.tolist()[:16]} "
+              f"({comp.tokens_per_second:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

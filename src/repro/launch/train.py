@@ -1,0 +1,58 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 100 --seq 64 --batch 8
+
+On a real TPU deployment, drop --smoke and pass --mesh to pick the
+production topology (the process environment provides the devices; this
+container runs reduced configs on CPU).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import INPUT_SHAPES, InputShape, get_config
+from repro.core.sharding import single_device_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.train.loop import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--shape", default=None, choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=("none", "full", "dots"))
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--mesh", default="auto", choices=("auto", "single-pod", "multi-pod"))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.shape:
+        shape = INPUT_SHAPES[args.shape]
+    else:
+        shape = InputShape("cli", seq_len=args.seq, global_batch=args.batch, kind="train")
+
+    if args.mesh == "auto":
+        mesh = single_device_mesh() if len(jax.devices()) == 1 else make_production_mesh()
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi-pod"))
+
+    train(
+        cfg, shape, mesh,
+        steps=args.steps, peak_lr=args.lr, microbatches=args.microbatches,
+        remat=args.remat, ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""linalg — the "MPI-based library" the engine offloads to.
+
+This package plays the role of Elemental + the authors' ARPACK-based
+truncated-SVD code (paper §2.2, §4.2): distributed dense linear algebra on
+the engine's 2D grid layout, implemented with shard_map/pjit + jax.lax
+collectives, with the local GEMM hot spot backed by the Pallas tiled-matmul
+kernel.
+
+- ``gemm.py``    — distributed matmul: SUMMA (panel-streamed), all-gather
+                   variant, and XLA-native einsum variant
+- ``tsqr.py``    — communication-avoiding tall-skinny QR
+- ``lanczos.py`` — Golub–Kahan–Lanczos bidiagonalization (ARPACK analogue)
+- ``svd.py``     — truncated SVD (Lanczos) + randomized SVD
+- ``pca.py``     — PCA on top of truncated SVD
+- ``solvers.py`` — CG, ridge, power-iteration norm/cond estimation
+- ``library.py`` — ``ElementalLib``: the ALI wrapper exposing all of the
+                   above to the engine by routine name
+"""
+
+from repro.linalg import gemm, lanczos, pca, solvers, svd, tsqr
+
+__all__ = ["gemm", "tsqr", "lanczos", "svd", "pca", "solvers"]

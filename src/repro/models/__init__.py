@@ -1,0 +1,19 @@
+"""models — the assigned architectures as composable JAX modules.
+
+- ``common.py``      — ParamDef tree system (single source for init +
+                       sharding specs + eval_shape), norms, rotary, embeddings
+- ``attention.py``   — GQA attention (qk-norm, biases, sliding window,
+                       KV caches incl. ring buffer), flash-kernel backed
+- ``mlp.py``         — SwiGLU / GELU MLPs
+- ``moe.py``         — grouped sort-based top-k routing, expert-parallel
+                       dispatch (the all-to-all = the engine's relayout)
+- ``ssm.py``         — Mamba2 SSD block (conv + gated SSD scan)
+- ``transformer.py`` — uniform decoder LM (dense / MoE / SSM / VLM)
+- ``hybrid.py``      — Jamba-style periodic mamba/attention interleave
+- ``encdec.py``      — Whisper-style encoder-decoder (stub audio frontend)
+- ``registry.py``    — ``build_model(cfg, mesh, rules)``
+"""
+
+from repro.models.registry import build_model
+
+__all__ = ["build_model"]

@@ -1,0 +1,192 @@
+"""GQA attention: projections, rope, qk-norm, KV caches (full + ring buffer).
+
+Train/prefill attention goes through :func:`repro.kernels.ops.attention`
+(flash kernel on TPU). Decode (one query against a long cache) is computed
+directly — it is bandwidth-bound; a kernel buys nothing and the ring-buffer
+position bookkeeping needs explicit key positions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import common
+from repro.models.common import Ax, ParamDef
+
+
+class KVCache(NamedTuple):
+    """Self-attention cache. ``k``/``v``: [B, S, Hkv, hd]; S = full context
+    (dense) or the sliding window (ring buffer)."""
+
+    k: jax.Array
+    v: jax.Array
+
+    @property
+    def size(self) -> int:
+        return self.k.shape[1]
+
+
+def attn_defs(cfg: ArchConfig, *, cross: bool = False) -> Dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    defs: Dict[str, ParamDef] = {
+        "wq": ParamDef((d, hq * hd), ("fsdp", "tensor")),
+        "wk": ParamDef((d, hkv * hd), ("fsdp", "tensor")),
+        "wv": ParamDef((d, hkv * hd), ("fsdp", "tensor")),
+        "wo": ParamDef((hq * hd, d), ("tensor", "fsdp")),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = ParamDef((hq * hd,), (None,), init="zeros")
+        defs["bk"] = ParamDef((hkv * hd,), (None,), init="zeros")
+        defs["bv"] = ParamDef((hkv * hd,), (None,), init="zeros")
+    if cfg.qk_norm and not cross:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="ones")
+        defs["k_norm"] = ParamDef((hd,), (None,), init="ones")
+    return defs
+
+
+def _project_q(cfg, p, x, ax: Ax) -> jax.Array:
+    b, l, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(b, l, cfg.n_heads, cfg.head_dim)
+    if "q_norm" in p:
+        q = common.rms_norm(q, p["q_norm"], cfg.rms_eps)
+    return ax(q, "batch", None, "tensor", None)
+
+
+def _project_kv(cfg, p, x, ax: Ax) -> Tuple[jax.Array, jax.Array]:
+    b, l, _ = x.shape
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = k.reshape(b, l, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, l, cfg.n_kv_heads, cfg.head_dim)
+    if "k_norm" in p:
+        k = common.rms_norm(k, p["k_norm"], cfg.rms_eps)
+    return ax(k, "batch", None, "tensor", None), ax(v, "batch", None, "tensor", None)
+
+
+def attention_block(
+    cfg: ArchConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,                 # [B, L, D]
+    ax: Ax,
+    *,
+    positions: Optional[jax.Array] = None,   # [B, L]
+    causal: bool = True,
+    window: Optional[int] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention (training / prefill).
+
+    With ``return_kv`` the post-rope K/V are also returned ([B, L, Hkv, hd])
+    so prefill can populate decode caches.
+    """
+    b, l, d = x.shape
+    q = _project_q(cfg, p, x, ax)
+    if cross_kv is not None:
+        k, v = cross_kv
+        causal = False
+        window = None
+    else:
+        k, v = _project_kv(cfg, p, x, ax)
+        if cfg.pos_emb == "rope":
+            pos = positions if positions is not None else jnp.broadcast_to(
+                jnp.arange(l)[None, :], (b, l)
+            )
+            q = common.apply_rope(q, pos, cfg.rope_theta)
+            k = common.apply_rope(k, pos, cfg.rope_theta)
+
+    # ops.attention wants [B, H, L, D]
+    out = ops.attention(
+        q.transpose(0, 2, 1, 3),
+        k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3),
+        causal=causal,
+        window=window,
+    ).transpose(0, 2, 1, 3)
+    out = ax(out, "batch", None, "tensor", None)
+    out = out.reshape(b, l, cfg.n_heads * cfg.head_dim)
+    y = out @ p["wo"].astype(x.dtype)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single token, cached)
+# ---------------------------------------------------------------------------
+
+def init_cache(
+    cfg: ArchConfig, batch: int, context: int, dtype, *, window: Optional[int] = None
+) -> KVCache:
+    s = min(window, context) if window else context
+    shape = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def decode_attention(
+    cfg: ArchConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,                  # [B, 1, D]
+    cache: KVCache,
+    pos: jax.Array,                # [] scalar: absolute position of this token
+    ax: Ax,
+    *,
+    window: Optional[int] = None,
+    cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> Tuple[jax.Array, KVCache]:
+    """One-token attention against the cache (ring buffer when windowed).
+
+    Ring semantics: slot = pos % S. Key positions are reconstructed from the
+    slot index so masking is exact both before the buffer wraps and after.
+    """
+    b, _, d = x.shape
+    q = _project_q(cfg, p, x, ax)                      # [B, 1, Hq, hd]
+
+    if cross_kv is not None:
+        k_all, v_all = cross_kv                        # [B, S, Hkv, hd]
+        mask = None
+        new_cache = cache
+    else:
+        k_new, v_new = _project_kv(cfg, p, x, ax)      # [B, 1, Hkv, hd]
+        if cfg.pos_emb == "rope":
+            pos_b = jnp.broadcast_to(pos[None, None], (b, 1))
+            q = common.apply_rope(q, pos_b, cfg.rope_theta)
+            k_new = common.apply_rope(k_new, pos_b, cfg.rope_theta)
+        s = cache.size
+        slot = (pos % s).astype(jnp.int32)
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+        new_cache = KVCache(k=k_all, v=v_all)
+        # absolute position held in each slot right now
+        idx = jnp.arange(s)
+        wrapped = pos - ((slot - idx) % s)             # [S]
+        valid = (wrapped >= 0) & (wrapped <= pos)
+        if window is not None:
+            valid &= wrapped > pos - window
+        mask = valid                                   # [S]
+
+    # scores: [B, Hq, 1, S] with GQA grouping
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    group = hq // hkv
+    qf = q[:, 0].astype(jnp.float32).reshape(b, hkv, group, cfg.head_dim)
+    kf = k_all.astype(jnp.float32)                     # [B, S, Hkv, hd]
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf) / jnp.sqrt(float(cfg.head_dim))
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v_all.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * cfg.head_dim).astype(x.dtype)
+    return out @ p["wo"].astype(x.dtype), new_cache

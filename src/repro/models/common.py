@@ -1,0 +1,204 @@
+"""Shared model infrastructure: the ParamDef tree, norms, rotary, embeddings.
+
+One definition tree per model is the single source of truth for
+(a) initialization, (b) PartitionSpecs (via logical-axis names resolved
+through :class:`repro.core.sharding.ShardingRules`), and (c)
+ShapeDtypeStructs for the allocation-free dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sharding import ShardingRules, divisible_spec
+
+# ---------------------------------------------------------------------------
+# ParamDef trees
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """Declaration of one parameter tensor."""
+
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]  # logical axis per dim (None = replicated)
+    init: str = "normal"                # normal | zeros | ones
+    scale: Optional[float] = None       # stddev; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(f"shape {self.shape} vs logical {self.logical} rank mismatch")
+
+    def fan_in(self) -> int:
+        # convention: last-but-one dim is fan-in for matrices; last for vectors
+        if len(self.shape) >= 2:
+            return self.shape[-2]
+        return self.shape[-1]
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, defs):
+    return jax.tree_util.tree_map(fn, defs, is_leaf=is_def)
+
+
+def init_params(defs, key: jax.Array, dtype=jnp.float32):
+    """Materialize a ParamDef tree into arrays, one fold of the key per leaf."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(d: ParamDef, k) -> jax.Array:
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        scale = d.scale if d.scale is not None else 1.0 / math.sqrt(max(d.fan_in(), 1))
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [make(d, k) for d, k in zip(leaves, keys)]
+    )
+
+
+def partition_specs(defs, rules: ShardingRules, mesh: Mesh):
+    """ParamDef tree -> PartitionSpec tree (divisibility-safe)."""
+
+    def spec(d: ParamDef) -> P:
+        raw = rules.resolve(d.logical)
+        return divisible_spec(d.shape, raw, mesh)
+
+    return tree_map_defs(spec, defs)
+
+
+def shape_structs(defs, dtype=jnp.float32):
+    """ParamDef tree -> ShapeDtypeStruct tree (for eval_shape / dry-run)."""
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs)
+
+
+def shard_params(params, defs, rules: ShardingRules, mesh: Mesh):
+    specs = partition_specs(defs, rules, mesh)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs
+    )
+
+
+def param_bytes(defs, dtype=jnp.float32) -> int:
+    itm = jnp.dtype(dtype).itemsize
+    total = 0
+    for d in jax.tree_util.tree_leaves(defs, is_leaf=is_def):
+        total += int(np.prod(d.shape)) * itm
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding helper
+# ---------------------------------------------------------------------------
+
+class Ax:
+    """Activation-annotation helper bound to (rules, mesh)."""
+
+    def __init__(self, rules: ShardingRules, mesh: Mesh):
+        self.rules = rules
+        self.mesh = mesh
+
+    def __call__(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        raw = self.rules.resolve(tuple(logical))
+        safe = divisible_spec(tuple(x.shape), raw, self.mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, safe))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_defs(cfg, d: int) -> Dict[str, ParamDef]:
+    if cfg.norm_variant == "layernorm":
+        return {
+            "scale": ParamDef((d,), (None,), init="ones"),
+            "bias": ParamDef((d,), (None,), init="zeros"),
+        }
+    return {"scale": ParamDef((d,), (None,), init="ones")}
+
+
+def apply_norm(cfg, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    if cfg.norm_variant == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"], cfg.rms_eps)
+    return rms_norm(x, p["scale"], cfg.rms_eps)
+
+
+# ---------------------------------------------------------------------------
+# Rotary and positional embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, L, H, D]; positions: [B, L] absolute token positions."""
+    freqs = rope_frequencies(x.shape[-1], theta)          # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, L, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(length: int, dim: int) -> jax.Array:
+    """Whisper-style sinusoid table [length, dim]."""
+    log_timescale = math.log(10_000.0) / (dim // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(dim // 2, dtype=jnp.float32))
+    scaled = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(scaled), jnp.cos(scaled)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embedding_defs(cfg) -> Dict[str, ParamDef]:
+    v, d = cfg.padded_vocab, cfg.d_model
+    # 0.02 stddev (GPT-2 convention); with tied embeddings this also keeps
+    # the unembedding logits O(1) at init.
+    out = {"embed": ParamDef((v, d), ("tensor", "fsdp"), scale=0.02)}
+    if not cfg.tie_embeddings:
+        out["unembed"] = ParamDef((d, v), ("fsdp", "tensor"))
+    return out
+
+
+def embed_tokens(p: Dict[str, jax.Array], tokens: jax.Array, compute_dtype) -> jax.Array:
+    return p["embed"].astype(compute_dtype)[tokens]
+
+
+def unembed(cfg, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """x: [..., D] -> logits [..., V] (padded vocab; slice at loss time)."""
+    if cfg.tie_embeddings:
+        w = p["embed"].astype(x.dtype).T
+    else:
+        w = p["unembed"].astype(x.dtype)
+    return x @ w

@@ -1,0 +1,270 @@
+"""HybridLM — Jamba-style periodic Mamba/attention interleave with MoE.
+
+Jamba (arXiv:2403.19887): blocks of ``attn_period`` layers with exactly one
+attention layer per block (in-block index ``attn_offset``) and the rest
+Mamba; the FFN alternates dense MLP / MoE every ``moe.every_k_layers``.
+
+Layers inside one period are heterogeneous, so the scan unit is the
+*period*: parameters are stacked per-role ([n_periods, ...] for the attn
+layer, [n_periods, P-1, ...] for the mamba layers, etc.) and ``lax.scan``
+runs over periods with a static Python loop over the 8 in-period layers.
+HLO size grows with the period (8 layers), not the depth (32).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.core.sharding import ShardingRules
+from repro.models import attention as attn_mod
+from repro.models import common, mlp as mlp_mod, moe as moe_mod, ssm as ssm_mod
+from repro.models.common import Ax, ParamDef
+from repro.models.transformer import (
+    DecodeState,
+    _mask_pad_vocab,
+    _masked_xent,
+    stack_defs,
+)
+
+
+class HybridDecodeState(NamedTuple):
+    kv: attn_mod.KVCache        # [n_periods, B, S, Hkv, hd]
+    ssm: ssm_mod.SSMCache       # [n_periods, P-1, B, ...]
+    pos: jax.Array
+
+
+def _tree_index(tree, i: int):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+class HybridLM:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        mesh: Mesh,
+        rules: Optional[ShardingRules] = None,
+        *,
+        remat: str = "none",
+        scan_unroll: int = 1,
+    ):
+        assert cfg.attn_period > 0 and cfg.n_layers % cfg.attn_period == 0
+        self.cfg = cfg
+        self.mesh = mesh
+        self.rules = rules or ShardingRules.default(mesh)
+        self.ax = Ax(self.rules, mesh)
+        self.remat = remat
+        self.scan_unroll = scan_unroll
+        self.period = cfg.attn_period
+        self.n_periods = cfg.n_layers // cfg.attn_period
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        self.num_groups = int(np.prod([sizes[a] for a in self.rules.batch], dtype=np.int64)) if self.rules.batch else 1
+        self.compute_dtype = jnp.dtype(cfg.compute_dtype)
+
+    # ------------------------------------------------------------------ defs
+    def _ffn_is_moe(self, layer_in_period: int) -> bool:
+        k = self.cfg.moe.every_k_layers if self.cfg.moe else 0
+        return bool(k) and (layer_in_period % k == k - 1)
+
+    def period_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        p = self.period
+        n_mamba = p - 1
+        n_moe = sum(1 for i in range(p) if self._ffn_is_moe(i))
+        n_mlp = p - n_moe
+        defs: Dict[str, Any] = {
+            "mamba": stack_defs(
+                {"norm": common.norm_defs(cfg, cfg.d_model), "ssm": ssm_mod.ssm_defs(cfg)},
+                n_mamba,
+            ),
+            "attn": {"norm": common.norm_defs(cfg, cfg.d_model), "attn": attn_mod.attn_defs(cfg)},
+            "ffn_norm": stack_defs(common.norm_defs(cfg, cfg.d_model), p),
+        }
+        if n_mlp:
+            defs["mlp"] = stack_defs(mlp_mod.mlp_defs(cfg, cfg.d_ff), n_mlp)
+        if n_moe:
+            defs["moe"] = stack_defs(moe_mod.moe_defs(cfg), n_moe)
+        return defs
+
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        return {
+            **common.embedding_defs(cfg),
+            "periods": stack_defs(self.period_defs(), self.n_periods),
+            "final_norm": common.norm_defs(cfg, cfg.d_model),
+        }
+
+    def init(self, key: jax.Array):
+        return common.init_params(self.param_defs(), key, jnp.dtype(self.cfg.param_dtype))
+
+    def param_partition_specs(self):
+        return common.partition_specs(self.param_defs(), self.rules, self.mesh)
+
+    def param_shapes(self):
+        return common.shape_structs(self.param_defs(), jnp.dtype(self.cfg.param_dtype))
+
+    # ---------------------------------------------------------------- period
+    def _period_train(self, x: jax.Array, pp: Dict[str, Any], positions: jax.Array):
+        cfg, ax = self.cfg, self.ax
+        aux_sum = jnp.zeros((), jnp.float32)
+        mamba_i = mlp_i = moe_i = 0
+        for i in range(self.period):
+            # mixer
+            if i == cfg.attn_offset:
+                lp = pp["attn"]
+                h = common.apply_norm(cfg, lp["norm"], x)
+                x = x + attn_mod.attention_block(
+                    cfg, lp["attn"], h, ax, positions=positions, causal=True,
+                )
+            else:
+                lp = _tree_index(pp["mamba"], mamba_i)
+                mamba_i += 1
+                h = common.apply_norm(cfg, lp["norm"], x)
+                x = x + ssm_mod.ssm_block(cfg, lp["ssm"], h, ax)
+            # ffn
+            nrm = _tree_index(pp["ffn_norm"], i)
+            h = common.apply_norm(cfg, nrm, x)
+            if self._ffn_is_moe(i):
+                mp = _tree_index(pp["moe"], moe_i)
+                moe_i += 1
+                y, aux = moe_mod.moe_block(cfg, mp, h, ax, num_groups=self.num_groups)
+                aux_sum = aux_sum + aux["moe_aux"]
+            else:
+                wp = _tree_index(pp["mlp"], mlp_i)
+                mlp_i += 1
+                y = mlp_mod.mlp_block(cfg, wp, h, ax)
+            x = x + y
+        return x, aux_sum
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        logits, _ = self._forward_full(params, batch)
+        return logits
+
+    def _forward_full(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = common.embed_tokens(params, tokens, self.compute_dtype)
+        x = self.ax(x, "batch", None, None)
+        b, l, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+
+        fn = functools.partial(self._period_train, positions=positions)
+        if self.remat in ("full", "dots"):
+            fn = jax.checkpoint(fn)
+
+        x, auxs = jax.lax.scan(
+            lambda c, pp: fn(c, pp), x, params["periods"], unroll=self.scan_unroll
+        )
+        x = common.apply_norm(cfg, params["final_norm"], x)
+        return common.unembed(cfg, params, x), auxs
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        logits, auxs = self._forward_full(params, batch)
+        tokens = batch["tokens"]
+        xent, acc = _masked_xent(cfg, logits[:, :-1], tokens[:, 1:], batch.get("loss_mask"))
+        aux = jnp.mean(auxs) / max(sum(1 for i in range(self.period) if self._ffn_is_moe(i)), 1)
+        total = xent + cfg.moe.router_aux_weight * aux
+        return total, {"loss": total, "xent": xent, "accuracy": acc, "moe_aux": aux}
+
+    # ------------------------------------------------------ decode sharding
+    def decode_state_logical(self) -> "HybridDecodeState":
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        tensor = 1
+        for a in self.rules.tensor:
+            tensor *= sizes.get(a, 1)
+        if tensor > 1 and self.cfg.n_kv_heads % tensor == 0:
+            kv_spec = (None, "batch", None, "tensor", None)
+        else:
+            kv_spec = (None, "batch", "tensor", None, None)
+        return HybridDecodeState(
+            kv=attn_mod.KVCache(k=kv_spec, v=kv_spec),
+            ssm=ssm_mod.SSMCache(
+                conv=(None, None, "batch", None, "tensor"),
+                state=(None, None, "batch", "tensor", None, None),
+            ),
+            pos=(),
+        )
+
+    # ---------------------------------------------------------------- decode
+    def init_decode_state(self, batch: int, context: int, dtype=None) -> HybridDecodeState:
+        cfg = self.cfg
+        dtype = dtype or self.compute_dtype
+        kv_one = attn_mod.init_cache(cfg, batch, context, dtype)
+        ssm_one = ssm_mod.init_ssm_cache(cfg, batch, dtype)
+        np_, nm = self.n_periods, self.period - 1
+        return HybridDecodeState(
+            kv=attn_mod.KVCache(
+                k=jnp.zeros((np_,) + kv_one.k.shape, dtype),
+                v=jnp.zeros((np_,) + kv_one.v.shape, dtype),
+            ),
+            ssm=ssm_mod.SSMCache(
+                conv=jnp.zeros((np_, nm) + ssm_one.conv.shape, dtype),
+                state=jnp.zeros((np_, nm) + ssm_one.state.shape, dtype),
+            ),
+            pos=jnp.zeros((), jnp.int32),
+        )
+
+    def decode_step(self, params, state: HybridDecodeState, tokens: jax.Array):
+        cfg, ax = self.cfg, self.ax
+        x = common.embed_tokens(params, tokens, self.compute_dtype)
+        x = ax(x, "batch", None, None)
+        pos = state.pos
+
+        def period_body(carry, scanned):
+            pp, kv_cache, ssm_cache = scanned
+            x = carry
+            mamba_i = mlp_i = moe_i = 0
+            new_kv = kv_cache
+            new_conv, new_state = [], []
+            for i in range(self.period):
+                if i == cfg.attn_offset:
+                    lp = pp["attn"]
+                    h = common.apply_norm(cfg, lp["norm"], x)
+                    y, new_kv = attn_mod.decode_attention(
+                        cfg, lp["attn"], h, kv_cache, pos, ax
+                    )
+                    x = x + y
+                else:
+                    lp = _tree_index(pp["mamba"], mamba_i)
+                    cache_i = ssm_mod.SSMCache(
+                        conv=ssm_cache.conv[mamba_i], state=ssm_cache.state[mamba_i]
+                    )
+                    h = common.apply_norm(cfg, lp["norm"], x)
+                    y, upd = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h, cache_i, ax)
+                    new_conv.append(upd.conv)
+                    new_state.append(upd.state)
+                    mamba_i += 1
+                    x = x + y
+                nrm = _tree_index(pp["ffn_norm"], i)
+                h = common.apply_norm(cfg, nrm, x)
+                if self._ffn_is_moe(i):
+                    mp = _tree_index(pp["moe"], moe_i)
+                    moe_i += 1
+                    y, _ = moe_mod.moe_block(cfg, mp, h, ax, num_groups=self.num_groups)
+                else:
+                    wp = _tree_index(pp["mlp"], mlp_i)
+                    mlp_i += 1
+                    y = mlp_mod.mlp_block(cfg, wp, h, ax)
+                x = x + y
+            new_ssm = ssm_mod.SSMCache(
+                conv=jnp.stack(new_conv), state=jnp.stack(new_state)
+            )
+            return x, (new_kv, new_ssm)
+
+        x, (new_kv, new_ssm) = jax.lax.scan(
+            period_body, x, (params["periods"], state.kv, state.ssm),
+            unroll=self.scan_unroll,
+        )
+        x = common.apply_norm(cfg, params["final_norm"], x)
+        logits = common.unembed(cfg, params, x)[:, 0]
+        return _mask_pad_vocab(cfg, logits), HybridDecodeState(
+            kv=new_kv, ssm=new_ssm, pos=pos + 1
+        )

@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (whisper)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Ax, ParamDef
+
+
+def mlp_defs(cfg: ArchConfig, d_ff: int) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    if cfg.mlp_variant == "swiglu":
+        return {
+            "w_gate": ParamDef((d, d_ff), ("fsdp", "tensor")),
+            "w_up": ParamDef((d, d_ff), ("fsdp", "tensor")),
+            "w_down": ParamDef((d_ff, d), ("tensor", "fsdp")),
+        }
+    return {
+        "w_in": ParamDef((d, d_ff), ("fsdp", "tensor")),
+        "b_in": ParamDef((d_ff,), (None,), init="zeros"),
+        "w_out": ParamDef((d_ff, d), ("tensor", "fsdp")),
+        "b_out": ParamDef((cfg.d_model,), (None,), init="zeros"),
+    }
+
+
+def mlp_block(cfg: ArchConfig, p: Dict[str, jax.Array], x: jax.Array, ax: Ax) -> jax.Array:
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+        h = ax(h, "batch", None, "tensor")
+        return h @ p["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["w_in"].astype(x.dtype) + p["b_in"].astype(x.dtype))
+    h = ax(h, "batch", None, "tensor")
+    return h @ p["w_out"].astype(x.dtype) + p["b_out"].astype(x.dtype)

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts with grouped, sort-based, expert-parallel dispatch.
+
+Routing happens in *groups* — one group per data-parallel shard — so the
+argsort/scatter bookkeeping never crosses devices; the only cross-device
+movement is the dispatch of the packed expert buffers from batch sharding to
+expert sharding. That boundary lowers to an **all-to-all**, which is exactly
+the engine relayout primitive of the paper (DESIGN.md §4): the MoE layer is
+the Alchemist bridge applied per-layer.
+
+Dispatch is sort/scatter-based (not one-hot-einsum) so HLO FLOPs stay
+honest: the one-hot formulation inflates compiled FLOPs by O(T²k/E·D) of
+mask matmuls, which would poison the §Roofline compute term.
+
+Capacity: per group, ``C = min(Tg, max(ceil(Tg·K·cf / E), min_capacity))``;
+overflow tokens are dropped (GShard semantics) and the drop fraction is
+reported as a metric.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import Ax, ParamDef
+
+
+def moe_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    assert cfg.moe is not None
+    d, e, f = cfg.d_model, cfg.moe.num_experts, cfg.moe.d_expert
+    if cfg.moe_shard_expert_ff:
+        # Megatron-in-expert: shard the FF dim over the fsdp axis; the
+        # contraction over F reduces activations (cheap at decode) instead
+        # of gathering weights
+        return {
+            "router": ParamDef((d, e), (None, None), scale=0.02),
+            "w_gate": ParamDef((e, d, f), ("expert", None, "fsdp")),
+            "w_up": ParamDef((e, d, f), ("expert", None, "fsdp")),
+            "w_down": ParamDef((e, f, d), ("expert", "fsdp", None)),
+        }
+    return {
+        "router": ParamDef((d, e), (None, None), scale=0.02),
+        "w_gate": ParamDef((e, d, f), ("expert", "fsdp", None)),
+        "w_up": ParamDef((e, d, f), ("expert", "fsdp", None)),
+        "w_down": ParamDef((e, f, d), ("expert", None, "fsdp")),
+    }
+
+
+def moe_block(
+    cfg: ArchConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,            # [B, L, D]
+    ax: Ax,
+    *,
+    num_groups: int,
+    min_capacity: int = 8,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    moe = cfg.moe
+    assert moe is not None
+    b, l, d = x.shape
+    t_total = b * l
+    g = max(min(num_groups, t_total), 1)
+    while t_total % g:
+        g -= 1
+    tg = t_total // g
+    e, k = moe.num_experts, moe.top_k
+    cap = min(tg, max(math.ceil(tg * k * moe.capacity_factor / e), min_capacity))
+
+    xt = x.reshape(g, tg, d)
+    xt = ax(xt, "batch", None, None)
+
+    # ---- routing (f32) -----------------------------------------------------
+    router_logits = jnp.einsum(
+        "gtd,de->gte", xt.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(router_logits, axis=-1)            # [G, Tg, E]
+    gates, ids = jax.lax.top_k(probs, k)                      # [G, Tg, K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    ids_f = ids.reshape(g, tg * k)
+    gates_f = gates.reshape(g, tg * k)
+    order = jnp.argsort(ids_f, axis=-1, stable=True)          # [G, TgK]
+    sorted_ids = jnp.take_along_axis(ids_f, order, axis=-1)
+    src_tok = order // k
+
+    counts = jnp.sum(jax.nn.one_hot(ids_f, e, dtype=jnp.int32), axis=1)  # [G, E]
+    offsets = jnp.cumsum(counts, axis=-1) - counts                       # [G, E]
+    pos = jnp.arange(tg * k)[None, :] - jnp.take_along_axis(offsets, sorted_ids, axis=-1)
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_ids * cap + pos, e * cap)   # overflow slot
+
+    # ---- pack into expert buffers (local to each group) ----------------------
+    x_sorted = jnp.take_along_axis(xt, src_tok[..., None], axis=1)       # [G, TgK, D]
+
+    def pack(xs, ds):
+        return jnp.zeros((e * cap + 1, d), xs.dtype).at[ds].set(xs)
+
+    buf = jax.vmap(pack)(x_sorted, dest)[:, : e * cap].reshape(g, e, cap, d)
+    # dispatch boundary: groups stay on the batch axes, experts move to the
+    # tensor axis -> XLA emits the all-to-all here
+    buf = ax(buf, "batch", "expert", None, None)
+
+    # ---- expert FFN (SwiGLU) -------------------------------------------------
+    w_gate = p["w_gate"].astype(buf.dtype)
+    w_up = p["w_up"].astype(buf.dtype)
+    w_down = p["w_down"].astype(buf.dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, w_gate)) * jnp.einsum(
+        "gecd,edf->gecf", buf, w_up
+    )
+    out = jnp.einsum("gecf,efd->gecd", h, w_down)
+    out = ax(out, "batch", "expert", None, None)
+
+    # ---- combine back (undispatch) -------------------------------------------
+    out_flat = out.reshape(g, e * cap, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((g, 1, d), out.dtype)], axis=1)
+    y_sorted = jnp.take_along_axis(out_flat, dest[..., None], axis=1)    # [G, TgK, D]
+    gates_sorted = jnp.take_along_axis(gates_f, order, axis=-1) * keep
+
+    def combine(ys, ws, toks):
+        return jnp.zeros((tg, d), ys.dtype).at[toks].add(ys * ws[:, None].astype(ys.dtype))
+
+    y = jax.vmap(combine)(y_sorted, gates_sorted, src_tok).reshape(b, l, d)
+
+    # ---- aux: load-balance loss + drop fraction --------------------------------
+    frac_tokens = counts.astype(jnp.float32) / (tg * k)                  # [G, E]
+    mean_probs = probs.mean(axis=1)                                      # [G, E]
+    aux = e * jnp.mean(jnp.sum(frac_tokens * mean_probs, axis=-1))
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    return y, {"moe_aux": aux, "moe_dropped": dropped}

@@ -1,0 +1,111 @@
+"""Model registry + input specs.
+
+``build_model(cfg, mesh, ...)`` returns the right family class;
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of an (arch x input-shape) combination — weak-type-correct,
+shardable, no device allocation — which is exactly what the multi-pod
+dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.sharding import ShardingRules
+
+
+def build_model(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    rules: Optional[ShardingRules] = None,
+    *,
+    sliding_window: Optional[int] = None,
+    remat: str = "none",
+    scan_unroll: int = 1,
+):
+    if rules is None:
+        rules = ShardingRules.default(mesh)
+    if cfg.family in ("dense", "moe", "ssm", "vlm"):
+        from repro.models.transformer import DecoderLM
+
+        return DecoderLM(cfg, mesh, rules, sliding_window=sliding_window,
+                         remat=remat, scan_unroll=scan_unroll)
+    if cfg.family == "hybrid":
+        from repro.models.hybrid import HybridLM
+
+        return HybridLM(cfg, mesh, rules, remat=remat, scan_unroll=scan_unroll)
+    if cfg.family == "audio":
+        from repro.models.encdec import EncDecLM
+
+        return EncDecLM(cfg, mesh, rules, remat=remat, scan_unroll=scan_unroll)
+    raise KeyError(f"no model family {cfg.family!r}")
+
+
+def effective_seq(cfg: ArchConfig, shape: InputShape) -> int:
+    """Decoder sequence length actually used (whisper caps at 448)."""
+    if cfg.is_enc_dec:
+        return min(shape.seq_len, cfg.decoder_max_seq)
+    return shape.seq_len
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the *batch* inputs of (cfg, shape).
+
+    train/prefill: the full token batch (+ stub frontend embeddings).
+    decode: a single-token batch; the KV/SSM cache specs come from
+    :func:`decode_state_structs`.
+    """
+    b = shape.global_batch
+    l = effective_seq(cfg, shape)
+    act_dtype = jnp.dtype(cfg.compute_dtype)
+
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+    if cfg.family == "audio":
+        return {
+            "frames": jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), act_dtype),
+            "tokens": jax.ShapeDtypeStruct((b, l), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        tv = min(cfg.vision_tokens, l // 2)
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, l - tv), jnp.int32),
+            "vision_embeds": jax.ShapeDtypeStruct((b, tv, cfg.d_model), act_dtype),
+        }
+    return {"tokens": jax.ShapeDtypeStruct((b, l), jnp.int32)}
+
+
+def input_shardings(cfg: ArchConfig, shape: InputShape, rules: ShardingRules) -> Dict[str, P]:
+    """PartitionSpecs matching :func:`input_specs` (batch over the data axes)."""
+    batch = rules.batch if len(rules.batch) != 1 else rules.batch[0]
+    specs = {}
+    for name, s in input_specs(cfg, shape).items():
+        specs[name] = P(*([batch] + [None] * (len(s.shape) - 1)))
+    return specs
+
+
+def decode_state_structs(model, cfg: ArchConfig, shape: InputShape):
+    """ShapeDtypeStructs for the decode cache of (cfg, shape) — built via
+    eval_shape so nothing is allocated."""
+    b = shape.global_batch
+    ctx = effective_seq(cfg, shape)
+    return jax.eval_shape(lambda: model.init_decode_state(b, ctx))
+
+
+def make_batch(cfg: ArchConfig, shape: InputShape, key: jax.Array) -> Dict[str, jax.Array]:
+    """Materialize a random batch matching input_specs (smoke tests/examples)."""
+    specs = input_specs(cfg, shape)
+    out: Dict[str, jax.Array] = {}
+    for name, s in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, s.shape, 0, cfg.vocab, dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+    return out

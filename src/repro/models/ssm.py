@@ -1,0 +1,164 @@
+"""Mamba2 block (SSD) — conv + gated selective-state-space mixer.
+
+Follows arXiv:2405.21060: fused input projection producing
+(z, x, B, C, dt), a causal depthwise conv over (x, B, C), softplus dt with a
+learned bias, per-head scalar decay A, the SSD scan (Pallas kernel via
+``ops.ssd_scan``), a D skip connection, gated RMSNorm, and output projection.
+
+Decode carries two caches per layer: the conv tail [B, W-1, conv_channels]
+and the SSD state [B, H, P, N].
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops
+from repro.models import common
+from repro.models.common import Ax, ParamDef
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # [B, W-1, conv_channels]
+    state: jax.Array  # [B, H, P, N]
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return s, d, di, nh, conv_ch
+
+
+def ssm_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    s, d, di, nh, conv_ch = _dims(cfg)
+    gs = s.n_groups * s.d_state
+    return {
+        # fused in_proj -> [z | x | B | C | dt]
+        "w_in": ParamDef((d, 2 * di + 2 * gs + nh), ("fsdp", "tensor")),
+        "conv_w": ParamDef((s.conv_width, conv_ch), (None, "tensor"), scale=0.5),
+        "conv_b": ParamDef((conv_ch,), ("tensor",), init="zeros"),
+        "dt_bias": ParamDef((nh,), (None,), init="zeros"),
+        "a_log": ParamDef((nh,), (None,), init="zeros", scale=1.0),
+        "d_skip": ParamDef((nh,), (None,), init="ones"),
+        "norm_scale": ParamDef((di,), ("tensor",), init="ones"),
+        "w_out": ParamDef((di, d), ("tensor", "fsdp")),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: jax.Array):
+    s, d, di, nh, _ = _dims(cfg)
+    gs = s.n_groups * s.d_state
+    z, xs, b_mat, c_mat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + gs, 2 * di + 2 * gs], axis=-1
+    )
+    return z, xs, b_mat, c_mat, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x [B, L, C], w [W, C]."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def ssm_block(
+    cfg: ArchConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,          # [B, L, D]
+    ax: Ax,
+    *,
+    return_cache: bool = False,
+):
+    """Full-sequence SSD (training / prefill). With ``return_cache`` also
+    returns the SSMCache (final state + conv tail) for decode handoff."""
+    s, d, di, nh, conv_ch = _dims(cfg)
+    bsz, l, _ = x.shape
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xs, b_mat, c_mat, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, b_mat, c_mat], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xs, b_mat, c_mat = jnp.split(conv_out, [di, di + s.n_groups * s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    xh = xs.reshape(bsz, l, nh, s.head_dim)
+    xh = ax(xh, "batch", None, "tensor", None)
+    bh = b_mat.reshape(bsz, l, s.n_groups, s.d_state)
+    ch = c_mat.reshape(bsz, l, s.n_groups, s.d_state)
+
+    y, final_state = ops.ssd_scan(
+        xh.astype(jnp.float32), dt, a,
+        bh.astype(jnp.float32), ch.astype(jnp.float32),
+        chunk=s.chunk,
+    )
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.rms_eps)
+    out = y @ p["w_out"].astype(x.dtype)
+    if return_cache:
+        conv_tail = conv_in[:, -(s.conv_width - 1):, :]
+        cache = SSMCache(conv=conv_tail.astype(x.dtype), state=final_state.astype(x.dtype))
+        return out, cache
+    return out
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype) -> SSMCache:
+    s, d, di, nh, conv_ch = _dims(cfg)
+    return SSMCache(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        state=jnp.zeros((batch, nh, s.head_dim, s.d_state), dtype),
+    )
+
+
+def ssm_decode_step(
+    cfg: ArchConfig,
+    p: Dict[str, jax.Array],
+    x: jax.Array,          # [B, 1, D]
+    cache: SSMCache,
+    ax: Ax,
+) -> Tuple[jax.Array, SSMCache]:
+    """Single-token SSD recurrence (O(1) in context length)."""
+    s, d, di, nh, conv_ch = _dims(cfg)
+    bsz = x.shape[0]
+    proj = x @ p["w_in"].astype(x.dtype)
+    z, xs, b_mat, c_mat, dt = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([xs, b_mat, c_mat], axis=-1)      # [B, 1, C]
+    window = jnp.concatenate([cache.conv.astype(x.dtype), conv_in], axis=1)  # [B, W, C]
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(x.dtype)
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = window[:, 1:, :]
+
+    xs, b_mat, c_mat = jnp.split(conv_out, [di, di + s.n_groups * s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    xh = xs.reshape(bsz, 1, nh, s.head_dim)
+    bh = b_mat.reshape(bsz, 1, s.n_groups, s.d_state)
+    ch = c_mat.reshape(bsz, 1, s.n_groups, s.d_state)
+
+    y, new_state = ops.ssd_step(
+        xh.astype(jnp.float32), dt, a,
+        bh.astype(jnp.float32), ch.astype(jnp.float32),
+        cache.state.astype(jnp.float32),
+    )
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.rms_eps)
+    return y @ p["w_out"].astype(x.dtype), SSMCache(
+        conv=new_conv.astype(cache.conv.dtype), state=new_state.astype(cache.state.dtype)
+    )

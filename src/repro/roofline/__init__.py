@@ -1,0 +1,6 @@
+"""roofline — v5e hardware model, HLO collective parser, three-term report."""
+
+from repro.roofline.hw import TPUv5e
+from repro.roofline.analysis import RooflineReport, analyze_compiled
+
+__all__ = ["TPUv5e", "RooflineReport", "analyze_compiled"]

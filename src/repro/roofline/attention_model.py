@@ -1,0 +1,121 @@
+"""Analytic flash-attention roofline terms.
+
+Why this exists: the dry-run runs on the CPU backend, where attention lowers
+to XLA einsums. A materialized [L, L] score tensor makes cost_analysis
+report HBM traffic ~14x higher than the Pallas flash kernel the TPU target
+actually runs (the kernel streams K/V tiles through VMEM). So the dry-run's
+cost-fit variants replace attention with an O(L·D) stub (exact fit of
+everything-but-attention) and THIS module adds attention back with the exact
+arithmetic of the kernel we ship (kernels/flash_attention.py):
+
+FLOPs per layer (forward): 4 · B · Lq · Lk_eff · Hq · hd
+  (QKᵀ and PV are each 2·B·Hq·Lq·Lk·hd; causal halves Lk_eff; sliding
+   window caps it at W)
+HBM bytes per layer (forward), streaming model with q-block bq:
+  read Q + write O:        2 · B · Hq · Lq · hd · itemsize
+  read K,V (per q-block):  2 · B · Hkv · Lk_eff · hd · itemsize · nq_blocks
+Backward = 2x forward FLOPs (dQ,dK,dV recompute included at 2.5x in
+practice; we use the standard 2x + 1x remat-forward when remat is on).
+Collectives: none — attention partitions over batch (and heads when they
+divide the tensor axis); no cross-shard reduction is required.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.kernels.flash_attention import DEFAULT_BQ
+from repro.models.registry import effective_seq
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnTerms:
+    flops_global: float
+    hbm_bytes_global: float
+
+    def per_device(self, n_batch_shards: int, head_shards: int) -> Tuple[float, float]:
+        div = max(n_batch_shards * head_shards, 1)
+        return self.flops_global / div, self.hbm_bytes_global / div
+
+
+def _layer_terms(
+    b: int, lq: int, lk: int, hq: int, hkv: int, hd: int,
+    *, causal: bool, window: Optional[int], itemsize: int = 2, bq: int = DEFAULT_BQ,
+) -> AttnTerms:
+    lk_eff = lk / 2 if causal else lk
+    if window is not None:
+        lk_eff = min(lk_eff, window)
+    flops = 4.0 * b * lq * lk_eff * hq * hd
+    nq = max(lq // min(bq, lq), 1)
+    bytes_qo = 2.0 * b * hq * lq * hd * itemsize
+    bytes_kv = 2.0 * b * hkv * lk_eff * hd * itemsize * nq
+    return AttnTerms(flops_global=flops, hbm_bytes_global=bytes_qo + bytes_kv)
+
+
+def _num_attn_layers(cfg: ArchConfig) -> int:
+    if cfg.family == "ssm":
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_period
+    return cfg.n_layers
+
+
+def attention_roofline(
+    cfg: ArchConfig,
+    shape: InputShape,
+    *,
+    remat: bool = True,
+) -> AttnTerms:
+    """Global analytic flash-attention terms for one step of (cfg, shape).
+
+    Covers self-attention of every attention layer plus whisper's
+    encoder self-attention and decoder cross-attention. Decode shapes get
+    no correction here (their direct cached-attention HLO is already
+    kernel-faithful)."""
+    if shape.kind == "decode":
+        return AttnTerms(0.0, 0.0)
+
+    b = shape.global_batch
+    l = effective_seq(cfg, shape)
+    hd = cfg.head_dim or 0
+    n_attn = _num_attn_layers(cfg)
+    window = cfg.sliding_window if shape.name == "long_500k" else None
+
+    flops = 0.0
+    hbm = 0.0
+    if n_attn and hd:
+        per = _layer_terms(
+            b, l, l, cfg.n_heads, cfg.n_kv_heads, hd, causal=True, window=window
+        )
+        flops += per.flops_global * n_attn
+        hbm += per.hbm_bytes_global * n_attn
+
+    if cfg.is_enc_dec:
+        enc = _layer_terms(
+            b, cfg.encoder_seq, cfg.encoder_seq, cfg.n_heads, cfg.n_kv_heads, hd,
+            causal=False, window=None,
+        )
+        cross = _layer_terms(
+            b, l, cfg.encoder_seq, cfg.n_heads, cfg.n_kv_heads, hd,
+            causal=False, window=None,
+        )
+        flops += enc.flops_global * cfg.encoder_layers + cross.flops_global * cfg.n_layers
+        hbm += enc.hbm_bytes_global * cfg.encoder_layers + cross.hbm_bytes_global * cfg.n_layers
+
+    if shape.kind == "train":
+        # fwd + bwd(2x) + remat re-forward(1x)
+        mult = 4.0 if remat else 3.0
+        flops *= mult
+        hbm *= mult
+    return AttnTerms(flops_global=flops, hbm_bytes_global=hbm)
+
+
+def attention_shards(cfg: ArchConfig, mesh_shape: Tuple[int, ...], axis_names: Tuple[str, ...]) -> Tuple[int, int]:
+    """(batch_shards, head_shards) the attention work divides over."""
+    sizes = dict(zip(axis_names, mesh_shape))
+    batch_shards = sizes.get("pod", 1) * sizes.get("data", 1)
+    tensor = sizes.get("model", 1)
+    head_shards = tensor if (cfg.n_heads and cfg.n_heads % tensor == 0) else 1
+    return batch_shards, head_shards

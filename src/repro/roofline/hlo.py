@@ -1,0 +1,136 @@
+"""HLO-text collective parser.
+
+``compiled.cost_analysis()`` reports FLOPs and HBM bytes but NOT collective
+traffic, so we parse the post-SPMD HLO module text: every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction is located, its result shapes and
+replica-group size extracted, and a ring-algorithm traffic model applied:
+
+  all-gather          (g-1)/g * out_bytes      (out = gathered buffer)
+  reduce-scatter      (g-1)   * out_bytes      (in = g * out)
+  all-reduce          2(g-1)/g * out_bytes     (reduce-scatter + all-gather)
+  all-to-all          (g-1)/g * out_bytes
+  collective-permute  out_bytes
+
+All quantities are per-device (the module is the per-device SPMD program).
+The dry-run lowers models with scans fully unrolled, so the flat text parse
+sees every layer (no while-loop trip-count ambiguity); a safety check
+reports whether any ``while`` op remains.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+# instruction line: "%name = <result-shapes> <opcode>(<operands>), attrs"
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def shape_bytes(shape_text: str) -> int:
+    """Sum byte sizes of every dtype[shape] token in a result string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first_group = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(first_group), 1)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    out_bytes: int
+    group_size: int
+    traffic_bytes: int
+    line: str
+
+
+@dataclasses.dataclass
+class CollectiveSummary:
+    ops: List[CollectiveOp]
+    has_while: bool
+
+    @property
+    def total_traffic(self) -> int:
+        return sum(o.traffic_bytes for o in self.ops)
+
+    def by_kind(self) -> Dict[str, Tuple[int, int]]:
+        """kind -> (count, traffic bytes)."""
+        out: Dict[str, Tuple[int, int]] = {}
+        for o in self.ops:
+            c, b = out.get(o.kind, (0, 0))
+            out[o.kind] = (c + 1, b + o.traffic_bytes)
+        return out
+
+
+def _traffic(kind: str, out_bytes: int, g: int) -> int:
+    if g <= 1:
+        return 0
+    if kind == "all-gather":
+        return int(out_bytes * (g - 1) / g)
+    if kind == "reduce-scatter":
+        return int(out_bytes * (g - 1))
+    if kind == "all-reduce":
+        return int(2 * out_bytes * (g - 1) / g)
+    if kind == "all-to-all":
+        return int(out_bytes * (g - 1) / g)
+    if kind == "collective-permute":
+        return out_bytes
+    return 0
+
+
+def parse_collectives(hlo_text: str, *, default_group: int) -> CollectiveSummary:
+    ops: List[CollectiveOp] = []
+    seen_started = set()
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        # avoid double counting start/done pairs: skip "-done" lines
+        if f"{m.group(2)}-done(" in line:
+            continue
+        shape_text, kind = m.group(1), m.group(2)
+        out_b = shape_bytes(shape_text)
+        g = _group_size(line, default_group)
+        ops.append(
+            CollectiveOp(
+                kind=kind,
+                out_bytes=out_b,
+                group_size=g,
+                traffic_bytes=_traffic(kind, out_b, g),
+                line=line.strip()[:160],
+            )
+        )
+    has_while = bool(re.search(r"\bwhile\(", hlo_text))
+    return CollectiveSummary(ops=ops, has_while=has_while)

@@ -1,0 +1,21 @@
+"""Target hardware constants (TPU v5e), per the assignment:
+
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM bandwidth; ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUv5e:
+    peak_flops_bf16: float = 197e12     # FLOP/s per chip
+    hbm_bandwidth: float = 819e9        # bytes/s per chip
+    ici_link_bandwidth: float = 50e9    # bytes/s per link (one direction)
+    hbm_bytes: int = 16 * 1024**3       # 16 GiB per chip
+    vmem_bytes: int = 128 * 1024**2     # ~128 MiB VMEM per chip (v5e)
+    mxu_dim: int = 128
+
+
+HW = TPUv5e()

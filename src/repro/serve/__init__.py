@@ -1,0 +1,10 @@
+"""serve — batched inference: prefill, decode loops, request batching.
+
+Decode shapes from the assignment (``decode_32k``, ``long_500k``) lower
+``serve_step`` (one token against a pre-filled cache), built here.
+"""
+
+from repro.serve.engine import ServeEngine, Request
+from repro.serve.sampling import greedy, temperature_sample
+
+__all__ = ["ServeEngine", "Request", "greedy", "temperature_sample"]

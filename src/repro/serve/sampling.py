@@ -1,0 +1,28 @@
+"""Token sampling strategies (jit-safe)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
+    """logits [B, V] -> tokens [B]."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(
+    logits: jax.Array,
+    key: jax.Array,
+    *,
+    temperature: float = 1.0,
+    top_k: Optional[int] = None,
+) -> jax.Array:
+    """logits [B, V] -> tokens [B] with temperature / top-k."""
+    logits32 = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_k is not None:
+        kth = jax.lax.top_k(logits32, top_k)[0][..., -1:]
+        logits32 = jnp.where(logits32 < kth, -jnp.inf, logits32)
+    return jax.random.categorical(key, logits32, axis=-1).astype(jnp.int32)

@@ -1,0 +1,35 @@
+"""sparklike — a faithful miniature of the Spark execution model.
+
+This package is the paper's *comparison baseline* (the thing Alchemist
+rescues you from), implemented honestly so the reproduction's Spark-side
+numbers come from real mechanics, not guesses:
+
+- ``rdd.py``      — immutable row-partitioned datasets, driver-scheduled
+                    stages, per-stage/task overhead accounting.
+- ``shuffle.py``  — the all-to-all shuffle primitive with byte accounting.
+- ``matrices.py`` — ``IndexedRowMatrix`` / ``BlockMatrix`` with the
+                    explode-into-(i, j, v)-triples conversion the paper
+                    singles out (§4.1) as the reason Spark matmul is
+                    memory-hungry and unreliable.
+- ``mllib.py``    — MLlib-style ``computeSVD`` (ARPACK-on-the-driver with a
+                    distributed matvec and a driver round-trip per
+                    iteration) and ``BlockMatrix.multiply``.
+
+The cluster is simulated in-process: partitions are numpy arrays,
+"executors" are slots, and the driver's bulk-synchronous stage scheduling
+is what creates the overheads the paper measures. An analytic
+:class:`~repro.sparklike.rdd.ClusterModel` converts the counted stages /
+tasks / shuffled bytes into modeled times for the Cori-scale benchmark
+tables; wall-clock on this container is also measured.
+"""
+
+from repro.sparklike.matrices import BlockMatrix, IndexedRowMatrix
+from repro.sparklike.rdd import ClusterModel, RDD, SparkLikeContext
+
+__all__ = [
+    "RDD",
+    "SparkLikeContext",
+    "ClusterModel",
+    "IndexedRowMatrix",
+    "BlockMatrix",
+]

@@ -1,0 +1,109 @@
+"""MLlib-style routines: computeSVD and matrix multiply — the paper's §4
+Spark baselines.
+
+``compute_svd`` reproduces MLlib's ``IndexedRowMatrix.computeSVD`` in
+dist-eigs mode: **ARPACK runs on the driver**, and every Lanczos iteration
+issues one distributed Gram matvec — broadcast v, one map stage of partial
+AᵀAv products, one reduce to the driver. That per-iteration driver
+round-trip is the synchronization overhead the paper's §1.1 highlights for
+iterative algorithms ("the iterative nature of SVD algorithms leads to
+substantial communication and synchronization overheads"), and it is why
+Spark's overheads *anti-scale*: more executors = same number of driver
+round-trips, each slower.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.sparklike.matrices import BlockMatrix, IndexedRowMatrix
+
+
+def gram_matvec(a: IndexedRowMatrix, v: np.ndarray) -> np.ndarray:
+    """One distributed AᵀA v: broadcast + map stage + driver reduce."""
+    ctx = a.ctx
+    v_b = ctx.broadcast(v)
+    partial = a.rdd.map_partitions(
+        lambda part: part[1].T @ (part[1] @ v_b), name="gramMatvec"
+    )
+    return partial.reduce(lambda x, y: x + y)
+
+
+def compute_svd(
+    a: IndexedRowMatrix,
+    k: int,
+    *,
+    oversample: int = 10,
+    max_iters: int | None = None,
+    seed: int = 0,
+) -> Tuple[IndexedRowMatrix, np.ndarray, np.ndarray]:
+    """MLlib-style truncated SVD: driver-side symmetric Lanczos on AᵀA with
+    one distributed matvec (= one broadcast + one stage + one reduce) per
+    iteration. Returns (U as IndexedRowMatrix, s [k], V [n, k]).
+    """
+    n = a.num_cols
+    L = min(k + oversample, n) if max_iters is None else max_iters
+    rng = np.random.default_rng(seed)
+
+    # --- driver-side Lanczos state (this IS how MLlib does it: ARPACK in the
+    # driver JVM, matvecs on the cluster) ---
+    q = rng.standard_normal(n)
+    q /= np.linalg.norm(q)
+    qs = [q]
+    alphas: list[float] = []
+    betas: list[float] = []
+
+    for i in range(L):
+        w = gram_matvec(a, qs[-1])                     # distributed round-trip
+        alpha = float(qs[-1] @ w)
+        w = w - alpha * qs[-1] - (betas[-1] * qs[-2] if betas else 0.0)
+        # full reorthogonalization on the driver
+        for qq in qs:
+            w -= (qq @ w) * qq
+        beta = float(np.linalg.norm(w))
+        alphas.append(alpha)
+        if beta < 1e-12 or i == L - 1:
+            break
+        betas.append(beta)
+        qs.append(w / beta)
+
+    t_mat = np.diag(alphas) + np.diag(betas, 1) + np.diag(betas, -1)
+    evals, evecs = np.linalg.eigh(t_mat)
+    order = np.argsort(evals)[::-1][:k]
+    sigmas = np.sqrt(np.maximum(evals[order], 0.0))
+    v_mat = np.stack(qs, axis=1) @ evecs[:, order]     # [n, k]
+
+    # U = A V Σ⁻¹ — one more distributed pass, keeping row partitioning.
+    ctx = a.ctx
+    v_b = ctx.broadcast(v_mat)
+    inv_s = np.where(sigmas > 1e-12, 1.0 / np.maximum(sigmas, 1e-12), 0.0)
+    u_rdd = a.rdd.map_partitions(
+        lambda part: (part[0], (part[1] @ v_b) * inv_s[None, :]), name="computeU"
+    )
+    u = IndexedRowMatrix(u_rdd, a.num_rows, k)
+    return u, sigmas, v_mat
+
+
+def multiply(
+    a: IndexedRowMatrix, b: IndexedRowMatrix, *, block_size: int = 1024
+) -> IndexedRowMatrix:
+    """The paper's §4.1 Spark matmul recipe, verbatim:
+
+        A.toBlockMatrix().multiply(B.toBlockMatrix()).toIndexedRowMatrix()
+    """
+    return (
+        a.to_block_matrix(block_size)
+        .multiply(b.to_block_matrix(block_size))
+        .to_indexed_row_matrix()
+    )
+
+
+def gemm_flops(m: int, n: int, k: int) -> float:
+    return 2.0 * m * n * k
+
+
+def svd_flops(m: int, n: int, iters: int) -> float:
+    """Gram-matvec flops per Lanczos run (2 passes over A per iteration)."""
+    return 4.0 * m * n * iters

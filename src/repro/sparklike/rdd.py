@@ -1,0 +1,204 @@
+"""A miniature, honest model of Spark's execution core.
+
+What is kept (because the paper's §1.1 blames these for Spark's overheads):
+
+- **Immutability**: every transformation materializes new partitions.
+- **Bulk-synchronous stages**: a stage runs the same task over every
+  partition and completes before the next stage starts; the driver schedules
+  every task.
+- **Driver round-trips**: ``reduce``/``collect`` bring data to the driver;
+  broadcasts push data from it.
+- **Accounting**: stages, tasks, shuffled/broadcast/collected bytes are all
+  counted, and an analytic :class:`ClusterModel` maps the counts onto
+  modeled wall-times for cluster-scale what-ifs (the paper's anti-scaling
+  story lives in exactly these counts).
+
+What is dropped: JVM, serialization codecs, fault tolerance/lineage
+recovery, disk spill. Their *cost* is represented in ClusterModel's
+per-task/per-stage constants, calibrated against the paper's own Table 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+_RDD_IDS = itertools.count(1)
+
+
+def nbytes_of(val: Any) -> int:
+    """Payload bytes of an arbitrary record (nested tuples/dicts of arrays)."""
+    if val is None:
+        return 0
+    if isinstance(val, (tuple, list)):
+        return sum(nbytes_of(v) for v in val)
+    if isinstance(val, dict):
+        return sum(nbytes_of(v) for v in val.values())
+    return int(np.asarray(val).nbytes)
+
+
+@dataclasses.dataclass
+class DriverStats:
+    """Counted work — the inputs to the overhead model."""
+
+    stages: int = 0
+    tasks: int = 0
+    shuffle_bytes: int = 0
+    broadcast_bytes: int = 0
+    collect_bytes: int = 0
+    driver_syncs: int = 0
+    wall_seconds: float = 0.0
+
+    def merged(self, other: "DriverStats") -> "DriverStats":
+        return DriverStats(
+            stages=self.stages + other.stages,
+            tasks=self.tasks + other.tasks,
+            shuffle_bytes=self.shuffle_bytes + other.shuffle_bytes,
+            broadcast_bytes=self.broadcast_bytes + other.broadcast_bytes,
+            collect_bytes=self.collect_bytes + other.collect_bytes,
+            driver_syncs=self.driver_syncs + other.driver_syncs,
+            wall_seconds=self.wall_seconds + other.wall_seconds,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterModel:
+    """Analytic time model for a simulated cluster.
+
+    Defaults are calibrated to Spark-on-Cori behaviour reported in the paper
+    and [2]: centralized scheduling costs ~5–10 ms/task at scale; stage
+    barriers ~100 ms; TCP shuffle at NIC bandwidth.
+    """
+
+    num_executors: int = 8
+    cores_per_executor: int = 32
+    task_overhead_s: float = 0.005       # driver scheduling + dispatch per task
+    stage_overhead_s: float = 0.1        # barrier + DAG bookkeeping per stage
+    network_bw: float = 1.25e9           # bytes/s per executor (10 GbE-class)
+    exec_flops: float = 5e10             # per-executor sustained GEMM flop/s
+    driver_sync_s: float = 0.02          # per driver round-trip latency
+
+    def modeled_seconds(self, stats: DriverStats, flops: float = 0.0) -> float:
+        task_waves = stats.tasks / max(self.num_executors * self.cores_per_executor, 1)
+        return (
+            stats.stages * self.stage_overhead_s
+            + stats.tasks * self.task_overhead_s  # driver dispatch is serial
+            + stats.driver_syncs * self.driver_sync_s
+            + (stats.shuffle_bytes + stats.broadcast_bytes + stats.collect_bytes)
+            / (self.network_bw * max(self.num_executors, 1))
+            + flops / (self.exec_flops * max(self.num_executors, 1))
+            + task_waves * 0.0  # compute already covered by flops term
+        )
+
+
+class SparkLikeContext:
+    """The driver. Owns executors (partition slots) and all scheduling."""
+
+    def __init__(self, num_partitions: int = 8, cluster: Optional[ClusterModel] = None):
+        self.default_parallelism = num_partitions
+        self.cluster = cluster or ClusterModel(num_executors=num_partitions)
+        self.stats = DriverStats()
+
+    # -- RDD creation --------------------------------------------------------
+    def parallelize(self, data: np.ndarray, num_partitions: Optional[int] = None) -> "RDD":
+        p = num_partitions or self.default_parallelism
+        parts = np.array_split(np.asarray(data), p, axis=0)
+        return RDD(self, [np.ascontiguousarray(x) for x in parts])
+
+    def empty(self) -> "RDD":
+        return RDD(self, [])
+
+    # -- scheduling ----------------------------------------------------------
+    def run_stage(
+        self,
+        parts: Sequence[Any],
+        fn: Callable[[int, Any], Any],
+        *,
+        name: str = "stage",
+    ) -> List[Any]:
+        """Run one bulk-synchronous stage: ``fn(partition_index, partition)``
+        over every partition. Every call is one scheduled task."""
+        t0 = time.perf_counter()
+        out = [fn(i, p) for i, p in enumerate(parts)]
+        self.stats.stages += 1
+        self.stats.tasks += len(parts)
+        self.stats.wall_seconds += time.perf_counter() - t0
+        return out
+
+    def broadcast(self, value: np.ndarray) -> np.ndarray:
+        """Driver -> all executors. Costs bytes * num_executors."""
+        arr = np.asarray(value)
+        self.stats.broadcast_bytes += arr.nbytes * self.cluster.num_executors
+        self.stats.driver_syncs += 1
+        return arr
+
+    def collect_to_driver(self, parts: Sequence[np.ndarray]) -> List[np.ndarray]:
+        self.stats.collect_bytes += sum(nbytes_of(p) for p in parts)
+        self.stats.driver_syncs += 1
+        return list(parts)
+
+    def modeled_seconds(self, flops: float = 0.0) -> float:
+        return self.cluster.modeled_seconds(self.stats, flops)
+
+    def reset_stats(self) -> DriverStats:
+        old = self.stats
+        self.stats = DriverStats()
+        return old
+
+
+class RDD:
+    """Immutable row-partitioned dataset of numpy blocks."""
+
+    def __init__(self, ctx: SparkLikeContext, partitions: List[Any]):
+        self.ctx = ctx
+        self._parts = partitions
+        self.id = next(_RDD_IDS)
+
+    @property
+    def num_partitions(self) -> int:
+        return len(self._parts)
+
+    def partitions(self) -> List[Any]:
+        return self._parts
+
+    # -- transformations (each materializes new partitions: immutability) ----
+    def map_partitions(self, fn: Callable[[Any], Any], name: str = "mapPartitions") -> "RDD":
+        parts = self.ctx.run_stage(self._parts, lambda i, p: fn(p), name=name)
+        return RDD(self.ctx, parts)
+
+    def map_partitions_with_index(self, fn: Callable[[int, Any], Any], name: str = "mapPartitionsWithIndex") -> "RDD":
+        parts = self.ctx.run_stage(self._parts, fn, name=name)
+        return RDD(self.ctx, parts)
+
+    def zip_partitions(self, other: "RDD", fn: Callable[[Any, Any], Any]) -> "RDD":
+        if self.num_partitions != other.num_partitions:
+            raise ValueError("zip_partitions requires co-partitioned RDDs")
+        parts = self.ctx.run_stage(
+            list(zip(self._parts, other._parts)), lambda i, pq: fn(pq[0], pq[1]),
+            name="zipPartitions",
+        )
+        return RDD(self.ctx, parts)
+
+    # -- actions --------------------------------------------------------------
+    def reduce(self, fn: Callable[[Any, Any], Any]) -> Any:
+        """Tree-reduce to the driver (one stage + one driver sync)."""
+        partials = self.ctx.run_stage(self._parts, lambda i, p: p, name="reducePartials")
+        gathered = self.ctx.collect_to_driver(partials)
+        out = gathered[0]
+        for g in gathered[1:]:
+            out = fn(out, g)
+        return out
+
+    def collect(self) -> List[Any]:
+        self.ctx.run_stage(self._parts, lambda i, p: p, name="collect")
+        return self.ctx.collect_to_driver(self._parts)
+
+    def cache(self) -> "RDD":
+        return self  # always materialized in this miniature
+
+    def count_bytes(self) -> int:
+        return sum(nbytes_of(p) for p in self._parts)

@@ -1,0 +1,62 @@
+"""The shuffle — Spark's all-to-all exchange, with byte accounting.
+
+Every record leaving its partition is counted as shuffled bytes (Spark
+would serialize, spill and TCP-copy it; our ClusterModel charges network
+time for exactly these bytes). Shuffles are also a *stage boundary*: the map
+side must finish before the reduce side starts — so each shuffle bumps the
+stage counter twice (map stage + reduce stage), matching Spark's DAG
+scheduler behaviour.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Hashable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.sparklike.rdd import RDD, SparkLikeContext, nbytes_of as _nbytes
+
+
+def shuffle_key_values(
+    rdd: RDD,
+    emit: Callable[[int, Any], Sequence[Tuple[Hashable, Any]]],
+    num_out: int,
+    partitioner: Callable[[Hashable], int],
+) -> RDD:
+    """Generic shuffle: map-side ``emit`` produces (key, value) records from
+    each partition; records are hashed to ``num_out`` reduce partitions.
+
+    Returns an RDD whose partitions are dicts ``key -> [values]``.
+    """
+    ctx = rdd.ctx
+
+    # Map stage: produce per-output buckets from every input partition.
+    def map_side(i: int, part: Any) -> List[List[Tuple[Hashable, Any]]]:
+        buckets: List[List[Tuple[Hashable, Any]]] = [[] for _ in range(num_out)]
+        for key, val in emit(i, part):
+            buckets[partitioner(key) % num_out].append((key, val))
+        return buckets
+
+    bucketed = ctx.run_stage(rdd.partitions(), map_side, name="shuffleMap")
+
+    # Byte accounting: every record that lands in a different partition index
+    # than it started in is network traffic.
+    moved = 0
+    for src_idx, buckets in enumerate(bucketed):
+        for dst_idx, bucket in enumerate(buckets):
+            if dst_idx == src_idx % num_out and len(bucketed) == num_out:
+                continue  # stayed local (only when partition counts line up)
+            for _, val in bucket:
+                moved += _nbytes(val)
+    ctx.stats.shuffle_bytes += moved
+
+    # Reduce stage: group by key within each output partition.
+    def reduce_side(j: int, _: Any) -> Dict[Hashable, List[Any]]:
+        grouped: Dict[Hashable, List[Any]] = {}
+        for buckets in bucketed:
+            for key, val in buckets[j]:
+                grouped.setdefault(key, []).append(val)
+        return grouped
+
+    parts = ctx.run_stage(list(range(num_out)), reduce_side, name="shuffleReduce")
+    return RDD(ctx, parts)

@@ -1,0 +1,21 @@
+"""train — optimizer, schedules, data pipeline, checkpointing, loop.
+
+The data pipeline is deliberately framed as the "Spark side" of the system:
+it produces row-sharded batches (``P(('pod','data'))``) exactly like the
+paper's RDD partitions, and the train step consumes them under the 2D
+compute sharding — the ingest boundary is the Alchemist bridge (DESIGN §4).
+"""
+
+from repro.train.optimizer import AdamW, OptState
+from repro.train.schedule import constant, cosine_warmup
+from repro.train.train_step import make_train_step
+from repro.train.data import SyntheticTokens
+
+__all__ = [
+    "AdamW",
+    "OptState",
+    "constant",
+    "cosine_warmup",
+    "make_train_step",
+    "SyntheticTokens",
+]

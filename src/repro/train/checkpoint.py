@@ -1,0 +1,97 @@
+"""Checkpointing: sharded pytrees <-> on-disk npz + manifest.
+
+Pure-stdlib (npz per leaf-group + a JSON manifest carrying the tree
+structure, shapes, dtypes, step). Restore re-places leaves onto the given
+shardings — so a checkpoint written on one mesh restores onto another
+(reshape-free relayout via device_put), which is the engine's ROW->GRID
+story applied to weights.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = leaf
+    return flat
+
+
+def save(directory: str, step: int, tree: Any, *, extra: Optional[Dict] = None) -> str:
+    """Write a checkpoint; returns its path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten_with_paths(tree)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    np.savez(os.path.join(path, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "keys": sorted(arrays),
+        "shapes": {k: list(a.shape) for k, a in arrays.items()},
+        "dtypes": {k: str(a.dtype) for k, a in arrays.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(name.split("_")[1])
+        for name in os.listdir(directory)
+        if name.startswith("step_")
+    ]
+    return max(steps) if steps else None
+
+
+def restore(
+    directory: str,
+    step: int,
+    like: Any,
+    *,
+    mesh: Optional[Mesh] = None,
+    specs: Optional[Any] = None,
+) -> Any:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs). With (mesh, specs) the leaves are placed sharded."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        flat_keys = _flatten_with_paths(like)
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        keys_in_order = list(flat_keys.keys())
+        spec_leaves = (
+            jax.tree_util.tree_leaves(specs, is_leaf=lambda x: x is None or hasattr(x, "__iter__") or True)
+            if specs is not None
+            else [None] * len(leaves)
+        )
+        if specs is not None:
+            spec_flat = _flatten_with_paths(specs)
+        out = []
+        for i, key in enumerate(keys_in_order):
+            arr = data[key]
+            want = leaves[i]
+            if arr.shape != tuple(want.shape):
+                raise ValueError(
+                    f"checkpoint leaf {key!r} has shape {arr.shape}, expected {tuple(want.shape)}"
+                )
+            arr = arr.astype(want.dtype)
+            if mesh is not None and specs is not None:
+                out.append(jax.device_put(arr, NamedSharding(mesh, spec_flat[key])))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,83 @@
+"""The training loop driver: sharded init, jitted step, logging, checkpoints."""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.sharding import ShardingRules
+from repro.models.registry import build_model, input_shardings
+from repro.train import checkpoint as ckpt_mod
+from repro.train.data import SyntheticTokens
+from repro.train.optimizer import AdamW
+from repro.train.schedule import cosine_warmup
+from repro.train.train_step import make_train_step
+
+
+def train(
+    cfg: ArchConfig,
+    shape: InputShape,
+    mesh: Mesh,
+    *,
+    steps: int = 50,
+    peak_lr: float = 3e-4,
+    warmup: int = 10,
+    seed: int = 0,
+    microbatches: int = 1,
+    remat: str = "none",
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 0,
+    log_every: int = 10,
+    log_fn: Callable[[str], None] = print,
+) -> Dict[str, List[float]]:
+    """Train ``cfg`` on synthetic data; returns the metric history."""
+    rules = ShardingRules.default(mesh)
+    model = build_model(cfg, mesh, rules, remat=remat)
+    optimizer = AdamW(
+        learning_rate=cosine_warmup(peak_lr, warmup, steps),
+        moment_dtype=cfg.optimizer_dtype,
+    )
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(seed))
+        pspecs = model.param_partition_specs()
+        params = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, pspecs
+        )
+        opt_state = optimizer.init(params)
+
+        step_fn = jax.jit(
+            make_train_step(model, optimizer, microbatches=microbatches),
+            donate_argnums=(0, 1),
+        )
+
+        data = SyntheticTokens(cfg, shape, mesh, rules, seed=seed)
+        history: Dict[str, List[float]] = {}
+        t_start = time.perf_counter()
+        for step in range(steps):
+            batch = data.batch_at(step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if log_every and (step % log_every == 0 or step == steps - 1):
+                metrics = jax.device_get(metrics)
+                for k, v in metrics.items():
+                    history.setdefault(k, []).append(float(v))
+                history.setdefault("step", []).append(step)
+                log_fn(
+                    f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                    f"acc={float(metrics.get('accuracy', 0)):.3f} "
+                    f"gnorm={float(metrics.get('grad_norm', 0)):.3f}"
+                )
+            if ckpt_dir and ckpt_every and step and step % ckpt_every == 0:
+                ckpt_mod.save(ckpt_dir, step, {"params": params, "opt": opt_state})
+        wall = time.perf_counter() - t_start
+        history["wall_seconds"] = [wall]
+        log_fn(f"trained {steps} steps in {wall:.1f}s")
+        if ckpt_dir:
+            ckpt_mod.save(ckpt_dir, steps, {"params": params, "opt": opt_state})
+    return history

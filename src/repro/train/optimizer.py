@@ -1,0 +1,90 @@
+"""AdamW with sharding-aware, dtype-configurable moment states.
+
+Moments inherit each parameter's PartitionSpec (ZeRO-style: optimizer state
+is as sharded as the weights). ``moment_dtype=bfloat16`` halves optimizer
+HBM for the 480B-class configs (EXPERIMENTS.md memory notes) at the cost of
+some update noise — the paper-faithful default is f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any        # first moment, pytree like params
+    nu: Any        # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array]  # schedule: step -> lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"
+
+    def init(self, params) -> OptState:
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def state_partition_specs(self, param_specs) -> OptState:
+        from jax.sharding import PartitionSpec as P
+
+        return OptState(step=P(), mu=param_specs, nu=param_specs)
+
+    def update(self, grads, state: OptState, params) -> Tuple[Any, OptState, dict]:
+        dt = jnp.dtype(self.moment_dtype)
+        step = state.step + 1
+
+        gnorm = _global_norm(grads)
+        if self.grad_clip_norm is not None:
+            scale = jnp.minimum(1.0, self.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self.learning_rate(step)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:  # decay matrices, not norms
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = p.astype(jnp.float32) - lr * delta
+            return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state.mu)
+        flat_v = jax.tree_util.tree_leaves(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_mu = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_nu = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        metrics = {"grad_norm": gnorm, "learning_rate": lr}
+        return new_params, OptState(step=step, mu=new_mu, nu=new_nu), metrics
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )

@@ -1,0 +1,42 @@
+"""Learning-rate schedules (step -> lr callables, jit-safe)."""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def constant(lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    *,
+    final_fraction: float = 0.1,
+) -> Callable[[jax.Array], jax.Array]:
+    def sched(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak_lr * (
+            final_fraction + (1 - final_fraction) * 0.5 * (1 + jnp.cos(math.pi * prog))
+        )
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return sched
+
+
+def linear_warmup(peak_lr: float, warmup_steps: int) -> Callable[[jax.Array], jax.Array]:
+    def sched(step: jax.Array) -> jax.Array:
+        s = step.astype(jnp.float32)
+        return peak_lr * jnp.minimum(s / max(warmup_steps, 1), 1.0)
+
+    return sched

@@ -1,0 +1,72 @@
+"""Train-step construction: grad + clip + AdamW update, with optional
+microbatch gradient accumulation, under the model's partition specs."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import AdamW, OptState
+
+
+def make_train_step(
+    model,
+    optimizer: AdamW,
+    *,
+    microbatches: int = 1,
+) -> Callable:
+    """Returns ``train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)``. With ``microbatches > 1`` the batch is
+    split on axis 0 and gradients accumulate in f32 across a lax loop
+    (activation memory / step-time tradeoff in the §Perf loop)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def single_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return grads, metrics
+
+    def accum_grads(params, batch):
+        def slice_mb(x, i):
+            mb = x.shape[0] // microbatches
+            return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+        def body(carry, i):
+            acc, metrics_acc = carry
+            mb = jax.tree_util.tree_map(lambda x: slice_mb(x, i), batch)
+            g, m = single_grads(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), acc, g
+            )
+            metrics_acc = jax.tree_util.tree_map(lambda a, b: a + b, metrics_acc, m)
+            return (acc, metrics_acc), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        m0 = jax.eval_shape(lambda: single_grads(params, jax.tree_util.tree_map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, 0, x.shape[0] // microbatches, axis=0), batch))[1])
+        metrics0 = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+        (grads, metrics), _ = jax.lax.scan(
+            body, (zeros, metrics0), jnp.arange(microbatches)
+        )
+        inv = 1.0 / microbatches
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        metrics = jax.tree_util.tree_map(lambda m: m * inv, metrics)
+        return grads, metrics
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, jax.Array]):
+        if microbatches > 1:
+            grads, metrics = accum_grads(params, batch)
+        else:
+            grads, metrics = single_grads(params, batch)
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step

@@ -1,0 +1,223 @@
+"""Per-kernel allclose sweeps: Pallas bodies (interpret mode) vs jnp oracles,
+across shapes and dtypes, plus hypothesis property tests of the oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul import matmul, vmem_bytes
+from repro.kernels.ssd_scan import ssd_scan
+
+
+# ---------------------------------------------------------------------------
+# Tiled matmul
+# ---------------------------------------------------------------------------
+
+MATMUL_SHAPES = [
+    (16, 16, 16),
+    (100, 70, 50),     # ragged: exercises padding
+    (128, 256, 64),
+    (33, 129, 65),
+    (1, 64, 1),
+]
+
+
+@pytest.mark.parametrize("m,k,n", MATMUL_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_kernel_vs_oracle(m, k, n, dtype):
+    ka, kb = jax.random.split(jax.random.PRNGKey(m * 31 + n))
+    a = jax.random.normal(ka, (m, k), jnp.float32).astype(dtype)
+    b = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
+    got = matmul(a, b, bm=32, bn=32, bk=32, interpret=True)
+    want = ref.matmul(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("blocks", [(16, 16, 16), (32, 16, 64), (64, 64, 32)])
+def test_matmul_block_shape_sweep(blocks):
+    bm, bn, bk = blocks
+    a = jax.random.normal(jax.random.PRNGKey(0), (96, 80))
+    b = jax.random.normal(jax.random.PRNGKey(1), (80, 112))
+    got = matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b), atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    a = jnp.zeros((4, 5))
+    with pytest.raises(ValueError):
+        matmul(a, jnp.zeros((6, 4)), interpret=True)
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros(4), jnp.zeros((4, 4)), interpret=True)
+
+
+def test_vmem_estimate_default_blocks_fit():
+    # default production tiles must fit v5e VMEM (128 MiB) comfortably
+    assert vmem_bytes(512, 512, 512, jnp.bfloat16) < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    dict(b=2, hq=4, hkv=4, lq=64, lk=64, d=32),            # MHA
+    dict(b=1, hq=8, hkv=2, lq=64, lk=64, d=16),            # GQA 4:1
+    dict(b=2, hq=4, hkv=1, lq=32, lk=128, d=32),           # MQA, cross-len
+    dict(b=1, hq=2, hkv=2, lq=1, lk=64, d=64),             # decode-like
+]
+
+
+def _qkv(case, dtype=jnp.float32):
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(keys[0], (case["b"], case["hq"], case["lq"], case["d"]), dtype)
+    k = jax.random.normal(keys[1], (case["b"], case["hkv"], case["lk"], case["d"]), dtype)
+    v = jax.random.normal(keys[2], (case["b"], case["hkv"], case["lk"], case["d"]), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize(
+    "mask", [dict(), dict(causal=True), dict(causal=True, window=16), dict(window=9)]
+)
+def test_flash_kernel_vs_oracle(case, mask):
+    if case["lq"] < 2 and mask.get("causal"):
+        mask = dict(mask, q_offset=case["lk"] - 1)
+    q, k, v = _qkv(case)
+    got = flash_attention(q, k, v, bq=16, bk=16, interpret=True, **mask)
+    want = ref.attention(q, k, v, **mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-5), (jnp.bfloat16, 3e-2)])
+def test_flash_dtypes(dtype, tol):
+    q, k, v = _qkv(ATTN_CASES[0], dtype)
+    got = flash_attention(q, k, v, causal=True, bq=16, bk=16, interpret=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol
+    )
+
+
+def test_chunked_attention_matches_reference():
+    q, k, v = _qkv(dict(b=2, hq=4, hkv=2, lq=256, lk=256, d=16))
+    got = ref.attention_chunked(q, k, v, causal=True, q_chunk=32)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_chunked_attention_grad_matches():
+    q, k, v = _qkv(dict(b=1, hq=2, hkv=2, lq=128, lk=128, d=16))
+
+    def f_chunk(q):
+        return ref.attention_chunked(q, k, v, causal=True, q_chunk=32).sum()
+
+    def f_ref(q):
+        return ref.attention(q, k, v, causal=True).sum()
+
+    g1 = jax.grad(f_chunk)(q)
+    g2 = jax.grad(f_ref)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=2e-4)
+
+
+@given(
+    b=st.integers(1, 2),
+    hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    lq=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([8, 16]),
+)
+@settings(max_examples=30, deadline=None)
+def test_attention_softmax_rows_sum_to_one_property(b, hkv, group, lq, d):
+    """Oracle invariant: output is a convex combination of V rows, so with
+    V == const c the output must be exactly c everywhere (unmasked rows)."""
+    keys = jax.random.split(jax.random.PRNGKey(b * 100 + lq), 2)
+    q = jax.random.normal(keys[0], (b, hkv * group, lq, d))
+    k = jax.random.normal(keys[1], (b, hkv, lq, d))
+    v = jnp.full((b, hkv, lq, d), 3.25)
+    out = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), 3.25, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    dict(b=2, l=64, h=4, p=8, g=2, n=16, chunk=16),
+    dict(b=1, l=128, h=2, p=16, g=1, n=8, chunk=32),
+    dict(b=2, l=96, h=6, p=8, g=3, n=4, chunk=32),   # chunk not dividing? 96/32=3 ok
+]
+
+
+def _ssd_inputs(case, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (case["b"], case["l"], case["h"], case["p"]))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (case["b"], case["l"], case["h"])))
+    a = -jnp.exp(jax.random.normal(ks[2], (case["h"],)))
+    bm = jax.random.normal(ks[3], (case["b"], case["l"], case["g"], case["n"])) * 0.3
+    cm = jax.random.normal(ks[4], (case["b"], case["l"], case["g"], case["n"])) * 0.3
+    return x, dt, a, bm, cm
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_kernel_vs_sequential_oracle(case):
+    x, dt, a, bm, cm = _ssd_inputs(case)
+    y_k, h_k = ssd_scan(x, dt, a, bm, cm, chunk=case["chunk"], interpret=True)
+    y_r, h_r = ref.ssd_scan(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=5e-4)
+
+
+@pytest.mark.parametrize("case", SSD_CASES[:2])
+def test_ssd_kernel_with_initial_state(case):
+    x, dt, a, bm, cm = _ssd_inputs(case, seed=3)
+    h0 = jax.random.normal(jax.random.PRNGKey(9), (case["b"], case["h"], case["p"], case["n"])) * 0.5
+    y_k, h_k = ssd_scan(x, dt, a, bm, cm, init_state=h0, chunk=case["chunk"], interpret=True)
+    y_r, h_r = ref.ssd_scan(x, dt, a, bm, cm, init_state=h0)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=5e-4)
+
+
+def test_ssd_chunked_oracle_matches_sequential():
+    case = SSD_CASES[0]
+    x, dt, a, bm, cm = _ssd_inputs(case, seed=5)
+    y_c, h_c = ref.ssd_chunked(x, dt, a, bm, cm, chunk=16)
+    y_r, h_r = ref.ssd_scan(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_r), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h_c), np.asarray(h_r), atol=5e-4)
+
+
+def test_ssd_chunk_invariance():
+    """SSD output must not depend on the chunking (associativity of the
+    state-passing) — the core invariant of the duality."""
+    case = dict(b=1, l=64, h=2, p=4, g=1, n=8)
+    x, dt, a, bm, cm = _ssd_inputs(case, seed=11)
+    outs = [
+        np.asarray(ref.ssd_chunked(x, dt, a, bm, cm, chunk=c)[0])
+        for c in (8, 16, 32, 64)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=5e-4)
+
+
+@given(decay=st.floats(0.05, 3.0), steps=st.integers(2, 16))
+@settings(max_examples=25, deadline=None)
+def test_ssd_state_decay_property(decay, steps):
+    """With zero input, the state must decay exactly by exp(sum dt * a)."""
+    b, h, p, n = 1, 2, 4, 8
+    x = jnp.zeros((b, steps, h, p))
+    dt = jnp.full((b, steps, h), decay)
+    a = -jnp.ones((h,))
+    bm = jnp.zeros((b, steps, 1, n))
+    cm = jnp.zeros((b, steps, 1, n))
+    h0 = jnp.ones((b, h, p, n))
+    _, h_T = ref.ssd_scan(x, dt, a, bm, cm, init_state=h0)
+    expected = np.exp(-decay * steps)
+    np.testing.assert_allclose(np.asarray(h_T), expected, rtol=1e-4)

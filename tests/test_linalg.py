@@ -1,0 +1,147 @@
+"""linalg routine tests (single-device; distributed semantics in
+tests/multidevice/). Uses decaying-spectrum matrices where Krylov methods
+are expected to converge (flat random spectra are out-of-contract for
+truncated methods, as they are for ARPACK)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.linalg import gemm, pca, solvers, svd, tsqr
+
+
+def spectrum_matrix(key, m, n, decay=0.8, scale=100.0):
+    ku, kv = jax.random.split(key)
+    u, _ = jnp.linalg.qr(jax.random.normal(ku, (m, n)))
+    v, _ = jnp.linalg.qr(jax.random.normal(kv, (n, n)))
+    s = decay ** jnp.arange(n) * scale
+    return (u * s[None, :]) @ v.T
+
+
+class TestGemm:
+    @pytest.mark.parametrize("schedule", ["summa", "allgather", "xla"])
+    def test_single_device_matches(self, mesh1, key, schedule):
+        a = jax.random.normal(key, (48, 32))
+        b = jax.random.normal(jax.random.PRNGKey(1), (32, 24))
+        with mesh1:
+            c = gemm.multiply(a, b, mesh1, schedule=schedule)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(a @ b), atol=1e-4)
+
+    def test_unknown_schedule(self, mesh1, key):
+        a = jax.random.normal(key, (8, 8))
+        with pytest.raises(ValueError):
+            gemm.multiply(a, a, mesh1, schedule="nope")
+
+    def test_shape_mismatch(self, mesh1, key):
+        a = jax.random.normal(key, (8, 9))
+        with pytest.raises(ValueError):
+            gemm.summa(a, a, mesh1)
+
+
+class TestTSQR:
+    @pytest.mark.parametrize("shape", [(256, 8), (100, 13), (64, 64)])
+    def test_qr_properties(self, mesh1, key, shape):
+        a = jax.random.normal(key, shape)
+        with mesh1:
+            q, r = tsqr.tsqr(a, mesh1)
+        np.testing.assert_allclose(np.asarray(q @ r), np.asarray(a), atol=1e-4)
+        np.testing.assert_allclose(
+            np.asarray(q.T @ q), np.eye(shape[1]), atol=1e-4
+        )
+        np.testing.assert_allclose(np.asarray(r), np.triu(np.asarray(r)), atol=1e-5)
+
+
+class TestTruncatedSVD:
+    def test_lanczos_sigmas(self, mesh1, key):
+        a = spectrum_matrix(key, 200, 64)
+        s_ref = np.linalg.svd(np.asarray(a), compute_uv=False)[:8]
+        with mesh1:
+            u, s, v = svd.truncated_svd(a, 8)
+        np.testing.assert_allclose(np.asarray(s), s_ref, rtol=1e-3)
+        # singular triples: A v ≈ u s
+        av = np.asarray(a) @ np.asarray(v)
+        np.testing.assert_allclose(av, np.asarray(u) * np.asarray(s), atol=0.05)
+
+    def test_randomized_sigmas(self, mesh1, key):
+        a = spectrum_matrix(key, 200, 64)
+        s_ref = np.linalg.svd(np.asarray(a), compute_uv=False)[:8]
+        with mesh1:
+            u, s, v = svd.randomized_svd(a, 8, power_iters=2)
+        np.testing.assert_allclose(np.asarray(s), s_ref, rtol=1e-2)
+
+    def test_reconstruction_error_near_optimal(self, mesh1, key):
+        a = spectrum_matrix(key, 150, 40, decay=0.7)
+        with mesh1:
+            u, s, v = svd.truncated_svd(a, 10)
+            err = svd.svd_reconstruction_error(a, u, s, v)
+        s_all = np.linalg.svd(np.asarray(a), compute_uv=False)
+        optimal = np.linalg.norm(s_all[10:]) / np.linalg.norm(s_all)
+        assert float(err) < optimal * 1.05 + 1e-4
+
+    @given(k=st.integers(1, 6), decay=st.floats(0.3, 0.85))
+    @settings(max_examples=10, deadline=None)
+    def test_sigma_ordering_property(self, k, decay):
+        a = spectrum_matrix(jax.random.PRNGKey(3), 80, 24, decay=decay)
+        u, s, v = svd.truncated_svd(a, k)
+        s = np.asarray(s)
+        assert (np.diff(s) <= 1e-4).all(), "singular values must be non-increasing"
+        assert (s > 0).all()
+
+
+class TestSolvers:
+    def test_power_iteration(self, mesh1, key):
+        a = spectrum_matrix(key, 100, 30, decay=0.5)
+        with mesh1:
+            sigma, vec = solvers.power_iteration(a, num_iters=100)
+        s_ref = np.linalg.svd(np.asarray(a), compute_uv=False)[0]
+        np.testing.assert_allclose(float(sigma), s_ref, rtol=1e-3)
+
+    def test_condest(self, mesh1, key):
+        a = spectrum_matrix(key, 120, 16, decay=0.9)
+        with mesh1:
+            c = solvers.condest(a, num_iters=80, cg_iters=200)
+        sv = np.linalg.svd(np.asarray(a), compute_uv=False)
+        np.testing.assert_allclose(float(c), sv[0] / sv[-1], rtol=0.05)
+
+    def test_ridge_solves_normal_equations(self, mesh1, key):
+        a = jax.random.normal(key, (80, 20))
+        b = jax.random.normal(jax.random.PRNGKey(2), (80,))
+        lam = 0.1
+        with mesh1:
+            x = solvers.ridge(a, b, lam, num_iters=200)
+        an, bn = np.asarray(a), np.asarray(b)
+        x_ref = np.linalg.solve(an.T @ an + lam * np.eye(20), an.T @ bn)
+        np.testing.assert_allclose(np.asarray(x), x_ref, atol=1e-3)
+
+    def test_cg_on_spd(self, key):
+        m = jax.random.normal(key, (16, 16))
+        spd = m @ m.T + 16 * jnp.eye(16)
+        b = jax.random.normal(jax.random.PRNGKey(5), (16,))
+        x = solvers.cg(lambda v: spd @ v, b, num_iters=64)
+        np.testing.assert_allclose(
+            np.asarray(spd @ x), np.asarray(b), atol=1e-4
+        )
+
+
+class TestPCA:
+    def test_components_orthonormal_and_variance_ordered(self, mesh1, key):
+        a = spectrum_matrix(key, 300, 32, decay=0.75)
+        with mesh1:
+            comps, scores, var = pca.pca(a, 5)
+        c = np.asarray(comps)
+        np.testing.assert_allclose(c.T @ c, np.eye(5), atol=1e-4)
+        v = np.asarray(var)
+        assert (np.diff(v) <= 1e-5).all()
+
+    def test_scores_match_projection(self, mesh1, key):
+        a = spectrum_matrix(key, 120, 16, decay=0.6)
+        with mesh1:
+            comps, scores, _ = pca.pca(a, 4)
+        centered = np.asarray(a) - np.asarray(a).mean(0)
+        proj = centered @ np.asarray(comps)
+        # scores defined up to sign per component
+        for j in range(4):
+            s, p = np.asarray(scores)[:, j], proj[:, j]
+            assert min(np.abs(s - p).max(), np.abs(s + p).max()) < 0.05

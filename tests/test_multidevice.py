@@ -1,0 +1,33 @@
+"""Multi-device semantics, run in subprocesses so the forced host-device
+count never leaks into this test process (smoke tests must see 1 device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+def _run(script: str, marker: str, extra_env=None) -> None:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    if extra_env:
+        env.update(extra_env)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "multidevice", script)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, f"stderr:\n{proc.stderr[-3000:]}"
+    assert marker in proc.stdout, proc.stdout[-2000:]
+
+
+def test_engine_worker_groups_and_distributed_linalg():
+    _run("_engine_script.py", "MULTIDEVICE_ENGINE_OK")
+
+
+def test_sharded_models_match_single_device():
+    _run("_model_script.py", "MULTIDEVICE_MODEL_OK")

@@ -1,0 +1,63 @@
+"""Parameters codec tests (the paper's driver-to-driver metadata frame),
+including hypothesis round-trip properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import params as codec
+from repro.core.errors import ParameterError
+from repro.core.handles import AlMatrix
+from repro.core.layouts import GRID
+
+
+def test_roundtrip_scalars():
+    src = {
+        "k": 20,
+        "tol": 1e-6,
+        "verbose": True,
+        "mode": "lanczos",
+        "nothing": None,
+        "dims": [3, 4, 5],
+        "weights": [0.1, 0.9],
+    }
+    assert codec.unpack(codec.pack(src)) == src
+
+
+def test_matrix_handle_roundtrip():
+    h = AlMatrix(shape=(128, 64), dtype=np.float32, layout=GRID, session_id=7, name="A")
+    out = codec.unpack(codec.pack({"a": h}))["a"]
+    assert isinstance(out, codec.HandleRef)
+    assert out.id == h.id
+    assert out.session_id == 7
+    assert out.shape == (128, 64)
+    assert out.dtype == "float32"
+    assert out.layout == "grid"
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(ParameterError):
+        codec.unpack(b"XXXX" + b"\x00" * 16)
+
+
+def test_unpackable_type_rejected():
+    with pytest.raises(ParameterError):
+        codec.pack({"x": object()})
+
+
+scalar = st.one_of(
+    st.booleans(),
+    st.integers(min_value=-(2**62), max_value=2**62),
+    st.floats(allow_nan=False, allow_infinity=False, width=64),
+    st.text(max_size=64),
+    st.none(),
+    st.lists(st.integers(min_value=-(2**31), max_value=2**31), max_size=8),
+    st.lists(st.floats(allow_nan=False, allow_infinity=False, width=64), min_size=1, max_size=8),
+)
+
+
+@given(st.dictionaries(st.text(min_size=1, max_size=32), scalar, max_size=16))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip_property(d):
+    out = codec.unpack(codec.pack(d))
+    assert out == d

@@ -1,0 +1,113 @@
+"""Layout / relayout / transfer-cost tests (single-device semantics +
+analytic-cost properties; traffic realism is in tests/multidevice/)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import layouts as L
+from repro.core.errors import LayoutError
+from repro.core.relayout import relayout, shard_intervals, transfer_cost
+from repro.core.sharding import single_device_mesh
+
+
+class TestShardIntervals:
+    def test_even_split(self):
+        iv = shard_intervals(8, 4)
+        np.testing.assert_array_equal(iv, [[0, 2], [2, 4], [4, 6], [6, 8]])
+
+    def test_uneven_split_pads_like_xla(self):
+        iv = shard_intervals(10, 4)
+        np.testing.assert_array_equal(iv, [[0, 3], [3, 6], [6, 9], [9, 10]])
+
+    def test_more_shards_than_rows(self):
+        iv = shard_intervals(2, 4)
+        assert (iv[:, 1] <= 2).all()
+        covered = sum(b - a for a, b in iv)
+        assert covered == 2
+
+    @given(st.integers(1, 1000), st.integers(1, 64))
+    @settings(max_examples=200, deadline=None)
+    def test_intervals_partition_range(self, n, shards):
+        iv = shard_intervals(n, shards)
+        assert iv.shape == (shards, 2)
+        assert (iv[:, 0] <= iv[:, 1]).all()
+        assert sum(int(b - a) for a, b in iv) == n
+        # contiguous, ordered
+        flat = [x for a, b in iv for x in range(a, b)]
+        assert flat == list(range(n))
+
+
+class TestCyclicPermutation:
+    @given(st.integers(1, 500), st.integers(1, 32))
+    @settings(max_examples=200, deadline=None)
+    def test_is_permutation(self, n, shards):
+        perm = L.cyclic_permutation(n, shards)
+        assert sorted(perm.tolist()) == list(range(n))
+
+    def test_inverse(self):
+        perm = L.cyclic_permutation(17, 4)
+        inv = L.inverse_permutation(perm)
+        np.testing.assert_array_equal(perm[inv], np.arange(17))
+
+    def test_cyclic_assignment(self):
+        # physical shard s holds logical rows s, s+p, s+2p, ...
+        perm = L.cyclic_permutation(8, 2)
+        np.testing.assert_array_equal(perm, [0, 2, 4, 6, 1, 3, 5, 7])
+
+
+class TestLayoutSpecs:
+    def test_by_name(self):
+        assert L.by_name("row") is L.ROW
+        assert L.by_name("grid_cyclic").cyclic
+        with pytest.raises(LayoutError):
+            L.by_name("nope")
+
+    def test_validate_rejects_non_2d(self, mesh1):
+        with pytest.raises(LayoutError):
+            L.GRID.validate((3, 4, 5), mesh1)
+
+    def test_partition_spec_drops_absent_axes(self, mesh1):
+        # mesh has no 'pod' axis; specs must still resolve
+        spec = L.ROW.partition_spec(mesh1)
+        assert "pod" not in str(spec)
+
+    def test_grid_shape_single_device(self, mesh1):
+        assert L.GRID.grid_shape(mesh1) == (1, 1)
+
+
+class TestTransferCostModel:
+    def test_single_device_moves_nothing(self, mesh1):
+        c = transfer_cost((64, 32), "float32", L.ROW, L.GRID, mesh1)
+        assert c.bytes_moved == 0
+        assert c.messages == 0
+
+    def test_identity_relayout_free(self, mesh1):
+        c = transfer_cost((64, 32), "float32", L.GRID, L.GRID, mesh1)
+        assert c.bytes_moved == 0
+
+    @given(
+        st.integers(1, 300),
+        st.integers(1, 300),
+        st.sampled_from(["float32", "float64", "bfloat16"]),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_bytes_total_exact(self, m, n, dtype):
+        mesh = single_device_mesh()
+        c = transfer_cost((m, n), dtype, L.ROW, L.GRID, mesh)
+        assert c.bytes_total == m * n * jnp.dtype(dtype).itemsize
+
+    def test_relayout_preserves_values(self, mesh1, rng):
+        a = jnp.asarray(rng.standard_normal((12, 6)).astype(np.float32))
+        out = relayout(a, L.GRID, mesh1, src=L.ROW)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(a))
+
+    def test_cyclic_relayout_roundtrip(self, mesh1, rng):
+        a = jnp.asarray(rng.standard_normal((13, 5)).astype(np.float32))
+        cyc = relayout(a, L.GRID.with_cyclic(), mesh1, src=L.ROW)
+        back = relayout(cyc, L.ROW, mesh1, src=L.GRID.with_cyclic())
+        np.testing.assert_allclose(np.asarray(back), np.asarray(a))

@@ -1,0 +1,143 @@
+"""Spark-baseline framework tests: RDD mechanics, shuffle accounting,
+BlockMatrix multiply, MLlib-style computeSVD."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sparklike import (
+    BlockMatrix,
+    ClusterModel,
+    IndexedRowMatrix,
+    RDD,
+    SparkLikeContext,
+    mllib,
+)
+from repro.sparklike import mllib
+
+
+@pytest.fixture()
+def ctx():
+    return SparkLikeContext(num_partitions=4)
+
+
+class TestRDD:
+    def test_parallelize_partitions(self, ctx, rng):
+        a = rng.standard_normal((100, 8))
+        rdd = ctx.parallelize(a)
+        assert rdd.num_partitions == 4
+        got = np.concatenate(rdd.collect())
+        np.testing.assert_array_equal(got, a)
+
+    def test_map_partitions_counts_stage(self, ctx, rng):
+        rdd = ctx.parallelize(rng.standard_normal((16, 2)))
+        before = ctx.stats.stages
+        rdd.map_partitions(lambda p: p * 2)
+        assert ctx.stats.stages == before + 1
+        assert ctx.stats.tasks >= 4
+
+    def test_reduce_syncs_driver(self, ctx, rng):
+        rdd = ctx.parallelize(rng.standard_normal((16, 2)))
+        before = ctx.stats.driver_syncs
+        total = rdd.reduce(lambda a, b: a + b)
+        assert ctx.stats.driver_syncs == before + 1
+        assert total.shape == (4, 2)  # per-partition blocks summed
+
+    def test_broadcast_charges_bytes(self, ctx):
+        v = np.zeros(1000)
+        before = ctx.stats.broadcast_bytes
+        ctx.broadcast(v)
+        assert ctx.stats.broadcast_bytes - before == v.nbytes * 4
+
+
+class TestMatrices:
+    def test_indexed_row_roundtrip(self, ctx, rng):
+        a = rng.standard_normal((50, 12))
+        ir = IndexedRowMatrix.from_numpy(ctx, a)
+        np.testing.assert_allclose(ir.to_numpy(), a)
+
+    def test_block_conversion_preserves_matrix(self, ctx, rng):
+        a = rng.standard_normal((37, 23))
+        bm = IndexedRowMatrix.from_numpy(ctx, a).to_block_matrix(block_size=10)
+        np.testing.assert_allclose(bm.to_numpy(), a)
+
+    def test_block_conversion_charges_triple_explosion(self, ctx, rng):
+        # paper §4.1: the (i, j, v) explosion costs 24 B/elem on the wire
+        a = rng.standard_normal((64, 64))
+        ctx.reset_stats()
+        IndexedRowMatrix.from_numpy(ctx, a).to_block_matrix(block_size=16)
+        assert ctx.stats.shuffle_bytes >= 64 * 64 * 16  # at least the premium
+
+    def test_block_matrix_roundtrip_to_rows(self, ctx, rng):
+        a = rng.standard_normal((30, 20))
+        bm = IndexedRowMatrix.from_numpy(ctx, a).to_block_matrix(block_size=8)
+        back = bm.to_indexed_row_matrix()
+        np.testing.assert_allclose(back.to_numpy(), a)
+
+    @pytest.mark.parametrize("m,k,n,bs", [(32, 24, 16, 8), (33, 17, 9, 10)])
+    def test_multiply_correct(self, ctx, rng, m, k, n, bs):
+        a = rng.standard_normal((m, k))
+        b = rng.standard_normal((k, n))
+        c = mllib.multiply(
+            IndexedRowMatrix.from_numpy(ctx, a),
+            IndexedRowMatrix.from_numpy(ctx, b),
+            block_size=bs,
+        )
+        np.testing.assert_allclose(c.to_numpy(), a @ b, atol=1e-8)
+
+    def test_multiply_dimension_mismatch(self, ctx, rng):
+        a = IndexedRowMatrix.from_numpy(ctx, rng.standard_normal((8, 4)))
+        b = IndexedRowMatrix.from_numpy(ctx, rng.standard_normal((5, 8)))
+        with pytest.raises(ValueError):
+            a.to_block_matrix(4).multiply(b.to_block_matrix(4))
+
+
+class TestComputeSVD:
+    def _decaying(self, rng, m, n, decay=0.8):
+        u, _ = np.linalg.qr(rng.standard_normal((m, n)))
+        v, _ = np.linalg.qr(rng.standard_normal((n, n)))
+        s = decay ** np.arange(n) * 100
+        return (u * s) @ v.T
+
+    def test_sigmas_match_numpy(self, ctx, rng):
+        a = self._decaying(rng, 200, 32)
+        u, s, v = mllib.compute_svd(IndexedRowMatrix.from_numpy(ctx, a), 8)
+        s_ref = np.linalg.svd(a, compute_uv=False)[:8]
+        np.testing.assert_allclose(s, s_ref, rtol=1e-6)
+
+    def test_u_orthonormal(self, ctx, rng):
+        a = self._decaying(rng, 150, 24)
+        u, s, v = mllib.compute_svd(IndexedRowMatrix.from_numpy(ctx, a), 6)
+        un = u.to_numpy()
+        np.testing.assert_allclose(un.T @ un, np.eye(6), atol=1e-8)
+
+    def test_driver_roundtrips_scale_with_iterations(self, ctx, rng):
+        # the MLlib pathology the paper measures: one driver sync per matvec
+        a = self._decaying(rng, 100, 16)
+        ctx.reset_stats()
+        mllib.compute_svd(IndexedRowMatrix.from_numpy(ctx, a), 4, oversample=4)
+        # >= 2 syncs per Lanczos iteration (broadcast + reduce), 8 iterations
+        assert ctx.stats.driver_syncs >= 16
+
+
+class TestClusterModel:
+    def test_modeled_time_monotonic_in_overheads(self):
+        from repro.sparklike.rdd import DriverStats
+
+        m = ClusterModel(num_executors=8)
+        s1 = DriverStats(stages=10, tasks=100, shuffle_bytes=10**9)
+        s2 = DriverStats(stages=20, tasks=100, shuffle_bytes=10**9)
+        assert m.modeled_seconds(s2) > m.modeled_seconds(s1)
+
+    def test_anti_scaling_of_task_overhead(self):
+        """The paper's [2] anti-scaling: with more executors, fixed work
+        splits into more tasks and the driver-serial dispatch grows."""
+        from repro.sparklike.rdd import DriverStats
+
+        def time_at(n_exec):
+            m = ClusterModel(num_executors=n_exec)
+            # more executors -> more partitions -> more tasks per stage
+            s = DriverStats(stages=30, tasks=30 * n_exec, shuffle_bytes=0)
+            return m.modeled_seconds(s, flops=1e12)
+
+        assert time_at(64) > time_at(8)  # overheads eventually dominate

@@ -1,0 +1,115 @@
+"""End-to-end behaviour tests for the paper's system: the full
+Spark-application workflow against the engine, and framework-level wiring."""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.configs import get_config, list_configs
+from repro.sparklike import IndexedRowMatrix, SparkLikeContext, mllib
+
+
+def test_paper_section_3_3_workflow(rng):
+    """The complete §3.3 listing: connect, registerLibrary, AlMatrix, run,
+    collect, stop — with correctness checked against numpy."""
+    engine = repro.AlchemistEngine()
+    ac = repro.AlchemistContext(engine, num_workers=1, name="spark_app")
+    ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+
+    a = rng.standard_normal((512, 64)).astype(np.float32)
+    al_a = ac.send(a, name="A")
+
+    cond = ac.run("elemental", "condest", al_a)
+    assert abs(float(cond) - np.linalg.cond(a)) / np.linalg.cond(a) < 0.25
+
+    al_u, s, al_v = ac.run("elemental", "truncated_svd", al_a, k=5)
+    s_ref = np.linalg.svd(a, compute_uv=False)[:5]
+    np.testing.assert_allclose(np.asarray(s), s_ref, rtol=0.05)
+
+    u = np.asarray(ac.collect(al_u))
+    assert u.shape == (512, 5)
+    ac.stop()
+    assert engine.available_workers == engine.num_workers
+
+
+def test_spark_and_engine_agree_on_gemm(rng):
+    """The Table-1 experiment's correctness core: both paths, same answer."""
+    a = rng.standard_normal((96, 40))
+    b = rng.standard_normal((40, 56))
+
+    ctx = SparkLikeContext(num_partitions=4)
+    c_spark = mllib.multiply(
+        IndexedRowMatrix.from_numpy(ctx, a),
+        IndexedRowMatrix.from_numpy(ctx, b),
+        block_size=16,
+    ).to_numpy()
+
+    engine = repro.AlchemistEngine()
+    with repro.AlchemistContext(engine, num_workers=1) as ac:
+        ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+        ha = ac.send(a.astype(np.float32))
+        hb = ac.send(b.astype(np.float32))
+        c_alch = np.asarray(ac.collect(ac.run("elemental", "gemm", ha, hb)))
+
+    np.testing.assert_allclose(c_spark, a @ b, atol=1e-8)
+    np.testing.assert_allclose(c_alch, a @ b, atol=1e-3)
+
+
+def test_spark_and_engine_agree_on_svd(rng):
+    """The Fig-3/4 experiment's correctness core."""
+    u, _ = np.linalg.qr(rng.standard_normal((300, 32)))
+    v, _ = np.linalg.qr(rng.standard_normal((32, 32)))
+    a = (u * (0.8 ** np.arange(32) * 50)) @ v.T
+
+    ctx = SparkLikeContext(num_partitions=4)
+    _, sig_spark, _ = mllib.compute_svd(IndexedRowMatrix.from_numpy(ctx, a), 6)
+
+    engine = repro.AlchemistEngine()
+    with repro.AlchemistContext(engine, num_workers=1) as ac:
+        ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+        ha = ac.send(a.astype(np.float32))
+        _, sig_alch, _ = ac.run("elemental", "truncated_svd", ha, k=6)
+
+    np.testing.assert_allclose(sig_spark, np.asarray(sig_alch), rtol=5e-3)
+
+
+def test_every_assigned_arch_is_registered():
+    archs = set(list_configs())
+    expected = {
+        "whisper-large-v3", "qwen2-1.5b", "deepseek-coder-33b", "qwen3-14b",
+        "internvl2-26b", "olmoe-1b-7b", "mamba2-130m", "jamba-v0.1-52b",
+        "arctic-480b", "deepseek-7b",
+    }
+    assert expected <= archs
+    for a in expected:
+        cfg = get_config(a)
+        assert cfg.source, f"{a} missing its citation"
+        smoke = get_config(a, smoke=True)
+        assert smoke.n_layers <= 4 and smoke.d_model <= 512
+        if smoke.moe:
+            assert smoke.moe.num_experts <= 4
+
+
+def test_assigned_dims_match_assignment():
+    """Spot-check the exact assigned dimensions."""
+    cases = {
+        "qwen2-1.5b": dict(n_layers=28, d_model=1536, n_heads=12, n_kv_heads=2,
+                           d_ff=8960, vocab=151936, qkv_bias=True),
+        "deepseek-coder-33b": dict(n_layers=62, d_model=7168, n_heads=56,
+                                   n_kv_heads=8, d_ff=19200, vocab=32256),
+        "arctic-480b": dict(n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8,
+                            d_ff=4864, vocab=32000),
+        "mamba2-130m": dict(n_layers=24, d_model=768, vocab=50280),
+        "jamba-v0.1-52b": dict(n_layers=32, d_model=4096, n_heads=32,
+                               n_kv_heads=8, d_ff=14336, vocab=65536),
+    }
+    for arch, dims in cases.items():
+        cfg = get_config(arch)
+        for k, v in dims.items():
+            assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+    assert get_config("mamba2-130m").ssm.d_state == 128
+    assert get_config("olmoe-1b-7b").moe.num_experts == 64
+    assert get_config("olmoe-1b-7b").moe.top_k == 8
+    assert get_config("arctic-480b").moe.num_experts == 128
+    assert get_config("arctic-480b").moe.dense_residual
+    assert get_config("jamba-v0.1-52b").attn_period == 8

@@ -1,0 +1,45 @@
+"""Library-wrapper (§3.4) tests: the MLlib-mimicking sugar."""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.linalg.wrappers import Elemental
+
+
+@pytest.fixture()
+def ac():
+    engine = repro.AlchemistEngine()
+    ctx = repro.AlchemistContext(engine, num_workers=1)
+    yield ctx
+    ctx.stop()
+
+
+def test_wrapper_registers_and_calls(ac, rng):
+    el = Elemental(ac)
+    a = rng.standard_normal((128, 32)).astype(np.float32)
+    al_a = ac.send(a)
+    cond = el.condest(al_a)
+    assert float(cond) > 1.0
+
+
+def test_wrapper_routines_discoverable(ac):
+    el = Elemental(ac)
+    assert "truncated_svd" in dir(el)
+    with pytest.raises(AttributeError):
+        el.not_a_routine
+
+
+def test_wrapper_svd_matches_direct_call(ac, rng):
+    el = Elemental(ac)
+    a = rng.standard_normal((200, 24)).astype(np.float32)
+    al_a = ac.send(a)
+    _, s1, _ = el.truncated_svd(al_a, k=4)
+    _, s2, _ = ac.run("elemental", "truncated_svd", al_a, k=4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-5)
+
+
+def test_wrapper_reuses_registered_library(ac):
+    ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+    el = Elemental(ac)  # must not double-register
+    assert len(ac.session.libraries) == 1
