@@ -3,10 +3,12 @@
   gemm_table1        Table 1  (matrix multiply, Spark vs Spark+Alchemist)
   svd_fig34          Figs 3-4 (rank-20 truncated SVD + overhead split)
   transfer_tables23  Tables 2-3 (tall-skinny vs short-wide transfers)
+  overlap_async      beyond-paper: sync vs pipelined task-queue engine,
+                     relayout plan-cache hit rate (DESIGN.md §3/§5)
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--only gemm|svd|transfer]
+    PYTHONPATH=src python -m benchmarks.run [--only gemm|svd|transfer|overlap]
 """
 
 from __future__ import annotations
@@ -19,15 +21,16 @@ from typing import List
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=("gemm", "svd", "transfer"))
+    ap.add_argument("--only", default=None, choices=("gemm", "svd", "transfer", "overlap"))
     args = ap.parse_args()
 
-    from benchmarks import gemm_table1, svd_fig34, transfer_tables23
+    from benchmarks import gemm_table1, overlap_async, svd_fig34, transfer_tables23
 
     suites = {
         "gemm": gemm_table1.run,
         "svd": svd_fig34.run,
         "transfer": transfer_tables23.run,
+        "overlap": overlap_async.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

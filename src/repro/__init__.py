@@ -4,20 +4,23 @@ linear algebra, embedded in a multi-pod training/serving framework.
 Reproduction of: Gittens, Rothauge, et al., "Alchemist: An Apache Spark <=>
 MPI Interface" (CS.DC 2018), adapted from Spark/MPI/Cori to JAX/XLA/TPU.
 
-Public API (mirrors the paper's ACI):
+Public API (mirrors the paper's ACI, plus the async task-queue surface —
+see DESIGN.md):
 
-    from repro import AlchemistContext, AlchemistEngine, AlMatrix
+    from repro import AlchemistContext, AlchemistEngine, AlMatrix, AlFuture
 """
 
 from repro.core.engine import AlchemistContext, AlchemistEngine
+from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 from repro.core.layouts import GRID, REPLICATED, ROW, LayoutSpec
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
 
 __all__ = [
     "AlchemistContext",
     "AlchemistEngine",
+    "AlFuture",
     "AlMatrix",
     "LayoutSpec",
     "ROW",

@@ -17,17 +17,22 @@ Pieces (paper terminology in brackets):
 - ``registry.py``   — dynamic library registry [ALI shared objects].
 - ``params.py``     — typed scalar parameter packing [Parameters header].
 - ``sharding.py``   — mesh-axis conventions shared by the whole framework.
+- ``futures.py``    — :class:`AlFuture` deferred results (DESIGN.md §4).
+- ``taskqueue.py``  — per-session FIFO workers (DESIGN.md §3).
 - ``errors.py``     — structured error hierarchy.
 """
 
 from repro.core.engine import AlchemistContext, AlchemistEngine
+from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 from repro.core.layouts import GRID, REPLICATED, ROW, LayoutSpec
 from repro.core.registry import Library, Routine
+from repro.core.taskqueue import TaskQueue
 
 __all__ = [
     "AlchemistEngine",
     "AlchemistContext",
+    "AlFuture",
     "AlMatrix",
     "LayoutSpec",
     "ROW",
@@ -35,4 +40,5 @@ __all__ = [
     "REPLICATED",
     "Library",
     "Routine",
+    "TaskQueue",
 ]

@@ -17,6 +17,20 @@ line-for-line with the paper's Scala listings (§3.3):
     (al_u, s, al_v) = ac.run("elemental", "truncated_svd", al_a, k=20)
     U = ac.collect(al_u)                               # AlMatrix -> RDD
     ac.stop()
+
+Execution is an asynchronous task queue (DESIGN.md §3): every ACI call is a
+task on the session's single-worker FIFO, so the paper's overlap story —
+"communication for one application proceeds while computation runs for
+another" (§2, §3.3) — is structural. The ``*_async`` variants return
+:class:`~repro.core.futures.AlFuture` immediately and exploit JAX's async
+dispatch (no ``block_until_ready`` on the pipelined path); the synchronous
+API above is a thin submit-and-wait wrapper over the same queue, so its
+semantics, stats, and error surface are unchanged.
+
+    f_a = ac.send_async(A)                             # returns at once
+    f_c = ac.run_async("elemental", "gemm", f_a, f_a)  # futures chain freely
+    C = ac.collect(f_c)                                # resolves + collects
+    ac.wait()                                          # barrier, if needed
 """
 
 from __future__ import annotations
@@ -30,8 +44,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import futures as futures_mod
 from repro.core import params as params_codec
 from repro.core.errors import LibraryError, SessionError, WorkerAllocationError
+from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 from repro.core.layouts import AXIS_DATA, AXIS_MODEL, GRID, ROW, LayoutSpec
 from repro.core.registry import Library, LibrarySpec, load_library
@@ -94,10 +110,19 @@ class AlchemistEngine:
 
     def release(self, session: Session) -> None:
         with self._lock:
-            if session.id in self.sessions:
-                del self.sessions[session.id]
-                self._free.extend(session.worker_devices)
+            owned = self.sessions.pop(session.id, None) is not None
+        # Drain the session's task queue BEFORE the devices go back in the
+        # pool: a concurrent connect() must never be handed devices whose old
+        # session still has tasks dispatching (disjoint worker groups, §2.4).
         session.close()
+        if owned:
+            with self._lock:
+                # Restore the pool in canonical device order: naive appending
+                # fragments the pool across connect/stop cycles, and a later
+                # allocate would hand out a scrambled, non-contiguous mesh
+                # slice (worker groups should be contiguous blocks).
+                free = set(self._free) | set(session.worker_devices)
+                self._free = [d for d in self.devices if d in free]
 
     def connect(
         self,
@@ -112,7 +137,14 @@ class AlchemistEngine:
 
 
 class AlchemistContext:
-    """The ACI — what the client application imports and talks to."""
+    """The ACI — what the client application imports and talks to.
+
+    All operations flow through the session's task queue. The synchronous
+    methods (``send``/``run``/``collect``/``free``) submit a task and wait;
+    the ``*_async`` twins submit and return an :class:`AlFuture`, letting
+    transfers pipeline against compute within the session and letting
+    independent sessions overlap across the engine.
+    """
 
     def __init__(
         self,
@@ -157,42 +189,115 @@ class AlchemistContext:
             ) from None
 
     # -- matrix movement (the bridge) -----------------------------------------
+    def send_async(self, array: Union[jax.Array, np.ndarray], name: str = "") -> AlFuture:
+        """Pipelined RDD→Alchemist transfer: returns immediately with a
+        future of the handle; the session worker stages + reshards it."""
+        return self._submit_send(array, name=name, block=False)
+
     def send(self, array: Union[jax.Array, np.ndarray], name: str = "") -> AlMatrix:
         """Ship a client-side (row-partitioned) matrix to the engine's grid
         layout and return its handle. The paper's RDD→Alchemist transfer."""
-        self._check()
-        mesh = self.session.mesh
-        x = jnp.asarray(array)
-        if x.ndim != 2:
-            raise SessionError(f"send() expects a 2D matrix, got shape {tuple(x.shape)}")
-        # Stage on the client layout first (rows over all session workers) so
-        # the recorded transfer is the genuine ROW->GRID redistribution.
-        x = jax.device_put(x, self.client_layout.sharding(mesh))
-        out, rec = timed_relayout(
-            x, self.engine_layout, mesh, src=self.client_layout, direction="send"
-        )
-        self.session.stats.record_transfer(rec)
-        return self.session.new_handle(out, self.engine_layout, name=name)
+        return self._submit_send(array, name=name, block=True).result()
 
-    def collect(self, h: AlMatrix) -> jax.Array:
+    def _submit_send(
+        self, array: Union[jax.Array, np.ndarray], *, name: str, block: bool
+    ) -> AlFuture:
+        self._check()
+        sess = self.session
+        # Validate + capture metadata in the caller thread (fail fast, and
+        # pending handles need shape/dtype before the transfer runs).
+        if not isinstance(array, jax.Array):
+            array = np.asarray(array)
+        if array.ndim != 2:
+            raise SessionError(f"send() expects a 2D matrix, got shape {tuple(array.shape)}")
+        h = sess.new_pending_handle(array.shape, array.dtype, self.engine_layout, name=name)
+
+        def task() -> AlMatrix:
+            try:
+                mesh = sess.mesh
+                x = jnp.asarray(array)
+                # Stage on the client layout first (rows over all session
+                # workers) so the recorded transfer is the genuine ROW->GRID
+                # redistribution.
+                x = jax.device_put(x, self.client_layout.sharding(mesh))
+                out, rec = timed_relayout(
+                    x,
+                    self.engine_layout,
+                    mesh,
+                    src=self.client_layout,
+                    direction="send",
+                    cache=sess.relayout_cache,
+                    block=block,
+                )
+                sess.stats.record_transfer(rec)
+                h.materialize(out)
+                return h
+            except BaseException as exc:
+                h.fail(exc)
+                raise
+
+        return sess.tasks.submit(task, label=f"send:{name or h.id}")
+
+    def collect_async(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
+        """Future of the client-side array for ``h`` (which may itself be a
+        future or a still-pending handle)."""
+        return self._submit_collect(h)
+
+    def collect(self, h: Union[AlMatrix, AlFuture]) -> jax.Array:
         """Materialize an engine-resident matrix back on the client layout.
         The only path that moves bulk data engine→client (paper §3.3)."""
-        self._check()
-        live = self.session.resolve(h)
-        out, rec = timed_relayout(
-            live.data(),
-            self.client_layout,
-            self.session.mesh,
-            src=live.layout,
-            direction="receive",
-        )
-        self.session.stats.record_transfer(rec)
-        return out
+        return self._submit_collect(h).result()
 
-    def free(self, h: AlMatrix) -> None:
-        self.session.free_handle(h)
+    def _submit_collect(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
+        self._check()
+        sess = self.session
+
+        def task() -> jax.Array:
+            live = sess.resolve(self._resolve_handle(h))
+            out, rec = timed_relayout(
+                live.data(),
+                self.client_layout,
+                sess.mesh,
+                src=live.layout,
+                direction="receive",
+                cache=sess.relayout_cache,
+                block=True,  # collect crosses the bridge: always materialize
+            )
+            sess.stats.record_transfer(rec)
+            return out
+
+        return sess.tasks.submit(task, label="collect")
+
+    def free_async(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
+        self._check()
+        sess = self.session
+        return sess.tasks.submit(
+            lambda: sess.free_handle(self._resolve_handle(h)), label="free"
+        )
+
+    def free(self, h: Union[AlMatrix, AlFuture]) -> None:
+        # Routed through the queue so frees stay FIFO-ordered behind any
+        # already-submitted task that still consumes the handle.
+        self.free_async(h).result()
+
+    @staticmethod
+    def _resolve_handle(h: Union[AlMatrix, AlFuture]) -> AlMatrix:
+        resolved = futures_mod.resolve(h)
+        if not isinstance(resolved, AlMatrix):
+            raise SessionError(
+                f"expected an AlMatrix (or a future of one), got {type(resolved).__name__}"
+            )
+        return resolved
 
     # -- routine invocation ----------------------------------------------------
+    def run_async(self, library: str, routine: str, *args: Any, **params: Any) -> AlFuture:
+        """Pipelined ``ac.run``: enqueue the routine and return a future of
+        its (wrapped) outputs. Arguments may be AlMatrix handles, futures of
+        handles from earlier async calls, or plain scalars; the compute is
+        async-dispatched, so the worker immediately proceeds to the next task
+        while XLA executes."""
+        return self._submit_run(library, routine, args, params, block=False)
+
     def run(self, library: str, routine: str, *args: Any, **params: Any) -> Any:
         """Invoke ``library.routine`` on the engine (the paper's ``ac.run``).
 
@@ -201,42 +306,64 @@ class AlchemistContext:
         through the Parameters codec, exactly like the paper's driver-to-
         driver metadata channel.
         """
+        return self._submit_run(library, routine, args, params, block=True).result()
+
+    def _submit_run(
+        self,
+        library: str,
+        routine: str,
+        args: Tuple[Any, ...],
+        params: Dict[str, Any],
+        *,
+        block: bool,
+    ) -> AlFuture:
         self._check()
         lib = self.library(library)
+        r = lib.routine(routine)  # unknown-routine errors fail fast, caller-side
         sess = self.session
+        label = f"{library}.{routine}"
 
-        # Drive every scalar through the wire codec: this is the
-        # driver->driver parameter frame of §2.1 (and catches unserializable
-        # arguments at the API boundary, as the real system would).
-        frame = params_codec.pack(
-            {f"__pos_{i}": a for i, a in enumerate(args)} | dict(params)
-        )
-        decoded = params_codec.unpack(frame)
+        def task() -> Any:
+            # Resolve futures from earlier tasks (same-session ones are
+            # guaranteed done: the FIFO ran their producers first).
+            rargs = tuple(futures_mod.resolve(a) for a in args)
+            rparams = {k: futures_mod.resolve(v) for k, v in params.items()}
 
-        call_args = []
-        for i, a in enumerate(args):
-            v = decoded[f"__pos_{i}"]
-            if isinstance(v, params_codec.HandleRef):
-                call_args.append(sess.get_handle(v.id).data())
-            else:
-                call_args.append(v)
-        call_kwargs = {
-            k: (sess.get_handle(v.id).data() if isinstance(v, params_codec.HandleRef) else v)
-            for k, v in decoded.items()
-            if not k.startswith("__pos_")
-        }
+            # Drive every scalar through the wire codec: this is the
+            # driver->driver parameter frame of §2.1 (and catches
+            # unserializable arguments at the API boundary, as the real
+            # system would).
+            frame = params_codec.pack(
+                {f"__pos_{i}": a for i, a in enumerate(rargs)} | rparams
+            )
+            decoded = params_codec.unpack(frame)
 
-        r = lib.routine(routine)
-        if "mesh" in r.signature().parameters:
-            call_kwargs["mesh"] = sess.mesh
+            call_args = []
+            for i in range(len(rargs)):
+                v = decoded[f"__pos_{i}"]
+                if isinstance(v, params_codec.HandleRef):
+                    call_args.append(sess.get_handle(v.id).data())
+                else:
+                    call_args.append(v)
+            call_kwargs = {
+                k: (sess.get_handle(v.id).data() if isinstance(v, params_codec.HandleRef) else v)
+                for k, v in decoded.items()
+                if not k.startswith("__pos_")
+            }
 
-        t0 = time.perf_counter()
-        with sess.mesh:
-            result = r.fn(*call_args, **call_kwargs)
-        result = jax.block_until_ready(result)
-        sess.stats.record_compute(time.perf_counter() - t0)
+            if "mesh" in r.signature().parameters:
+                call_kwargs["mesh"] = sess.mesh
 
-        return self._wrap_outputs(result, f"{library}.{routine}")
+            t0 = time.perf_counter()
+            with sess.mesh:
+                result = r.fn(*call_args, **call_kwargs)
+            if block:
+                result = jax.block_until_ready(result)
+            sess.stats.record_compute(time.perf_counter() - t0)
+
+            return self._wrap_outputs(result, label)
+
+        return sess.tasks.submit(task, label=f"run:{label}")
 
     def _wrap_outputs(self, result: Any, label: str) -> Any:
         """Array outputs become engine-resident handles; scalars/vectors are
@@ -251,6 +378,12 @@ class AlchemistContext:
         return result
 
     # -- lifecycle ---------------------------------------------------------------
+    def wait(self, timeout: Optional[float] = None) -> None:
+        """Barrier: block until every task this session has queued so far
+        (sends, runs, collects, frees) has executed."""
+        self._check()
+        self.session.drain(timeout)
+
     @property
     def stats(self):
         return self.session.stats
@@ -260,7 +393,11 @@ class AlchemistContext:
         return self.session.mesh
 
     def stop(self) -> None:
-        """Disconnect and release the worker group (paper's ``ac.stop()``)."""
+        """Disconnect and release the worker group (paper's ``ac.stop()``).
+
+        Queued tasks are drained first (their futures resolve), then the
+        worker-group devices return to the engine pool in canonical order.
+        """
         if not self._stopped:
             self.engine.release(self.session)
             self._stopped = True

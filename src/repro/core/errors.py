@@ -33,3 +33,9 @@ class LayoutError(AlchemistError):
 
 class ParameterError(AlchemistError):
     """Bad scalar-parameter pack/unpack (Parameters header analogue)."""
+
+
+class TaskError(AlchemistError):
+    """Asynchronous task-queue failures: a future that timed out, a queue
+    used after close, or a pending handle whose producing task failed
+    (the original exception is chained as ``__cause__``)."""

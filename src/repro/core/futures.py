@@ -1,0 +1,119 @@
+"""AlFuture — deferred results from the asynchronous task-queue engine.
+
+DESIGN.md §4: every asynchronous ACI call (``send_async`` / ``run_async`` /
+``collect_async``) returns an :class:`AlFuture` immediately; the actual work
+is executed by the owning session's task-queue worker. A future resolves to
+whatever the synchronous call would have returned — an :class:`AlMatrix`
+handle, a tuple of handles, a scalar, or a client-side array.
+
+Futures are *transparently composable*: passing an unresolved AlFuture back
+into ``run_async``/``collect_async``/``free`` is legal — the engine resolves
+it at task-execution time. Because each session's queue is FIFO with a single
+worker, a future produced by an earlier task of the same session is always
+resolved by the time a later task of that session executes, so chained
+pipelines (``h = send_async(a); g = run_async('lib', 'gemm', h, h)``) never
+stall the worker.
+
+Task failures propagate: the exception raised inside the task is stored and
+re-raised from :meth:`AlFuture.result`, so the synchronous wrappers (which
+are just ``submit + result()``) keep their original error surface.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, List, Optional
+
+from repro.core.errors import TaskError
+
+PENDING = "pending"
+RESOLVED = "resolved"
+FAILED = "failed"
+
+
+class AlFuture:
+    """A deferred ACI result, resolved by a session's task-queue worker."""
+
+    def __init__(self, label: str = ""):
+        self.label = label
+        self._event = threading.Event()
+        self._state = PENDING
+        self._value: Any = None
+        self._exception: Optional[BaseException] = None
+        self._callbacks: List[Callable[["AlFuture"], None]] = []
+        self._lock = threading.Lock()
+
+    # -- client side ---------------------------------------------------------
+    @property
+    def state(self) -> str:
+        return self._state
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        """Block until the task ran; return its value or re-raise its error."""
+        if not self._event.wait(timeout):
+            raise TaskError(
+                f"AlFuture {self.label or hex(id(self))} not resolved within {timeout}s"
+            )
+        if self._state == FAILED:
+            raise self._exception
+        return self._value
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        """Block until done; return the task's exception (None on success)."""
+        if not self._event.wait(timeout):
+            raise TaskError(
+                f"AlFuture {self.label or hex(id(self))} not resolved within {timeout}s"
+            )
+        return self._exception
+
+    def add_done_callback(self, fn: Callable[["AlFuture"], None]) -> None:
+        """Run ``fn(self)`` once resolved (immediately if already done)."""
+        with self._lock:
+            if not self._event.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    # -- engine side ---------------------------------------------------------
+    def _set_result(self, value: Any) -> None:
+        self._finish(RESOLVED, value=value)
+
+    def _set_exception(self, exc: BaseException) -> None:
+        self._finish(FAILED, exc=exc)
+
+    def _finish(self, state: str, value: Any = None, exc: Optional[BaseException] = None) -> None:
+        with self._lock:
+            if self._event.is_set():
+                raise TaskError(f"AlFuture {self.label!r} resolved twice")
+            self._state = state
+            self._value = value
+            self._exception = exc
+            callbacks, self._callbacks = self._callbacks, []
+            self._event.set()
+        for fn in callbacks:
+            fn(self)
+
+    def __repr__(self) -> str:
+        return f"AlFuture({self.label!r}, state={self._state})"
+
+
+def resolve(obj: Any, timeout: Optional[float] = None) -> Any:
+    """Unwrap ``obj`` if it is an AlFuture (recursing through nesting);
+    anything else passes through untouched."""
+    while isinstance(obj, AlFuture):
+        obj = obj.result(timeout)
+    return obj
+
+
+def resolve_tree(obj: Any, timeout: Optional[float] = None) -> Any:
+    """:func:`resolve`, applied through tuples/lists/dicts (one level of the
+    structures the ACI actually returns)."""
+    obj = resolve(obj, timeout)
+    if isinstance(obj, (tuple, list)):
+        return type(obj)(resolve_tree(o, timeout) for o in obj)
+    if isinstance(obj, dict):
+        return {k: resolve_tree(v, timeout) for k, v in obj.items()}
+    return obj

@@ -9,20 +9,42 @@ Here the handle wraps an engine-resident ``jax.Array`` plus its layout tag.
 Chained library calls pass handles; `AlchemistContext.collect()` is the only
 path that reshards data back to the client's row layout — so, exactly as in
 the paper, the bridge is crossed only on explicit request.
+
+With the asynchronous task-queue engine (DESIGN.md §3-§4) a handle has a
+lifecycle::
+
+    pending ──materialize()──▶ materialized ──free()──▶ freed
+        │
+        └──fail(exc)──▶ failed        (data() re-raises, wrapped in TaskError)
+
+``send_async`` creates the handle immediately in the *pending* state — shape
+and dtype are known up front, so metadata-only operations (and packing the
+handle into a parameter frame) never wait — and the session's queue worker
+materializes it when the transfer actually runs. ``data()`` on a pending
+handle blocks until materialization; within one session that never happens
+(the FIFO queue materializes producers before consumers run), but a handle
+shared across engine internals may legitimately wait.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import threading
 from typing import Optional, Tuple
 
 import jax
 
-from repro.core.errors import HandleError
+from repro.core.errors import HandleError, TaskError
 from repro.core.layouts import LayoutSpec
 
 _ID_COUNTER = itertools.count(1)
+
+# Handle lifecycle states.
+PENDING = "pending"
+MATERIALIZED = "materialized"
+FAILED = "failed"
+FREED = "freed"
 
 
 @dataclasses.dataclass
@@ -45,8 +67,70 @@ class AlMatrix:
     name: str = ""
     id: int = dataclasses.field(default_factory=lambda: next(_ID_COUNTER))
     _data: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
-    _freed: bool = dataclasses.field(default=False, repr=False)
+    _state: str = dataclasses.field(default=MATERIALIZED, repr=False)
+    _error: Optional[BaseException] = dataclasses.field(default=None, repr=False)
+    _ready: Optional[threading.Event] = dataclasses.field(default=None, repr=False)
 
+    def __post_init__(self):
+        # Only handles explicitly constructed as PENDING (Session.
+        # new_pending_handle) get a materialization event. A metadata-only
+        # handle built without data stays MATERIALIZED-with-no-data so that
+        # data() fast-fails with HandleError instead of blocking on an event
+        # nothing will ever set.
+        if self._state == PENDING and self._ready is None:
+            self._ready = threading.Event()
+
+    # -- lifecycle ----------------------------------------------------------
+    @property
+    def state(self) -> str:
+        return self._state
+
+    def materialize(self, data: jax.Array) -> None:
+        """Engine-side: attach the resident array to a pending handle."""
+        if self._state == FREED:
+            raise HandleError(f"AlMatrix {self.id} materialized after free()")
+        self._data = data
+        self._state = MATERIALIZED
+        if self._ready is not None:
+            self._ready.set()
+
+    def fail(self, exc: BaseException) -> None:
+        """Engine-side: the producing task died; data() will re-raise."""
+        self._error = exc
+        self._state = FAILED
+        if self._ready is not None:
+            self._ready.set()
+
+    def free(self) -> None:
+        """Release engine-side storage (the client keeps only metadata)."""
+        self._data = None
+        self._state = FREED
+        if self._ready is not None:
+            self._ready.set()  # unblock any waiter; data() raises HandleError
+
+    # -- data access --------------------------------------------------------
+    def data(self, timeout: Optional[float] = None) -> jax.Array:
+        """Engine-internal accessor. Client code should use ctx.collect().
+
+        Blocks while the handle is pending (its producing task has not run
+        yet); raises HandleError once freed, TaskError if the producer failed.
+        """
+        if self._state == PENDING and self._ready is not None:
+            if not self._ready.wait(timeout):
+                raise TaskError(
+                    f"AlMatrix {self.id} ({self.name!r}) still pending after {timeout}s"
+                )
+        if self._state == FREED:
+            raise HandleError(f"AlMatrix {self.id} ({self.name!r}) has been freed")
+        if self._state == FAILED:
+            raise TaskError(
+                f"AlMatrix {self.id} ({self.name!r}) failed to materialize"
+            ) from self._error
+        if self._data is None:
+            raise HandleError(f"AlMatrix {self.id} ({self.name!r}) has no resident data")
+        return self._data
+
+    # -- metadata -----------------------------------------------------------
     @property
     def num_rows(self) -> int:
         return self.shape[0]
@@ -61,23 +145,14 @@ class AlMatrix:
             n *= d
         return n * jax.numpy.dtype(self.dtype).itemsize
 
-    def data(self) -> jax.Array:
-        """Engine-internal accessor. Client code should use ctx.collect()."""
-        if self._freed:
-            raise HandleError(f"AlMatrix {self.id} ({self.name!r}) has been freed")
-        if self._data is None:
-            raise HandleError(f"AlMatrix {self.id} ({self.name!r}) has no resident data")
-        return self._data
-
-    def free(self) -> None:
-        """Release engine-side storage (the client keeps only metadata)."""
-        self._data = None
-        self._freed = True
+    @property
+    def _freed(self) -> bool:  # backwards-compat for older callers
+        return self._state == FREED
 
     def __repr__(self) -> str:  # keep reprs small in logs
         return (
             f"AlMatrix(id={self.id}, shape={self.shape}, dtype={jax.numpy.dtype(self.dtype).name}, "
-            f"layout={self.layout.name}, session={self.session_id}"
+            f"layout={self.layout.name}, session={self.session_id}, state={self._state}"
             + (f", name={self.name!r}" if self.name else "")
             + ")"
         )

@@ -24,13 +24,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
-from typing import Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding
 
 from repro.core.errors import LayoutError
 from repro.core.layouts import LayoutSpec, cyclic_permutation, inverse_permutation
@@ -222,6 +223,122 @@ def relayout_in_jit(x: jax.Array, dst: LayoutSpec, mesh: Mesh) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, dst.sharding(mesh))
 
 
+# ---------------------------------------------------------------------------
+# Relayout plan cache
+# ---------------------------------------------------------------------------
+
+def _mesh_cache_key(mesh: Mesh) -> Tuple:
+    """Hashable identity of a mesh: axis names, grid shape, device ids."""
+    devices = np.asarray(mesh.devices, dtype=object).ravel()
+    return (
+        tuple(mesh.axis_names),
+        tuple(np.asarray(mesh.devices).shape),
+        tuple(getattr(d, "id", i) for i, d in enumerate(devices)),
+    )
+
+
+@dataclasses.dataclass
+class RelayoutPlan:
+    """Everything derivable from (shape, dtype, src, dst, mesh) alone.
+
+    Building a plan is the expensive, data-independent half of a transfer:
+    the O(n_devices^2) shard-geometry sweep of :func:`transfer_cost`, the
+    cyclic row permutation (an O(n_rows) host-side index build shipped to
+    device), and the destination NamedSharding. A cached plan turns a repeat
+    send/collect of the same (shape, dtype, layout pair, mesh) into a single
+    ``device_put`` — the paper's "minimal communication overhead" claim made
+    structural (DESIGN.md §5).
+    """
+
+    shape: Tuple[int, int]
+    dtype: Any
+    src_name: str
+    dst_name: str
+    cost: TransferCost
+    dst_sharding: NamedSharding
+    permutation: Optional[jnp.ndarray]  # pre-relayout row permutation, if any
+    uses: int = 0
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        """Execute the planned relayout on ``x`` (async-dispatched)."""
+        arr = x
+        if self.permutation is not None:
+            arr = jnp.take(arr, self.permutation, axis=0)
+        return jax.device_put(arr, self.dst_sharding)
+
+
+class RelayoutPlanCache:
+    """Per-session memo of :class:`RelayoutPlan`, keyed on
+    ``(shape, dtype, src_layout, dst_layout, mesh)``.
+
+    Thread-safe; hit/miss counters feed ``session.stats``.
+    """
+
+    def __init__(self):
+        self._plans: Dict[Tuple, RelayoutPlan] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def plan(
+        self,
+        shape: Tuple[int, int],
+        dtype,
+        src: LayoutSpec,
+        dst: LayoutSpec,
+        mesh: Mesh,
+    ) -> Tuple[RelayoutPlan, bool]:
+        """Return ``(plan, was_cache_hit)`` for this relayout geometry."""
+        key = (
+            tuple(int(d) for d in shape),
+            str(jnp.dtype(dtype)),
+            src.name,
+            dst.name,
+            _mesh_cache_key(mesh),
+        )
+        with self._lock:
+            cached = self._plans.get(key)
+            if cached is not None:
+                self.hits += 1
+                cached.uses += 1
+                return cached, True
+            self.misses += 1
+        # Build outside the lock: geometry sweeps can be slow and plans are
+        # deterministic, so a racing double-build is harmless.
+        built = self._build(shape, dtype, src, dst, mesh)
+        with self._lock:
+            plan = self._plans.setdefault(key, built)
+            plan.uses += 1
+        return plan, False
+
+    @staticmethod
+    def _build(shape, dtype, src: LayoutSpec, dst: LayoutSpec, mesh: Mesh) -> RelayoutPlan:
+        dst.validate(shape, mesh)
+        cost = transfer_cost(tuple(shape), dtype, src, dst, mesh)
+        perm = None
+        if bool(src.cyclic) != bool(dst.cyclic):
+            n_shards = dst.grid_shape(mesh)[0] if dst.cyclic else src.grid_shape(mesh)[0]
+            p = cyclic_permutation(shape[0], n_shards)
+            if not dst.cyclic:
+                p = inverse_permutation(p)
+            perm = jnp.asarray(p)
+        return RelayoutPlan(
+            shape=tuple(shape),
+            dtype=jnp.dtype(dtype),
+            src_name=src.name,
+            dst_name=dst.name,
+            cost=cost,
+            dst_sharding=dst.sharding(mesh),
+            permutation=perm,
+        )
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses, "plans": len(self._plans)}
+
+
 @dataclasses.dataclass
 class TransferRecord:
     """One observed transfer: analytic cost + measured wall time."""
@@ -229,6 +346,7 @@ class TransferRecord:
     direction: str  # "send" (client→engine) or "receive" (engine→client)
     cost: TransferCost
     seconds: float
+    cache_hit: bool = False  # did the relayout plan come from the plan cache?
 
 
 def timed_relayout(
@@ -238,16 +356,32 @@ def timed_relayout(
     *,
     src: LayoutSpec,
     direction: str = "send",
+    cache: Optional[RelayoutPlanCache] = None,
+    block: bool = True,
 ) -> Tuple[jax.Array, TransferRecord]:
     """Relayout + analytic cost + measured wall time, as one record.
 
     This is the engine's instrumented transfer path: the paper reports
     Send/Compute/Receive columns (Table 1); records produced here feed the
     same decomposition.
+
+    With ``cache`` the shard geometry / permutation / sharding come from the
+    session's :class:`RelayoutPlanCache`. With ``block=False`` the relayout is
+    dispatched asynchronously and ``seconds`` measures dispatch only — the
+    task-queue engine's pipelined path, where the wait is absorbed by the
+    eventual ``collect``.
     """
-    cost = transfer_cost(tuple(x.shape), x.dtype, src, dst, mesh)
-    t0 = time.perf_counter()
-    out = relayout(x, dst, mesh, src=src)
-    out.block_until_ready()
+    hit = False
+    if cache is not None:
+        plan, hit = cache.plan(tuple(x.shape), x.dtype, src, dst, mesh)
+        cost = plan.cost
+        t0 = time.perf_counter()
+        out = plan.apply(x)
+    else:
+        cost = transfer_cost(tuple(x.shape), x.dtype, src, dst, mesh)
+        t0 = time.perf_counter()
+        out = relayout(x, dst, mesh, src=src)
+    if block:
+        out.block_until_ready()
     dt = time.perf_counter() - t0
-    return out, TransferRecord(direction=direction, cost=cost, seconds=dt)
+    return out, TransferRecord(direction=direction, cost=cost, seconds=dt, cache_hit=hit)

@@ -5,6 +5,15 @@ group (its own MPI communicator spanning the Alchemist driver plus the
 allocated workers), its own loaded libraries, and its own matrix namespace.
 Here a worker group is a **mesh slice**: a contiguous block of the engine's
 devices arranged as a ('data','model') grid.
+
+Each session additionally owns (DESIGN.md §3):
+
+- a :class:`~repro.core.taskqueue.TaskQueue` — the single-worker FIFO that
+  executes this session's send/run/collect tasks, keeping per-application
+  ordering while letting distinct sessions overlap;
+- a :class:`~repro.core.relayout.RelayoutPlanCache` — memoized shard
+  geometry for repeated same-shape transfers, with hit/miss counters
+  surfaced through :class:`SessionStats`.
 """
 
 from __future__ import annotations
@@ -17,10 +26,12 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core.errors import HandleError, SessionError
+from repro.core import handles as handles_mod
 from repro.core.handles import AlMatrix
 from repro.core.layouts import LayoutSpec
 from repro.core.registry import Library
-from repro.core.relayout import TransferRecord
+from repro.core.relayout import RelayoutPlanCache, TransferRecord
+from repro.core.taskqueue import TaskQueue
 
 _SESSION_IDS = itertools.count(1)
 
@@ -37,10 +48,16 @@ class SessionStats:
     num_sends: int = 0
     num_receives: int = 0
     num_runs: int = 0
+    relayout_cache_hits: int = 0
+    relayout_cache_misses: int = 0
     transfers: List[TransferRecord] = dataclasses.field(default_factory=list)
 
     def record_transfer(self, rec: TransferRecord) -> None:
         self.transfers.append(rec)
+        if rec.cache_hit:
+            self.relayout_cache_hits += 1
+        else:
+            self.relayout_cache_misses += 1
         if rec.direction == "send":
             self.send_bytes += rec.cost.bytes_total
             self.send_seconds += rec.seconds
@@ -64,6 +81,8 @@ class SessionStats:
             "num_sends": self.num_sends,
             "num_receives": self.num_receives,
             "num_runs": self.num_runs,
+            "relayout_cache_hits": self.relayout_cache_hits,
+            "relayout_cache_misses": self.relayout_cache_misses,
         }
 
 
@@ -78,6 +97,8 @@ class Session:
         self.handles: Dict[int, AlMatrix] = {}
         self.libraries: Dict[str, Library] = {}
         self.stats = SessionStats()
+        self.tasks = TaskQueue(name=f"session-{self.id}")
+        self.relayout_cache = RelayoutPlanCache()
         self.closed = False
 
     # -- handle table -------------------------------------------------------
@@ -95,6 +116,32 @@ class Session:
             session_id=self.id,
             name=name,
             _data=data,
+        )
+        self.handles[h.id] = h
+        return h
+
+    def new_pending_handle(
+        self,
+        shape,
+        dtype,
+        layout: LayoutSpec,
+        name: str = "",
+    ) -> AlMatrix:
+        """Register a handle whose data a queued task will materialize.
+
+        Metadata (shape/dtype/layout) is known immediately — the paper's
+        AlMatrix proxies carry exactly this before any bytes move — so the
+        client can pack the handle into parameter frames and chain further
+        async calls without waiting for the transfer.
+        """
+        self._check_open()
+        h = AlMatrix(
+            shape=tuple(int(d) for d in shape),
+            dtype=jax.numpy.dtype(dtype),
+            layout=layout,
+            session_id=self.id,
+            name=name,
+            _state=handles_mod.PENDING,
         )
         self.handles[h.id] = h
         return h
@@ -126,7 +173,14 @@ class Session:
         del self.handles[live.id]
 
     # -- lifecycle ----------------------------------------------------------
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Barrier: wait until every queued task of this session finished."""
+        self.tasks.barrier(timeout)
+
     def close(self) -> None:
+        if self.closed:
+            return
+        self.tasks.close(wait=True, timeout=60.0)
         for h in list(self.handles.values()):
             h.free()
         self.handles.clear()

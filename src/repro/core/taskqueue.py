@@ -1,0 +1,144 @@
+"""TaskQueue — per-session FIFO workers behind the asynchronous ACI.
+
+DESIGN.md §3: the engine's concurrency unit is the *session*. Each session
+owns one TaskQueue: a FIFO of send/run/collect tasks drained by a single
+daemon worker thread. One worker per session keeps every session's operations
+strictly ordered (the paper's per-application command stream, §2.4) while
+letting *different* sessions — which own disjoint mesh slices — genuinely
+overlap: their workers dispatch to XLA independently, and JAX's async
+dispatch means a dispatched routine keeps computing while the same worker
+already stages the next transfer.
+
+The queue is intentionally tiny: tasks are plain callables, results flow
+through :class:`~repro.core.futures.AlFuture`, and a barrier is just a no-op
+task whose future the caller waits on. ServeEngine reuses the same class for
+request batches, so the primitive is engine-wide, not Alchemist-specific.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Optional
+
+from repro.core.errors import TaskError
+from repro.core.futures import AlFuture
+
+_SHUTDOWN = object()
+
+
+class TaskQueue:
+    """A FIFO of callables drained by one lazily-started daemon worker."""
+
+    def __init__(self, name: str = "taskqueue"):
+        self.name = name
+        self._q: "queue.Queue" = queue.Queue()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self._closed = False
+        self.tasks_submitted = 0
+        self.tasks_completed = 0
+        self.tasks_failed = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, fn: Callable[[], Any], *, label: str = "") -> AlFuture:
+        """Enqueue ``fn`` for the worker; returns the future of its result."""
+        future = AlFuture(label=label or getattr(fn, "__name__", "task"))
+        with self._lock:
+            if self._closed:
+                raise TaskError(f"TaskQueue {self.name!r} is closed")
+            self.tasks_submitted += 1
+            self._q.put((fn, future))
+            self._ensure_worker()
+        return future
+
+    def barrier(self, timeout: Optional[float] = None) -> None:
+        """Block until every task submitted before this call has finished."""
+        with self._lock:
+            thread = self._thread
+            if thread is None:
+                return  # no worker was ever started: nothing in flight
+            if self._closed:
+                # close(wait=False) leaves the worker draining in the
+                # background; "all tasks finished" then means "worker exited"
+                # (it stops at the shutdown sentinel, which is queued last).
+                future = None
+            else:
+                future = AlFuture(label=f"{self.name}:barrier")
+                self._q.put((lambda: None, future))
+        if future is not None:
+            future.result(timeout)
+            return
+        thread.join(timeout)
+        if thread.is_alive():
+            raise TaskError(
+                f"TaskQueue {self.name!r} barrier: worker still draining after {timeout}s"
+            )
+
+    # -- worker --------------------------------------------------------------
+    def _ensure_worker(self) -> None:
+        # caller holds self._lock
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._drain, name=f"{self.name}-worker", daemon=True
+            )
+            self._thread.start()
+
+    def _drain(self) -> None:
+        while True:
+            item = self._q.get()
+            try:
+                if item is _SHUTDOWN:
+                    return
+                fn, future = item
+                try:
+                    future._set_result(fn())
+                    self.tasks_completed += 1
+                except BaseException as exc:  # noqa: BLE001 — propagate via future
+                    self.tasks_failed += 1
+                    future._set_exception(exc)
+            finally:
+                self._q.task_done()
+
+    # -- lifecycle -----------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def pending(self) -> int:
+        """Approximate number of tasks not yet picked up by the worker."""
+        return self._q.qsize()
+
+    def close(self, wait: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop accepting tasks; optionally drain what's already queued.
+
+        Idempotent. With ``wait=False`` the already-queued tasks still run
+        (the worker drains them in the background) but we don't block on them.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            thread = self._thread
+            if thread is not None:
+                self._q.put(_SHUTDOWN)
+        if wait and thread is not None:
+            thread.join(timeout)
+            if thread.is_alive():
+                raise TaskError(
+                    f"TaskQueue {self.name!r} failed to drain within {timeout}s"
+                )
+
+    def stats(self) -> dict:
+        return {
+            "submitted": self.tasks_submitted,
+            "completed": self.tasks_completed,
+            "failed": self.tasks_failed,
+        }
+
+    def __repr__(self) -> str:
+        return (
+            f"TaskQueue({self.name!r}, submitted={self.tasks_submitted}, "
+            f"completed={self.tasks_completed}, failed={self.tasks_failed}, "
+            f"closed={self._closed})"
+        )

@@ -22,6 +22,16 @@ from jax.sharding import Mesh, NamedSharding
 
 from repro.core.layouts import ROW
 
+# jax >= 0.5 exposes shard_map at top level (replication check kw: check_vma);
+# 0.4.x has it under experimental (kw: check_rep).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _NOCHECK_KW = {"check_vma": False}
+else:  # pragma: no cover - exercised on jax 0.4.x only
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _NOCHECK_KW = {"check_rep": False}
+
 
 def _all_axes(mesh: Mesh):
     return tuple(mesh.axis_names)
@@ -106,11 +116,12 @@ def tsqr(a: jax.Array, mesh: Mesh, *, tree: bool = False) -> Tuple[jax.Array, ja
         # over the lexicographic rank by permuting each axis jointly.
         return jax.lax.ppermute(x, axis_names, perm)
 
-    q, r_rep = jax.shard_map(
+    q, r_rep = _shard_map(
         lambda a_loc: local(a_loc),
         mesh=mesh,
         in_specs=(spec,),
         out_specs=(spec, jax.sharding.PartitionSpec(None, None)),
-        check_vma=False,  # R is replicated by construction (gathered QR)
+        # R is replicated by construction (gathered QR)
+        **_NOCHECK_KW,
     )(a_p)
     return q[:m], r_rep

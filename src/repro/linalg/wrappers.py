@@ -15,6 +15,15 @@ math library:
     el = Elemental(ac)          # registers the ALI if needed
     cond = el.condest(al_a)
     u, s, v = el.truncated_svd(al_a, k=20)
+
+Every wrapper also carries an asynchronous view over the task-queue engine
+(DESIGN.md §3): ``el.submit`` exposes the same routines but returns
+:class:`~repro.core.futures.AlFuture` immediately, so call chains pipeline —
+futures feed straight into further routines or into ``ac.collect``:
+
+    f = el.submit.gemm(al_a, al_b)      # returns at once
+    g = el.submit.gemm(f, al_b)         # chains on the unresolved future
+    C = ac.collect(g)                   # materializes when ready
 """
 
 from __future__ import annotations
@@ -22,6 +31,31 @@ from __future__ import annotations
 from typing import Any
 
 from repro.core.engine import AlchemistContext
+from repro.core.futures import AlFuture
+
+
+class _AsyncRoutines:
+    """Routine namespace whose calls go through ``run_async``."""
+
+    def __init__(self, wrapper: "LibraryWrapper"):
+        self._wrapper = wrapper
+
+    def __getattr__(self, name: str):
+        w = self._wrapper
+        if name.startswith("_") or name not in w._routines:
+            raise AttributeError(
+                f"{type(w).__name__}.submit has no routine {name!r}; "
+                f"available: {w._routines}"
+            )
+
+        def call(*args: Any, **kwargs: Any) -> AlFuture:
+            return w._ac.run_async(w.library_name, name, *args, **kwargs)
+
+        call.__name__ = name
+        return call
+
+    def __dir__(self):
+        return sorted(set(super().__dir__()) | set(self._wrapper._routines))
 
 
 class LibraryWrapper:
@@ -35,6 +69,7 @@ class LibraryWrapper:
         if self.library_name not in ac.session.libraries:
             ac.register_library(self.library_name, self.library_path)
         self._routines = ac.library(self.library_name).routine_names()
+        self.submit = _AsyncRoutines(self)
 
     def __getattr__(self, name: str):
         if name.startswith("_") or name not in self._routines:

@@ -4,7 +4,7 @@ Decode shapes from the assignment (``decode_32k``, ``long_500k``) lower
 ``serve_step`` (one token against a pre-filled cache), built here.
 """
 
-from repro.serve.engine import ServeEngine, Request
+from repro.serve.engine import Completion, Request, ServeEngine
 from repro.serve.sampling import greedy, temperature_sample
 
-__all__ = ["ServeEngine", "Request", "greedy", "temperature_sample"]
+__all__ = ["ServeEngine", "Request", "Completion", "greedy", "temperature_sample"]

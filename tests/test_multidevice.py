@@ -29,5 +29,9 @@ def test_engine_worker_groups_and_distributed_linalg():
     _run("_engine_script.py", "MULTIDEVICE_ENGINE_OK")
 
 
+def test_concurrent_sessions_overlap():
+    _run("_concurrent_script.py", "MULTIDEVICE_CONCURRENT_OK")
+
+
 def test_sharded_models_match_single_device():
     _run("_model_script.py", "MULTIDEVICE_MODEL_OK")

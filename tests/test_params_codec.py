@@ -3,7 +3,7 @@ including hypothesis round-trip properties."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import params as codec
 from repro.core.errors import ParameterError

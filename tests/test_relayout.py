@@ -3,7 +3,7 @@ analytic-cost properties; traffic realism is in tests/multidevice/)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,7 @@ BlockMatrix multiply, MLlib-style computeSVD."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.sparklike import (
     BlockMatrix,

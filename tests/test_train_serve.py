@@ -163,3 +163,31 @@ class TestServeEngine:
         req_eos = Request(prompt=np.array([1], np.int32), max_new_tokens=8, eos_id=eos)
         out2 = eng.serve([req_eos])[0]
         assert len(out2.tokens) <= 3
+
+    def test_async_submit_matches_serve(self, mesh1):
+        # batches submitted through the task queue give identical results to
+        # the synchronous path, and submission returns before decode finishes
+        cfg = get_config("qwen2-1.5b", smoke=True)
+        model = build_model(cfg, mesh1)
+        params = model.init(jax.random.PRNGKey(0))
+        with ServeEngine(cfg, mesh1, params, batch_size=2, context=64) as eng:
+            req = Request(prompt=np.array([1, 2, 3], np.int32), max_new_tokens=6)
+            want = eng.serve([req])[0]
+            futs = [eng.submit([req]) for _ in range(3)]
+            eng.drain(timeout=300)
+            for f in futs:
+                assert f.done()
+                np.testing.assert_array_equal(f.result()[0].tokens, want.tokens)
+
+    def test_submit_after_close_rejected(self, mesh1):
+        from repro.core.errors import TaskError
+
+        cfg = get_config("qwen2-1.5b", smoke=True)
+        model = build_model(cfg, mesh1)
+        params = model.init(jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, mesh1, params, batch_size=1, context=64)
+        req = Request(prompt=np.array([1], np.int32), max_new_tokens=2)
+        eng.submit([req]).result(timeout=300)
+        eng.close()
+        with pytest.raises(TaskError):
+            eng.submit([req])

@@ -43,3 +43,29 @@ def test_wrapper_reuses_registered_library(ac):
     ac.register_library("elemental", "repro.linalg.library:ElementalLib")
     el = Elemental(ac)  # must not double-register
     assert len(ac.session.libraries) == 1
+
+
+def test_wrapper_async_submit_returns_futures(ac, rng):
+    el = Elemental(ac)
+    a = rng.standard_normal((64, 16)).astype(np.float32)
+    fa = ac.send_async(a)
+    fb = ac.send_async(rng.standard_normal((16, 8)).astype(np.float32))
+    g = el.submit.gemm(fa, fb)  # chains on unresolved futures
+    assert isinstance(g, repro.AlFuture)
+    h = g.result(60)
+    assert h.shape == (64, 8)
+
+
+def test_wrapper_async_matches_sync(ac, rng):
+    el = Elemental(ac)
+    a = rng.standard_normal((32, 32)).astype(np.float32)
+    al_a = ac.send(a)
+    sync_out = np.asarray(ac.collect(el.gemm(al_a, al_a)))
+    async_out = np.asarray(ac.collect(el.submit.gemm(al_a, al_a)))
+    np.testing.assert_allclose(async_out, sync_out, atol=1e-5)
+
+
+def test_wrapper_async_unknown_routine(ac):
+    el = Elemental(ac)
+    with pytest.raises(AttributeError):
+        el.submit.not_a_routine
