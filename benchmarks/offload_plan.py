@@ -1,0 +1,114 @@
+"""Lazy offload planner: naive round-trip vs planned execution (DESIGN.md §6).
+
+arXiv:1805.11800's cautionary measurement: Alchemist's speedup evaporates
+when an application collects results back to Spark between every offloaded
+call. This benchmark runs the same chained pipeline both ways and reports
+bytes over the bridge plus wall clock:
+
+- ``naive``   — every routine is a full send→run→collect round trip: each
+  intermediate is collected client-side and re-sent to the next call, and
+  the dataset is re-shipped whenever a step "loads" it again.
+- ``planned`` — the identical DAG through ``ac.planner``: intermediates stay
+  engine-resident (elided crossings), repeat sends of the same payload hit
+  the content-keyed resident-matrix cache, and one collect materializes the
+  final result.
+
+The pipeline is the pca_offload example's shape, scaled so intermediates
+dominate: PCA of A, projection of A onto the components, then a Gram matrix
+of the projection — three chained routines, two large intermediates.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import repro
+from benchmarks.common import csv_row
+
+M, N, K = 2048, 512, 16
+
+
+def _dataset() -> np.ndarray:
+    rng = np.random.default_rng(11)
+    lowrank = rng.standard_normal((M, K)) @ rng.standard_normal((K, N))
+    return (lowrank + 0.1 * rng.standard_normal((M, N))).astype(np.float32)
+
+
+def _naive(ac, a: np.ndarray) -> Tuple[np.ndarray, float, Dict]:
+    """Round trip per routine — the 1805.11800 anti-pattern."""
+    # step 1: PCA — send the dataset, collect the components
+    h_a = ac.send(a, name="A")
+    h_comps, _, _ = ac.run("elemental", "pca", h_a, k=K)
+    comps = np.asarray(ac.collect(h_comps))            # bridge: recv
+    # step 2: projection — the client re-loads the dataset and re-sends the
+    # components it just collected
+    h_a2 = ac.send(a, name="A_again")                  # bridge: send (dup)
+    h_comps2 = ac.send(comps, name="comps")            # bridge: send (round trip)
+    proj = np.asarray(ac.collect(ac.run("elemental", "gemm", h_a2, h_comps2)))
+    # step 3: norm of the projection — re-send what was just collected
+    h_proj = ac.send(proj, name="proj")                # bridge: send (round trip)
+    norm = float(ac.run("elemental", "normest", h_proj))
+    return proj, norm, ac.stats.summary()
+
+
+def _planned(ac, a: np.ndarray) -> Tuple[np.ndarray, float, Dict]:
+    """The same DAG through the lazy planner: collect once."""
+    pl = ac.planner
+    la = pl.send(a, name="A")
+    comps, _, _ = pl.run("elemental", "pca", la, n_outputs=3, k=K)
+    la2 = pl.send(a, name="A_again")                   # dedup: resident reuse
+    proj = pl.run("elemental", "gemm", la2, comps)     # comps stays resident
+    norm = float(pl.collect(pl.run("elemental", "normest", proj)))
+    return np.asarray(pl.collect(proj)), norm, ac.stats.summary()
+
+
+def _bridge_bytes(s: Dict) -> int:
+    return int(s["send_bytes"]) + int(s["recv_bytes"])
+
+
+def run(report: List[str]) -> None:
+    a = _dataset()
+    engine = repro.AlchemistEngine()
+
+    results = {}
+    for name, fn in (("naive", _naive), ("planned", _planned)):
+        ac = repro.AlchemistContext(engine, num_workers=1, name=f"offload_{name}")
+        ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+        fn(ac, a)  # warm jit + relayout plans
+        ac.stop()
+
+        ac = repro.AlchemistContext(engine, num_workers=1, name=f"offload_{name}_t")
+        ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+        t0 = time.perf_counter()
+        proj, norm, stats = fn(ac, a)
+        dt = time.perf_counter() - t0
+        ac.stop()
+        results[name] = (dt, proj, norm, stats)
+
+    t_naive, proj_naive, norm_naive, s_naive = results["naive"]
+    t_planned, proj_planned, norm_planned, s_planned = results["planned"]
+    b_naive, b_planned = _bridge_bytes(s_naive), _bridge_bytes(s_planned)
+
+    # identical numerics down both paths
+    np.testing.assert_allclose(proj_planned, proj_naive, atol=1e-2)
+    assert abs(norm_planned - norm_naive) <= 1e-3 * max(abs(norm_naive), 1.0)
+
+    # the acceptance property: the planned pipeline moves strictly fewer
+    # bytes across the bridge, with crossings actually elided
+    assert b_planned < b_naive, (b_planned, b_naive)
+    assert s_planned["elided_crossings"] > 0, s_planned
+
+    derived = (
+        f"naive_s={t_naive:.3f};planned_s={t_planned:.3f};"
+        f"speedup={t_naive / max(t_planned, 1e-9):.2f}x;"
+        f"naive_bridge_MB={b_naive / 1e6:.2f};planned_bridge_MB={b_planned / 1e6:.2f};"
+        f"bytes_elided_pct={100 * (1 - b_planned / b_naive):.1f};"
+        f"elided_crossings={s_planned['elided_crossings']};"
+        f"resident_reuses={s_planned['resident_reuses']};"
+        f"planned_ops={s_planned['planned_ops']};"
+        f"shape={M}x{N};k={K}"
+    )
+    report.append(csv_row("offload_plan", t_planned * 1e6, derived))

@@ -5,6 +5,8 @@
   transfer_tables23  Tables 2-3 (tall-skinny vs short-wide transfers)
   overlap_async      beyond-paper: sync vs pipelined task-queue engine,
                      relayout plan-cache hit rate (DESIGN.md §3/§5)
+  offload_plan       beyond-paper: naive round-trip vs lazy-planned offload
+                     (bytes over the bridge + elided crossings, DESIGN.md §6)
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
@@ -21,16 +23,17 @@ from typing import List
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=("gemm", "svd", "transfer", "overlap"))
+    ap.add_argument("--only", default=None, choices=("gemm", "svd", "transfer", "overlap", "offload"))
     args = ap.parse_args()
 
-    from benchmarks import gemm_table1, overlap_async, svd_fig34, transfer_tables23
+    from benchmarks import gemm_table1, offload_plan, overlap_async, svd_fig34, transfer_tables23
 
     suites = {
         "gemm": gemm_table1.run,
         "svd": svd_fig34.run,
         "transfer": transfer_tables23.run,
         "overlap": overlap_async.run,
+        "offload": offload_plan.run,
     }
     if args.only:
         suites = {args.only: suites[args.only]}

@@ -1,12 +1,18 @@
-"""PCA offload — the paper's headline workflow (§4.2), both paths.
+"""PCA offload — the paper's headline workflow (§4.2), three ways.
 
-A "Spark application" computes top-k PCA of a tall-skinny dataset twice:
+A "Spark application" computes top-k PCA of a tall-skinny dataset and then
+projects the dataset onto the principal components:
   1. MLlib-style (sparklike computeSVD: driver Lanczos, one cluster
      round-trip per matvec),
-  2. offloaded through Alchemist (engine-resident matrix, Lanczos SVD on the
-     worker grid).
-It prints the paper's Send/Compute/Receive decomposition and the counted
-Spark-side overheads (stages, driver syncs, shuffle bytes).
+  2. naively offloaded through Alchemist — each routine is a full
+     send→run→collect round trip, the anti-pattern arXiv:1805.11800 warns
+     about: the PCA components are collected to the client and re-sent for
+     the projection,
+  3. planned offload (DESIGN.md §6) — the lazy planner keeps the components
+     engine-resident, dedups the dataset send, and collects once.
+It prints the paper's Send/Compute/Receive decomposition, the counted
+Spark-side overheads (stages, driver syncs, shuffle bytes), and the planner's
+elided-crossing / resident-reuse counters.
 
 Run:  PYTHONPATH=src python examples/pca_offload.py
 """
@@ -17,6 +23,7 @@ import numpy as np
 
 from repro import AlchemistContext, AlchemistEngine
 from repro.sparklike import IndexedRowMatrix, SparkLikeContext, mllib
+from repro.sparklike import offload
 
 
 def make_dataset(m=6000, n=192, k_true=12, seed=0):
@@ -40,19 +47,46 @@ def main() -> None:
           f"driver_syncs={ctx.stats.driver_syncs} "
           f"broadcast_MB={ctx.stats.broadcast_bytes/1e6:.1f}")
 
-    # ---------- path 2: offload via Alchemist ---------------------------
+    # ---------- path 2: naive offload (round trip per routine) ----------
     engine = AlchemistEngine()
-    ac = AlchemistContext(engine, name="pca_app")
+    ac = AlchemistContext(engine, name="pca_naive")
     ac.register_library("elemental", "repro.linalg.library:ElementalLib")
 
-    al_a = ac.send(a.astype(np.float32), name="dataset")
+    a32 = a.astype(np.float32)
     t0 = time.perf_counter()
+    al_a = ac.send(a32, name="dataset")
     al_comps, al_scores, variance = ac.run("elemental", "pca", al_a, k=k)
-    t_alch = time.perf_counter() - t0
-    comps = np.asarray(ac.collect(al_comps))
-    s = ac.stats.summary()
-    print(f"[alchemist  ] {t_alch*1e3:8.1f} ms | send={s['send_seconds']*1e3:.1f}ms "
-          f"compute={s['compute_seconds']*1e3:.1f}ms recv={s['recv_seconds']*1e3:.1f}ms")
+    comps = np.asarray(ac.collect(al_comps))         # bridge: engine → client
+    al_comps_again = ac.send(comps, name="comps")    # bridge: client → engine
+    proj_naive = np.asarray(ac.collect(ac.run("elemental", "gemm", al_a, al_comps_again)))
+    t_naive = time.perf_counter() - t0
+    s_naive = ac.stats.summary()
+    naive_bytes = s_naive["send_bytes"] + s_naive["recv_bytes"]
+    print(f"[naive      ] {t_naive*1e3:8.1f} ms | send={s_naive['send_seconds']*1e3:.1f}ms "
+          f"compute={s_naive['compute_seconds']*1e3:.1f}ms recv={s_naive['recv_seconds']*1e3:.1f}ms "
+          f"bridge_MB={naive_bytes/1e6:.2f}")
+    ac.stop()
+
+    # ---------- path 3: planned offload (lazy DAG, crossings elided) ----
+    ac2 = AlchemistContext(engine, name="pca_planned")
+    ac2.register_library("elemental", "repro.linalg.library:ElementalLib")
+
+    t0 = time.perf_counter()
+    planner = ac2.planner
+    la = planner.send(a32, name="dataset")
+    comps_l, scores_l, var_l = planner.run("elemental", "pca", la, n_outputs=3, k=k)
+    # projection consumes the engine-resident components: no collect, no
+    # re-send — and the dataset node is reused, not re-shipped
+    proj_l = planner.run("elemental", "gemm", la, comps_l)
+    proj_planned = np.asarray(planner.collect(proj_l))
+    variance2 = planner.collect(var_l)
+    t_planned = time.perf_counter() - t0
+    s_planned = ac2.stats.summary()
+    planned_bytes = s_planned["send_bytes"] + s_planned["recv_bytes"]
+    print(f"[planned    ] {t_planned*1e3:8.1f} ms | send={s_planned['send_seconds']*1e3:.1f}ms "
+          f"compute={s_planned['compute_seconds']*1e3:.1f}ms recv={s_planned['recv_seconds']*1e3:.1f}ms "
+          f"bridge_MB={planned_bytes/1e6:.2f} "
+          f"elided={s_planned['elided_crossings']} reuses={s_planned['resident_reuses']}")
 
     # ---------- agreement ------------------------------------------------
     sig_alch = np.sqrt(np.asarray(variance) * (a.shape[0] - 1))
@@ -63,7 +97,26 @@ def main() -> None:
     print(f"subspace overlap (should be ~1): {np.round(overlap[:3], 4)}")
     assert (rel < 5e-2).all()
 
-    ac.stop()
+    # planned == naive numerics, strictly fewer bytes over the bridge
+    np.testing.assert_allclose(proj_planned, proj_naive, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(variance2), np.asarray(variance), rtol=1e-5)
+    assert s_planned["elided_crossings"] > 0, s_planned
+    assert planned_bytes < naive_bytes, (planned_bytes, naive_bytes)
+    print(f"bridge bytes: naive={naive_bytes/1e6:.2f} MB → "
+          f"planned={planned_bytes/1e6:.2f} MB "
+          f"({100 * (1 - planned_bytes / naive_bytes):.0f}% elided)")
+
+    # ---------- drop-in: same MLlib call, engine-backed ------------------
+    # arXiv:1805.11800's pitch verbatim: the path-1 code, unchanged, inside
+    # an offloaded scope. U stays engine-resident; sigmas match Spark's.
+    with offload.offloaded(ac2):
+        u_lazy, sig_dropin, _ = mllib.compute_svd(ir, k)
+    rel2 = np.abs(sig_dropin[:3] - sig_spark[:3]) / sig_spark[:3]
+    print(f"[drop-in    ] mllib.compute_svd offloaded: U resident as {type(u_lazy).__name__}, "
+          f"top-3 sigma agreement {np.round(rel2, 4)}")
+    assert (rel2 < 5e-2).all()
+
+    ac2.stop()
 
 
 if __name__ == "__main__":

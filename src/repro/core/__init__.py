@@ -19,13 +19,19 @@ Pieces (paper terminology in brackets):
 - ``sharding.py``   — mesh-axis conventions shared by the whole framework.
 - ``futures.py``    — :class:`AlFuture` deferred results (DESIGN.md §4).
 - ``taskqueue.py``  — per-session FIFO workers (DESIGN.md §3).
+- ``expr.py``       — deferred-op DAG + :class:`LazyMatrix` proxies
+                      (DESIGN.md §6).
+- ``planner.py``    — :class:`OffloadPlanner`: bridge-crossing elision,
+                      resident-matrix dedup, async lowering (DESIGN.md §6).
 - ``errors.py``     — structured error hierarchy.
 """
 
 from repro.core.engine import AlchemistContext, AlchemistEngine
+from repro.core.expr import LazyMatrix
 from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 from repro.core.layouts import GRID, REPLICATED, ROW, LayoutSpec
+from repro.core.planner import OffloadPlanner
 from repro.core.registry import Library, Routine
 from repro.core.taskqueue import TaskQueue
 
@@ -34,6 +40,8 @@ __all__ = [
     "AlchemistContext",
     "AlFuture",
     "AlMatrix",
+    "LazyMatrix",
+    "OffloadPlanner",
     "LayoutSpec",
     "ROW",
     "GRID",

@@ -160,6 +160,7 @@ class AlchemistContext:
         self.session = engine.connect(name=name, num_workers=num_workers, grid=grid)
         self.client_layout = client_layout
         self.engine_layout = engine_layout
+        self._planner = None
         self._stopped = False
 
     # -- libraries -----------------------------------------------------------
@@ -376,6 +377,26 @@ class AlchemistContext:
         if isinstance(result, jax.Array) and result.ndim <= 1:
             return np.asarray(result)
         return result
+
+    # -- lazy offload planner -----------------------------------------------
+    @property
+    def planner(self):
+        """This session's :class:`~repro.core.planner.OffloadPlanner` (lazily
+        created, one per context so its resident-matrix cache and elision
+        counters are session-scoped, DESIGN.md §6)::
+
+            pl = ac.planner
+            la = pl.send(a)
+            u, s, v = pl.run("elemental", "truncated_svd", la, n_outputs=3, k=8)
+            proj = pl.run("elemental", "gemm", la, u)   # u never leaves the engine
+            P = pl.collect(proj)                        # the one bridge crossing
+        """
+        self._check()
+        if self._planner is None:
+            from repro.core.planner import OffloadPlanner
+
+            self._planner = OffloadPlanner(self)
+        return self._planner
 
     # -- lifecycle ---------------------------------------------------------------
     def wait(self, timeout: Optional[float] = None) -> None:

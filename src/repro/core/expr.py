@@ -1,0 +1,231 @@
+"""Deferred-expression DAG — the client side of the lazy offload planner.
+
+DESIGN.md §6: the follow-up paper (arXiv:1805.11800) shows Alchemist's win
+evaporating when an application naively collects every result back to Spark
+between offloaded calls. The cure is structural: client-side operations build
+a small DAG of deferred ops instead of executing eagerly, and the planner
+(:mod:`repro.core.planner`) lowers the DAG onto the async task queue only
+when a result is explicitly demanded. A value produced by one routine and
+consumed by the next never crosses the bridge at all — it stays resident on
+the session, exactly like the real Alchemist server's matrices that
+"physically live on the MPI side".
+
+Three node kinds:
+
+- :class:`SendExpr`    — a host array that will become engine-resident; carries
+  a content key so identical payloads dedup into one resident matrix.
+- :class:`RunExpr`     — a deferred ``(library, routine)`` invocation whose args
+  may be other nodes, :class:`~repro.core.handles.AlMatrix` handles, or
+  scalars.
+- :class:`ProjExpr`    — index ``i`` of a multi-output :class:`RunExpr`
+  (``truncated_svd`` returns ``(U, s, V)``; each output is its own node).
+
+:class:`LazyMatrix` is the user-facing wrapper: it holds a node plus the
+planner that will execute it, supports ``@`` for deferred matmul, and
+``collect()`` for the one explicit bridge crossing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
+    from repro.core.planner import OffloadPlanner
+
+_EXPR_IDS = itertools.count(1)
+
+
+def content_key(array: Any) -> Tuple:
+    """Content-identity of a host array: (shape, dtype, sha1 of the bytes).
+
+    This keys the planner's per-session resident-matrix cache: two sends of
+    equal payloads resolve to one engine-resident matrix, regardless of
+    whether the caller reused the ndarray object or rebuilt it.
+    """
+    arr = np.asarray(array)
+    digest = hashlib.sha1(np.ascontiguousarray(arr).tobytes()).hexdigest()
+    return (tuple(int(d) for d in arr.shape), str(arr.dtype), digest)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Expr:
+    """A node in the deferred-op DAG. Identity (not structure) keyed: the
+    same node object consumed twice is one computation with two consumers."""
+
+    id: int = dataclasses.field(default_factory=lambda: next(_EXPR_IDS), init=False)
+
+    @property
+    def shape(self) -> Optional[Tuple[int, int]]:
+        return None
+
+    @property
+    def dtype(self):
+        return None
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SendExpr(Expr):
+    """A host→engine transfer, deferred. ``key`` is :func:`content_key` of
+    the payload (computed once, at graph-build time)."""
+
+    array: Any = None
+    name: str = ""
+    key: Tuple = ()
+    _shape: Tuple[int, int] = ()
+    _dtype: str = ""
+
+    @staticmethod
+    def of(array: Any, name: str = "", *, snapshot: bool = True) -> "SendExpr":
+        # Snapshot mutable host arrays: the content key is computed now, and
+        # a caller mutating the ndarray between graph build and lowering must
+        # not ship different bytes under the old key (which would poison the
+        # resident-matrix cache). jax.Arrays are immutable — no copy needed —
+        # and internal callers that just materialized a private array
+        # (e.g. sparklike offload's to_numpy()) pass snapshot=False to skip
+        # the redundant O(m·n) copy.
+        if isinstance(array, np.ndarray):
+            if snapshot:
+                array = np.array(array)  # fresh copy
+        elif not hasattr(array, "shape"):
+            array = np.array(array)  # lists etc.: conversion already copies
+        arr = array
+        if len(arr.shape) != 2:
+            raise ValueError(
+                f"SendExpr expects a 2D matrix, got shape {tuple(arr.shape)}"
+            )
+        return SendExpr(
+            array=array,
+            name=name,
+            key=content_key(array),
+            _shape=tuple(int(d) for d in arr.shape),
+            _dtype=str(arr.dtype),
+        )
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self._shape
+
+    @property
+    def dtype(self) -> str:
+        return self._dtype
+
+    def __repr__(self) -> str:
+        return f"SendExpr(id={self.id}, shape={self._shape}, name={self.name!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class RunExpr(Expr):
+    """A deferred routine invocation. ``args`` entries are Expr nodes,
+    AlMatrix handles (already resident), or plain scalars; ``params`` are
+    codec-packable scalars only."""
+
+    library: str = ""
+    routine: str = ""
+    args: Tuple[Any, ...] = ()
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    n_outputs: int = 1
+
+    @property
+    def shape(self) -> Optional[Tuple[int, int]]:
+        # Shape inference only where it is unambiguous (gemm); other routines
+        # leave metadata unknown until execution.
+        if self.routine in ("gemm", "multiply") and len(self.args) >= 2:
+            a, b = self.args[0], self.args[1]
+            sa = a.shape if isinstance(a, Expr) else getattr(a, "shape", None)
+            sb = b.shape if isinstance(b, Expr) else getattr(b, "shape", None)
+            if sa and sb:
+                return (sa[0], sb[1])
+        return None
+
+    def __repr__(self) -> str:
+        return (
+            f"RunExpr(id={self.id}, {self.library}.{self.routine}, "
+            f"args={len(self.args)}, n_outputs={self.n_outputs})"
+        )
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ProjExpr(Expr):
+    """Output ``index`` of a multi-output :class:`RunExpr`."""
+
+    parent: RunExpr = None
+    index: int = 0
+
+    def __repr__(self) -> str:
+        return f"ProjExpr(id={self.id}, parent={self.parent.id}, index={self.index})"
+
+
+def iter_nodes(root: Expr):
+    """Yield the DAG under ``root`` in dependency order (producers first)."""
+    seen = set()
+
+    def walk(node: Expr):
+        if node.id in seen:
+            return
+        seen.add(node.id)
+        if isinstance(node, ProjExpr):
+            yield from walk(node.parent)
+        elif isinstance(node, RunExpr):
+            for a in node.args:
+                if isinstance(a, Expr):
+                    yield from walk(a)
+        yield node
+
+    yield from walk(root)
+
+
+class LazyMatrix:
+    """Client-side proxy for a deferred engine-resident matrix.
+
+    Mirrors the paper's AlMatrix contract one level earlier: where an
+    AlMatrix is a handle to data already on the engine, a LazyMatrix is a
+    handle to data the planner has not even moved yet. Operations chain
+    without executing; only :meth:`collect` crosses the bridge.
+    """
+
+    # Binary ops with ndarrays must reach our reflected operators: without
+    # this, `ndarray @ LazyMatrix` coerces the proxy into a 0-d object array
+    # and raises inside numpy before __rmatmul__ is ever consulted.
+    __array_ufunc__ = None
+    __array_priority__ = 1000
+
+    def __init__(self, expr: Expr, planner: "OffloadPlanner"):
+        self.expr = expr
+        self.planner = planner
+
+    @property
+    def shape(self) -> Optional[Tuple[int, int]]:
+        return self.expr.shape
+
+    @property
+    def dtype(self):
+        return self.expr.dtype
+
+    # -- chaining -----------------------------------------------------------
+    def __matmul__(self, other: Any) -> "LazyMatrix":
+        lib, routine = self.planner.matmul_routine
+        return self.planner.run(lib, routine, self, other)
+
+    def __rmatmul__(self, other: Any) -> "LazyMatrix":
+        lib, routine = self.planner.matmul_routine
+        return self.planner.run(lib, routine, other, self)
+
+    # -- execution ----------------------------------------------------------
+    def materialize(self):
+        """Force execution; returns the engine-side value (an AlMatrix
+        handle, or a driver-side scalar/vector) without crossing the bridge
+        for matrix data."""
+        return self.planner.materialize(self)
+
+    def collect(self):
+        """Execute the DAG under this node and bring the result client-side
+        — the single explicit bridge crossing."""
+        return self.planner.collect(self)
+
+    def __repr__(self) -> str:
+        return f"LazyMatrix({self.expr!r})"

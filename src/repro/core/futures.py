@@ -77,6 +77,29 @@ class AlFuture:
                 return
         fn(self)
 
+    def then(self, fn: Callable[[Any], Any], label: str = "") -> "AlFuture":
+        """Derived future: resolves to ``fn(result)`` once this one resolves.
+
+        Failure propagates: if this future fails, the derived one fails with
+        the same exception (``fn`` never runs); if ``fn`` itself raises, the
+        derived future carries that error. The callback runs on whichever
+        thread resolves the parent — keep ``fn`` cheap and non-blocking (the
+        planner uses it to project one output out of a routine's tuple).
+        """
+        out = AlFuture(label=label or f"{self.label}:then")
+
+        def _chain(parent: "AlFuture") -> None:
+            if parent._state == FAILED:
+                out._set_exception(parent._exception)
+                return
+            try:
+                out._set_result(fn(parent._value))
+            except BaseException as exc:  # noqa: BLE001 — propagate via future
+                out._set_exception(exc)
+
+        self.add_done_callback(_chain)
+        return out
+
     # -- engine side ---------------------------------------------------------
     def _set_result(self, value: Any) -> None:
         self._finish(RESOLVED, value=value)

@@ -130,6 +130,13 @@ class AlMatrix:
             raise HandleError(f"AlMatrix {self.id} ({self.name!r}) has no resident data")
         return self._data
 
+    @property
+    def is_live(self) -> bool:
+        """Usable as a routine input: pending (producer queued) or resident.
+        Freed/failed handles must be re-produced — the planner's resident
+        cache keys off this to decide reuse vs re-send."""
+        return self._state in (PENDING, MATERIALIZED)
+
     # -- metadata -----------------------------------------------------------
     @property
     def num_rows(self) -> int:

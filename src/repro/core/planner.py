@@ -1,0 +1,261 @@
+"""OffloadPlanner — lowers the deferred-op DAG onto the async task queue.
+
+DESIGN.md §6. The planner owns the three optimizations that keep a chained
+sparklike→Alchemist pipeline from paying the bridge between every call:
+
+1. **Bridge-crossing elision.** A :class:`~repro.core.expr.RunExpr` arg that
+   is itself a deferred routine output is lowered to the producer's
+   ``run_async`` future and consumed engine-side — the collect + re-send
+   round trip a naive pipeline performs there is elided (counted in
+   ``session.stats.elided_crossings``, one per elided round trip).
+2. **Resident-matrix dedup.** Sends are keyed by payload content
+   (:func:`repro.core.expr.content_key`); a second send of equal bytes in the
+   same session reuses the already-resident matrix
+   (``session.stats.resident_reuses``). The cache checks handle liveness, so
+   a freed matrix is transparently re-sent.
+3. **Async pipelining.** Lowering emits ``send_async``/``run_async`` in
+   dependency order and never blocks: independent subgraphs interleave on the
+   session's FIFO exactly as in DESIGN.md §3, and only an explicit
+   :meth:`collect` materializes.
+
+The planner is per-:class:`~repro.core.engine.AlchemistContext` (reached via
+``ac.planner``), so its caches are session-scoped like the relayout plan
+cache, and its counters land in the same ``session.stats.summary()``.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core import futures as futures_mod
+from repro.core import handles as handles_mod
+from repro.core.errors import SessionError
+from repro.core.expr import Expr, LazyMatrix, ProjExpr, RunExpr, SendExpr
+from repro.core.futures import AlFuture
+from repro.core.handles import AlMatrix
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.engine import AlchemistContext
+
+LazyLike = Union[LazyMatrix, Expr]
+
+
+class OffloadPlanner:
+    """Builds and executes deferred-op DAGs for one Alchemist session."""
+
+    #: (library, routine) used by ``LazyMatrix.__matmul__``.
+    matmul_routine: Tuple[str, str] = ("elemental", "gemm")
+
+    def __init__(self, ac: "AlchemistContext"):
+        self.ac = ac
+        # content key -> AlFuture-of-handle / AlMatrix already resident
+        self._resident: Dict[Tuple, Any] = {}
+        # expr id -> lowered value (AlFuture / AlMatrix / scalar)
+        self._lowered: Dict[int, Any] = {}
+        # Reentrant: held across the whole recursive lowering walk, so two
+        # threads collecting DAGs that share a node cannot both dispatch it
+        # (submission is non-blocking; futures are resolved outside the lock).
+        self._lock = threading.RLock()
+
+    # -- graph building ------------------------------------------------------
+    def send(self, array: Any, name: str = "", *, snapshot: bool = True) -> LazyMatrix:
+        """Defer a host→engine transfer. Nothing moves until a consumer of
+        this node is collected; equal payloads share one resident matrix.
+
+        ``snapshot=False`` skips the defensive copy of host ndarrays — only
+        for arrays the caller guarantees are private and never mutated
+        (the content key is computed now; shipped bytes must match it).
+        """
+        return LazyMatrix(SendExpr.of(array, name=name, snapshot=snapshot), self)
+
+    def run(
+        self, library: str, routine: str, *args: Any, n_outputs: int = 1, **params: Any
+    ):
+        """Defer ``library.routine``. Args may be LazyMatrix nodes, AlMatrix
+        handles, host ndarrays (auto-wrapped as deferred sends, so they dedup
+        too), or scalars. With ``n_outputs > 1`` returns a tuple of
+        LazyMatrix, one per output of the routine."""
+        if n_outputs < 1:
+            raise SessionError(f"n_outputs must be >= 1, got {n_outputs}")
+        wrapped = tuple(self._wrap_arg(a) for a in args)
+        node = RunExpr(
+            library=library,
+            routine=routine,
+            args=wrapped,
+            params=dict(params),
+            n_outputs=n_outputs,
+        )
+        if n_outputs == 1:
+            return LazyMatrix(node, self)
+        return tuple(
+            LazyMatrix(ProjExpr(parent=node, index=i), self) for i in range(n_outputs)
+        )
+
+    def _wrap_arg(self, a: Any) -> Any:
+        if isinstance(a, LazyMatrix):
+            if a.planner is not self:
+                raise SessionError(
+                    "LazyMatrix belongs to a different planner/session; "
+                    "collect it and re-send instead"
+                )
+            return a.expr
+        if isinstance(a, Expr) or isinstance(a, AlMatrix):
+            return a
+        if isinstance(a, np.ndarray) and a.ndim == 2:
+            return SendExpr.of(a)
+        return a  # scalar / string / None — travels through the param codec
+
+    # -- execution -----------------------------------------------------------
+    def materialize(self, lazy: LazyLike):
+        """Lower (if needed) and resolve the node's engine-side value: an
+        AlMatrix handle for matrix outputs, a host scalar/vector for
+        non-distributed outputs. No matrix data crosses the bridge."""
+        return futures_mod.resolve(self.lower(lazy))
+
+    def collect(self, lazy: LazyLike):
+        """Execute the DAG under ``lazy`` and return its value client-side.
+
+        Matrix results cross the bridge here and only here; scalar/vector
+        results (already driver-side, per the paper's split) pass through.
+        """
+        val = self.materialize(lazy)
+        if isinstance(val, AlMatrix):
+            return self.ac.collect(val)
+        if isinstance(val, (tuple, list)):
+            return type(val)(
+                self.ac.collect(v) if isinstance(v, AlMatrix) else v for v in val
+            )
+        return val
+
+    def lower(self, lazy: LazyLike) -> Any:
+        """Lower the DAG under ``lazy`` onto the session's task queue and
+        return the root's future (or already-lowered value) without blocking.
+        Idempotent: every node is lowered at most once per planner."""
+        node = lazy.expr if isinstance(lazy, LazyMatrix) else lazy
+        if not isinstance(node, Expr):
+            return node
+        return self._lower(node)
+
+    def _lower(self, node: Expr) -> Any:
+        with self._lock:
+            hit = self._lowered.get(node.id)
+            if hit is not None:
+                # A node whose engine-resident result has since been freed
+                # must be re-lowered (the documented transparent re-send /
+                # re-run), not handed back stale.
+                if not self._stale(node, hit):
+                    return hit
+                del self._lowered[node.id]
+            if isinstance(node, SendExpr):
+                val = self._lower_send(node)
+            elif isinstance(node, RunExpr):
+                val = self._lower_run(node)
+            elif isinstance(node, ProjExpr):
+                parent = self._lower(node.parent)
+                val = self._project(parent, node.index)
+            else:  # pragma: no cover - defensive
+                raise SessionError(f"cannot lower node {node!r}")
+            self._lowered[node.id] = val
+            return val
+
+    def _lower_send(self, node: SendExpr) -> Any:
+        stats = self.ac.session.stats
+        cached = self._resident.get(node.key)
+        if cached is not None and self._is_live(cached):
+            # The naive pipeline would push these bytes across the bridge
+            # again; the planner hands back the already-resident matrix.
+            stats.record_resident_reuse()
+            return cached
+        fut = self.ac.send_async(node.array, name=node.name)
+        self._resident[node.key] = fut
+        return fut
+
+    def _lower_run(self, node: RunExpr) -> AlFuture:
+        stats = self.ac.session.stats
+        lowered_args = []
+        for a in node.args:
+            if isinstance(a, (RunExpr, ProjExpr)):
+                # Engine-resident intermediate consumed in place: one
+                # collect + re-send round trip the naive execution would
+                # have paid is elided.
+                stats.record_elision()
+                lowered_args.append(self._lower(a))
+            elif isinstance(a, Expr):
+                lowered_args.append(self._lower(a))
+            else:
+                lowered_args.append(a)
+        stats.record_planned_op()
+        return self.ac.run_async(node.library, node.routine, *lowered_args, **node.params)
+
+    @staticmethod
+    def _project(parent: Any, index: int) -> Any:
+        def pick(value: Any) -> Any:
+            if not isinstance(value, (tuple, list)):
+                raise SessionError(
+                    f"routine returned a single output; cannot project index {index} "
+                    "(was n_outputs set too high?)"
+                )
+            return value[index]
+
+        if isinstance(parent, AlFuture):
+            return parent.then(pick, label=f"{parent.label}[{index}]")
+        return pick(parent)
+
+    @staticmethod
+    def _is_live(entry: Any) -> bool:
+        """Is a resident-cache entry still usable? Futures still in flight
+        are; resolved ones are checked against the handle lifecycle (a freed
+        or failed matrix must be re-sent, not reused)."""
+        if isinstance(entry, AlMatrix):
+            return entry.is_live
+        if isinstance(entry, AlFuture):
+            if not entry.done():
+                return True
+            if entry.exception() is not None:
+                return False
+            val = entry.result()
+            return val.is_live if isinstance(val, AlMatrix) else True
+        return False
+
+    def _stale(self, node: Expr, entry: Any) -> bool:
+        """Should a memoized lowering be discarded and the node re-lowered?
+
+        Sends: whenever the resident matrix is no longer live (freed or the
+        transfer failed — re-sending is idempotent). Runs/projections: only
+        when a produced matrix was freed; a *failed* routine keeps
+        propagating its error rather than being silently retried.
+        """
+        if isinstance(node, SendExpr):
+            return not self._is_live(entry)
+        val = entry
+        if isinstance(val, AlFuture):
+            if not val.done() or val.exception() is not None:
+                return False
+            val = val.result()
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        return any(isinstance(v, AlMatrix) and v.state == handles_mod.FREED for v in vals)
+
+    # -- maintenance ---------------------------------------------------------
+    def reset(self) -> None:
+        """Drop the lowering memo and resident cache (e.g. after bulk frees).
+        Already-dispatched work is unaffected."""
+        with self._lock:
+            self._resident.clear()
+            self._lowered.clear()
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "resident_entries": len(self._resident),
+                "lowered_nodes": len(self._lowered),
+            }
+
+    def __repr__(self) -> str:
+        s = self.stats()
+        return (
+            f"OffloadPlanner(session={self.ac.session.id}, "
+            f"resident={s['resident_entries']}, lowered={s['lowered_nodes']})"
+        )

@@ -50,6 +50,11 @@ class SessionStats:
     num_runs: int = 0
     relayout_cache_hits: int = 0
     relayout_cache_misses: int = 0
+    # Lazy offload planner counters (DESIGN.md §6): crossings the planner
+    # avoided relative to a naive send→run→collect round-trip execution.
+    elided_crossings: int = 0  # collect+resend round trips never performed
+    resident_reuses: int = 0  # sends satisfied from the resident-matrix cache
+    planned_ops: int = 0  # routine invocations lowered by the planner
     transfers: List[TransferRecord] = dataclasses.field(default_factory=list)
 
     def record_transfer(self, rec: TransferRecord) -> None:
@@ -71,6 +76,15 @@ class SessionStats:
         self.compute_seconds += seconds
         self.num_runs += 1
 
+    def record_elision(self, n: int = 1) -> None:
+        self.elided_crossings += n
+
+    def record_resident_reuse(self, n: int = 1) -> None:
+        self.resident_reuses += n
+
+    def record_planned_op(self, n: int = 1) -> None:
+        self.planned_ops += n
+
     def summary(self) -> Dict[str, Any]:
         return {
             "send_bytes": self.send_bytes,
@@ -83,6 +97,9 @@ class SessionStats:
             "num_runs": self.num_runs,
             "relayout_cache_hits": self.relayout_cache_hits,
             "relayout_cache_misses": self.relayout_cache_misses,
+            "elided_crossings": self.elided_crossings,
+            "resident_reuses": self.resident_reuses,
+            "planned_ops": self.planned_ops,
         }
 
 

@@ -65,6 +65,10 @@ class TaskQueue:
                 future = None
             else:
                 future = AlFuture(label=f"{self.name}:barrier")
+                # Counted as submitted: the worker counts it completed, and
+                # the submitted == completed + failed + pending invariant is
+                # what the soak tests lean on.
+                self.tasks_submitted += 1
                 self._q.put((lambda: None, future))
         if future is not None:
             future.result(timeout)

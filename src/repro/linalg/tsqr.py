@@ -82,9 +82,12 @@ def tsqr(a: jax.Array, mesh: Mesh, *, tree: bool = False) -> Tuple[jax.Array, ja
         return q * sign[None, :], r_final * sign[:, None]
 
     def _flat_rank(axis_names):
+        # Axis sizes come from the (statically known) mesh: jax 0.4.x has no
+        # jax.lax.axis_size, and the sizes are compile-time constants anyway.
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         rank = jax.lax.axis_index(axis_names[0])
         for ax in axis_names[1:]:
-            rank = rank * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            rank = rank * sizes[ax] + jax.lax.axis_index(ax)
         return rank
 
     def _tree_combine(r1, axis_names, nproc):

@@ -24,6 +24,15 @@ futures feed straight into further routines or into ``ac.collect``:
     f = el.submit.gemm(al_a, al_b)      # returns at once
     g = el.submit.gemm(f, al_b)         # chains on the unresolved future
     C = ac.collect(g)                   # materializes when ready
+
+and a lazy view over the offload planner (DESIGN.md §6): ``el.lazy`` builds
+deferred-op DAG nodes instead of executing, so chained calls elide the
+bridge entirely and host-array arguments dedup against the session's
+resident-matrix cache; multi-output routines take ``n_outputs``:
+
+    u, s, v = el.lazy.truncated_svd(a, n_outputs=3, k=20)   # a: host ndarray
+    p = el.lazy.gemm(a, u)              # a deduped, u never collected
+    P = p.collect()                     # the one bridge crossing
 """
 
 from __future__ import annotations
@@ -34,22 +43,33 @@ from repro.core.engine import AlchemistContext
 from repro.core.futures import AlFuture
 
 
-class _AsyncRoutines:
-    """Routine namespace whose calls go through ``run_async``."""
+class _RoutineNamespace:
+    """Routine namespace dispatching through an alternate execution path.
 
-    def __init__(self, wrapper: "LibraryWrapper"):
+    ``el.submit`` routes through ``run_async`` (futures), ``el.lazy`` through
+    the offload planner (deferred-op DAG nodes, taking ``n_outputs``).
+    """
+
+    def __init__(self, wrapper: "LibraryWrapper", kind: str):
         self._wrapper = wrapper
+        self._kind = kind
 
     def __getattr__(self, name: str):
         w = self._wrapper
         if name.startswith("_") or name not in w._routines:
             raise AttributeError(
-                f"{type(w).__name__}.submit has no routine {name!r}; "
+                f"{type(w).__name__}.{self._kind} has no routine {name!r}; "
                 f"available: {w._routines}"
             )
 
-        def call(*args: Any, **kwargs: Any) -> AlFuture:
-            return w._ac.run_async(w.library_name, name, *args, **kwargs)
+        if self._kind == "submit":
+            def call(*args: Any, **kwargs: Any) -> AlFuture:
+                return w._ac.run_async(w.library_name, name, *args, **kwargs)
+        else:
+            def call(*args: Any, n_outputs: int = 1, **kwargs: Any):
+                return w._ac.planner.run(
+                    w.library_name, name, *args, n_outputs=n_outputs, **kwargs
+                )
 
         call.__name__ = name
         return call
@@ -69,7 +89,8 @@ class LibraryWrapper:
         if self.library_name not in ac.session.libraries:
             ac.register_library(self.library_name, self.library_path)
         self._routines = ac.library(self.library_name).routine_names()
-        self.submit = _AsyncRoutines(self)
+        self.submit = _RoutineNamespace(self, "submit")
+        self.lazy = _RoutineNamespace(self, "lazy")
 
     def __getattr__(self, name: str):
         if name.startswith("_") or name not in self._routines:

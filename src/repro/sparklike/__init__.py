@@ -14,6 +14,11 @@ numbers come from real mechanics, not guesses:
 - ``mllib.py``    — MLlib-style ``computeSVD`` (ARPACK-on-the-driver with a
                     distributed matvec and a driver round-trip per
                     iteration) and ``BlockMatrix.multiply``.
+- ``offload.py``  — the arXiv:1805.11800 drop-in: inside
+                    ``offload.offloaded(ac)`` the mllib entry points reroute
+                    through the session's lazy offload planner
+                    (DESIGN.md §6); results stay engine-resident as
+                    ``LazyRowMatrix`` until explicitly collected.
 
 The cluster is simulated in-process: partitions are numpy arrays,
 "executors" are slots, and the driver's bulk-synchronous stage scheduling
@@ -32,4 +37,18 @@ __all__ = [
     "ClusterModel",
     "IndexedRowMatrix",
     "BlockMatrix",
+    "LazyRowMatrix",
+    "offload",
 ]
+
+
+def __getattr__(name):
+    # Lazy: ``offload`` pulls in repro.core (jax); the pure baseline above
+    # must stay importable without touching the engine stack.
+    if name in ("offload", "LazyRowMatrix"):
+        import importlib
+
+        mod = importlib.import_module("repro.sparklike.offload")
+        globals()["offload"] = mod
+        return mod if name == "offload" else mod.LazyRowMatrix
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

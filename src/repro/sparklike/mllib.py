@@ -10,6 +10,13 @@ iterative algorithms ("the iterative nature of SVD algorithms leads to
 substantial communication and synchronization overheads"), and it is why
 Spark's overheads *anti-scale*: more executors = same number of driver
 round-trips, each slower.
+
+Both entry points also carry the arXiv:1805.11800 drop-in story: inside
+``offload.offloaded(ac)`` they reroute through the session's lazy
+:class:`~repro.core.planner.OffloadPlanner` — engine-side compute, deferred
+sends deduped against the resident-matrix cache, and chained results staying
+on the engine (see :mod:`repro.sparklike.offload`). Outside that scope they
+are the unchanged pure-Spark baseline below.
 """
 
 from __future__ import annotations
@@ -19,6 +26,15 @@ from typing import Tuple
 import numpy as np
 
 from repro.sparklike.matrices import BlockMatrix, IndexedRowMatrix
+
+
+def _active_planner():
+    # Imported lazily: ``offload`` pulls in the jax engine stack, and the
+    # pure baseline must not.
+    import sys
+
+    mod = sys.modules.get("repro.sparklike.offload")
+    return mod.active() if mod is not None else None
 
 
 def gram_matvec(a: IndexedRowMatrix, v: np.ndarray) -> np.ndarray:
@@ -42,7 +58,17 @@ def compute_svd(
     """MLlib-style truncated SVD: driver-side symmetric Lanczos on AᵀA with
     one distributed matvec (= one broadcast + one stage + one reduce) per
     iteration. Returns (U as IndexedRowMatrix, s [k], V [n, k]).
+
+    With offload active, the whole decomposition runs engine-side in one
+    planned call (U stays resident as a LazyRowMatrix).
     """
+    planner = _active_planner()
+    if planner is not None:
+        from repro.sparklike import offload
+
+        return offload.compute_svd(
+            planner, a, k, oversample=oversample, max_iters=max_iters, seed=seed
+        )
     n = a.num_cols
     L = min(k + oversample, n) if max_iters is None else max_iters
     rng = np.random.default_rng(seed)
@@ -92,7 +118,16 @@ def multiply(
     """The paper's §4.1 Spark matmul recipe, verbatim:
 
         A.toBlockMatrix().multiply(B.toBlockMatrix()).toIndexedRowMatrix()
+
+    With offload active, one engine-side GEMM instead — no explosion into
+    (i, j, v) triples, no all-to-all shuffle, and engine-resident operands
+    are consumed in place.
     """
+    planner = _active_planner()
+    if planner is not None:
+        from repro.sparklike import offload
+
+        return offload.multiply(planner, a, b)
     return (
         a.to_block_matrix(block_size)
         .multiply(b.to_block_matrix(block_size))

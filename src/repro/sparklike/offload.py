@@ -1,0 +1,193 @@
+"""Auto-offload: sparklike MLlib calls rerouted through the Alchemist planner.
+
+The follow-up paper ("Accelerating Large-Scale Data Analysis by Offloading to
+High-Performance Computing Libraries using Alchemist", arXiv:1805.11800)
+sells Alchemist as a *drop-in*: swap MLlib's matrix types for Alchemist-backed
+ones and existing pipelines speed up without rewrites. This module is that
+story for :mod:`repro.sparklike`:
+
+    from repro.sparklike import mllib, offload
+
+    with offload.offloaded(ac):
+        u, s, v = mllib.compute_svd(ir, k)     # runs on the engine
+        w = mllib.multiply(u, other)           # u never left the engine
+
+Inside the context, ``mllib.compute_svd`` / ``mllib.multiply`` route through
+the session's :class:`~repro.core.planner.OffloadPlanner`: matrix inputs are
+deferred sends (content-deduped against the session's resident cache),
+chained calls consume intermediates engine-side (elided bridge crossings),
+and results come back as :class:`LazyRowMatrix` — an IndexedRowMatrix
+look-alike whose rows stay resident until ``to_numpy()`` /
+``to_indexed_row_matrix()`` explicitly collects them.
+
+Outside the context everything is the pure sparklike baseline, unchanged.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.errors import SessionError
+from repro.core.expr import LazyMatrix
+from repro.core.planner import OffloadPlanner
+from repro.sparklike.matrices import IndexedRowMatrix
+from repro.sparklike.rdd import SparkLikeContext
+
+# The active planner. A plain module global (not thread-local): the sparklike
+# driver is single-threaded by construction, mirroring Spark's driver.
+_ACTIVE: Optional[OffloadPlanner] = None
+
+
+def enable(ac_or_planner: Any) -> OffloadPlanner:
+    """Route subsequent mllib calls through the given context's planner."""
+    global _ACTIVE
+    planner = (
+        ac_or_planner
+        if isinstance(ac_or_planner, OffloadPlanner)
+        else ac_or_planner.planner
+    )
+    _ACTIVE = planner
+    return planner
+
+
+def disable() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active() -> Optional[OffloadPlanner]:
+    """The planner mllib should offload to, or None for the pure baseline."""
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def offloaded(ac_or_planner: Any):
+    """Scope within which sparklike mllib calls offload to Alchemist."""
+    previous = _ACTIVE
+    planner = enable(ac_or_planner)
+    try:
+        yield planner
+    finally:
+        enable(previous) if previous is not None else disable()
+
+
+class LazyRowMatrix:
+    """IndexedRowMatrix stand-in whose rows live on the Alchemist engine.
+
+    Carries the same (num_rows, num_cols) metadata, chains into further
+    offloaded mllib calls without crossing the bridge, and materializes
+    client-side only on explicit request — the AlMatrix contract lifted to
+    the sparklike API.
+    """
+
+    def __init__(self, lazy: LazyMatrix, num_rows: int, num_cols: int):
+        self.lazy = lazy
+        self.num_rows = int(num_rows)
+        self.num_cols = int(num_cols)
+
+    @property
+    def planner(self) -> OffloadPlanner:
+        return self.lazy.planner
+
+    def to_numpy(self) -> np.ndarray:
+        """Collect: the explicit engine→client bridge crossing."""
+        return np.asarray(self.lazy.collect())
+
+    def to_indexed_row_matrix(
+        self, ctx: SparkLikeContext, num_partitions: Optional[int] = None
+    ) -> IndexedRowMatrix:
+        """Convert back to a genuine (client-resident) IndexedRowMatrix."""
+        return IndexedRowMatrix.from_numpy(ctx, self.to_numpy(), num_partitions)
+
+    def __repr__(self) -> str:
+        return f"LazyRowMatrix({self.num_rows}x{self.num_cols}, {self.lazy.expr!r})"
+
+
+MatrixLike = Union[IndexedRowMatrix, LazyRowMatrix, np.ndarray]
+
+
+def as_lazy(planner: OffloadPlanner, m: MatrixLike, name: str = "") -> LazyMatrix:
+    """Adapt a sparklike/host matrix to a planner node.
+
+    LazyRowMatrix passes its resident node through (no crossing);
+    IndexedRowMatrix / ndarray become deferred sends, deduped by content so a
+    matrix offloaded twice moves once.
+    """
+    if isinstance(m, LazyRowMatrix):
+        if m.planner is not planner:
+            raise SessionError(
+                "LazyRowMatrix belongs to a different session's planner"
+            )
+        return m.lazy
+    if isinstance(m, LazyMatrix):
+        return m
+    if isinstance(m, IndexedRowMatrix):
+        # to_numpy() materializes a fresh private array — skip the defensive
+        # snapshot copy the planner makes for caller-owned ndarrays.
+        return planner.send(m.to_numpy(), name=name, snapshot=False)
+    return planner.send(np.asarray(m), name=name)
+
+
+def _dims(m: MatrixLike) -> Tuple[int, int]:
+    if isinstance(m, (IndexedRowMatrix, LazyRowMatrix)):
+        return m.num_rows, m.num_cols
+    shape = getattr(m, "shape", None)
+    if shape is None or len(shape) != 2:
+        raise SessionError(f"expected a 2D matrix-like, got {type(m).__name__}")
+    return int(shape[0]), int(shape[1])
+
+
+def compute_svd(
+    planner: OffloadPlanner,
+    a: MatrixLike,
+    k: int,
+    *,
+    oversample: int = 10,
+    max_iters: Optional[int] = None,
+    seed: int = 0,
+) -> Tuple[LazyRowMatrix, np.ndarray, np.ndarray]:
+    """Offloaded ``mllib.compute_svd``: one engine-side truncated SVD instead
+    of a driver round-trip per Lanczos iteration (§1.1's overhead, gone).
+
+    Matches the MLlib return contract: (U row-matrix, s [k], V [n, k]) — s
+    and V are small driver-side results in MLlib too, so collecting them is
+    faithful; U stays engine-resident as a :class:`LazyRowMatrix`.
+    ``max_iters`` caps the Lanczos length like the baseline's: both compute
+    ``L = min(k + oversample, n)``, so a cap maps onto the oversample.
+    """
+    m_rows, _ = _dims(a)
+    if max_iters is not None:
+        oversample = max(int(max_iters) - int(k), 0)
+    la = as_lazy(planner, a, name="svd:A")
+    u, s, v = planner.run(
+        "elemental",
+        "truncated_svd",
+        la,
+        n_outputs=3,
+        k=int(k),
+        oversample=int(oversample),
+        seed=int(seed),
+    )
+    # Queue V's bridge crossing before blocking on the sigmas: both ride the
+    # same FIFO behind the SVD task, so the two collects resolve in one
+    # round trip instead of two sequential ones.
+    v_future = planner.ac.collect_async(planner.lower(v))
+    sigmas = np.asarray(planner.collect(s))
+    v_mat = np.asarray(v_future.result())
+    return LazyRowMatrix(u, m_rows, int(k)), sigmas, v_mat
+
+
+def multiply(planner: OffloadPlanner, a: MatrixLike, b: MatrixLike) -> LazyRowMatrix:
+    """Offloaded ``mllib.multiply``: one engine-side GEMM; no block explosion,
+    no shuffle, and engine-resident operands (e.g. the U of a previous
+    compute_svd) never cross the bridge."""
+    (am, an), (bn, bk) = _dims(a), _dims(b)
+    if an != bn:
+        raise ValueError(f"dimension mismatch: {am}x{an} @ {bn}x{bk}")
+    lc = planner.run(
+        "elemental", "gemm", as_lazy(planner, a, name="gemm:A"), as_lazy(planner, b, name="gemm:B")
+    )
+    return LazyRowMatrix(lc, am, bk)

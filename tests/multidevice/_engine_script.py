@@ -54,6 +54,25 @@ u, s, v = ac1.run("elemental", "truncated_svd", h1, k=4)
 s_ref = np.linalg.svd(a, compute_uv=False)[:4]
 np.testing.assert_allclose(np.asarray(s), s_ref, rtol=0.05)
 
+# TSQR on a 2x2 grid (regression: _flat_rank used jax.lax.axis_size, which
+# jax 0.4.x lacks — multi-axis meshes crashed)
+hq, hr = ac1.run("elemental", "tsqr", h1)
+r_np = np.asarray(ac1.collect(hr))
+np.testing.assert_allclose(r_np.T @ r_np, a.T @ a, atol=2e-2)
+
+# lazy offload planner on a worker group (DESIGN.md §6): chained routines
+# elide the bridge, equal sends dedup, numerics match the eager path above
+pl = ac1.planner
+lc = pl.run("elemental", "gemm", pl.send(a), pl.send(b))
+lr = pl.run("elemental", "tsqr", lc, n_outputs=2)[1]        # elided: lc
+r2 = np.asarray(pl.collect(pl.run("elemental", "gemm", lr, np.eye(32, dtype=np.float32))))  # elided: lr
+np.testing.assert_allclose(r2.T @ r2, (a @ b).T @ (a @ b), rtol=1e-2)
+lc2 = pl.run("elemental", "gemm", pl.send(a.copy()), pl.send(b.copy()))  # both dedup
+assert isinstance(pl.materialize(lc2), repro.AlMatrix)
+ps = ac1.stats.summary()
+assert ps["elided_crossings"] >= 2, ps
+assert ps["resident_reuses"] >= 2, ps
+
 ac1.stop()
 ac2.stop()
 assert engine.available_workers == 8

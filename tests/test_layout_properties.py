@@ -1,0 +1,104 @@
+"""Property-based tests for the cyclic-permutation machinery in
+core/layouts.py (the Elemental block-cyclic emulation, DESIGN.md §2).
+
+Invariants, across randomized shapes/shard counts/dtypes:
+
+- ``cyclic_permutation(n, s)`` is a bijection on ``range(n)``;
+- ``inverse_permutation`` really inverts it: permute ∘ unpermute = identity
+  on arbitrary matrices (both orderings);
+- shard assignment is genuinely cyclic: physical shard ``s`` holds logical
+  rows ``s, s + n_shards, ...``.
+
+Runs under hypothesis when installed (CI); the deterministic parametrized
+cases below keep the invariants exercised everywhere else (the
+tests/_hypothesis_compat.py shim skips only the property tests).
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.errors import LayoutError
+from repro.core.layouts import cyclic_permutation, inverse_permutation
+
+DTYPES = ["float32", "float64", "int32", "float16"]
+
+
+def _assert_bijection(n: int, shards: int) -> None:
+    perm = cyclic_permutation(n, shards)
+    assert perm.shape == (n,)
+    assert np.array_equal(np.sort(perm), np.arange(n))
+
+
+def _assert_roundtrip(n: int, cols: int, shards: int, dtype: str, seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((n, cols)) * 8).astype(dtype)
+    perm = cyclic_permutation(n, shards)
+    inv = inverse_permutation(perm)
+    np.testing.assert_array_equal(x[perm][inv], x)  # permute ∘ unpermute
+    np.testing.assert_array_equal(x[inv][perm], x)  # unpermute ∘ permute
+
+
+# -- hypothesis properties --------------------------------------------------
+
+@given(n=st.integers(min_value=1, max_value=512), shards=st.integers(min_value=1, max_value=16))
+@settings(max_examples=200, deadline=None)
+def test_cyclic_permutation_is_bijection(n, shards):
+    _assert_bijection(n, shards)
+
+
+@given(
+    n=st.integers(min_value=1, max_value=256),
+    cols=st.integers(min_value=1, max_value=8),
+    shards=st.integers(min_value=1, max_value=16),
+    dtype=st.sampled_from(DTYPES),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@settings(max_examples=100, deadline=None)
+def test_permute_unpermute_identity(n, cols, shards, dtype, seed):
+    _assert_roundtrip(n, cols, shards, dtype, seed)
+
+
+@given(n=st.integers(min_value=1, max_value=256), shards=st.integers(min_value=1, max_value=16))
+@settings(max_examples=100, deadline=None)
+def test_assignment_is_cyclic(n, shards):
+    """Physical position i holds logical row (i % block boundary walk):
+    shard s gets rows s, s + shards, s + 2*shards, ... — Elemental's
+    element-cyclic assignment, restricted to rows that exist."""
+    perm = cyclic_permutation(n, shards)
+    expected = [r for s in range(shards) for r in range(s, n, shards)]
+    assert list(perm) == expected
+
+
+@given(n=st.integers(min_value=1, max_value=64))
+@settings(max_examples=50, deadline=None)
+def test_single_shard_is_identity(n):
+    assert np.array_equal(cyclic_permutation(n, 1), np.arange(n))
+
+
+@given(n=st.integers(min_value=1, max_value=64), extra=st.integers(min_value=0, max_value=64))
+@settings(max_examples=50, deadline=None)
+def test_more_shards_than_rows_still_bijective(n, extra):
+    _assert_bijection(n, n + extra if extra else n)
+
+
+# -- deterministic fallbacks (run even without hypothesis) -------------------
+
+@pytest.mark.parametrize(
+    "n,shards", [(1, 1), (7, 3), (8, 4), (9, 4), (128, 16), (100, 7), (5, 11)]
+)
+def test_bijection_cases(n, shards):
+    _assert_bijection(n, shards)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("n,cols,shards", [(37, 5, 4), (64, 3, 8), (6, 2, 4)])
+def test_roundtrip_cases(n, cols, shards, dtype):
+    _assert_roundtrip(n, cols, shards, dtype, seed=0)
+
+
+def test_nonpositive_shards_rejected():
+    with pytest.raises(LayoutError):
+        cyclic_permutation(8, 0)
+    with pytest.raises(LayoutError):
+        cyclic_permutation(8, -2)

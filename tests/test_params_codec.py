@@ -61,3 +61,35 @@ scalar = st.one_of(
 def test_roundtrip_property(d):
     out = codec.unpack(codec.pack(d))
     assert out == d
+
+
+# Frames mixing scalars with AlMatrix handles — the paper's "pointers to
+# Elemental distributed matrices" travelling in the same Parameters frame.
+from repro.core.layouts import COLUMN, REPLICATED, ROW  # noqa: E402
+
+handle = st.builds(
+    AlMatrix,
+    shape=st.tuples(st.integers(1, 2**31), st.integers(1, 2**31)),
+    dtype=st.sampled_from([np.float32, np.float64, np.float16, np.int32]),
+    layout=st.sampled_from([ROW, GRID, COLUMN, REPLICATED, GRID.with_cyclic()]),
+    session_id=st.integers(0, 2**31),
+    name=st.text(max_size=16),
+)
+
+
+@given(st.dictionaries(st.text(min_size=1, max_size=32), scalar | handle, max_size=16))
+@settings(max_examples=100, deadline=None)
+def test_roundtrip_property_with_handles(d):
+    out = codec.unpack(codec.pack(d))
+    assert set(out) == set(d)
+    for key, val in d.items():
+        if isinstance(val, AlMatrix):
+            ref = out[key]
+            assert isinstance(ref, codec.HandleRef)
+            assert ref.id == val.id
+            assert ref.session_id == val.session_id
+            assert ref.shape == tuple(val.shape)
+            assert ref.dtype == np.dtype(val.dtype).name
+            assert ref.layout == val.layout.name
+        else:
+            assert out[key] == val

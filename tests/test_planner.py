@@ -1,0 +1,378 @@
+"""Lazy offload planner tests (DESIGN.md §6): deferred-op DAG construction,
+bridge-crossing elision, content-keyed resident-matrix dedup, multi-output
+projection, the sparklike auto-offload drop-in, and the wrapper's lazy view.
+"""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.errors import SessionError
+from repro.core.expr import LazyMatrix, ProjExpr, RunExpr, SendExpr, content_key, iter_nodes
+from repro.core.futures import AlFuture
+from repro.linalg.wrappers import Elemental
+from repro.sparklike import IndexedRowMatrix, SparkLikeContext, mllib, offload
+
+
+@pytest.fixture()
+def engine():
+    return repro.AlchemistEngine()
+
+
+@pytest.fixture()
+def ac(engine):
+    ctx = repro.AlchemistContext(engine, num_workers=1, name="plan_app")
+    ctx.register_library("elemental", "repro.linalg.library:ElementalLib")
+    yield ctx
+    ctx.stop()
+
+
+@pytest.fixture()
+def pl(ac):
+    return ac.planner
+
+
+# ---------------------------------------------------------------------------
+# DAG construction
+# ---------------------------------------------------------------------------
+
+class TestExprDag:
+    def test_send_carries_metadata_and_content_key(self, pl, rng):
+        a = rng.standard_normal((12, 6)).astype(np.float32)
+        la = pl.send(a, name="A")
+        assert isinstance(la, LazyMatrix)
+        assert la.shape == (12, 6) and la.dtype == "float32"
+        assert la.expr.key == content_key(a)
+        assert la.expr.key == content_key(a.copy())  # content, not identity
+        assert la.expr.key != content_key(a + 1)
+
+    def test_send_rejects_non_2d(self, pl):
+        with pytest.raises(ValueError):
+            pl.send(np.zeros(5, dtype=np.float32))
+
+    def test_run_builds_nodes_without_executing(self, pl, rng):
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        lc = pl.run("elemental", "gemm", pl.send(a), pl.send(a))
+        assert isinstance(lc.expr, RunExpr)
+        assert pl.ac.stats.num_runs == 0  # nothing dispatched yet
+        assert lc.shape == (8, 8)  # gemm shape inference
+
+    def test_matmul_operator(self, pl, rng):
+        a = rng.standard_normal((6, 4)).astype(np.float32)
+        b = rng.standard_normal((4, 3)).astype(np.float32)
+        lc = pl.send(a) @ pl.send(b)
+        assert isinstance(lc.expr, RunExpr)
+        assert (lc.expr.library, lc.expr.routine) == ("elemental", "gemm")
+        np.testing.assert_allclose(np.asarray(lc.collect()), a @ b, atol=1e-4)
+
+    def test_rmatmul_with_host_ndarray(self, pl, rng):
+        """ndarray @ LazyMatrix must reach __rmatmul__ (regression: numpy
+        coerced the proxy to a 0-d object array and raised before the
+        reflected operator ran)."""
+        a = rng.standard_normal((6, 4)).astype(np.float32)
+        b = rng.standard_normal((4, 3)).astype(np.float32)
+        lc = a @ pl.send(b)  # host array on the LEFT
+        assert isinstance(lc.expr, RunExpr)
+        np.testing.assert_allclose(np.asarray(lc.collect()), a @ b, atol=1e-4)
+
+    def test_multi_output_returns_projections(self, pl, rng):
+        a = rng.standard_normal((16, 8)).astype(np.float32)
+        outs = pl.run("elemental", "tsqr", pl.send(a), n_outputs=2)
+        assert len(outs) == 2
+        assert all(isinstance(o.expr, ProjExpr) for o in outs)
+        assert outs[0].expr.parent is outs[1].expr.parent
+
+    def test_iter_nodes_is_producers_first(self, pl, rng):
+        a = rng.standard_normal((4, 4)).astype(np.float32)
+        la = pl.send(a)
+        lc = pl.run("elemental", "gemm", la, la)
+        order = [n.id for n in iter_nodes(lc.expr)]
+        assert order == [la.expr.id, lc.expr.id]
+
+    def test_foreign_planner_rejected(self, ac, rng):
+        other = repro.AlchemistContext(repro.AlchemistEngine(), num_workers=1, name="other")
+        try:
+            la = other.planner.send(rng.standard_normal((4, 4)).astype(np.float32))
+            with pytest.raises(SessionError):
+                ac.planner.run("elemental", "gemm", la, la)
+        finally:
+            other.stop()
+
+
+# ---------------------------------------------------------------------------
+# Execution: numerics + pipelining onto the task queue
+# ---------------------------------------------------------------------------
+
+class TestPlannerExecution:
+    def test_gemm_chain_matches_numpy(self, pl, rng):
+        a = rng.standard_normal((24, 16)).astype(np.float32)
+        b = rng.standard_normal((16, 8)).astype(np.float32)
+        c = rng.standard_normal((8, 8)).astype(np.float32)
+        ld = pl.run("elemental", "gemm", pl.run("elemental", "gemm", pl.send(a), pl.send(b)), pl.send(c))
+        np.testing.assert_allclose(np.asarray(pl.collect(ld)), (a @ b) @ c, atol=1e-3)
+
+    def test_projection_collects_each_output(self, pl, rng):
+        a = rng.standard_normal((32, 8)).astype(np.float32)
+        u, s, v = pl.run("elemental", "truncated_svd", pl.send(a), n_outputs=3, k=4)
+        sig = np.asarray(pl.collect(s))
+        ref = np.linalg.svd(a, compute_uv=False)[:4]
+        np.testing.assert_allclose(sig, ref, rtol=1e-3)
+        assert pl.collect(u).shape == (32, 4)
+        assert pl.collect(v).shape == (8, 4)
+
+    def test_scalar_output_passthrough(self, pl, rng):
+        a = rng.standard_normal((16, 8)).astype(np.float32)
+        norm = pl.collect(pl.run("elemental", "normest", pl.send(a)))
+        np.testing.assert_allclose(float(norm), np.linalg.norm(a), rtol=1e-4)
+
+    def test_lowering_is_async_until_collect(self, pl, rng):
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        lc = pl.run("elemental", "gemm", pl.send(a), pl.send(a))
+        fut = pl.lower(lc)
+        assert isinstance(fut, AlFuture)  # dispatched, not awaited
+        np.testing.assert_allclose(np.asarray(pl.collect(lc)), a @ a, atol=1e-3)
+
+    def test_materialize_yields_handle_without_receive(self, pl, rng):
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        h = pl.materialize(pl.run("elemental", "gemm", pl.send(a), pl.send(a)))
+        assert isinstance(h, repro.AlMatrix)
+        assert pl.ac.stats.num_receives == 0
+
+    def test_n_outputs_too_high_fails_cleanly(self, pl, rng):
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        outs = pl.run("elemental", "gemm", pl.send(a), pl.send(a), n_outputs=2)
+        with pytest.raises(SessionError):
+            pl.collect(outs[0])
+
+    def test_ndarray_args_autowrap(self, pl, rng):
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        lc = pl.run("elemental", "gemm", a, a)  # raw ndarrays, no explicit send
+        np.testing.assert_allclose(np.asarray(pl.collect(lc)), a @ a, atol=1e-3)
+        # both args deduped into one resident matrix
+        assert pl.ac.stats.resident_reuses == 1
+        assert pl.ac.stats.num_sends == 1
+
+
+# ---------------------------------------------------------------------------
+# Elision + resident-matrix dedup
+# ---------------------------------------------------------------------------
+
+class TestElisionAndDedup:
+    def test_chained_runs_elide_crossings(self, pl, rng):
+        a = rng.standard_normal((16, 16)).astype(np.float32)
+        b = rng.standard_normal((16, 16)).astype(np.float32)
+        lc = pl.run("elemental", "gemm", pl.send(a), pl.send(b))
+        ld = pl.run("elemental", "gemm", lc, pl.send(a + b))
+        pl.collect(ld)
+        s = pl.ac.stats.summary()
+        assert s["elided_crossings"] == 1  # lc consumed in place
+        assert s["num_receives"] == 1  # only the final collect crossed back
+        assert s["num_sends"] == 3
+
+    def test_identical_sends_dedup(self, pl, rng):
+        a = rng.standard_normal((16, 8)).astype(np.float32)
+        l1, l2 = pl.send(a), pl.send(a.copy())  # distinct nodes, equal bytes
+        pl.collect(pl.run("elemental", "gemm", pl.run("elemental", "tsqr", l1, n_outputs=2)[1], np.zeros((8, 8), np.float32)))
+        pl.collect(pl.run("elemental", "tsqr", l2, n_outputs=2)[1])
+        s = pl.ac.stats.summary()
+        assert s["resident_reuses"] == 1
+        # the dataset moved once; zeros moved once
+        assert s["num_sends"] == 2
+
+    def test_planned_moves_fewer_bytes_than_naive(self, engine, rng):
+        """The acceptance property at test scale: same pipeline, planned
+        execution moves strictly fewer bytes across the bridge."""
+        a = rng.standard_normal((64, 32)).astype(np.float32)
+
+        naive = repro.AlchemistContext(engine, num_workers=1, name="naive")
+        naive.register_library("elemental", "repro.linalg.library:ElementalLib")
+        h = naive.send(a)
+        q, r = naive.run("elemental", "tsqr", h)
+        r_np = np.asarray(naive.collect(r))          # round trip the intermediate
+        h_r = naive.send(r_np)
+        out_naive = np.asarray(naive.collect(naive.run("elemental", "gemm", h_r, h_r)))
+        s_naive = naive.stats.summary()
+        naive.stop()
+
+        planned = repro.AlchemistContext(engine, num_workers=1, name="planned")
+        planned.register_library("elemental", "repro.linalg.library:ElementalLib")
+        pl = planned.planner
+        _, lr = pl.run("elemental", "tsqr", pl.send(a), n_outputs=2)
+        out_planned = np.asarray(pl.collect(pl.run("elemental", "gemm", lr, lr)))
+        s_planned = planned.stats.summary()
+        planned.stop()
+
+        np.testing.assert_allclose(out_planned, out_naive, atol=1e-3)
+        naive_bytes = s_naive["send_bytes"] + s_naive["recv_bytes"]
+        planned_bytes = s_planned["send_bytes"] + s_planned["recv_bytes"]
+        assert s_planned["elided_crossings"] > 0
+        assert planned_bytes < naive_bytes
+
+    def test_freed_resident_matrix_is_resent(self, pl, rng):
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        h = pl.materialize(pl.send(a))
+        pl.ac.free(h)
+        lc = pl.run("elemental", "gemm", pl.send(a.copy()), np.eye(8, dtype=np.float32))
+        np.testing.assert_allclose(np.asarray(pl.collect(lc)), a, atol=1e-5)
+        s = pl.ac.stats.summary()
+        assert s["num_sends"] == 3  # a, a again (cache entry dead), eye
+        assert s["resident_reuses"] == 0
+
+    def test_same_lazy_node_survives_free(self, pl, rng):
+        """Reusing the SAME LazyMatrix after its handle was freed re-sends
+        transparently (regression: the lowering memo used to hand back the
+        stale future and the run died with HandleError)."""
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        la = pl.send(a)
+        pl.ac.free(pl.materialize(la))
+        out = pl.collect(pl.run("elemental", "gemm", la, np.eye(8, dtype=np.float32)))
+        np.testing.assert_allclose(np.asarray(out), a, atol=1e-5)
+        assert pl.ac.stats.num_sends == 3  # a, eye, a re-sent
+
+    def test_freed_run_output_is_rerun(self, pl, rng):
+        """A freed routine result consumed again re-runs the routine
+        transparently (regression: the memo handed back the freed handle and
+        later consumers died with HandleError)."""
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        lc = pl.run("elemental", "gemm", pl.send(a), np.eye(8, dtype=np.float32))
+        pl.ac.free(pl.materialize(lc))
+        out = pl.collect(pl.run("elemental", "gemm", lc, np.eye(8, dtype=np.float32)))
+        np.testing.assert_allclose(np.asarray(out), a, atol=1e-4)
+        assert pl.ac.stats.planned_ops == 3  # first gemm, the re-run, consumer
+
+    def test_failed_run_keeps_propagating(self, pl, rng):
+        """A FAILED routine is never silently retried: every later consumer
+        of the node sees the original error."""
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        bad = pl.run("elemental", "gemm", pl.send(a), "nonsense")
+        for _ in range(2):
+            with pytest.raises(TypeError):
+                pl.collect(pl.run("elemental", "gemm", bad, pl.send(a)))
+        assert pl.ac.stats.planned_ops == 3  # bad ran once, two consumers
+
+    def test_mutating_source_array_after_send_is_harmless(self, pl):
+        """send() snapshots mutable host arrays (regression: an aliased
+        mutation used to ship the new bytes under the old content key and
+        poison the resident-matrix cache)."""
+        b = np.ones((8, 8), dtype=np.float32)
+        lb = pl.send(b)
+        b[:] = 0.0  # mutate after graph build, before any lowering
+        np.testing.assert_allclose(np.asarray(pl.collect(lb)), np.ones((8, 8)), atol=0)
+        # and a fresh send of genuine ones still reuses the (correct) entry
+        lb2 = pl.send(np.ones((8, 8), dtype=np.float32))
+        np.testing.assert_allclose(
+            np.asarray(pl.collect(lb2)), np.ones((8, 8)), atol=0
+        )
+        assert pl.ac.stats.resident_reuses == 1
+
+    def test_reset_clears_caches(self, pl, rng):
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        pl.materialize(pl.send(a))
+        assert pl.stats()["resident_entries"] == 1
+        pl.reset()
+        assert pl.stats() == {"resident_entries": 0, "lowered_nodes": 0}
+        pl.materialize(pl.send(a))
+        assert pl.ac.stats.resident_reuses == 0  # cache was genuinely dropped
+
+    def test_summary_exposes_planner_counters(self, ac):
+        s = ac.stats.summary()
+        for key in ("elided_crossings", "resident_reuses", "planned_ops"):
+            assert key in s and s[key] == 0
+
+
+# ---------------------------------------------------------------------------
+# sparklike auto-offload (the arXiv:1805.11800 drop-in)
+# ---------------------------------------------------------------------------
+
+class TestSparklikeOffload:
+    def _dataset(self, rng, m=96, n=24, k_true=6):
+        low = rng.standard_normal((m, k_true)) @ rng.standard_normal((k_true, n))
+        return (low + 0.05 * rng.standard_normal((m, n))).astype(np.float64)
+
+    def test_compute_svd_drop_in(self, ac, rng):
+        a = self._dataset(rng)
+        ctx = SparkLikeContext(num_partitions=4)
+        ir = IndexedRowMatrix.from_numpy(ctx, a)
+        u_ref, s_ref, v_ref = mllib.compute_svd(ir, 4)
+        with offload.offloaded(ac):
+            u_off, s_off, v_off = mllib.compute_svd(ir, 4)
+        assert isinstance(u_off, offload.LazyRowMatrix)
+        assert (u_off.num_rows, u_off.num_cols) == (96, 4)
+        np.testing.assert_allclose(s_off, s_ref, rtol=2e-2)
+        # U stays engine-resident until explicitly collected
+        assert ac.stats.num_receives == 1  # V only (sigmas are driver-side)
+        u_np = u_off.to_numpy()
+        np.testing.assert_allclose(np.abs(np.diag(u_np.T @ u_ref.to_numpy())), np.ones(4), atol=5e-2)
+
+    def test_multiply_consumes_resident_u(self, ac, rng):
+        a = self._dataset(rng)
+        ctx = SparkLikeContext(num_partitions=4)
+        ir = IndexedRowMatrix.from_numpy(ctx, a)
+        w = rng.standard_normal((4, 8)).astype(np.float64)
+        ir_w = IndexedRowMatrix.from_numpy(ctx, w)
+        with offload.offloaded(ac):
+            u_off, s_off, _ = mllib.compute_svd(ir, 4)
+            prod = mllib.multiply(u_off, ir_w)  # u never crosses the bridge
+            out = prod.to_numpy()
+            u_np = u_off.to_numpy()
+        assert ac.stats.elided_crossings >= 1
+        # compare against the engine's own U (SVD column signs are
+        # implementation-specific, so the sparklike U is not the reference)
+        np.testing.assert_allclose(out, u_np @ w, atol=1e-4)
+
+    def test_compute_svd_honors_max_iters(self, ac, rng):
+        """max_iters must not be silently dropped on the offloaded path: a
+        hard cap well under k+oversample degrades the trailing sigma, just
+        like the baseline's capped Lanczos."""
+        a = self._dataset(rng, m=128, n=32)
+        ctx = SparkLikeContext(num_partitions=4)
+        ir = IndexedRowMatrix.from_numpy(ctx, a)
+        with offload.offloaded(ac):
+            _, s_full, _ = mllib.compute_svd(ir, 8)
+            _, s_capped, _ = mllib.compute_svd(ir, 8, max_iters=8)
+        ref = np.linalg.svd(a, compute_uv=False)[:8]
+        np.testing.assert_allclose(s_full, ref, rtol=2e-2)
+        # the capped run is a genuinely different (worse) approximation
+        assert abs(s_capped[-1] - ref[-1]) > abs(s_full[-1] - ref[-1])
+
+    def test_offload_scope_restores_baseline(self, ac, rng):
+        assert offload.active() is None
+        with offload.offloaded(ac) as planner:
+            assert offload.active() is planner
+        assert offload.active() is None
+        # outside the scope, multiply is the pure block-matrix path again
+        a = rng.standard_normal((8, 4))
+        ctx = SparkLikeContext(num_partitions=2)
+        out = mllib.multiply(
+            IndexedRowMatrix.from_numpy(ctx, a), IndexedRowMatrix.from_numpy(ctx, a.T)
+        )
+        assert isinstance(out, IndexedRowMatrix)
+        np.testing.assert_allclose(out.to_numpy(), a @ a.T, atol=1e-10)
+
+    def test_multiply_dimension_mismatch(self, ac, rng):
+        ctx = SparkLikeContext(num_partitions=2)
+        ir1 = IndexedRowMatrix.from_numpy(ctx, rng.standard_normal((8, 4)))
+        ir2 = IndexedRowMatrix.from_numpy(ctx, rng.standard_normal((8, 4)))
+        with offload.offloaded(ac):
+            with pytest.raises(ValueError):
+                mllib.multiply(ir1, ir2)
+
+
+# ---------------------------------------------------------------------------
+# LibraryWrapper.lazy
+# ---------------------------------------------------------------------------
+
+class TestWrapperLazy:
+    def test_lazy_routines_chain(self, ac, rng):
+        el = Elemental(ac)
+        a = rng.standard_normal((16, 8)).astype(np.float32)
+        q, r = el.lazy.tsqr(a, n_outputs=2)
+        gram = el.lazy.gemm(r, r)
+        out = np.asarray(gram.collect())
+        assert out.shape == (8, 8)
+        assert ac.stats.elided_crossings >= 1
+
+    def test_lazy_unknown_routine(self, ac):
+        el = Elemental(ac)
+        with pytest.raises(AttributeError):
+            el.lazy.not_a_routine
