@@ -1,0 +1,83 @@
+"""CI benchmark gate: fail on planned-bridge-bytes regressions.
+
+Compares the metrics JSON a CI run just produced (``benchmarks.run --json
+BENCH_ci.json``) against the checked-in baseline
+(``benchmarks/BENCH_baseline.json``) and exits non-zero if a gated metric
+regressed beyond tolerance.
+
+Gated metrics are *analytic byte counts*, not wall clocks: planned bridge
+bytes are derived from matrix shapes and the planner's elision decisions, so
+they are deterministic across hosts and emulated-device counts — a >10%
+increase means the planner genuinely started moving more data (e.g. a lost
+elision or a broken resident-cache hit), never a noisy runner.
+
+    python benchmarks/check_regression.py BENCH_ci.json benchmarks/BENCH_baseline.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict
+
+# (suite, metric, direction): direction "lower" gates increases, "higher"
+# gates decreases. Counters here must stay deterministic (see module doc) and
+# must be *quality* metrics: spill/refill counts are deliberately NOT gated —
+# they are policy artifacts (a better eviction policy legitimately lowers
+# them), and the spill_pressure suite already asserts the actual contract
+# internally (spills > 0, high_water <= budget, identical numerics).
+GATES = [
+    ("offload", "planned_bridge_bytes", "lower"),
+    ("offload", "elided_crossings", "higher"),
+    ("offload", "resident_reuses", "higher"),
+]
+
+
+def check(current: Dict, baseline: Dict, tolerance: float) -> int:
+    failures = 0
+    for suite, key, direction in GATES:
+        base = baseline.get(suite, {}).get(key)
+        cur = current.get(suite, {}).get(key)
+        if base is None:
+            print(f"[bench-gate] {suite}.{key}: no baseline, skipping")
+            continue
+        if cur is None:
+            print(f"[bench-gate] FAIL {suite}.{key}: missing from current run")
+            failures += 1
+            continue
+        if direction == "lower":
+            limit = base * (1 + tolerance)
+            ok = cur <= limit
+        else:
+            limit = base * (1 - tolerance)
+            ok = cur >= limit
+        status = "ok" if ok else "FAIL"
+        print(
+            f"[bench-gate] {status} {suite}.{key}: current={cur} "
+            f"baseline={base} limit={limit:.0f} ({direction} is better)"
+        )
+        failures += 0 if ok else 1
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="metrics JSON from this CI run")
+    ap.add_argument("baseline", help="checked-in baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.10)
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = check(current, baseline, args.tolerance)
+    if failures:
+        sys.exit(f"[bench-gate] {failures} gated metric(s) regressed")
+    print("[bench-gate] all gates passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,7 @@ three ways —
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -36,7 +36,7 @@ CASES = [
 SCALE = 40  # m up to 2500: numpy GEMM ~0.1-0.5 s, Spark-path overheads visible
 
 
-def run(report: List[str]) -> None:
+def run(report: List[str], metrics: Optional[Dict] = None) -> None:
     rng = np.random.default_rng(0)
     engine = repro.AlchemistEngine()
 

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -58,7 +58,7 @@ def _best_of(fn, repeats: int = 3) -> float:
     return float(min(times))
 
 
-def run(report: List[str]) -> None:
+def run(report: List[str], metrics: Optional[Dict] = None) -> None:
     rng = np.random.default_rng(7)
     engine = repro.AlchemistEngine()
     n = SHAPE[0]

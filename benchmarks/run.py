@@ -7,26 +7,36 @@
                      relayout plan-cache hit rate (DESIGN.md §3/§5)
   offload_plan       beyond-paper: naive round-trip vs lazy-planned offload
                      (bytes over the bridge + elided crossings, DESIGN.md §6)
+  spill_pressure     beyond-paper: memory governor with a working set ≥2× the
+                     HBM budget — spill/refill counters, bounded high water,
+                     padded uneven-shape sends (DESIGN.md §7)
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows. ``--only`` takes a
+comma-separated subset; ``--json PATH`` additionally writes the structured
+metrics each suite records — the file CI uploads as ``BENCH_ci.json`` and
+gates against ``benchmarks/BENCH_baseline.json`` (see check_regression.py).
 
-    PYTHONPATH=src python -m benchmarks.run [--only gemm|svd|transfer|overlap]
+    PYTHONPATH=src python -m benchmarks.run [--only offload,spill] [--json out.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
-from typing import List
+from typing import Dict, List
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=("gemm", "svd", "transfer", "overlap", "offload"))
-    args = ap.parse_args()
-
-    from benchmarks import gemm_table1, offload_plan, overlap_async, svd_fig34, transfer_tables23
+    from benchmarks import (
+        gemm_table1,
+        offload_plan,
+        overlap_async,
+        spill_pressure,
+        svd_fig34,
+        transfer_tables23,
+    )
 
     suites = {
         "gemm": gemm_table1.run,
@@ -34,17 +44,42 @@ def main() -> None:
         "transfer": transfer_tables23.run,
         "overlap": overlap_async.run,
         "offload": offload_plan.run,
+        "spill": spill_pressure.run,
     }
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only",
+        default=None,
+        help=f"comma-separated subset of: {','.join(suites)}",
+    )
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="also write structured per-suite metrics as JSON",
+    )
+    args = ap.parse_args()
+
     if args.only:
-        suites = {args.only: suites[args.only]}
+        names = [n.strip() for n in args.only.split(",") if n.strip()]
+        unknown = [n for n in names if n not in suites]
+        if unknown:
+            ap.error(f"unknown suite(s) {unknown}; choose from {sorted(suites)}")
+        suites = {n: suites[n] for n in names}
 
     report: List[str] = ["name,us_per_call,derived"]
+    metrics: Dict[str, Dict] = {}
     t0 = time.perf_counter()
     for name, fn in suites.items():
         sys.stderr.write(f"[benchmarks] running {name} ...\n")
-        fn(report)
+        fn(report, metrics)
     sys.stderr.write(f"[benchmarks] done in {time.perf_counter()-t0:.1f}s\n")
     print("\n".join(report))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(metrics, f, indent=2, sort_keys=True)
+        sys.stderr.write(f"[benchmarks] metrics written to {args.json}\n")
 
 
 if __name__ == "__main__":

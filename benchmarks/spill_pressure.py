@@ -1,0 +1,129 @@
+"""Memory governor under pressure: working set ≥2× the HBM budget (DESIGN.md §7).
+
+The deployment follow-up to Alchemist (arXiv:1910.01354) flags worker-side
+memory as the limiting factor for long offload pipelines: every resident
+matrix pins HBM until an explicit free. This benchmark drives a planned
+pipeline whose resident working set is ~2× the configured budget and checks
+the governor's contract:
+
+- the pipeline **completes** with numerics bitwise-identical to the same
+  pipeline on an unbudgeted session (spill/refill moves bytes, never values);
+- ``spills > 0`` and ``refills > 0`` — pressure actually exercised the
+  host store;
+- ``hbm_high_water ≤ budget`` — admission kept the charged footprint bounded;
+- a 6×6 send to a 4-worker session round-trips exactly (the padded-send path
+  that used to fail outright), whenever the host exposes ≥4 devices.
+
+Reported metrics feed the CI benchmark gate (BENCH_ci.json).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+import repro
+from benchmarks.common import csv_row
+
+# 8 resident matrices of M×N f32; budget holds 4 of them — a 2× overcommit.
+M, N = 512, 256
+N_MATS = 8
+MAT_BYTES = M * N * 4
+BUDGET = 4 * MAT_BYTES
+
+
+def _dataset() -> List[np.ndarray]:
+    rng = np.random.default_rng(7)
+    return [rng.standard_normal((M, N)).astype(np.float32) for _ in range(N_MATS)]
+
+
+def _pipeline(ac, mats: List[np.ndarray]) -> Tuple[List[np.ndarray], List[float], Dict]:
+    """Send the whole working set up front, then consume every matrix
+    engine-side (Frobenius norm) and collect it. Under a budget, the send
+    burst spills the early matrices, the norm pass refills them (compute
+    needs the bytes on device), and the collects of whatever is spilled at
+    that point are served from the host store."""
+    pl = ac.planner
+    lazies = [pl.send(m, name=f"m{i}") for i, m in enumerate(mats)]
+    for la in lazies:
+        pl.lower(la)  # dispatch all sends: the full working set hits residency
+    ac.wait()
+    norms = [
+        float(pl.collect(pl.run("elemental", "normest", la))) for la in lazies
+    ]
+    outs = [np.asarray(pl.collect(la)) for la in lazies]
+    return outs, norms, ac.stats.summary()
+
+
+def _run_once(engine, budget: Optional[int], tag: str):
+    ac = repro.AlchemistContext(engine, name=f"spill_{tag}", hbm_budget=budget)
+    ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+    t0 = time.perf_counter()
+    outs, norms, stats = _pipeline(ac, _DATA)
+    dt = time.perf_counter() - t0
+    backlog = ac.session.tasks.stats()["max_backlog"]
+    ac.stop()
+    return outs, norms, stats, dt, backlog
+
+
+_DATA = _dataset()
+
+
+def _padded_roundtrip(engine) -> str:
+    """The 6×6-to-4-workers acceptance case; needs a 4-device worker group."""
+    if engine.available_workers < 4:
+        return "skipped(<4 devices)"
+    ac = repro.AlchemistContext(engine, num_workers=4, name="spill_pad")
+    a = np.arange(36, dtype=np.float32).reshape(6, 6)
+    got = np.asarray(ac.collect(ac.send(a)))
+    ac.stop()
+    assert np.array_equal(got, a), "6x6 padded send did not round-trip exactly"
+    return "exact"
+
+
+def run(report: List[str], metrics: Optional[Dict] = None) -> None:
+    engine = repro.AlchemistEngine()
+
+    # Warm the jit/relayout caches so the timed passes compare fairly.
+    _run_once(engine, None, "warm")
+
+    outs_free, norms_free, s_free, t_free, _ = _run_once(engine, None, "unbudgeted")
+    outs_cap, norms_cap, s_cap, t_cap, backlog = _run_once(engine, BUDGET, "budgeted")
+
+    # The contract: identical numerics, actual spills, bounded high water.
+    for a, b in zip(outs_free, outs_cap):
+        np.testing.assert_array_equal(a, b)
+    assert norms_free == norms_cap, (norms_free, norms_cap)
+    assert s_cap["spills"] > 0 and s_cap["refills"] > 0, s_cap
+    assert s_cap["hbm_high_water"] <= BUDGET, (s_cap["hbm_high_water"], BUDGET)
+    # The unbudgeted session must have genuinely overcommitted the budget —
+    # otherwise this benchmark is not testing pressure at all.
+    assert s_free["hbm_high_water"] >= 2 * BUDGET, s_free["hbm_high_water"]
+    assert s_free["spills"] == 0, s_free
+
+    pad = _padded_roundtrip(engine)
+
+    derived = (
+        f"budget_MB={BUDGET / 1e6:.2f};working_set_MB={N_MATS * MAT_BYTES / 1e6:.2f};"
+        f"unbudgeted_s={t_free:.3f};budgeted_s={t_cap:.3f};"
+        f"spills={s_cap['spills']};refills={s_cap['refills']};"
+        f"spilled_MB={s_cap['spilled_bytes'] / 1e6:.2f};"
+        f"high_water_MB={s_cap['hbm_high_water'] / 1e6:.2f};"
+        f"free_high_water_MB={s_free['hbm_high_water'] / 1e6:.2f};"
+        f"queue_backlog={backlog};padded_6x6={pad}"
+    )
+    report.append(csv_row("spill_pressure", t_cap * 1e6, derived))
+    if metrics is not None:
+        metrics["spill"] = {
+            "budget_bytes": BUDGET,
+            "working_set_bytes": N_MATS * MAT_BYTES,
+            "spills": s_cap["spills"],
+            "refills": s_cap["refills"],
+            "spilled_bytes": s_cap["spilled_bytes"],
+            "hbm_high_water": s_cap["hbm_high_water"],
+            "unbudgeted_high_water": s_free["hbm_high_water"],
+            "budgeted_seconds": t_cap,
+            "unbudgeted_seconds": t_free,
+        }

@@ -16,7 +16,7 @@ Here: the same column count *aspect* scaled down; the reproduced claims —
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -36,7 +36,7 @@ def _decaying(rng, m, n, decay=0.9):
     return ((u * s) @ v.T).astype(np.float64)
 
 
-def run(report: List[str]) -> None:
+def run(report: List[str], metrics: Optional[Dict] = None) -> None:
     rng = np.random.default_rng(1)
     engine = repro.AlchemistEngine()
 

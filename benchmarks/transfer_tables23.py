@@ -20,7 +20,7 @@ the model to wall-clock.
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -34,7 +34,7 @@ WIDE = (40_000, 1_280_000)   # paper Table 3
 GRIDS = [(8, 8), (8, 16), (16, 16), (16, 32)]  # worker grids to sweep
 
 
-def run(report: List[str]) -> None:
+def run(report: List[str], metrics: Optional[Dict] = None) -> None:
     # --- analytic sweep at the paper's exact 400 GB shapes -----------------
     for label, shape in (("tall", TALL), ("wide", WIDE)):
         for r, c in GRIDS:

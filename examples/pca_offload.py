@@ -63,7 +63,8 @@ def main() -> None:
     s_naive = ac.stats.summary()
     naive_bytes = s_naive["send_bytes"] + s_naive["recv_bytes"]
     print(f"[naive      ] {t_naive*1e3:8.1f} ms | send={s_naive['send_seconds']*1e3:.1f}ms "
-          f"compute={s_naive['compute_seconds']*1e3:.1f}ms recv={s_naive['recv_seconds']*1e3:.1f}ms "
+          f"compute={s_naive['compute_seconds']*1e3:.1f}ms "
+          f"recv={s_naive['recv_seconds']*1e3:.1f}ms "
           f"bridge_MB={naive_bytes/1e6:.2f}")
     ac.stop()
 
@@ -84,7 +85,8 @@ def main() -> None:
     s_planned = ac2.stats.summary()
     planned_bytes = s_planned["send_bytes"] + s_planned["recv_bytes"]
     print(f"[planned    ] {t_planned*1e3:8.1f} ms | send={s_planned['send_seconds']*1e3:.1f}ms "
-          f"compute={s_planned['compute_seconds']*1e3:.1f}ms recv={s_planned['recv_seconds']*1e3:.1f}ms "
+          f"compute={s_planned['compute_seconds']*1e3:.1f}ms "
+          f"recv={s_planned['recv_seconds']*1e3:.1f}ms "
           f"bridge_MB={planned_bytes/1e6:.2f} "
           f"elided={s_planned['elided_crossings']} reuses={s_planned['resident_reuses']}")
 

@@ -202,7 +202,12 @@ class ArchConfig:
             n += attn_params() if is_attn_layer else ssm_params()
             if self.is_enc_dec:
                 n += attn_params() + d  # cross-attention + its norm
-            if self.moe is not None and (layer % max(self.moe.every_k_layers, 1) == (self.moe.every_k_layers - 1) if self.moe.every_k_layers > 1 else True):
+            is_moe_layer = self.moe is not None and (
+                layer % max(self.moe.every_k_layers, 1) == (self.moe.every_k_layers - 1)
+                if self.moe.every_k_layers > 1
+                else True
+            )
+            if is_moe_layer:
                 n += moe_params(active_only)
             else:
                 n += mlp_params(self.d_ff)

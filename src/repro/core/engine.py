@@ -47,11 +47,18 @@ from jax.sharding import Mesh
 from repro.core import futures as futures_mod
 from repro.core import params as params_codec
 from repro.core.errors import LibraryError, SessionError, WorkerAllocationError
+from repro.core.expr import arg_shape, infer_run_shapes
 from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 from repro.core.layouts import AXIS_DATA, AXIS_MODEL, GRID, ROW, LayoutSpec
 from repro.core.registry import Library, LibrarySpec, load_library
-from repro.core.relayout import timed_relayout
+from repro.core.relayout import (
+    TransferRecord,
+    pad_amounts,
+    pad_for,
+    timed_relayout,
+    transfer_cost,
+)
 from repro.core.session import Session
 
 
@@ -129,9 +136,12 @@ class AlchemistEngine:
         name: str = "app",
         num_workers: Optional[int] = None,
         grid: Optional[Tuple[int, int]] = None,
+        hbm_budget: Optional[int] = None,
     ) -> Session:
         mesh, devs = self.allocate(num_workers, grid)
-        session = Session(name=name, mesh=mesh, worker_devices=devs)
+        session = Session(
+            name=name, mesh=mesh, worker_devices=devs, hbm_budget=hbm_budget
+        )
         self.sessions[session.id] = session
         return session
 
@@ -144,6 +154,11 @@ class AlchemistContext:
     the ``*_async`` twins submit and return an :class:`AlFuture`, letting
     transfers pipeline against compute within the session and letting
     independent sessions overlap across the engine.
+
+    ``hbm_budget`` (bytes, optional) caps the worker group's resident-matrix
+    footprint: sends and routine outputs are admitted against it, spilling
+    least-recently/last-used matrices to a pinned host store and refilling
+    them transparently on next use (DESIGN.md §7). Default: unlimited.
     """
 
     def __init__(
@@ -155,9 +170,12 @@ class AlchemistContext:
         grid: Optional[Tuple[int, int]] = None,
         client_layout: LayoutSpec = ROW,
         engine_layout: LayoutSpec = GRID,
+        hbm_budget: Optional[int] = None,
     ):
         self.engine = engine
-        self.session = engine.connect(name=name, num_workers=num_workers, grid=grid)
+        self.session = engine.connect(
+            name=name, num_workers=num_workers, grid=grid, hbm_budget=hbm_budget
+        )
         self.client_layout = client_layout
         self.engine_layout = engine_layout
         self._planner = None
@@ -212,14 +230,32 @@ class AlchemistContext:
         if array.ndim != 2:
             raise SessionError(f"send() expects a 2D matrix, got shape {tuple(array.shape)}")
         h = sess.new_pending_handle(array.shape, array.dtype, self.engine_layout, name=name)
+        # Reserve the *physical* footprint against the HBM budget before
+        # enqueueing: logical shape plus the divisibility padding the staging
+        # (client) and resident (engine) layouts will append (DESIGN.md §7).
+        phys = self._send_physical_shape(tuple(int(d) for d in array.shape))
+        reserve_bytes = sess.memgov.reserve(
+            phys[0] * phys[1] * jnp.dtype(array.dtype).itemsize
+        )
 
         def task() -> AlMatrix:
             try:
                 mesh = sess.mesh
+                # Make room before any bytes land on the worker group: the
+                # governor spills last-used resident matrices to host until
+                # the incoming footprint fits the budget.
+                sess.memgov.admit(reserve_bytes)
                 x = jnp.asarray(array)
                 # Stage on the client layout first (rows over all session
                 # workers) so the recorded transfer is the genuine ROW->GRID
-                # redistribution.
+                # redistribution; uneven shapes are zero-padded to the next
+                # worker-count multiple so the device_put is legal. Cyclic
+                # layouts are never pre-padded — the emulation's permutation
+                # would interleave the zero rows (see pad_amounts) — so they
+                # keep the pre-padding behaviour: even shapes work, uneven
+                # ones fail loudly at the device_put.
+                if not (self.client_layout.cyclic or self.engine_layout.cyclic):
+                    x, _stage_pads = pad_for(x, self.client_layout, mesh)
                 x = jax.device_put(x, self.client_layout.sharding(mesh))
                 out, rec = timed_relayout(
                     x,
@@ -229,13 +265,19 @@ class AlchemistContext:
                     direction="send",
                     cache=sess.relayout_cache,
                     block=block,
+                    strip=False,  # residency keeps the put-legal physical form
                 )
                 sess.stats.record_transfer(rec)
-                h.materialize(out)
+                h.materialize(
+                    out, pads=(out.shape[0] - h.shape[0], out.shape[1] - h.shape[1])
+                )
+                sess.memgov.charge(h)
                 return h
             except BaseException as exc:
                 h.fail(exc)
                 raise
+            finally:
+                sess.memgov.unreserve(reserve_bytes)
 
         return sess.tasks.submit(task, label=f"send:{name or h.id}")
 
@@ -255,6 +297,32 @@ class AlchemistContext:
 
         def task() -> jax.Array:
             live = sess.resolve(self._resolve_handle(h))
+            # A spilled matrix's bytes already sit in the host store — the
+            # client side of the machine. Serving the collect from there
+            # skips a pointless refill (device_put + admission that may
+            # evict live working-set matrices) for data that would be pulled
+            # straight back off the device. The handle stays spilled; a later
+            # engine-side consumption refills as usual. Cyclic layouts store
+            # permuted rows, so they take the ordinary refill path.
+            host = sess.memgov.host_payload(live)
+            if host is not None and not live.layout.cyclic:
+                # Priced analytically (transfer_cost), not via cache.plan():
+                # no relayout ran, so the plan cache and its hit/miss rate
+                # must not see this transfer (planned=False below).
+                cost = transfer_cost(
+                    live.shape, live.dtype, live.layout, self.client_layout, sess.mesh
+                )
+                t0 = time.perf_counter()
+                out = jnp.asarray(host[: live.shape[0], : live.shape[1]])
+                out.block_until_ready()
+                rec = TransferRecord(
+                    direction="receive",
+                    cost=cost,
+                    seconds=time.perf_counter() - t0,
+                    planned=False,
+                )
+                sess.stats.record_transfer(rec)
+                return out
             out, rec = timed_relayout(
                 live.data(),
                 self.client_layout,
@@ -281,6 +349,21 @@ class AlchemistContext:
         # already-submitted task that still consumes the handle.
         self.free_async(h).result()
 
+    def _send_physical_shape(self, shape: Tuple[int, int]) -> Tuple[int, int]:
+        """Physical shape a sent matrix will occupy once resident: the
+        logical shape padded first for the client-layout staging put, then
+        for the engine-layout relayout — the exact sequence the send task
+        performs (pad_for + timed_relayout(strip=False)). Keep the two in
+        lockstep: memgov reservations are priced off this prediction, and the
+        eventual charge uses the materialized array's real shape."""
+        if self.client_layout.cyclic or self.engine_layout.cyclic:
+            return shape  # cyclic layouts are never pre-padded (see the task)
+        mesh = self.session.mesh
+        pr, pc = pad_amounts(shape, self.client_layout, mesh)
+        phys = (shape[0] + pr, shape[1] + pc)
+        pr, pc = pad_amounts(phys, self.engine_layout, mesh)
+        return (phys[0] + pr, phys[1] + pc)
+
     @staticmethod
     def _resolve_handle(h: Union[AlMatrix, AlFuture]) -> AlMatrix:
         resolved = futures_mod.resolve(h)
@@ -291,13 +374,34 @@ class AlchemistContext:
         return resolved
 
     # -- routine invocation ----------------------------------------------------
-    def run_async(self, library: str, routine: str, *args: Any, **params: Any) -> AlFuture:
+    def run_async(
+        self,
+        library: str,
+        routine: str,
+        *args: Any,
+        _out_shapes: Optional[Sequence] = None,
+        _out_dtype: Any = None,
+        **params: Any,
+    ) -> AlFuture:
         """Pipelined ``ac.run``: enqueue the routine and return a future of
         its (wrapped) outputs. Arguments may be AlMatrix handles, futures of
         handles from earlier async calls, or plain scalars; the compute is
         async-dispatched, so the worker immediately proceeds to the next task
-        while XLA executes."""
-        return self._submit_run(library, routine, args, params, block=False)
+        while XLA executes.
+
+        ``_out_shapes`` / ``_out_dtype`` (internal) let a caller that already
+        ran shape inference — the offload planner, whose operands are still
+        futures here — pass the routine's output shapes and element type so
+        the memory governor can reserve their bytes up front."""
+        return self._submit_run(
+            library,
+            routine,
+            args,
+            params,
+            block=False,
+            out_shapes=_out_shapes,
+            out_dtype=_out_dtype,
+        )
 
     def run(self, library: str, routine: str, *args: Any, **params: Any) -> Any:
         """Invoke ``library.routine`` on the engine (the paper's ``ac.run``).
@@ -317,12 +421,41 @@ class AlchemistContext:
         params: Dict[str, Any],
         *,
         block: bool,
+        out_shapes: Optional[Sequence] = None,
+        out_dtype: Any = None,
     ) -> AlFuture:
         self._check()
         lib = self.library(library)
         r = lib.routine(routine)  # unknown-routine errors fail fast, caller-side
         sess = self.session
         label = f"{library}.{routine}"
+        # Caller-side shape inference (per-routine rules, DESIGN.md §7): a
+        # dimension mismatch raises ShapeError here, at the call site, and a
+        # successful inference prices the routine's matrix outputs so the
+        # governor can reserve their bytes before the task is enqueued. The
+        # planner passes its own inference in (its operands are futures whose
+        # shapes this layer cannot see).
+        if out_shapes is None:
+            out_shapes = infer_run_shapes(
+                routine, [arg_shape(a) for a in args], params
+            )
+        reserve_bytes = 0
+        if out_shapes:
+            if out_dtype is None:
+                # Best-known operand dtype: a handle directly, or one behind
+                # an already-resolved future (the planner also passes an
+                # explicit hint, since its operands may still be in flight).
+                for a in args:
+                    if isinstance(a, AlFuture) and a.done() and a.exception() is None:
+                        a = a.result()
+                    if isinstance(a, AlMatrix):
+                        out_dtype = a.dtype
+                        break
+            itemsize = jnp.dtype(out_dtype).itemsize if out_dtype is not None else 4
+            est = sum(
+                int(np.prod(s)) for s in out_shapes if s is not None and len(s) == 2
+            )
+            reserve_bytes = sess.memgov.reserve(est * itemsize)
 
         def task() -> Any:
             # Resolve futures from earlier tasks (same-session ones are
@@ -339,30 +472,48 @@ class AlchemistContext:
             )
             decoded = params_codec.unpack(frame)
 
-            call_args = []
-            for i in range(len(rargs)):
-                v = decoded[f"__pos_{i}"]
-                if isinstance(v, params_codec.HandleRef):
-                    call_args.append(sess.get_handle(v.id).data())
-                else:
-                    call_args.append(v)
-            call_kwargs = {
-                k: (sess.get_handle(v.id).data() if isinstance(v, params_codec.HandleRef) else v)
+            def handle_of(v: Any) -> Any:
+                return sess.get_handle(v.id) if isinstance(v, params_codec.HandleRef) else v
+
+            pos = [handle_of(decoded[f"__pos_{i}"]) for i in range(len(rargs))]
+            kw = {
+                k: handle_of(v)
                 for k, v in decoded.items()
                 if not k.startswith("__pos_")
             }
+            inputs = [v for v in (*pos, *kw.values()) if isinstance(v, AlMatrix)]
 
-            if "mesh" in r.signature().parameters:
-                call_kwargs["mesh"] = sess.mesh
+            try:
+                # Inputs stay pinned (unspillable) while the routine runs:
+                # admission for the outputs must not evict an operand, and a
+                # spilled operand refills exactly once. Reading .data()
+                # inside the pin is what triggers those refills.
+                with sess.memgov.pinned(inputs):
+                    call_args = [
+                        v.data() if isinstance(v, AlMatrix) else v for v in pos
+                    ]
+                    call_kwargs = {
+                        k: (v.data() if isinstance(v, AlMatrix) else v)
+                        for k, v in kw.items()
+                    }
+                    # Admit the outputs only after every operand is resolved:
+                    # a .data() above may have refilled a spilled input, and
+                    # room made earlier would have been eaten again.
+                    sess.memgov.admit(reserve_bytes)
 
-            t0 = time.perf_counter()
-            with sess.mesh:
-                result = r.fn(*call_args, **call_kwargs)
-            if block:
-                result = jax.block_until_ready(result)
-            sess.stats.record_compute(time.perf_counter() - t0)
+                    if "mesh" in r.signature().parameters:
+                        call_kwargs["mesh"] = sess.mesh
 
-            return self._wrap_outputs(result, label)
+                    t0 = time.perf_counter()
+                    with sess.mesh:
+                        result = r.fn(*call_args, **call_kwargs)
+                    if block:
+                        result = jax.block_until_ready(result)
+                    sess.stats.record_compute(time.perf_counter() - t0)
+
+                    return self._wrap_outputs(result, label)
+            finally:
+                sess.memgov.unreserve(reserve_bytes)
 
         return sess.tasks.submit(task, label=f"run:{label}")
 

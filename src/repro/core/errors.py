@@ -31,6 +31,12 @@ class LayoutError(AlchemistError):
     """Illegal layout conversion or a layout/mesh mismatch."""
 
 
+class ShapeError(AlchemistError):
+    """A deferred-op DAG failed shape inference at graph-build time: routine
+    operands whose dimensions cannot compose (caught client-side, where the
+    paper's driver would reject the call, instead of deep in the task queue)."""
+
+
 class ParameterError(AlchemistError):
     """Bad scalar-parameter pack/unpack (Parameters header analogue)."""
 

@@ -23,6 +23,12 @@ Three node kinds:
 :class:`LazyMatrix` is the user-facing wrapper: it holds a node plus the
 planner that will execute it, supports ``@`` for deferred matmul, and
 ``collect()`` for the one explicit bridge crossing.
+
+Every ElementalLib routine has a shape rule in :data:`SHAPE_RULES`, so
+deferred chains validate at graph-build time (a mismatched ``gemm`` raises
+:class:`~repro.core.errors.ShapeError` where it is written, not deep inside
+the task queue) and the memory governor can reserve output bytes before a
+routine runs (DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -30,14 +36,173 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import itertools
-from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple
+from typing import TYPE_CHECKING, Any, Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.core.errors import ShapeError
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
     from repro.core.planner import OffloadPlanner
 
 _EXPR_IDS = itertools.count(1)
+
+
+# ---------------------------------------------------------------------------
+# Per-routine shape rules
+# ---------------------------------------------------------------------------
+#
+# Each rule maps (arg shapes, params) -> one shape per routine output, letting
+# LazyMatrix chains validate at graph-build time: a dimension mismatch raises
+# a client-side ShapeError where the call is written, instead of surfacing as
+# a deep task-queue failure after the DAG started executing. An entry of None
+# in ``shapes`` means "unknown" (scalar arg, or an upstream node without a
+# rule) — rules stay silent rather than guessing. Matrix outputs are 2-tuples;
+# vectors are 1-tuples; scalars are ``()``.
+
+ShapeLike = Optional[Tuple[int, ...]]
+ShapeRule = Callable[[Sequence[ShapeLike], Dict[str, Any]], Tuple[ShapeLike, ...]]
+
+
+def _require_2d(routine: str, pos: int, s: Tuple[int, ...]) -> None:
+    if len(s) != 2:
+        raise ShapeError(f"{routine}: operand {pos} must be 2D, got shape {s}")
+
+
+def _rule_gemm(shapes: Sequence[ShapeLike], params: Dict[str, Any]):
+    if len(shapes) < 2:
+        raise ShapeError(f"gemm expects 2 matrix operands, got {len(shapes)}")
+    a, b = shapes[0], shapes[1]
+    if a is None or b is None:
+        return (None,)
+    _require_2d("gemm", 0, a)
+    _require_2d("gemm", 1, b)
+    if a[1] != b[0]:
+        raise ShapeError(
+            f"gemm: inner dimensions do not agree: {a[0]}x{a[1]} @ {b[0]}x{b[1]}"
+        )
+    return ((a[0], b[1]),)
+
+
+def _svd_k(shapes: Sequence[ShapeLike], params: Dict[str, Any], routine: str):
+    a = shapes[0] if shapes else None
+    if a is None:
+        return None, None
+    _require_2d(routine, 0, a)
+    if "k" not in params:
+        # Not passed as a keyword (library default, or smuggled positionally
+        # — which the keyword-only adapters reject at execution anyway):
+        # don't validate or infer from an invented value.
+        return a, None
+    k = int(params["k"])
+    if k < 1 or k > min(a):
+        raise ShapeError(
+            f"{routine}: k={k} out of range for a {a[0]}x{a[1]} matrix "
+            f"(need 1 <= k <= {min(a)})"
+        )
+    return a, k
+
+
+def _rule_truncated_svd(shapes, params, routine="truncated_svd"):
+    a, k = _svd_k(shapes, params, routine)
+    if a is None or k is None:
+        return (None, None, None)
+    return ((a[0], k), (k,), (a[1], k))  # U, s, V
+
+
+def _rule_pca(shapes, params):
+    a, k = _svd_k(shapes, params, "pca")
+    if a is None or k is None:
+        return (None, None, None)
+    return ((a[1], k), (a[0], k), (k,))  # components, scores, explained_var
+
+
+def _rule_tsqr(shapes, params):
+    a = shapes[0] if shapes else None
+    if a is None:
+        return (None, None)
+    _require_2d("tsqr", 0, a)
+    if a[0] < a[1]:
+        raise ShapeError(
+            f"tsqr expects a tall-skinny matrix (rows >= cols), got {a[0]}x{a[1]}"
+        )
+    return ((a[0], a[1]), (a[1], a[1]))  # Q, R
+
+
+def _rule_ridge(shapes, params):
+    if len(shapes) < 2:
+        raise ShapeError(f"ridge expects (A, b), got {len(shapes)} operands")
+    a, b = shapes[0], shapes[1]
+    if a is None or b is None:
+        return (None,)
+    _require_2d("ridge", 0, a)
+    _require_2d("ridge", 1, b)
+    if b != (a[0], 1):
+        raise ShapeError(
+            f"ridge: b must be {a[0]}x1 to match a {a[0]}x{a[1]} A, got {b[0]}x{b[1]}"
+        )
+    return ((a[1], 1),)
+
+
+def _rule_scalar(routine: str) -> ShapeRule:
+    def rule(shapes, params):
+        a = shapes[0] if shapes else None
+        if a is not None:
+            _require_2d(routine, 0, a)
+        return ((),)
+
+    return rule
+
+
+#: routine name -> shape rule, spanning every ElementalLib routine. Unknown
+#: routines simply have no rule: metadata stays unknown until execution, as
+#: before (third-party libraries can extend this table at registration).
+SHAPE_RULES: Dict[str, ShapeRule] = {
+    "gemm": _rule_gemm,
+    "multiply": _rule_gemm,
+    "truncated_svd": lambda s, p: _rule_truncated_svd(s, p, "truncated_svd"),
+    "randomized_svd": lambda s, p: _rule_truncated_svd(s, p, "randomized_svd"),
+    "pca": _rule_pca,
+    "tsqr": _rule_tsqr,
+    "ridge": _rule_ridge,
+    "condest": _rule_scalar("condest"),
+    "normest": _rule_scalar("normest"),
+    "sigma_max": _rule_scalar("sigma_max"),
+}
+
+
+def arg_shape(a: Any) -> ShapeLike:
+    """Best-known shape of a routine argument: Expr nodes and AlMatrix
+    handles carry one; scalars and unknown upstream outputs are None."""
+    s = getattr(a, "shape", None)
+    if s is None:
+        return None
+    try:
+        return tuple(int(d) for d in s)
+    except (TypeError, ValueError):
+        return None
+
+
+def infer_run_shapes(
+    routine: str,
+    shapes: Sequence[ShapeLike],
+    params: Dict[str, Any],
+    n_outputs: Optional[int] = None,
+) -> Optional[Tuple[ShapeLike, ...]]:
+    """Apply the routine's shape rule; returns one shape per output, or None
+    when no rule exists. Raises :class:`ShapeError` on operand mismatches and
+    on an ``n_outputs`` that disagrees with the rule (only checked for
+    multi-output requests: ``n_outputs=1`` legitimately means "hand me the
+    whole result", whatever its arity)."""
+    rule = SHAPE_RULES.get(routine)
+    if rule is None:
+        return None
+    out = rule(list(shapes), dict(params))
+    if n_outputs is not None and n_outputs > 1 and n_outputs != len(out):
+        raise ShapeError(
+            f"{routine} produces {len(out)} outputs, but n_outputs={n_outputs}"
+        )
+    return out
 
 
 def content_key(array: Any) -> Tuple:
@@ -130,16 +295,26 @@ class RunExpr(Expr):
     params: Dict[str, Any] = dataclasses.field(default_factory=dict)
     n_outputs: int = 1
 
+    def output_shapes(self) -> Optional[Tuple[ShapeLike, ...]]:
+        """One inferred shape per routine output via :data:`SHAPE_RULES`,
+        or None when the routine has no rule. May raise ShapeError."""
+        return infer_run_shapes(
+            self.routine,
+            [arg_shape(a) for a in self.args],
+            self.params,
+            self.n_outputs,
+        )
+
     @property
     def shape(self) -> Optional[Tuple[int, int]]:
-        # Shape inference only where it is unambiguous (gemm); other routines
-        # leave metadata unknown until execution.
-        if self.routine in ("gemm", "multiply") and len(self.args) >= 2:
-            a, b = self.args[0], self.args[1]
-            sa = a.shape if isinstance(a, Expr) else getattr(a, "shape", None)
-            sb = b.shape if isinstance(b, Expr) else getattr(b, "shape", None)
-            if sa and sb:
-                return (sa[0], sb[1])
+        try:
+            shapes = self.output_shapes()
+        except ShapeError:
+            # Construction already validated; a late error (e.g. an upstream
+            # shape learned afterwards) surfaces on execution, not here.
+            return None
+        if shapes and len(shapes) == 1 and shapes[0] is not None and len(shapes[0]) == 2:
+            return shapes[0]
         return None
 
     def __repr__(self) -> str:
@@ -155,6 +330,17 @@ class ProjExpr(Expr):
 
     parent: RunExpr = None
     index: int = 0
+
+    @property
+    def shape(self) -> Optional[Tuple[int, int]]:
+        try:
+            shapes = self.parent.output_shapes()
+        except ShapeError:
+            return None
+        if shapes is None or self.index >= len(shapes):
+            return None
+        s = shapes[self.index]
+        return s if s is not None and len(s) == 2 else None
 
     def __repr__(self) -> str:
         return f"ProjExpr(id={self.id}, parent={self.parent.id}, index={self.index})"

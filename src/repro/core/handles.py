@@ -14,8 +14,10 @@ With the asynchronous task-queue engine (DESIGN.md §3-§4) a handle has a
 lifecycle::
 
     pending ──materialize()──▶ materialized ──free()──▶ freed
-        │
-        └──fail(exc)──▶ failed        (data() re-raises, wrapped in TaskError)
+        │                        │        ▲
+        │                     spill()   refill()   (memory governor, §7)
+        │                        ▼        │
+        └──fail(exc)──▶ failed   spilled ─┘   (data() re-raises via TaskError)
 
 ``send_async`` creates the handle immediately in the *pending* state — shape
 and dtype are known up front, so metadata-only operations (and packing the
@@ -24,6 +26,15 @@ materializes it when the transfer actually runs. ``data()`` on a pending
 handle blocks until materialization; within one session that never happens
 (the FIFO queue materializes producers before consumers run), but a handle
 shared across engine internals may legitimately wait.
+
+Two DESIGN.md §7 concerns also live here:
+
+- **Spill/refill.** Under HBM pressure the session's memory governor may move
+  a resident matrix to a pinned host store (state *spilled*); the handle stays
+  live, and ``data()`` transparently refills it device-side on next use.
+- **Divisibility padding.** The bridge pads uneven dims for ``device_put``
+  (DESIGN.md §7); ``pads`` records the physical zero rows/cols so ``data()``
+  always returns the logical matrix.
 """
 
 from __future__ import annotations
@@ -43,6 +54,7 @@ _ID_COUNTER = itertools.count(1)
 # Handle lifecycle states.
 PENDING = "pending"
 MATERIALIZED = "materialized"
+SPILLED = "spilled"  # resident bytes moved to the host store (memory governor)
 FAILED = "failed"
 FREED = "freed"
 
@@ -66,10 +78,16 @@ class AlMatrix:
     session_id: int
     name: str = ""
     id: int = dataclasses.field(default_factory=lambda: next(_ID_COUNTER))
+    #: physical minus logical extent per dim: the zero rows/cols the bridge
+    #: appended so ``device_put`` divisibility holds (DESIGN.md §7).
+    pads: Tuple[int, int] = (0, 0)
     _data: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
     _state: str = dataclasses.field(default=MATERIALIZED, repr=False)
     _error: Optional[BaseException] = dataclasses.field(default=None, repr=False)
     _ready: Optional[threading.Event] = dataclasses.field(default=None, repr=False)
+    #: the session's MemoryGovernor, attached at registration; handles its
+    #: spill/refill + accounting. None for governor-less (unit-test) handles.
+    _governor: Optional[object] = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
         # Only handles explicitly constructed as PENDING (Session.
@@ -85,11 +103,13 @@ class AlMatrix:
     def state(self) -> str:
         return self._state
 
-    def materialize(self, data: jax.Array) -> None:
-        """Engine-side: attach the resident array to a pending handle."""
+    def materialize(self, data: jax.Array, pads: Tuple[int, int] = (0, 0)) -> None:
+        """Engine-side: attach the resident (physical) array to a pending
+        handle; ``pads`` is its divisibility padding over the logical shape."""
         if self._state == FREED:
             raise HandleError(f"AlMatrix {self.id} materialized after free()")
         self._data = data
+        self.pads = (int(pads[0]), int(pads[1]))
         self._state = MATERIALIZED
         if self._ready is not None:
             self._ready.set()
@@ -105,6 +125,8 @@ class AlMatrix:
         """Release engine-side storage (the client keeps only metadata)."""
         self._data = None
         self._state = FREED
+        if self._governor is not None:
+            self._governor.discard(self)  # drop host-store bytes + accounting
         if self._ready is not None:
             self._ready.set()  # unblock any waiter; data() raises HandleError
 
@@ -114,12 +136,29 @@ class AlMatrix:
 
         Blocks while the handle is pending (its producing task has not run
         yet); raises HandleError once freed, TaskError if the producer failed.
+        A spilled handle is transparently refilled by the session's memory
+        governor; a padded one is sliced back to its logical shape.
         """
         if self._state == PENDING and self._ready is not None:
             if not self._ready.wait(timeout):
                 raise TaskError(
                     f"AlMatrix {self.id} ({self.name!r}) still pending after {timeout}s"
                 )
+        if self._governor is not None:
+            # Governed read: hold the governor lock across the whole
+            # check-refill-slice sequence so a concurrent spill on the queue
+            # worker can never null _data between our check and the slice.
+            with self._governor.lock:
+                return self._read()
+        return self._read()
+
+    def _read(self) -> jax.Array:
+        if self._state == SPILLED:
+            if self._governor is None:
+                raise HandleError(
+                    f"AlMatrix {self.id} ({self.name!r}) is spilled with no governor"
+                )
+            self._governor.refill(self)
         if self._state == FREED:
             raise HandleError(f"AlMatrix {self.id} ({self.name!r}) has been freed")
         if self._state == FAILED:
@@ -128,14 +167,19 @@ class AlMatrix:
             ) from self._error
         if self._data is None:
             raise HandleError(f"AlMatrix {self.id} ({self.name!r}) has no resident data")
+        if self._governor is not None:
+            self._governor.touch(self)
+        if self.pads != (0, 0):
+            return self._data[: self.shape[0], : self.shape[1]]
         return self._data
 
     @property
     def is_live(self) -> bool:
-        """Usable as a routine input: pending (producer queued) or resident.
-        Freed/failed handles must be re-produced — the planner's resident
-        cache keys off this to decide reuse vs re-send."""
-        return self._state in (PENDING, MATERIALIZED)
+        """Usable as a routine input: pending (producer queued), resident, or
+        spilled (host-side; refilled on next read). Freed/failed handles must
+        be re-produced — the planner's resident cache keys off this to decide
+        reuse vs re-send."""
+        return self._state in (PENDING, MATERIALIZED, SPILLED)
 
     # -- metadata -----------------------------------------------------------
     @property
@@ -150,6 +194,14 @@ class AlMatrix:
         n = 1
         for d in self.shape:
             n *= d
+        return n * jax.numpy.dtype(self.dtype).itemsize
+
+    def physical_nbytes(self) -> int:
+        """Device-resident footprint: logical extent plus divisibility pads.
+        This is what the memory governor charges against the HBM budget."""
+        n = 1
+        for d, p in zip(self.shape, self.pads):
+            n *= d + p
         return n * jax.numpy.dtype(self.dtype).itemsize
 
     @property

@@ -33,7 +33,7 @@ contiguous 128-aligned tiles, so block layout is the native choice
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -83,8 +83,11 @@ class LayoutSpec:
     def grid_shape(self, mesh: Mesh) -> Tuple[int, int]:
         """(row shards, col shards) under ``mesh`` — the process-grid shape."""
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        r = int(np.prod([sizes[a] for a in self.row_axes if a in sizes], dtype=np.int64)) if self.row_axes else 1
-        c = int(np.prod([sizes[a] for a in self.col_axes if a in sizes], dtype=np.int64)) if self.col_axes else 1
+        def axes_prod(axes):
+            return int(np.prod([sizes[a] for a in axes if a in sizes], dtype=np.int64))
+
+        r = axes_prod(self.row_axes) if self.row_axes else 1
+        c = axes_prod(self.col_axes) if self.col_axes else 1
         return max(r, 1), max(c, 1)
 
     def validate(self, shape: Sequence[int], mesh: Mesh) -> None:
@@ -107,7 +110,7 @@ GRID = LayoutSpec("grid", row_axes=(AXIS_POD, AXIS_DATA), col_axes=(AXIS_MODEL,)
 COLUMN = LayoutSpec("column", row_axes=(), col_axes=(AXIS_POD, AXIS_DATA, AXIS_MODEL))
 REPLICATED = LayoutSpec("replicated", row_axes=(), col_axes=())
 
-_BY_NAME = {l.name: l for l in (ROW, GRID, COLUMN, REPLICATED)}
+_BY_NAME = {spec.name: spec for spec in (ROW, GRID, COLUMN, REPLICATED)}
 
 
 def by_name(name: str) -> LayoutSpec:

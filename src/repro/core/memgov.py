@@ -1,0 +1,345 @@
+"""MemoryGovernor — budgeted spill/refill of engine-resident matrices.
+
+DESIGN.md §7. Alchemist's value proposition is keeping matrices resident on
+the engine so drivers avoid repeated transfers (arXiv:1806.01270), but the
+resident-matrix cache pins everything in HBM until an explicit free — exactly
+the memory pressure the deployment follow-up flags as the limiting factor for
+long offload pipelines (arXiv:1910.01354). The governor bounds it:
+
+- every materialized :class:`~repro.core.handles.AlMatrix` is **charged** its
+  physical byte footprint (logical extent plus divisibility padding) against
+  a per-session HBM budget;
+- before a send stages bytes or a routine materializes outputs, the task
+  **admits** the incoming footprint: least-recently-used resident matrices —
+  preferring ones the offload planner has hinted as past their DAG last use —
+  are **spilled** to a pinned host store (``jax.device_get``) until the new
+  bytes fit;
+- a spilled handle stays *live*: its next consumption (``data()``) triggers a
+  transparent **refill** — a ``device_put`` through the session's cached
+  relayout plan — so pipelines whose working set exceeds the budget complete
+  with identical numerics, just extra host↔device traffic;
+- ``reserve``/``unreserve`` track bytes promised by not-yet-executed queued
+  tasks (``send_async``/``run_async`` reserve before enqueueing), so
+  ``pressure()`` forecasts demand beyond what is already resident.
+
+The governor is deliberately an *accounting* model — it charges the bytes the
+engine placed, rather than querying allocator internals — which keeps the
+policy identical on emulated-CPU meshes and real HBM. All spill/refill
+mutations run on the session's single task-queue worker; the lock only guards
+the counters that client threads read (reservations, stats snapshots).
+
+With ``budget=None`` (the default) nothing spills and the governor is pure
+bookkeeping: ``hbm_high_water`` still lands in ``session.stats.summary()``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import itertools
+import threading
+from typing import TYPE_CHECKING, Dict, Iterable, List, Optional, Set
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import handles as handles_mod
+from repro.core.errors import HandleError
+from repro.core.handles import AlMatrix
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
+    from repro.core.session import Session
+
+_CLOCK = itertools.count(1)
+
+
+class MemoryGovernor:
+    """Per-session HBM budget: charge, spill, refill (DESIGN.md §7)."""
+
+    def __init__(self, budget: Optional[int] = None, name: str = "memgov"):
+        if budget is not None and budget <= 0:
+            raise ValueError(f"hbm budget must be positive or None, got {budget}")
+        self.budget = budget
+        self.name = name
+        self._session: Optional["Session"] = None
+        self._lock = threading.RLock()
+        # handle id -> handle, for every charged (materialized or spilled)
+        # matrix; _charged holds the bytes each one was charged at.
+        self._handles: Dict[int, AlMatrix] = {}
+        self._charged: Dict[int, int] = {}
+        # the pinned host store: physical (padded) payloads of spilled handles
+        self._host_store: Dict[int, np.ndarray] = {}
+        self._touch: Dict[int, int] = {}
+        self._pin_counts: Dict[int, int] = {}
+        self._idle: Set[int] = set()  # planner last-use hints: spill these first
+        self._used = 0
+        self._reserved = 0
+
+    def bind(self, session: "Session") -> None:
+        """Attach the owning session (mesh + relayout cache + stats)."""
+        self._session = session
+
+    def set_budget(self, budget: Optional[int]) -> None:
+        """Change the budget (e.g. a scoped override via
+        ``offload.offloaded(ac, hbm_budget=...)``), with the same validation
+        as construction. Serialized against admissions: an admit() in flight
+        on the queue worker finishes under the budget it snapshotted."""
+        if budget is not None and budget <= 0:
+            raise ValueError(f"hbm budget must be positive or None, got {budget}")
+        with self._lock:
+            self.budget = budget
+
+    @property
+    def lock(self) -> threading.RLock:
+        """The governor's reentrant lock. Handle reads hold it across the
+        check-refill-slice sequence (`AlMatrix.data()`), so a client-thread
+        read can never observe a half-spilled handle from the queue worker."""
+        return self._lock
+
+    # -- accounting ----------------------------------------------------------
+    @property
+    def used(self) -> int:
+        """Bytes currently charged against the budget (device-resident)."""
+        return self._used
+
+    @property
+    def reserved(self) -> int:
+        """Bytes promised by queued-but-not-yet-executed tasks."""
+        return self._reserved
+
+    def pressure(self) -> int:
+        """Forecast demand: resident bytes plus outstanding reservations."""
+        with self._lock:
+            return self._used + self._reserved
+
+    def reserve(self, nbytes: int) -> int:
+        """Client-side, before enqueueing: promise ``nbytes`` of residency.
+        Returns the reservation size (pass it back to :meth:`unreserve`)."""
+        nbytes = max(int(nbytes), 0)
+        with self._lock:
+            self._reserved += nbytes
+        return nbytes
+
+    def unreserve(self, nbytes: int) -> None:
+        """Task-side: the reservation was converted to a charge (or the task
+        failed); drop it from the forecast."""
+        with self._lock:
+            self._reserved = max(self._reserved - max(int(nbytes), 0), 0)
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, nbytes: int, exclude: Iterable[int] = ()) -> int:
+        """Make room for ``nbytes`` of incoming residency: spill unpinned
+        victims (planner-hinted idle first, then least-recently-used) until
+        ``used + nbytes`` fits the budget. Returns the number of spills.
+
+        Admission is *best effort*: if everything else is pinned or the
+        incoming matrix alone exceeds the budget, the bytes are admitted
+        anyway — the governor bounds memory, it never deadlocks the pipeline.
+        """
+        nbytes = max(int(nbytes), 0)
+        spills = 0
+        excluded = set(exclude)
+        # The pick-spill window runs under the lock: a concurrent refill on
+        # another thread (itself an admission) must not spill our chosen
+        # victim between the pick and the spill. The budget is snapshotted
+        # under the same lock — a scoped override expiring mid-admission
+        # (offloaded() exit flips it back to None) must not yank the loop's
+        # comparison out from under it.
+        with self._lock:
+            budget = self.budget
+            if budget is None:
+                return 0
+            while self._used + nbytes > budget:
+                victim = self._pick_victim(excluded)
+                if victim is None:
+                    break
+                self.spill(victim)
+                spills += 1
+        return spills
+
+    def _pick_victim(self, excluded: Set[int]) -> Optional[AlMatrix]:
+        with self._lock:
+            candidates: List[AlMatrix] = [
+                h
+                for hid, h in self._handles.items()
+                if hid not in excluded
+                and not self._pin_counts.get(hid)
+                and h.state == handles_mod.MATERIALIZED
+                and h._data is not None
+            ]
+            if not candidates:
+                return None
+            # Planner-hinted idle matrices (past their DAG last use) first,
+            # then least-recently-touched.
+            return min(
+                candidates,
+                key=lambda h: (h.id not in self._idle, self._touch.get(h.id, 0)),
+            )
+
+    # -- charge / discard ----------------------------------------------------
+    def charge(self, h: AlMatrix) -> None:
+        """Register a newly materialized matrix and charge its footprint."""
+        h._governor = self
+        nbytes = h.physical_nbytes()
+        with self._lock:
+            prev = self._charged.get(h.id, 0)
+            self._handles[h.id] = h
+            self._charged[h.id] = nbytes
+            self._used += nbytes - prev
+            self._touch[h.id] = next(_CLOCK)
+            self._idle.discard(h.id)
+            self._record_high_water()
+
+    def discard(self, h: AlMatrix) -> None:
+        """The handle was freed: drop its charge and any host-store bytes."""
+        with self._lock:
+            self._handles.pop(h.id, None)
+            self._used -= self._charged.pop(h.id, 0)
+            self._host_store.pop(h.id, None)
+            self._touch.pop(h.id, None)
+            self._pin_counts.pop(h.id, None)
+            self._idle.discard(h.id)
+
+    def touch(self, h: AlMatrix) -> None:
+        """Record a consumption: resets LRU age and clears any idle hint."""
+        with self._lock:
+            if h.id in self._handles:
+                self._touch[h.id] = next(_CLOCK)
+                self._idle.discard(h.id)
+
+    def hint_idle(self, h: AlMatrix) -> None:
+        """Planner hint: the DAG holds no further uses of this matrix — make
+        it a preferred spill victim (it may still be collected or reused; a
+        hint is a priority, not a free)."""
+        with self._lock:
+            if h.id in self._handles:
+                self._idle.add(h.id)
+
+    @contextlib.contextmanager
+    def pinned(self, hs: Iterable[AlMatrix]):
+        """Keep ``hs`` unspillable while a task consumes them (a refilled
+        input must not be re-spilled by the admission of the next one)."""
+        ids = [h.id for h in hs if isinstance(h, AlMatrix)]
+        with self._lock:
+            for hid in ids:
+                self._pin_counts[hid] = self._pin_counts.get(hid, 0) + 1
+        try:
+            yield
+        finally:
+            with self._lock:
+                for hid in ids:
+                    left = self._pin_counts.get(hid, 1) - 1
+                    if left > 0:
+                        self._pin_counts[hid] = left
+                    else:
+                        self._pin_counts.pop(hid, None)
+
+    # -- spill / refill ------------------------------------------------------
+    def spill(self, h: AlMatrix) -> None:
+        """Move a resident matrix's physical bytes to the host store.
+
+        The whole transition runs under the governor lock: a concurrent
+        ``data()`` on another thread (handles hold the same lock across its
+        check-refill-slice sequence) sees the handle either fully resident or
+        fully spilled, never ``_data is None`` mid-flight.
+        """
+        with self._lock:
+            if h.state != handles_mod.MATERIALIZED or h._data is None:
+                raise HandleError(f"cannot spill AlMatrix {h.id} in state {h.state!r}")
+            host = np.asarray(jax.device_get(h._data))
+            nbytes = self._charged.get(h.id, h.physical_nbytes())
+            self._host_store[h.id] = host
+            self._used -= nbytes
+            self._charged[h.id] = 0
+            h._data = None
+            h._state = handles_mod.SPILLED
+        stats = self._stats()
+        if stats is not None:
+            stats.record_spill(nbytes)
+
+    def refill(self, h: AlMatrix) -> None:
+        """Re-place a spilled matrix on the worker group. Runs on the first
+        consumption after the spill (``AlMatrix.data()``); uses the session's
+        cached relayout plan for the ``device_put`` and may itself spill other
+        matrices to make room. Atomic under the governor lock, like spill."""
+        with self._lock:
+            host = self._host_store.get(h.id)
+            if host is None or self._session is None:
+                raise HandleError(
+                    f"AlMatrix {h.id} ({h.name!r}) has no spilled payload to refill"
+                )
+            self.admit(host.nbytes, exclude={h.id})
+            sess = self._session
+            # The host payload is the *physical* (already padded, already
+            # permuted) form, so src == dst: the cached plan is a pure
+            # placement — no permutation, and pads only if this physical
+            # shape was born unpadded (a routine output) and needs them for
+            # the device_put.
+            plan, _hit = sess.relayout_cache.plan(
+                tuple(host.shape), host.dtype, h.layout, h.layout, sess.mesh
+            )
+            arr = plan.apply(jnp.asarray(host))
+            h._data = arr
+            h.pads = (arr.shape[0] - h.shape[0], arr.shape[1] - h.shape[1])
+            h._state = handles_mod.MATERIALIZED
+            self._host_store.pop(h.id, None)
+            self.charge(h)
+        stats = self._stats()
+        if stats is not None:
+            stats.record_refill(int(host.nbytes))
+
+    def host_payload(self, h: AlMatrix) -> Optional[np.ndarray]:
+        """The spilled physical payload, or None if ``h`` is not spilled.
+        Lets the collect path serve client-bound bytes straight from the
+        host store — no refill, no admission cascade — while the handle
+        stays spilled for any later engine-side consumption."""
+        with self._lock:
+            return self._host_store.get(h.id)
+
+    # -- introspection -------------------------------------------------------
+    def spilled_handles(self) -> List[AlMatrix]:
+        with self._lock:
+            return [h for h in self._handles.values() if h.state == handles_mod.SPILLED]
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {
+                "budget": self.budget or 0,
+                "used": self._used,
+                "reserved": self._reserved,
+                "resident_handles": sum(
+                    1
+                    for h in self._handles.values()
+                    if h.state == handles_mod.MATERIALIZED
+                ),
+                "spilled_handles": len(self._host_store),
+                "host_store_bytes": sum(a.nbytes for a in self._host_store.values()),
+            }
+
+    def clear(self) -> None:
+        """Session teardown: drop every charge and host-store payload."""
+        with self._lock:
+            self._handles.clear()
+            self._charged.clear()
+            self._host_store.clear()
+            self._touch.clear()
+            self._pin_counts.clear()
+            self._idle.clear()
+            self._used = 0
+            self._reserved = 0
+
+    def _stats(self):
+        return self._session.stats if self._session is not None else None
+
+    def _record_high_water(self) -> None:
+        # caller holds self._lock
+        stats = self._stats()
+        if stats is not None:
+            stats.record_hbm_usage(self._used)
+
+    def __repr__(self) -> str:
+        s = self.snapshot()
+        return (
+            f"MemoryGovernor(budget={s['budget']}, used={s['used']}, "
+            f"resident={s['resident_handles']}, spilled={s['spilled_handles']})"
+        )

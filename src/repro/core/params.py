@@ -18,7 +18,7 @@ implemented and tested as a genuine codec, not a dict passthrough.
 from __future__ import annotations
 
 import struct
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, Tuple
 
 import numpy as np
 
@@ -81,9 +81,13 @@ def pack(params: Dict[str, Any]) -> bytes:
         elif isinstance(val, (list, tuple)) and all(
             isinstance(v, (int, np.integer)) and not isinstance(v, bool) for v in val
         ):
-            out.append(struct.pack(f"<BI{len(val)}q", _T_INT_LIST, len(val), *[int(v) for v in val]))
-        elif isinstance(val, (list, tuple)) and all(isinstance(v, (float, np.floating)) for v in val):
-            out.append(struct.pack(f"<BI{len(val)}d", _T_FLOAT_LIST, len(val), *[float(v) for v in val]))
+            vals = [int(v) for v in val]
+            out.append(struct.pack(f"<BI{len(val)}q", _T_INT_LIST, len(val), *vals))
+        elif isinstance(val, (list, tuple)) and all(
+            isinstance(v, (float, np.floating)) for v in val
+        ):
+            vals = [float(v) for v in val]
+            out.append(struct.pack(f"<BI{len(val)}d", _T_FLOAT_LIST, len(val), *vals))
         else:
             raise ParameterError(
                 f"cannot pack parameter {key!r} of type {type(val).__name__}; "
@@ -99,7 +103,9 @@ class HandleRef:
     this is the 'pointer to a DistMatrix' of the paper.
     """
 
-    def __init__(self, handle_id: int, session_id: int, shape: Tuple[int, int], dtype: str, layout: str):
+    def __init__(
+        self, handle_id: int, session_id: int, shape: Tuple[int, int], dtype: str, layout: str
+    ):
         self.id = handle_id
         self.session_id = session_id
         self.shape = shape

@@ -21,19 +21,30 @@ sparklike→Alchemist pipeline from paying the bridge between every call:
 The planner is per-:class:`~repro.core.engine.AlchemistContext` (reached via
 ``ac.planner``), so its caches are session-scoped like the relayout plan
 cache, and its counters land in the same ``session.stats.summary()``.
+
+Two DESIGN.md §7 responsibilities ride on the DAG:
+
+- **Graph-build shape validation.** :meth:`OffloadPlanner.run` applies the
+  per-routine shape rules (:data:`repro.core.expr.SHAPE_RULES`), so a
+  dimension mismatch raises a client-side ShapeError at the call site.
+- **Last-use spill hints.** The planner knows each intermediate's final
+  consumer; when that consumer's task completes, the produced matrices are
+  hinted to the session's memory governor as preferred spill victims. A
+  spilled intermediate is still an elided crossing — consuming it later costs
+  a host→device refill, never a bridge round trip.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import TYPE_CHECKING, Any, Dict, Optional, Tuple, Union
+from typing import TYPE_CHECKING, Any, Dict, Tuple, Union
 
 import numpy as np
 
 from repro.core import futures as futures_mod
 from repro.core import handles as handles_mod
-from repro.core.errors import SessionError
-from repro.core.expr import Expr, LazyMatrix, ProjExpr, RunExpr, SendExpr
+from repro.core.errors import SessionError, ShapeError
+from repro.core.expr import Expr, LazyMatrix, ProjExpr, RunExpr, SendExpr, iter_nodes
 from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 
@@ -55,6 +66,12 @@ class OffloadPlanner:
         self._resident: Dict[Tuple, Any] = {}
         # expr id -> lowered value (AlFuture / AlMatrix / scalar)
         self._lowered: Dict[int, Any] = {}
+        # DAG last-use tracking for the memory governor: expr id -> number of
+        # consumers whose tasks have not yet completed, and the set of nodes
+        # whose out-edges were already counted (lowering is idempotent; the
+        # count must be too).
+        self._remaining_uses: Dict[int, int] = {}
+        self._counted: set = set()
         # Reentrant: held across the whole recursive lowering walk, so two
         # threads collecting DAGs that share a node cannot both dispatch it
         # (submission is non-blocking; futures are resolved outside the lock).
@@ -77,7 +94,12 @@ class OffloadPlanner:
         """Defer ``library.routine``. Args may be LazyMatrix nodes, AlMatrix
         handles, host ndarrays (auto-wrapped as deferred sends, so they dedup
         too), or scalars. With ``n_outputs > 1`` returns a tuple of
-        LazyMatrix, one per output of the routine."""
+        LazyMatrix, one per output of the routine.
+
+        Chains validate as they are built: routines with a shape rule
+        (every ElementalLib routine) raise a client-side ShapeError here on
+        mismatched operand dimensions, instead of failing deep inside the
+        task queue at execution time."""
         if n_outputs < 1:
             raise SessionError(f"n_outputs must be >= 1, got {n_outputs}")
         wrapped = tuple(self._wrap_arg(a) for a in args)
@@ -88,6 +110,7 @@ class OffloadPlanner:
             params=dict(params),
             n_outputs=n_outputs,
         )
+        node.output_shapes()  # graph-build validation; raises ShapeError
         if n_outputs == 1:
             return LazyMatrix(node, self)
         return tuple(
@@ -137,7 +160,64 @@ class OffloadPlanner:
         node = lazy.expr if isinstance(lazy, LazyMatrix) else lazy
         if not isinstance(node, Expr):
             return node
+        with self._lock:
+            self._count_uses(node)
         return self._lower(node)
+
+    def _count_uses(self, root: Expr) -> None:
+        """Record each node's consumer count (DAG last-use info for the
+        memory governor). Caller holds the lock; each node's out-edges are
+        counted once, so repeated lower() calls on overlapping DAGs only add
+        the genuinely new consumers."""
+        for node in iter_nodes(root):
+            if node.id in self._counted:
+                continue
+            self._counted.add(node.id)
+            if isinstance(node, RunExpr):
+                children = [a for a in node.args if isinstance(a, Expr)]
+            elif isinstance(node, ProjExpr):
+                children = [node.parent]
+            else:
+                children = []
+            for child in children:
+                self._remaining_uses[child.id] = (
+                    self._remaining_uses.get(child.id, 0) + 1
+                )
+
+    def _consumed(self, node: Expr) -> None:
+        """A consumer task of ``node`` completed. At zero remaining uses the
+        node's engine-resident outputs are hinted to the governor as past
+        their DAG last use — preferred spill victims, still live."""
+        hint_val = None
+        with self._lock:
+            left = self._remaining_uses.get(node.id)
+            if left is None:
+                return
+            left -= 1
+            self._remaining_uses[node.id] = left
+            if left > 0:
+                return
+            hint_val = self._lowered.get(node.id)
+            if isinstance(node, ProjExpr):
+                # A projection is a pass-through: its last use is also one
+                # more consumption of the parent routine's output tuple.
+                parent = node.parent
+            else:
+                parent = None
+        self._hint_idle_value(hint_val)
+        if parent is not None:
+            self._consumed(parent)
+
+    def _hint_idle_value(self, val: Any) -> None:
+        memgov = self.ac.session.memgov
+        if isinstance(val, AlFuture):
+            if not val.done() or val.exception() is not None:
+                return
+            val = val.result()
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for v in vals:
+            if isinstance(v, AlMatrix):
+                memgov.hint_idle(v)
 
     def _lower(self, node: Expr) -> Any:
         with self._lock:
@@ -167,7 +247,16 @@ class OffloadPlanner:
         if cached is not None and self._is_live(cached):
             # The naive pipeline would push these bytes across the bridge
             # again; the planner hands back the already-resident matrix.
+            # A *spilled* resident matrix still counts: its bytes live in the
+            # session's host store and refill on consumption — host↔device
+            # traffic, never a bridge crossing. Touching the governor resets
+            # its LRU age so imminent reuse isn't immediately re-spilled.
             stats.record_resident_reuse()
+            val = cached
+            if isinstance(val, AlFuture) and val.done() and val.exception() is None:
+                val = val.result()
+            if isinstance(val, AlMatrix):
+                self.ac.session.memgov.touch(val)
             return cached
         fut = self.ac.send_async(node.array, name=node.name)
         self._resident[node.key] = fut
@@ -176,19 +265,68 @@ class OffloadPlanner:
     def _lower_run(self, node: RunExpr) -> AlFuture:
         stats = self.ac.session.stats
         lowered_args = []
+        consumed_exprs = []
         for a in node.args:
             if isinstance(a, (RunExpr, ProjExpr)):
                 # Engine-resident intermediate consumed in place: one
                 # collect + re-send round trip the naive execution would
-                # have paid is elided.
+                # have paid is elided (even when the governor has spilled it
+                # in the meantime — the refill is host→device, not a bridge
+                # crossing).
                 stats.record_elision()
                 lowered_args.append(self._lower(a))
+                consumed_exprs.append(a)
             elif isinstance(a, Expr):
                 lowered_args.append(self._lower(a))
+                consumed_exprs.append(a)
             else:
                 lowered_args.append(a)
         stats.record_planned_op()
-        return self.ac.run_async(node.library, node.routine, *lowered_args, **node.params)
+        try:
+            out_shapes = node.output_shapes()  # governor reservation hint
+        except ShapeError:
+            out_shapes = None  # late mismatch: surfaces at execution
+        fut = self.ac.run_async(
+            node.library,
+            node.routine,
+            *lowered_args,
+            _out_shapes=out_shapes,
+            _out_dtype=self._arg_dtype(node),
+            **node.params,
+        )
+        if consumed_exprs:
+            # DAG last-use accounting: once this routine's task completes,
+            # each Expr operand has one fewer outstanding consumer; at zero
+            # the governor is hinted that its matrices are spill-preferred.
+            args_tuple = tuple(consumed_exprs)
+            fut.add_done_callback(
+                lambda _parent: [self._consumed(a) for a in args_tuple]
+            )
+        return fut
+
+    @staticmethod
+    def _arg_dtype(node: RunExpr) -> Any:
+        """Best-known operand dtype for the governor's output-byte pricing —
+        the engine can't see it through still-pending futures. Send nodes and
+        live handles carry a dtype; run/projection operands don't, so the
+        walk recurses to the leaves (a chain of f64 gemms must price f64
+        even when every direct operand is itself a deferred run)."""
+        stack = list(node.args)
+        seen = set()
+        while stack:
+            a = stack.pop(0)
+            if isinstance(a, Expr):
+                if a.id in seen:
+                    continue
+                seen.add(a.id)
+            dt = getattr(a, "dtype", None)
+            if dt:
+                return dt
+            if isinstance(a, ProjExpr):
+                stack.append(a.parent)
+            elif isinstance(a, RunExpr):
+                stack.extend(a.args)
+        return None
 
     @staticmethod
     def _project(parent: Any, index: int) -> Any:
@@ -238,6 +376,16 @@ class OffloadPlanner:
         vals = val if isinstance(val, (tuple, list)) else (val,)
         return any(isinstance(v, AlMatrix) and v.state == handles_mod.FREED for v in vals)
 
+    def peek(self, lazy: LazyLike) -> Any:
+        """The node's already-lowered value (future/handle/scalar), or None
+        if lowering hasn't happened — never triggers execution. Lets callers
+        (e.g. sparklike's LazyRowMatrix) observe resident/spilled state."""
+        node = lazy.expr if isinstance(lazy, LazyMatrix) else lazy
+        if not isinstance(node, Expr):
+            return node
+        with self._lock:
+            return self._lowered.get(node.id)
+
     # -- maintenance ---------------------------------------------------------
     def reset(self) -> None:
         """Drop the lowering memo and resident cache (e.g. after bulk frees).
@@ -245,12 +393,15 @@ class OffloadPlanner:
         with self._lock:
             self._resident.clear()
             self._lowered.clear()
+            self._remaining_uses.clear()
+            self._counted.clear()
 
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return {
                 "resident_entries": len(self._resident),
                 "lowered_nodes": len(self._lowered),
+                "tracked_last_uses": len(self._remaining_uses),
             }
 
     def __repr__(self) -> str:

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import inspect
-from typing import Any, Callable, Dict, Optional, Tuple, Union
+from typing import Any, Callable, Dict, Tuple, Union
 
 from repro.core.errors import LibraryError
 

@@ -23,7 +23,6 @@ Two faces:
 from __future__ import annotations
 
 import dataclasses
-import math
 import threading
 import time
 from typing import Any, Dict, Optional, Tuple
@@ -190,6 +189,47 @@ def transfer_cost(
 
 
 # ---------------------------------------------------------------------------
+# Pad-to-divisible geometry
+# ---------------------------------------------------------------------------
+#
+# ``jax.device_put`` into a NamedSharding (the bridge's send path) requires
+# each sharded dim to be divisible by its shard count on jax 0.4.x, so e.g. a
+# 6x6 matrix could not be sent to a 4-worker session. The bridge lifts this by
+# padding each dim up to the next multiple of its destination shard count with
+# zero rows/cols before ``device_put`` and slicing the padding back off on
+# collect/refill. Padding amounts are part of the relayout plan; the handle
+# layer records (pad_rows, pad_cols) so logical reads never see the zeros.
+
+
+def pad_amounts(shape: Tuple[int, int], dst: LayoutSpec, mesh: Mesh) -> Tuple[int, int]:
+    """(pad_rows, pad_cols) making ``shape`` shardable under ``dst`` on ``mesh``.
+
+    Cyclic layouts cannot be padded: the emulation's row permutation is a
+    function of the physical length, so appended zero rows would interleave
+    into the interior and silently corrupt ``data()``/collect slicing. An
+    uneven shape into a cyclic layout raises loudly instead (exactly the
+    pre-padding behaviour of the bare ``device_put``).
+    """
+    n_r, n_c = dst.grid_shape(mesh)
+    pads = (-int(shape[0])) % n_r, (-int(shape[1])) % n_c
+    if pads != (0, 0) and dst.cyclic:
+        raise LayoutError(
+            f"shape {tuple(shape)} is not divisible for cyclic layout {dst.name!r} "
+            f"(grid {n_r}x{n_c}); pad-to-divisible does not compose with the "
+            "cyclic row permutation — pad the matrix explicitly before sending"
+        )
+    return pads
+
+
+def pad_for(x: jax.Array, dst: LayoutSpec, mesh: Mesh) -> Tuple[jax.Array, Tuple[int, int]]:
+    """Zero-pad ``x`` so ``device_put`` into ``dst`` is legal; returns the pads."""
+    pads = pad_amounts(tuple(x.shape), dst, mesh)
+    if pads != (0, 0):
+        x = jnp.pad(x, ((0, pads[0]), (0, pads[1])))
+    return x, pads
+
+
+# ---------------------------------------------------------------------------
 # Performing the relayout
 # ---------------------------------------------------------------------------
 
@@ -204,18 +244,28 @@ def relayout(
     """Eagerly reshard ``x`` (a 2D matrix) into layout ``dst`` on ``mesh``.
 
     If the source layout was cyclic and the destination is not (or vice
-    versa), the row permutation is applied/undone first.
+    versa), the row permutation is applied/undone first. Shapes whose dims
+    are not divisible by the destination shard counts are padded for the
+    ``device_put`` and sliced back, so the logical shape is preserved.
     """
     dst.validate(x.shape, mesh)
     arr = x
     src_cyclic = bool(src.cyclic) if src is not None else False
     if src_cyclic != dst.cyclic:
-        perm = cyclic_permutation(x.shape[0], dst.grid_shape(mesh)[0] if dst.cyclic else (src.grid_shape(mesh)[0] if src else 1))
+        if dst.cyclic:
+            n_shards = dst.grid_shape(mesh)[0]
+        else:
+            n_shards = src.grid_shape(mesh)[0] if src else 1
+        perm = cyclic_permutation(x.shape[0], n_shards)
         if dst.cyclic:
             arr = jnp.take(arr, jnp.asarray(perm), axis=0)
         else:
             arr = jnp.take(arr, jnp.asarray(inverse_permutation(perm)), axis=0)
-    return jax.device_put(arr, dst.sharding(mesh))
+    arr, pads = pad_for(arr, dst, mesh)
+    out = jax.device_put(arr, dst.sharding(mesh))
+    if pads != (0, 0):
+        out = out[: x.shape[0], : x.shape[1]]
+    return out
 
 
 def relayout_in_jit(x: jax.Array, dst: LayoutSpec, mesh: Mesh) -> jax.Array:
@@ -257,14 +307,32 @@ class RelayoutPlan:
     cost: TransferCost
     dst_sharding: NamedSharding
     permutation: Optional[jnp.ndarray]  # pre-relayout row permutation, if any
+    pads: Tuple[int, int] = (0, 0)  # zero rows/cols appended for divisibility
     uses: int = 0
 
+    @property
+    def physical_shape(self) -> Tuple[int, int]:
+        return (self.shape[0] + self.pads[0], self.shape[1] + self.pads[1])
+
     def apply(self, x: jax.Array) -> jax.Array:
-        """Execute the planned relayout on ``x`` (async-dispatched)."""
+        """Execute the planned relayout on ``x`` (async-dispatched).
+
+        Returns the *physical* (possibly padded) array; use :meth:`strip` to
+        recover the logical matrix, or keep it padded for residency and strip
+        on read (the handle layer's choice).
+        """
         arr = x
         if self.permutation is not None:
             arr = jnp.take(arr, self.permutation, axis=0)
+        if self.pads != (0, 0):
+            arr = jnp.pad(arr, ((0, self.pads[0]), (0, self.pads[1])))
         return jax.device_put(arr, self.dst_sharding)
+
+    def strip(self, y: jax.Array) -> jax.Array:
+        """Slice the divisibility padding back off a planned-relayout result."""
+        if self.pads == (0, 0):
+            return y
+        return y[: self.shape[0], : self.shape[1]]
 
 
 class RelayoutPlanCache:
@@ -333,6 +401,7 @@ class RelayoutPlanCache:
             cost=cost,
             dst_sharding=dst.sharding(mesh),
             permutation=perm,
+            pads=pad_amounts(tuple(shape), dst, mesh),
         )
 
     def stats(self) -> Dict[str, int]:
@@ -347,6 +416,11 @@ class TransferRecord:
     cost: TransferCost
     seconds: float
     cache_hit: bool = False  # did the relayout plan come from the plan cache?
+    pads: Tuple[int, int] = (0, 0)  # divisibility padding applied by the plan
+    #: False for transfers that never consulted the plan cache (a collect
+    #: served from the governor's host store) — they must not count toward
+    #: the cache hit/miss rate.
+    planned: bool = True
 
 
 def timed_relayout(
@@ -358,6 +432,7 @@ def timed_relayout(
     direction: str = "send",
     cache: Optional[RelayoutPlanCache] = None,
     block: bool = True,
+    strip: bool = True,
 ) -> Tuple[jax.Array, TransferRecord]:
     """Relayout + analytic cost + measured wall time, as one record.
 
@@ -369,19 +444,29 @@ def timed_relayout(
     session's :class:`RelayoutPlanCache`. With ``block=False`` the relayout is
     dispatched asynchronously and ``seconds`` measures dispatch only — the
     task-queue engine's pipelined path, where the wait is absorbed by the
-    eventual ``collect``.
+    eventual ``collect``. With ``strip=False`` a divisibility-padded result is
+    returned physical (padded); the caller records ``rec.pads`` against the
+    handle so logical reads slice the zeros back off (the send path's choice
+    — a resident matrix keeps its put-legal physical form for cheap refills).
     """
     hit = False
+    pads = (0, 0)
     if cache is not None:
         plan, hit = cache.plan(tuple(x.shape), x.dtype, src, dst, mesh)
         cost = plan.cost
+        pads = plan.pads
         t0 = time.perf_counter()
         out = plan.apply(x)
+        if strip:
+            out = plan.strip(out)
+            pads = (0, 0)
     else:
         cost = transfer_cost(tuple(x.shape), x.dtype, src, dst, mesh)
         t0 = time.perf_counter()
-        out = relayout(x, dst, mesh, src=src)
+        out = relayout(x, dst, mesh, src=src)  # pads + strips internally
     if block:
         out.block_until_ready()
     dt = time.perf_counter() - t0
-    return out, TransferRecord(direction=direction, cost=cost, seconds=dt, cache_hit=hit)
+    return out, TransferRecord(
+        direction=direction, cost=cost, seconds=dt, cache_hit=hit, pads=pads
+    )

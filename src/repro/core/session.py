@@ -13,7 +13,12 @@ Each session additionally owns (DESIGN.md §3):
   ordering while letting distinct sessions overlap;
 - a :class:`~repro.core.relayout.RelayoutPlanCache` — memoized shard
   geometry for repeated same-shape transfers, with hit/miss counters
-  surfaced through :class:`SessionStats`.
+  surfaced through :class:`SessionStats`;
+- a :class:`~repro.core.memgov.MemoryGovernor` — the per-worker-group HBM
+  byte budget that spills least-recently/last-used resident matrices to a
+  pinned host store under pressure and transparently refills them on next
+  consumption (DESIGN.md §7), with spill/refill/high-water counters in
+  :class:`SessionStats`.
 """
 
 from __future__ import annotations
@@ -29,6 +34,7 @@ from repro.core.errors import HandleError, SessionError
 from repro.core import handles as handles_mod
 from repro.core.handles import AlMatrix
 from repro.core.layouts import LayoutSpec
+from repro.core.memgov import MemoryGovernor
 from repro.core.registry import Library
 from repro.core.relayout import RelayoutPlanCache, TransferRecord
 from repro.core.taskqueue import TaskQueue
@@ -55,14 +61,21 @@ class SessionStats:
     elided_crossings: int = 0  # collect+resend round trips never performed
     resident_reuses: int = 0  # sends satisfied from the resident-matrix cache
     planned_ops: int = 0  # routine invocations lowered by the planner
+    # Memory-governor counters (DESIGN.md §7): budgeted residency.
+    spills: int = 0  # resident matrices moved to the pinned host store
+    refills: int = 0  # spilled matrices transparently re-placed on device
+    spilled_bytes: int = 0  # cumulative bytes spilled to host
+    refilled_bytes: int = 0  # cumulative bytes refilled to device
+    hbm_high_water: int = 0  # max bytes simultaneously charged to the budget
     transfers: List[TransferRecord] = dataclasses.field(default_factory=list)
 
     def record_transfer(self, rec: TransferRecord) -> None:
         self.transfers.append(rec)
-        if rec.cache_hit:
-            self.relayout_cache_hits += 1
-        else:
-            self.relayout_cache_misses += 1
+        if rec.planned:  # host-store-served transfers never used a plan
+            if rec.cache_hit:
+                self.relayout_cache_hits += 1
+            else:
+                self.relayout_cache_misses += 1
         if rec.direction == "send":
             self.send_bytes += rec.cost.bytes_total
             self.send_seconds += rec.seconds
@@ -85,6 +98,17 @@ class SessionStats:
     def record_planned_op(self, n: int = 1) -> None:
         self.planned_ops += n
 
+    def record_spill(self, nbytes: int) -> None:
+        self.spills += 1
+        self.spilled_bytes += int(nbytes)
+
+    def record_refill(self, nbytes: int) -> None:
+        self.refills += 1
+        self.refilled_bytes += int(nbytes)
+
+    def record_hbm_usage(self, used_bytes: int) -> None:
+        self.hbm_high_water = max(self.hbm_high_water, int(used_bytes))
+
     def summary(self) -> Dict[str, Any]:
         return {
             "send_bytes": self.send_bytes,
@@ -100,13 +124,24 @@ class SessionStats:
             "elided_crossings": self.elided_crossings,
             "resident_reuses": self.resident_reuses,
             "planned_ops": self.planned_ops,
+            "spills": self.spills,
+            "refills": self.refills,
+            "spilled_bytes": self.spilled_bytes,
+            "refilled_bytes": self.refilled_bytes,
+            "hbm_high_water": self.hbm_high_water,
         }
 
 
 class Session:
     """One client application's state on the engine."""
 
-    def __init__(self, name: str, mesh: Mesh, worker_devices: List[jax.Device]):
+    def __init__(
+        self,
+        name: str,
+        mesh: Mesh,
+        worker_devices: List[jax.Device],
+        hbm_budget: Optional[int] = None,
+    ):
         self.id = next(_SESSION_IDS)
         self.name = name
         self.mesh = mesh
@@ -116,6 +151,9 @@ class Session:
         self.stats = SessionStats()
         self.tasks = TaskQueue(name=f"session-{self.id}")
         self.relayout_cache = RelayoutPlanCache()
+        # The worker group's HBM budget (None = unlimited: pure accounting).
+        self.memgov = MemoryGovernor(budget=hbm_budget, name=f"memgov-{self.id}")
+        self.memgov.bind(self)
         self.closed = False
 
     # -- handle table -------------------------------------------------------
@@ -125,6 +163,10 @@ class Session:
         layout: LayoutSpec,
         name: str = "",
     ) -> AlMatrix:
+        """Register an already-resident array (a routine output: born
+        unpadded, so logical shape == physical shape — padded sends go
+        through new_pending_handle + materialize(pads=...) instead) and
+        charge it against the session's HBM budget."""
         self._check_open()
         h = AlMatrix(
             shape=tuple(data.shape),
@@ -135,6 +177,7 @@ class Session:
             _data=data,
         )
         self.handles[h.id] = h
+        self.memgov.charge(h)
         return h
 
     def new_pending_handle(
@@ -159,6 +202,7 @@ class Session:
             session_id=self.id,
             name=name,
             _state=handles_mod.PENDING,
+            _governor=self.memgov,
         )
         self.handles[h.id] = h
         return h
@@ -202,6 +246,7 @@ class Session:
             h.free()
         self.handles.clear()
         self.libraries.clear()
+        self.memgov.clear()
         self.closed = True
 
     def _check_open(self) -> None:

@@ -39,6 +39,10 @@ class TaskQueue:
         self.tasks_submitted = 0
         self.tasks_completed = 0
         self.tasks_failed = 0
+        # Deepest backlog ever observed at submit time: how far ahead of the
+        # worker the client ran. The memory governor's reservations track the
+        # bytes side of the same pipelining (DESIGN.md §7).
+        self.max_backlog = 0
 
     # -- submission ----------------------------------------------------------
     def submit(self, fn: Callable[[], Any], *, label: str = "") -> AlFuture:
@@ -49,6 +53,7 @@ class TaskQueue:
                 raise TaskError(f"TaskQueue {self.name!r} is closed")
             self.tasks_submitted += 1
             self._q.put((fn, future))
+            self.max_backlog = max(self.max_backlog, self._q.qsize())
             self._ensure_worker()
         return future
 
@@ -138,6 +143,7 @@ class TaskQueue:
             "submitted": self.tasks_submitted,
             "completed": self.tasks_completed,
             "failed": self.tasks_failed,
+            "max_backlog": self.max_backlog,
         }
 
     def __repr__(self) -> str:

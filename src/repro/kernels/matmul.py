@@ -16,7 +16,7 @@ stream HBM→VMEM. VMEM working set = bm*bk + bk*bn + bm*bn(f32)
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ import os
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _flash
 from repro.kernels import matmul as _matmul
@@ -52,7 +51,9 @@ def _interp() -> bool:
     return _BACKEND == "pallas-interpret"
 
 
-def matmul(a: jax.Array, b: jax.Array, *, out_dtype=None, block: Optional[Tuple[int, int, int]] = None) -> jax.Array:
+def matmul(
+    a: jax.Array, b: jax.Array, *, out_dtype=None, block: Optional[Tuple[int, int, int]] = None
+) -> jax.Array:
     """Local (per-device) GEMM with f32 accumulation."""
     if use_pallas():
         bm, bn, bk = block or (_matmul.DEFAULT_BM, _matmul.DEFAULT_BN, _matmul.DEFAULT_BK)

@@ -254,7 +254,8 @@ def ssd_chunked(
     )                                                      # per-chunk state contribution
     chunk_decay = jnp.exp(jnp.sum(la, axis=2))             # [B,nc,H]
 
-    h0 = (init_state if init_state is not None else jnp.zeros((B, H, P, N), jnp.float32)).astype(jnp.float32)
+    h0 = init_state if init_state is not None else jnp.zeros((B, H, P, N), jnp.float32)
+    h0 = h0.astype(jnp.float32)
 
     def pass_state(h, t):
         dec, sc = t

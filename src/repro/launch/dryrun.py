@@ -29,11 +29,10 @@ import json
 import sys
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ARCH_IDS, INPUT_SHAPES, ArchConfig, InputShape, get_config
 from repro.core.sharding import ShardingRules, divisible_spec
@@ -144,9 +143,11 @@ def _lower_one(
 
         if shape.kind == "prefill":
             if hasattr(model, "prefill"):
-                fn = lambda p, b: model.prefill(p, b)
+                def fn(p, b):
+                    return model.prefill(p, b)
             else:
-                fn = lambda p, b: model.forward(p, b)
+                def fn(p, b):
+                    return model.forward(p, b)
             return jax.jit(fn, in_shardings=(param_sh, batch_sh)).lower(
                 param_structs, batch_structs
             )

@@ -20,11 +20,10 @@ import json
 import sys
 import time
 import traceback
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
-import jax
 
-from repro.configs.base import ArchConfig, INPUT_SHAPES, get_config
+from repro.configs.base import ArchConfig, get_config
 from repro.core.sharding import ShardingRules
 from repro.launch.dryrun import lower_combo
 from repro.launch.mesh import make_production_mesh

@@ -30,29 +30,39 @@ def roofline_table(records: List[Dict]) -> str:
             )
             continue
         if not r["ok"]:
-            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAIL | — | — | {r['error'][:60]} |")
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | FAIL | — | — | {r['error'][:60]} |"
+            )
             continue
         p = r["report"]
         rows.append(
             f"| {r['arch']} | {r['shape']} | {p['compute_seconds']*1e3:.1f} | "
             f"{p['memory_seconds']*1e3:.1f} | {p['collective_seconds']*1e3:.1f} | "
             f"**{p['dominant']}** | {p['useful_flops_ratio']:.2f} | "
-            f"{_gib(p.get('argument_bytes',0)+p.get('temp_bytes',0))} | {p.get('cost_method','')[:24]} |"
+            f"{_gib(p.get('argument_bytes', 0) + p.get('temp_bytes', 0))} | "
+            f"{p.get('cost_method', '')[:24]} |"
         )
     return "\n".join(rows)
 
 
 def dryrun_table(records: List[Dict]) -> str:
     rows = [
-        "| arch | shape | mesh | status | args GiB | temp GiB | FLOPs/dev | coll B/dev | compile s |",
+        "| arch | shape | mesh | status | args GiB | temp GiB "
+        "| FLOPs/dev | coll B/dev | compile s |",
         "|---|---|---|---|---:|---:|---:|---:|---:|",
     ]
     for r in records:
         if r["skipped"]:
-            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP ({r['reason'][:48]}) | | | | | |")
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| SKIP ({r['reason'][:48]}) | | | | | |"
+            )
             continue
         if not r["ok"]:
-            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | **FAIL** {r['error'][:48]} | | | | | |")
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| **FAIL** {r['error'][:48]} | | | | | |"
+            )
             continue
         p = r["report"]
         rows.append(
@@ -68,7 +78,10 @@ def hillclimb_table(results: Dict) -> str:
     out = []
     for pair, recs in results.items():
         out.append(f"\n#### {pair}\n")
-        out.append("| variant | compute ms | memory ms | collective ms | bound | temp GiB | vs baseline (c/m/coll) |")
+        out.append(
+            "| variant | compute ms | memory ms | collective ms | bound | temp GiB "
+            "| vs baseline (c/m/coll) |"
+        )
         out.append("|---|---:|---:|---:|---|---:|---|")
         for r in recs:
             if not r.get("ok"):

@@ -24,7 +24,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding
 
 from repro.core.layouts import AXIS_DATA, AXIS_MODEL, AXIS_POD, GRID
 from repro.core import sharding as shardcore
@@ -205,5 +205,7 @@ def multiply(a: jax.Array, b: jax.Array, mesh: Mesh, *, schedule: str = "summa")
     try:
         fn = SCHEDULES[schedule]
     except KeyError:
-        raise ValueError(f"unknown GEMM schedule {schedule!r}; known: {sorted(SCHEDULES)}") from None
+        raise ValueError(
+            f"unknown GEMM schedule {schedule!r}; known: {sorted(SCHEDULES)}"
+        ) from None
     return fn(a, b, mesh)

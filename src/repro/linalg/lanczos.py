@@ -17,12 +17,11 @@ bf16 Gram updates destroy orthogonality within a few iterations.
 
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.core import sharding as shardcore
 from repro.core.layouts import GRID

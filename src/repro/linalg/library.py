@@ -15,7 +15,6 @@ their signature asks for it — the session's worker-group ``mesh``.
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 from repro.core.registry import Library
 from repro.linalg import gemm as _gemm
@@ -54,7 +53,9 @@ class ElementalLib(Library):
 
     @staticmethod
     def _truncated_svd(a, *, k: int = 10, oversample: int = 10, seed: int = 0, mesh=None):
-        u, s, v = _svd.truncated_svd(a, int(k), oversample=int(oversample), mesh=mesh, seed=int(seed))
+        u, s, v = _svd.truncated_svd(
+            a, int(k), oversample=int(oversample), mesh=mesh, seed=int(seed)
+        )
         return u, s, v
 
     @staticmethod

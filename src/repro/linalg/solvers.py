@@ -9,11 +9,11 @@ make the engine useful as an ML substrate.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 from repro.core import sharding as shardcore
 from repro.core.layouts import GRID

@@ -18,11 +18,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 from repro.core import sharding as shardcore
-from repro.core.layouts import GRID, ROW
-from repro.kernels import ops
+from repro.core.layouts import GRID
 from repro.linalg.lanczos import truncated_svd_lanczos
 from repro.linalg.tsqr import tsqr
 

@@ -13,7 +13,6 @@ is exactly the kind of routine the paper offloads.
 
 from __future__ import annotations
 
-import math
 from typing import Tuple
 
 import jax

@@ -8,7 +8,6 @@ position bookkeeping needs explicit key positions.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -52,25 +51,25 @@ def attn_defs(cfg: ArchConfig, *, cross: bool = False) -> Dict[str, ParamDef]:
 
 
 def _project_q(cfg, p, x, ax: Ax) -> jax.Array:
-    b, l, _ = x.shape
+    b, seq, _ = x.shape
     q = x @ p["wq"].astype(x.dtype)
     if "bq" in p:
         q = q + p["bq"].astype(x.dtype)
-    q = q.reshape(b, l, cfg.n_heads, cfg.head_dim)
+    q = q.reshape(b, seq, cfg.n_heads, cfg.head_dim)
     if "q_norm" in p:
         q = common.rms_norm(q, p["q_norm"], cfg.rms_eps)
     return ax(q, "batch", None, "tensor", None)
 
 
 def _project_kv(cfg, p, x, ax: Ax) -> Tuple[jax.Array, jax.Array]:
-    b, l, _ = x.shape
+    b, seq, _ = x.shape
     k = x @ p["wk"].astype(x.dtype)
     v = x @ p["wv"].astype(x.dtype)
     if "bk" in p:
         k = k + p["bk"].astype(x.dtype)
         v = v + p["bv"].astype(x.dtype)
-    k = k.reshape(b, l, cfg.n_kv_heads, cfg.head_dim)
-    v = v.reshape(b, l, cfg.n_kv_heads, cfg.head_dim)
+    k = k.reshape(b, seq, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(b, seq, cfg.n_kv_heads, cfg.head_dim)
     if "k_norm" in p:
         k = common.rms_norm(k, p["k_norm"], cfg.rms_eps)
     return ax(k, "batch", None, "tensor", None), ax(v, "batch", None, "tensor", None)
@@ -93,7 +92,7 @@ def attention_block(
     With ``return_kv`` the post-rope K/V are also returned ([B, L, Hkv, hd])
     so prefill can populate decode caches.
     """
-    b, l, d = x.shape
+    b, seq, d = x.shape
     q = _project_q(cfg, p, x, ax)
     if cross_kv is not None:
         k, v = cross_kv
@@ -103,7 +102,7 @@ def attention_block(
         k, v = _project_kv(cfg, p, x, ax)
         if cfg.pos_emb == "rope":
             pos = positions if positions is not None else jnp.broadcast_to(
-                jnp.arange(l)[None, :], (b, l)
+                jnp.arange(seq)[None, :], (b, seq)
             )
             q = common.apply_rope(q, pos, cfg.rope_theta)
             k = common.apply_rope(k, pos, cfg.rope_theta)
@@ -117,7 +116,7 @@ def attention_block(
         window=window,
     ).transpose(0, 2, 1, 3)
     out = ax(out, "batch", None, "tensor", None)
-    out = out.reshape(b, l, cfg.n_heads * cfg.head_dim)
+    out = out.reshape(b, seq, cfg.n_heads * cfg.head_dim)
     y = out @ p["wo"].astype(x.dtype)
     if return_kv:
         return y, (k, v)
@@ -167,8 +166,12 @@ def decode_attention(
             k_new = common.apply_rope(k_new, pos_b, cfg.rope_theta)
         s = cache.size
         slot = (pos % s).astype(jnp.int32)
-        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), slot, axis=1)
-        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), slot, axis=1)
+        k_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.k, k_new.astype(cache.k.dtype), slot, axis=1
+        )
+        v_all = jax.lax.dynamic_update_slice_in_dim(
+            cache.v, v_new.astype(cache.v.dtype), slot, axis=1
+        )
         new_cache = KVCache(k=k_all, v=v_all)
         # absolute position held in each slot right now
         idx = jnp.arange(s)

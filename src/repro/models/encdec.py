@@ -140,8 +140,8 @@ class EncDecLM:
         x = common.embed_tokens(params, tokens, self.compute_dtype)
         x = x + params["pos_embed"][: x.shape[1]].astype(x.dtype)[None]
         x = ax(x, "batch", None, None)
-        b, l, _ = x.shape
-        positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+        b, seq, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(seq)[None], (b, seq))
 
         layer = functools.partial(self._decoder_layer, enc_out=enc_out, positions=positions)
         fn = jax.checkpoint(lambda c, lp: layer(c, lp)) if self.remat != "none" else (

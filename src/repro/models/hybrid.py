@@ -25,9 +25,8 @@ from repro.configs.base import ArchConfig
 from repro.core.sharding import ShardingRules
 from repro.models import attention as attn_mod
 from repro.models import common, mlp as mlp_mod, moe as moe_mod, ssm as ssm_mod
-from repro.models.common import Ax, ParamDef
+from repro.models.common import Ax
 from repro.models.transformer import (
-    DecodeState,
     _mask_pad_vocab,
     _masked_xent,
     stack_defs,
@@ -64,7 +63,11 @@ class HybridLM:
         self.period = cfg.attn_period
         self.n_periods = cfg.n_layers // cfg.attn_period
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        self.num_groups = int(np.prod([sizes[a] for a in self.rules.batch], dtype=np.int64)) if self.rules.batch else 1
+        self.num_groups = (
+            int(np.prod([sizes[a] for a in self.rules.batch], dtype=np.int64))
+            if self.rules.batch
+            else 1
+        )
         self.compute_dtype = jnp.dtype(cfg.compute_dtype)
 
     # ------------------------------------------------------------------ defs
@@ -152,8 +155,8 @@ class HybridLM:
         tokens = batch["tokens"]
         x = common.embed_tokens(params, tokens, self.compute_dtype)
         x = self.ax(x, "batch", None, None)
-        b, l, _ = x.shape
-        positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+        b, seq, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(seq)[None], (b, seq))
 
         fn = functools.partial(self._period_train, positions=positions)
         if self.remat in ("full", "dots"):

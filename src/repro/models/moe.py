@@ -60,8 +60,8 @@ def moe_block(
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     moe = cfg.moe
     assert moe is not None
-    b, l, d = x.shape
-    t_total = b * l
+    b, seq, d = x.shape
+    t_total = b * seq
     g = max(min(num_groups, t_total), 1)
     while t_total % g:
         g -= 1
@@ -122,7 +122,7 @@ def moe_block(
     def combine(ys, ws, toks):
         return jnp.zeros((tg, d), ys.dtype).at[toks].add(ys * ws[:, None].astype(ys.dtype))
 
-    y = jax.vmap(combine)(y_sorted, gates_sorted, src_tok).reshape(b, l, d)
+    y = jax.vmap(combine)(y_sorted, gates_sorted, src_tok).reshape(b, seq, d)
 
     # ---- aux: load-balance loss + drop fraction --------------------------------
     frac_tokens = counts.astype(jnp.float32) / (tg * k)                  # [G, E]

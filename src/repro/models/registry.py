@@ -9,7 +9,7 @@ dry-run lowers against.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -61,7 +61,7 @@ def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeS
     :func:`decode_state_structs`.
     """
     b = shape.global_batch
-    l = effective_seq(cfg, shape)
+    seq = effective_seq(cfg, shape)
     act_dtype = jnp.dtype(cfg.compute_dtype)
 
     if shape.kind == "decode":
@@ -70,15 +70,15 @@ def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, jax.ShapeDtypeS
     if cfg.family == "audio":
         return {
             "frames": jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), act_dtype),
-            "tokens": jax.ShapeDtypeStruct((b, l), jnp.int32),
+            "tokens": jax.ShapeDtypeStruct((b, seq), jnp.int32),
         }
     if cfg.family == "vlm":
-        tv = min(cfg.vision_tokens, l // 2)
+        tv = min(cfg.vision_tokens, seq // 2)
         return {
-            "tokens": jax.ShapeDtypeStruct((b, l - tv), jnp.int32),
+            "tokens": jax.ShapeDtypeStruct((b, seq - tv), jnp.int32),
             "vision_embeds": jax.ShapeDtypeStruct((b, tv, cfg.d_model), act_dtype),
         }
-    return {"tokens": jax.ShapeDtypeStruct((b, l), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, seq), jnp.int32)}
 
 
 def input_shardings(cfg: ArchConfig, shape: InputShape, rules: ShardingRules) -> Dict[str, P]:

@@ -11,7 +11,7 @@ and the SSD state [B, H, P, N].
 
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -82,7 +82,7 @@ def ssm_block(
     """Full-sequence SSD (training / prefill). With ``return_cache`` also
     returns the SSMCache (final state + conv tail) for decode handoff."""
     s, d, di, nh, conv_ch = _dims(cfg)
-    bsz, l, _ = x.shape
+    bsz, seq, _ = x.shape
     proj = x @ p["w_in"].astype(x.dtype)
     z, xs, b_mat, c_mat, dt = _split_proj(cfg, proj)
 
@@ -93,10 +93,10 @@ def ssm_block(
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
     a = -jnp.exp(p["a_log"].astype(jnp.float32))
 
-    xh = xs.reshape(bsz, l, nh, s.head_dim)
+    xh = xs.reshape(bsz, seq, nh, s.head_dim)
     xh = ax(xh, "batch", None, "tensor", None)
-    bh = b_mat.reshape(bsz, l, s.n_groups, s.d_state)
-    ch = c_mat.reshape(bsz, l, s.n_groups, s.d_state)
+    bh = b_mat.reshape(bsz, seq, s.n_groups, s.d_state)
+    ch = c_mat.reshape(bsz, seq, s.n_groups, s.d_state)
 
     y, final_state = ops.ssd_scan(
         xh.astype(jnp.float32), dt, a,
@@ -104,7 +104,7 @@ def ssm_block(
         chunk=s.chunk,
     )
     y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
-    y = y.reshape(bsz, l, di).astype(x.dtype)
+    y = y.reshape(bsz, seq, di).astype(x.dtype)
 
     y = common.rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.rms_eps)
     out = y @ p["w_out"].astype(x.dtype)

@@ -64,7 +64,11 @@ class DecoderLM:
         self.remat = remat
         self.scan_unroll = scan_unroll
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-        self.num_groups = int(np.prod([sizes[a] for a in self.rules.batch], dtype=np.int64)) if self.rules.batch else 1
+        self.num_groups = (
+            int(np.prod([sizes[a] for a in self.rules.batch], dtype=np.int64))
+            if self.rules.batch
+            else 1
+        )
         self.compute_dtype = jnp.dtype(cfg.compute_dtype)
 
     # ------------------------------------------------------------------ defs
@@ -176,8 +180,8 @@ class DecoderLM:
         """Training forward: logits [B, L, Vpad]."""
         cfg = self.cfg
         x, _ = self.embed_inputs(params, batch)
-        b, l, _ = x.shape
-        positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+        b, seq, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(seq)[None], (b, seq))
         fn = functools.partial(self._layer_train, positions=positions)
         x, _ = self._scan(x, params["layers"], lambda c, lp: fn(c, lp))
         x = common.apply_norm(cfg, params["final_norm"], x)
@@ -186,8 +190,8 @@ class DecoderLM:
     def loss(self, params, batch: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         cfg = self.cfg
         x, mask = self.embed_inputs(params, batch)
-        b, l, _ = x.shape
-        positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+        b, seq, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(seq)[None], (b, seq))
         x, auxs = self._scan(
             x, params["layers"],
             lambda c, lp: self._layer_train(c, lp, positions=positions),
@@ -198,7 +202,7 @@ class DecoderLM:
 
         # next-token targets over the full (possibly vision-prefixed) sequence
         tokens = batch["tokens"]
-        n_prefix = l - tokens.shape[1]
+        n_prefix = seq - tokens.shape[1]
         targets = tokens[:, 1:]                            # [B, Lt-1]
         pred_slice = jax.lax.dynamic_slice_in_dim(logits, n_prefix, tokens.shape[1] - 1, axis=1)
         xent, acc = _masked_xent(cfg, pred_slice, targets, batch.get("loss_mask"))
@@ -225,9 +229,9 @@ class DecoderLM:
         """
         cfg, ax = self.cfg, self.ax
         x, _ = self.embed_inputs(params, batch)
-        b, l, _ = x.shape
-        ctx = context or l
-        positions = jnp.broadcast_to(jnp.arange(l)[None], (b, l))
+        b, seq, _ = x.shape
+        ctx = context or seq
+        positions = jnp.broadcast_to(jnp.arange(seq)[None], (b, seq))
 
         if cfg.family == "ssm":
             def body(carry, lp):
@@ -236,7 +240,7 @@ class DecoderLM:
                 return carry + y, cache
 
             x, ssm_caches = jax.lax.scan(body, x, params["layers"], unroll=self.scan_unroll)
-            state = DecodeState(kv=None, ssm=ssm_caches, pos=jnp.asarray(l, jnp.int32))
+            state = DecodeState(kv=None, ssm=ssm_caches, pos=jnp.asarray(seq, jnp.int32))
         else:
             w = self.sliding_window
 
@@ -258,11 +262,11 @@ class DecoderLM:
 
             x, (ks, vs) = jax.lax.scan(body, x, params["layers"], unroll=self.scan_unroll)
             if w is not None:
-                if l % w == 0 and l >= w:
-                    ks, vs = ks[:, :, l - w :], vs[:, :, l - w :]  # ring-aligned
-                elif l > w:
+                if seq % w == 0 and seq >= w:
+                    ks, vs = ks[:, :, seq - w :], vs[:, :, seq - w :]  # ring-aligned
+                elif seq > w:
                     raise ValueError(
-                        f"sliding-window prefill needs window | prompt ({w} vs {l})"
+                        f"sliding-window prefill needs window | prompt ({w} vs {seq})"
                     )
                 cache_len = min(w, ctx)
             else:
@@ -273,9 +277,11 @@ class DecoderLM:
                 ks = jnp.concatenate([ks, zeros], axis=2)
                 vs = jnp.concatenate([vs, zeros], axis=2)
             state = DecodeState(
-                kv=attn_mod.KVCache(k=ks.astype(self.compute_dtype), v=vs.astype(self.compute_dtype)),
+                kv=attn_mod.KVCache(
+                    k=ks.astype(self.compute_dtype), v=vs.astype(self.compute_dtype)
+                ),
                 ssm=None,
-                pos=jnp.asarray(l, jnp.int32),
+                pos=jnp.asarray(seq, jnp.int32),
             )
 
         x = common.apply_norm(cfg, params["final_norm"], x)

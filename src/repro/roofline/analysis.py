@@ -17,12 +17,11 @@ dispatch waste show up here.
 from __future__ import annotations
 
 import dataclasses
-import json
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 from repro.configs.base import ArchConfig, InputShape
 from repro.models.registry import effective_seq
-from repro.roofline.hlo import CollectiveSummary, parse_collectives
+from repro.roofline.hlo import parse_collectives
 from repro.roofline.hw import HW, TPUv5e
 
 

@@ -78,7 +78,7 @@ def attention_roofline(
         return AttnTerms(0.0, 0.0)
 
     b = shape.global_batch
-    l = effective_seq(cfg, shape)
+    seq = effective_seq(cfg, shape)
     hd = cfg.head_dim or 0
     n_attn = _num_attn_layers(cfg)
     window = cfg.sliding_window if shape.name == "long_500k" else None
@@ -87,7 +87,7 @@ def attention_roofline(
     hbm = 0.0
     if n_attn and hd:
         per = _layer_terms(
-            b, l, l, cfg.n_heads, cfg.n_kv_heads, hd, causal=True, window=window
+            b, seq, seq, cfg.n_heads, cfg.n_kv_heads, hd, causal=True, window=window
         )
         flops += per.flops_global * n_attn
         hbm += per.hbm_bytes_global * n_attn
@@ -98,7 +98,7 @@ def attention_roofline(
             causal=False, window=None,
         )
         cross = _layer_terms(
-            b, l, cfg.encoder_seq, cfg.n_heads, cfg.n_kv_heads, hd,
+            b, seq, cfg.encoder_seq, cfg.n_heads, cfg.n_kv_heads, hd,
             causal=False, window=None,
         )
         flops += enc.flops_global * cfg.encoder_layers + cross.flops_global * cfg.n_layers
@@ -112,7 +112,9 @@ def attention_roofline(
     return AttnTerms(flops_global=flops, hbm_bytes_global=hbm)
 
 
-def attention_shards(cfg: ArchConfig, mesh_shape: Tuple[int, ...], axis_names: Tuple[str, ...]) -> Tuple[int, int]:
+def attention_shards(
+    cfg: ArchConfig, mesh_shape: Tuple[int, ...], axis_names: Tuple[str, ...]
+) -> Tuple[int, int]:
     """(batch_shards, head_shards) the attention work divides over."""
     sizes = dict(zip(axis_names, mesh_shape))
     batch_shards = sizes.get("pod", 1) * sizes.get("data", 1)

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -86,14 +86,14 @@ class ServeEngine:
         families), then jitted single-token decode to the budget."""
         cfg = self.cfg
         toks = self._pad_batch(requests)
-        b, l = toks.shape
+        b, seq = toks.shape
         budget = max(r.max_new_tokens for r in requests)
 
         with self.mesh:
             t0 = time.perf_counter()
             state = self.model.init_decode_state(self.batch_size, self.context)
             logits = None
-            for i in range(l):
+            for i in range(seq):
                 logits, state = self._decode(self.params, state, jnp.asarray(toks[:, i : i + 1]))
             jax.block_until_ready(logits)
             t_prefill = time.perf_counter() - t0

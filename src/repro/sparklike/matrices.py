@@ -17,8 +17,6 @@ the true explosion penalty.
 
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -155,7 +153,8 @@ class BlockMatrix:
             ]
 
         num_out = nbi * nbk
-        part_fn = lambda k: k[0] * nbk + k[1]
+        def part_fn(k):
+            return k[0] * nbk + k[1]
         a_shuf = shuffle_key_values(self.rdd, emit_a, num_out, part_fn)
         b_shuf = shuffle_key_values(other.rdd, emit_b, num_out, part_fn)
 

@@ -25,7 +25,7 @@ from typing import Tuple
 
 import numpy as np
 
-from repro.sparklike.matrices import BlockMatrix, IndexedRowMatrix
+from repro.sparklike.matrices import IndexedRowMatrix
 
 
 def _active_planner():

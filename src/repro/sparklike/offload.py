@@ -32,6 +32,8 @@ import numpy as np
 
 from repro.core.errors import SessionError
 from repro.core.expr import LazyMatrix
+from repro.core.futures import AlFuture
+from repro.core.handles import AlMatrix
 from repro.core.planner import OffloadPlanner
 from repro.sparklike.matrices import IndexedRowMatrix
 from repro.sparklike.rdd import SparkLikeContext
@@ -41,14 +43,18 @@ from repro.sparklike.rdd import SparkLikeContext
 _ACTIVE: Optional[OffloadPlanner] = None
 
 
-def enable(ac_or_planner: Any) -> OffloadPlanner:
-    """Route subsequent mllib calls through the given context's planner."""
-    global _ACTIVE
-    planner = (
+def _resolve_planner(ac_or_planner: Any) -> OffloadPlanner:
+    return (
         ac_or_planner
         if isinstance(ac_or_planner, OffloadPlanner)
         else ac_or_planner.planner
     )
+
+
+def enable(ac_or_planner: Any) -> OffloadPlanner:
+    """Route subsequent mllib calls through the given context's planner."""
+    global _ACTIVE
+    planner = _resolve_planner(ac_or_planner)
     _ACTIVE = planner
     return planner
 
@@ -63,15 +69,34 @@ def active() -> Optional[OffloadPlanner]:
     return _ACTIVE
 
 
+_UNSET = object()
+
+
 @contextlib.contextmanager
-def offloaded(ac_or_planner: Any):
-    """Scope within which sparklike mllib calls offload to Alchemist."""
+def offloaded(ac_or_planner: Any, hbm_budget: Any = _UNSET):
+    """Scope within which sparklike mllib calls offload to Alchemist.
+
+    ``hbm_budget`` (bytes, or None for unlimited) overrides the session's
+    memory-governor budget for the duration of the scope — the drop-in way to
+    bound a pipeline's engine-resident footprint (DESIGN.md §7). The previous
+    budget is restored on exit; already-spilled matrices stay spilled and
+    refill on their next consumption as usual.
+    """
+    planner = _resolve_planner(ac_or_planner)
+    memgov = planner.ac.session.memgov
+    prev_budget = memgov.budget
+    if hbm_budget is not _UNSET:
+        memgov.set_budget(hbm_budget)  # validates before activating the scope
     previous = _ACTIVE
-    planner = enable(ac_or_planner)
+    enable(planner)
     try:
         yield planner
     finally:
-        enable(previous) if previous is not None else disable()
+        memgov.set_budget(prev_budget)  # lock-serialized against admissions
+        if previous is not None:
+            enable(previous)
+        else:
+            disable()
 
 
 class LazyRowMatrix:
@@ -91,6 +116,23 @@ class LazyRowMatrix:
     @property
     def planner(self) -> OffloadPlanner:
         return self.lazy.planner
+
+    @property
+    def state(self) -> str:
+        """Where the rows physically are: ``deferred`` (not lowered yet),
+        ``pending`` (transfer/compute queued), ``materialized`` (device-
+        resident), ``spilled`` (governor moved them to the host store; the
+        next consumption refills), ``failed``, or ``freed``."""
+        val = self.planner.peek(self.lazy)
+        if val is None:
+            return "deferred"
+        if isinstance(val, AlFuture):
+            if not val.done():
+                return "pending"
+            if val.exception() is not None:
+                return "failed"
+            val = val.result()
+        return val.state if isinstance(val, AlMatrix) else "materialized"
 
     def to_numpy(self) -> np.ndarray:
         """Collect: the explicit engine→client bridge crossing."""

@@ -23,7 +23,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence
 
 import numpy as np
 
@@ -170,7 +170,9 @@ class RDD:
         parts = self.ctx.run_stage(self._parts, lambda i, p: fn(p), name=name)
         return RDD(self.ctx, parts)
 
-    def map_partitions_with_index(self, fn: Callable[[int, Any], Any], name: str = "mapPartitionsWithIndex") -> "RDD":
+    def map_partitions_with_index(
+        self, fn: Callable[[int, Any], Any], name: str = "mapPartitionsWithIndex"
+    ) -> "RDD":
         parts = self.ctx.run_stage(self._parts, fn, name=name)
         return RDD(self.ctx, parts)
 

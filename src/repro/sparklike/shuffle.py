@@ -12,9 +12,8 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, Hashable, List, Sequence, Tuple
 
-import numpy as np
 
-from repro.sparklike.rdd import RDD, SparkLikeContext, nbytes_of as _nbytes
+from repro.sparklike.rdd import RDD, nbytes_of as _nbytes
 
 
 def shuffle_key_values(

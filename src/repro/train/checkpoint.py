@@ -75,7 +75,9 @@ def restore(
         leaves, treedef = jax.tree_util.tree_flatten(like)
         keys_in_order = list(flat_keys.keys())
         spec_leaves = (
-            jax.tree_util.tree_leaves(specs, is_leaf=lambda x: x is None or hasattr(x, "__iter__") or True)
+            jax.tree_util.tree_leaves(
+                specs, is_leaf=lambda x: x is None or hasattr(x, "__iter__") or True
+            )
             if specs is not None
             else [None] * len(leaves)
         )

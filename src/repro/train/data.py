@@ -58,11 +58,11 @@ class SyntheticTokens:
         return self.shard(out)
 
     def _markov_tokens(self, key: jax.Array, shape) -> jax.Array:
-        b, l = shape
+        b, seq = shape
         succ = jnp.asarray(self._succ)
         k0, k1 = jax.random.split(key)
         start = jax.random.randint(k0, (b,), 0, self._active_vocab, jnp.int32)
-        choices = jax.random.randint(k1, (b, l), 0, self.branching, jnp.int32)
+        choices = jax.random.randint(k1, (b, seq), 0, self.branching, jnp.int32)
 
         def step(state, choice):
             nxt = succ[state, choice]

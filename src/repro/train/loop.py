@@ -3,16 +3,14 @@
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.base import ArchConfig, InputShape
 from repro.core.sharding import ShardingRules
-from repro.models.registry import build_model, input_shardings
+from repro.models.registry import build_model
 from repro.train import checkpoint as ckpt_mod
 from repro.train.data import SyntheticTokens
 from repro.train.optimizer import AdamW

@@ -33,7 +33,8 @@ class AdamW:
 
     def init(self, params) -> OptState:
         dt = jnp.dtype(self.moment_dtype)
-        zeros = lambda p: jnp.zeros(p.shape, dt)
+        def zeros(p):
+            return jnp.zeros(p.shape, dt)
         return OptState(
             step=jnp.zeros((), jnp.int32),
             mu=jax.tree_util.tree_map(zeros, params),
@@ -86,5 +87,5 @@ class AdamW:
 def _global_norm(tree) -> jax.Array:
     leaves = jax.tree_util.tree_leaves(tree)
     return jnp.sqrt(
-        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+        sum(jnp.sum(jnp.square(seq.astype(jnp.float32))) for seq in leaves)
     )

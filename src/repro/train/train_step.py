@@ -3,8 +3,7 @@ microbatch gradient accumulation, under the model's partition specs."""
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +48,9 @@ def make_train_step(
             lambda p: jnp.zeros(p.shape, jnp.float32), params
         )
         m0 = jax.eval_shape(lambda: single_grads(params, jax.tree_util.tree_map(
-            lambda x: jax.lax.dynamic_slice_in_dim(x, 0, x.shape[0] // microbatches, axis=0), batch))[1])
+            lambda x: jax.lax.dynamic_slice_in_dim(
+                x, 0, x.shape[0] // microbatches, axis=0
+            ), batch))[1])
         metrics0 = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
         (grads, metrics), _ = jax.lax.scan(
             body, (zeros, metrics0), jnp.arange(microbatches)

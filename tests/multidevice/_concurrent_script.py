@@ -88,7 +88,7 @@ for _ in range(3):
 np.testing.assert_allclose(np.asarray(ac1.collect(h1)), a, rtol=1e-5)
 got1 = np.asarray(ac1.collect(ac1.run_async("elemental", "gemm",
                                             ac1.run_async("elemental", "gemm",
-                                                          ac1.run_async("elemental", "gemm", h1, h1),
+                       ac1.run_async("elemental", "gemm", h1, h1),
                                                           h1),
                                             h1)))
 np.testing.assert_allclose(got1, expect, atol=1e-2)

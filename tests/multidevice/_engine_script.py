@@ -7,7 +7,6 @@ assert "--xla_force_host_platform_device_count=8" in os.environ.get("XLA_FLAGS",
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 import repro
 from repro.core.layouts import GRID, ROW
@@ -65,7 +64,8 @@ np.testing.assert_allclose(r_np.T @ r_np, a.T @ a, atol=2e-2)
 pl = ac1.planner
 lc = pl.run("elemental", "gemm", pl.send(a), pl.send(b))
 lr = pl.run("elemental", "tsqr", lc, n_outputs=2)[1]        # elided: lc
-r2 = np.asarray(pl.collect(pl.run("elemental", "gemm", lr, np.eye(32, dtype=np.float32))))  # elided: lr
+# elided: lr
+r2 = np.asarray(pl.collect(pl.run("elemental", "gemm", lr, np.eye(32, dtype=np.float32))))
 np.testing.assert_allclose(r2.T @ r2, (a @ b).T @ (a @ b), rtol=1e-2)
 lc2 = pl.run("elemental", "gemm", pl.send(a.copy()), pl.send(b.copy()))  # both dedup
 assert isinstance(pl.materialize(lc2), repro.AlMatrix)
@@ -75,5 +75,30 @@ assert ps["resident_reuses"] >= 2, ps
 
 ac1.stop()
 ac2.stop()
+assert engine.available_workers == 8
+
+# --- memory governor on a real worker group (DESIGN.md §7) ----------------
+# Working set of 6 matrices against a 3-matrix HBM budget: the governor
+# spills genuinely sharded resident arrays to host and refills them with
+# identical bytes; high water stays bounded on the real mesh too.
+mat_bytes = 128 * 64 * 4
+ac3 = repro.AlchemistContext(engine, num_workers=4, name="gov", hbm_budget=3 * mat_bytes)
+ac3.register_library("elemental", "repro.linalg.library:ElementalLib")
+mats = [rng.standard_normal((128, 64)).astype(np.float32) for _ in range(6)]
+handles = [ac3.send(m) for m in mats]
+# collects of spilled matrices are served from the host store, bit-exactly
+for m, h in zip(mats, handles):
+    np.testing.assert_array_equal(np.asarray(ac3.collect(h)), m)
+gs = ac3.stats.summary()
+assert gs["spills"] > 0, gs
+assert gs["hbm_high_water"] <= 3 * mat_bytes, gs
+# engine-side consumption refills spilled matrices onto the real mesh
+for m, h in zip(mats, handles):
+    norm = float(ac3.run("elemental", "normest", h))
+    assert abs(norm - np.linalg.norm(m)) < 1e-2
+gs = ac3.stats.summary()
+assert gs["refills"] > 0, gs
+assert gs["hbm_high_water"] <= 3 * mat_bytes, gs
+ac3.stop()
 assert engine.available_workers == 8
 print("MULTIDEVICE_ENGINE_OK")

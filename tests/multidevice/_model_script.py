@@ -8,12 +8,10 @@ assert "--xla_force_host_platform_device_count=8" in os.environ.get("XLA_FLAGS",
 import dataclasses
 import numpy as np
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 
 from repro.configs import InputShape, get_config
 from repro.core.layouts import AXIS_DATA, AXIS_MODEL, AXIS_POD
-from repro.core.sharding import ShardingRules
 from repro.models import build_model
 from repro.models.registry import make_batch
 

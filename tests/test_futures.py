@@ -24,7 +24,7 @@ from repro.core.errors import (
     TaskError,
 )
 from repro.core.futures import AlFuture, resolve, resolve_tree
-from repro.core.handles import FAILED, FREED, MATERIALIZED, PENDING
+from repro.core.handles import FAILED, FREED, MATERIALIZED
 from repro.core.taskqueue import TaskQueue
 
 
@@ -115,7 +115,9 @@ class TestTaskQueue:
         with pytest.raises(RuntimeError, match="task died"):
             f1.result(5)
         assert f2.result(5) == "fine"
-        assert q.stats() == {"submitted": 2, "completed": 1, "failed": 1}
+        stats = q.stats()
+        assert (stats["submitted"], stats["completed"], stats["failed"]) == (2, 1, 1)
+        assert 0 <= stats["max_backlog"] <= 2  # racy: worker may drain eagerly
         q.close()
 
     def test_barrier_waits_for_all(self):

@@ -181,7 +181,10 @@ def test_ssd_kernel_vs_sequential_oracle(case):
 @pytest.mark.parametrize("case", SSD_CASES[:2])
 def test_ssd_kernel_with_initial_state(case):
     x, dt, a, bm, cm = _ssd_inputs(case, seed=3)
-    h0 = jax.random.normal(jax.random.PRNGKey(9), (case["b"], case["h"], case["p"], case["n"])) * 0.5
+    h0 = (
+        jax.random.normal(jax.random.PRNGKey(9), (case["b"], case["h"], case["p"], case["n"]))
+        * 0.5
+    )
     y_k, h_k = ssd_scan(x, dt, a, bm, cm, init_state=h0, chunk=case["chunk"], interpret=True)
     y_r, h_r = ref.ssd_scan(x, dt, a, bm, cm, init_state=h0)
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=5e-4)

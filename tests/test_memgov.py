@@ -1,0 +1,394 @@
+"""Memory governor tests (DESIGN.md §7): budget accounting, LRU + last-use
+spill, transparent refill, pinning, reservations, the spilled handle state,
+and the per-routine shape rules that price routine outputs.
+
+Single-device here (divisibility pads are exercised on real worker groups in
+tests/multidevice/); every matrix is 32x32 float32 = 4096 bytes, so budgets
+read as whole matrix counts.
+"""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.errors import HandleError, ShapeError
+from repro.core.expr import infer_run_shapes
+from repro.core.handles import MATERIALIZED, SPILLED
+from repro.core.memgov import MemoryGovernor
+
+MAT = 32 * 32 * 4  # bytes of one 32x32 float32
+
+
+@pytest.fixture()
+def engine():
+    return repro.AlchemistEngine()
+
+
+def _ctx(engine, budget):
+    ac = repro.AlchemistContext(engine, num_workers=1, name="gov", hbm_budget=budget)
+    ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+    return ac
+
+
+def _mats(n, rng):
+    return [rng.standard_normal((32, 32)).astype(np.float32) for _ in range(n)]
+
+
+class TestAccounting:
+    def test_unbudgeted_tracks_high_water_without_spilling(self, engine, rng):
+        ac = _ctx(engine, None)
+        hs = [ac.send(m) for m in _mats(3, rng)]
+        ac.wait()
+        s = ac.stats.summary()
+        assert s["spills"] == 0 and s["refills"] == 0
+        assert s["hbm_high_water"] == 3 * MAT
+        assert all(h.state == MATERIALIZED for h in hs)
+        ac.stop()
+
+    def test_free_discharges_budget(self, engine, rng):
+        ac = _ctx(engine, None)
+        h = ac.send(_mats(1, rng)[0])
+        ac.wait()
+        assert ac.session.memgov.used == MAT
+        ac.free(h)
+        assert ac.session.memgov.used == 0
+        ac.stop()
+
+    def test_rejects_nonpositive_budget(self):
+        with pytest.raises(ValueError):
+            MemoryGovernor(budget=0)
+
+    def test_physical_nbytes_equals_logical_when_unpadded(self, engine, rng):
+        ac = _ctx(engine, None)
+        h = ac.send(_mats(1, rng)[0])
+        ac.wait()
+        live = ac.session.resolve(h)
+        assert live.pads == (0, 0)
+        assert live.physical_nbytes() == live.nbytes() == MAT
+        ac.stop()
+
+
+class TestSpillRefill:
+    def test_sends_beyond_budget_spill_lru(self, engine, rng):
+        ac = _ctx(engine, 2 * MAT)
+        mats = _mats(4, rng)
+        hs = [ac.send(m) for m in mats]
+        ac.wait()
+        s = ac.stats.summary()
+        assert s["spills"] == 2 and s["spilled_bytes"] == 2 * MAT
+        assert s["hbm_high_water"] <= 2 * MAT
+        # LRU: the two oldest sends were spilled, the two newest are resident
+        states = [ac.session.resolve(h).state for h in hs]
+        assert states == [SPILLED, SPILLED, MATERIALIZED, MATERIALIZED]
+        ac.stop()
+
+    def test_collect_of_spilled_serves_host_store_bit_exact(self, engine, rng):
+        # Collect is client-bound: spilled bytes are served straight from the
+        # host store (no refill, no eviction cascade) and stay spilled.
+        ac = _ctx(engine, 2 * MAT)
+        mats = _mats(4, rng)
+        hs = [ac.send(m) for m in mats]
+        for m, h in zip(mats, hs):
+            np.testing.assert_array_equal(np.asarray(ac.collect(h)), m)
+        s = ac.stats.summary()
+        assert s["spills"] == 2 and s["refills"] == 0
+        assert s["num_receives"] == 4  # every collect still recorded
+        assert s["hbm_high_water"] <= 2 * MAT
+        ac.stop()
+
+    def test_compute_consumption_refills_bit_exact(self, engine, rng):
+        # Engine-side consumption (a routine input) genuinely needs the bytes
+        # on device: that is the refill path.
+        ac = _ctx(engine, 2 * MAT)
+        mats = _mats(4, rng)
+        hs = [ac.send(m) for m in mats]
+        for m, h in zip(mats, hs):
+            norm = float(ac.run("elemental", "normest", h))
+            assert abs(norm - np.linalg.norm(m)) < 1e-3
+        s = ac.stats.summary()
+        assert s["refills"] >= 2 and s["refilled_bytes"] >= 2 * MAT
+        assert s["hbm_high_water"] <= 2 * MAT
+        ac.stop()
+
+    def test_spilled_handle_is_live_and_usable(self, engine, rng):
+        ac = _ctx(engine, 2 * MAT)
+        mats = _mats(3, rng)
+        hs = [ac.send(m) for m in mats]
+        ac.wait()
+        first = ac.session.resolve(hs[0])
+        assert first.state == SPILLED and first.is_live
+        norm = float(ac.run("elemental", "normest", hs[0]))  # refill on use
+        assert abs(norm - np.linalg.norm(mats[0])) < 1e-3
+        assert ac.session.resolve(hs[0]).state == MATERIALIZED
+        ac.stop()
+
+    def test_free_spilled_handle_drops_host_store(self, engine, rng):
+        ac = _ctx(engine, MAT)
+        hs = [ac.send(m) for m in _mats(2, rng)]
+        ac.wait()
+        assert ac.session.memgov.snapshot()["spilled_handles"] == 1
+        ac.free(hs[0])  # the spilled one
+        assert ac.session.memgov.snapshot()["spilled_handles"] == 0
+        with pytest.raises(HandleError):
+            ac.collect(hs[0])
+        ac.stop()
+
+    def test_single_matrix_larger_than_budget_still_admitted(self, engine, rng):
+        # Admission is best-effort: the governor bounds memory, it never
+        # deadlocks the pipeline.
+        ac = _ctx(engine, MAT // 2)
+        m = _mats(1, rng)[0]
+        np.testing.assert_array_equal(np.asarray(ac.collect(ac.send(m))), m)
+        ac.stop()
+
+    def test_run_inputs_pinned_not_spilled_by_outputs(self, engine, rng):
+        ac = _ctx(engine, 3 * MAT)
+        a, b = _mats(2, rng)
+        ha, hb = ac.send(a), ac.send(b)
+        hc = ac.run("elemental", "gemm", ha, hb)
+        np.testing.assert_allclose(np.asarray(ac.collect(hc)), a @ b, atol=1e-4)
+        s = ac.stats.summary()
+        # a+b+output fit exactly: pinned inputs were never evicted mid-run
+        assert s["spills"] == 0
+        assert s["hbm_high_water"] <= 3 * MAT
+        ac.stop()
+
+
+class TestPlannerIntegration:
+    def test_pipeline_2x_budget_identical_numerics(self, engine, rng):
+        mats = _mats(6, rng)
+
+        def run(budget):
+            ac = _ctx(engine, budget)
+            pl = ac.planner
+            lazies = [pl.send(m, name=f"m{i}") for i, m in enumerate(mats)]
+            outs = [np.asarray(pl.collect(la)) for la in lazies]
+            # Second pass consumes each matrix engine-side (gemm against the
+            # identity): under budget, the matrices spilled by the later
+            # sends must refill here; collects alone would be served from
+            # the host store.
+            eye = np.eye(32, dtype=np.float32)
+            outs2 = [np.asarray(pl.collect(la @ pl.send(eye))) for la in lazies]
+            s = ac.stats.summary()
+            ac.stop()
+            return outs + outs2, s
+
+        outs_free, s_free = run(None)
+        outs_cap, s_cap = run(3 * MAT)
+        for x, y in zip(outs_free, outs_cap):
+            np.testing.assert_array_equal(x, y)
+        # unbudgeted: everything stays resident (6 sends + eye + 6 products)
+        assert s_free["spills"] == 0 and s_free["hbm_high_water"] >= 2 * (3 * MAT)
+        assert s_cap["spills"] > 0 and s_cap["refills"] > 0
+        assert s_cap["hbm_high_water"] <= 3 * MAT
+
+    def test_last_use_hint_prefers_dead_intermediates(self, engine, rng):
+        ac = _ctx(engine, None)
+        pl = ac.planner
+        a, b = _mats(2, rng)
+        lc = pl.run("elemental", "gemm", pl.send(a), pl.send(b))
+        ld = pl.run("elemental", "gemm", lc, pl.send(np.eye(32, dtype=np.float32)))
+        pl.collect(ld)
+        memgov = ac.session.memgov
+        # lc was consumed by ld (its only consumer): hinted as idle. ld is the
+        # root (still collectible): not hinted.
+        h_lc = pl.materialize(lc)
+        h_ld = pl.materialize(ld)
+        assert h_lc.id in memgov._idle
+        assert h_ld.id not in memgov._idle
+        ac.stop()
+
+    def test_spilled_resident_reuse_still_elides(self, engine, rng):
+        ac = _ctx(engine, 2 * MAT)
+        pl = ac.planner
+        mats = _mats(3, rng)
+        for m in mats:
+            pl.collect(pl.send(m))  # fill + spill pressure
+        # re-sending the first payload hits the resident cache even though
+        # its matrix was spilled: no bridge bytes, refill on consumption
+        sends_before = ac.stats.num_sends
+        out = np.asarray(pl.collect(pl.send(mats[0])))
+        np.testing.assert_array_equal(out, mats[0])
+        assert ac.stats.num_sends == sends_before
+        assert ac.stats.resident_reuses >= 1
+        ac.stop()
+
+    def test_offloaded_context_budget_override(self, engine, rng):
+        from repro.sparklike import offload
+
+        ac = _ctx(engine, None)
+        with offload.offloaded(ac, hbm_budget=2 * MAT) as pl:
+            assert ac.session.memgov.budget == 2 * MAT
+            lazies = [pl.send(m) for m in _mats(4, rng)]
+            for la in lazies:
+                pl.collect(la)
+        assert ac.session.memgov.budget is None  # restored
+        assert ac.stats.summary()["spills"] > 0
+        ac.stop()
+
+    def test_lazy_row_matrix_state_surfaces_spill(self, engine, rng):
+        from repro.sparklike import offload
+
+        ac = _ctx(engine, MAT)
+        pl = ac.planner
+        m1, m2 = _mats(2, rng)
+        lrm = offload.LazyRowMatrix(pl.send(m1), 32, 32)
+        assert lrm.state == "deferred"
+        np.testing.assert_array_equal(lrm.to_numpy(), m1)
+        assert lrm.state == "materialized"
+        pl.collect(pl.send(m2))  # evicts m1 under the 1-matrix budget
+        assert lrm.state == "spilled"
+        np.testing.assert_array_equal(lrm.to_numpy(), m1)  # refill
+        ac.stop()
+
+
+class TestReservations:
+    def test_send_async_reserves_then_converts(self, engine, rng):
+        ac = _ctx(engine, None)
+        memgov = ac.session.memgov
+        fut = ac.send_async(_mats(1, rng)[0])
+        fut.result(30)
+        ac.wait()
+        assert memgov.reserved == 0  # converted to a charge
+        assert memgov.used == MAT
+        ac.stop()
+
+    def test_failed_send_releases_reservation(self, engine, monkeypatch):
+        import repro.core.engine as engine_mod
+
+        ac = _ctx(engine, None)
+
+        def boom(*a, **k):
+            raise RuntimeError("transfer died")
+
+        monkeypatch.setattr(engine_mod, "timed_relayout", boom)
+        f = ac.send_async(np.zeros((32, 32), dtype=np.float32))
+        with pytest.raises(RuntimeError):
+            f.result(30)
+        assert ac.session.memgov.reserved == 0
+        assert ac.session.memgov.used == 0
+        ac.stop()
+
+    def test_pressure_forecast(self, engine):
+        gov = MemoryGovernor(budget=10 * MAT)
+        n = gov.reserve(3 * MAT)
+        assert gov.pressure() == 3 * MAT
+        gov.unreserve(n)
+        assert gov.pressure() == 0
+
+    def test_planner_reservations_price_declared_dtype(self, engine, rng):
+        # Output reservations must price the operands' declared itemsize even
+        # when they reach the engine as unresolved futures (the planner path)
+        # — handle charges are metadata-priced, so a mismatched default would
+        # let admission drift from the ledger. (jax downcasts f64 host arrays
+        # to f32 on device without x64 mode; the *accounting* contract — high
+        # water bounded by the budget — must hold regardless.)
+        mat64 = 32 * 32 * 8
+        ac = _ctx(engine, 3 * mat64)
+        pl = ac.planner
+        a = rng.standard_normal((32, 32))  # float64 metadata
+        b = rng.standard_normal((32, 32))
+        c = pl.run("elemental", "gemm", pl.send(a), pl.send(b))
+        d = pl.run("elemental", "gemm", c, pl.send(np.eye(32)))
+        np.testing.assert_allclose(np.asarray(pl.collect(d)), a @ b, atol=1e-3)
+        s = ac.stats.summary()
+        assert s["hbm_high_water"] <= 3 * mat64, s
+        ac.stop()
+
+
+class TestShapeRules:
+    def test_gemm_mismatch_raises_client_side(self, engine, rng):
+        ac = _ctx(engine, None)
+        ha = ac.send(rng.standard_normal((8, 4)).astype(np.float32))
+        hb = ac.send(rng.standard_normal((8, 4)).astype(np.float32))
+        with pytest.raises(ShapeError, match="inner dimensions"):
+            ac.run("elemental", "gemm", ha, hb)
+        ac.stop()
+
+    def test_rules_cover_every_elemental_routine(self):
+        from repro.core.expr import SHAPE_RULES
+        from repro.linalg.library import ElementalLib
+
+        lib = ElementalLib()
+        missing = [r for r in lib.routine_names() if r not in SHAPE_RULES]
+        assert not missing, f"routines without a shape rule: {missing}"
+
+    @pytest.mark.parametrize(
+        "routine,shapes,params,expected",
+        [
+            ("gemm", [(6, 4), (4, 3)], {}, ((6, 3),)),
+            ("multiply", [(2, 5), (5, 2)], {}, ((2, 2),)),
+            ("truncated_svd", [(16, 8)], {"k": 4}, ((16, 4), (4,), (8, 4))),
+            ("randomized_svd", [(16, 8)], {"k": 8}, ((16, 8), (8,), (8, 8))),
+            ("pca", [(32, 8)], {"k": 2}, ((8, 2), (32, 2), (2,))),
+            ("tsqr", [(32, 8)], {}, ((32, 8), (8, 8))),
+            ("ridge", [(16, 4), (16, 1)], {}, ((4, 1),)),
+            ("normest", [(8, 8)], {}, ((),)),
+            ("condest", [(8, 8)], {}, ((),)),
+            ("sigma_max", [(8, 8)], {}, ((),)),
+        ],
+    )
+    def test_rule_outputs(self, routine, shapes, params, expected):
+        assert infer_run_shapes(routine, shapes, params) == expected
+
+    @pytest.mark.parametrize(
+        "routine,shapes,params",
+        [
+            ("gemm", [(6, 4), (3, 6)], {}),
+            ("truncated_svd", [(16, 8)], {"k": 9}),
+            ("truncated_svd", [(16, 8)], {"k": 0}),
+            ("pca", [(4, 4)], {"k": 40}),
+            ("tsqr", [(8, 32)], {}),  # wide, not tall-skinny
+            ("ridge", [(16, 4), (15, 1)], {}),
+        ],
+    )
+    def test_rule_rejections(self, routine, shapes, params):
+        with pytest.raises(ShapeError):
+            infer_run_shapes(routine, shapes, params)
+
+    def test_unknown_shapes_stay_silent(self):
+        assert infer_run_shapes("gemm", [None, (4, 3)], {}) == (None,)
+        assert infer_run_shapes("not_a_routine", [(4, 3)], {}) is None
+
+    def test_svd_without_keyword_k_stays_silent(self):
+        # k not passed as a keyword (library default, or positional — which
+        # the keyword-only adapters reject at execution): the rule must not
+        # validate against an invented default.
+        assert infer_run_shapes("truncated_svd", [(8, 8)], {}) == (None, None, None)
+        assert infer_run_shapes("pca", [(4, 4)], {}) == (None, None, None)
+
+    def test_arg_dtype_recurses_through_chained_runs(self, engine, rng):
+        # Pricing must find the leaf dtype even when every direct operand of
+        # a RunExpr is itself a deferred run/projection (f64 chains would
+        # otherwise fall back to the f32 default and under-admit).
+        from repro.core.planner import OffloadPlanner
+
+        ac = _ctx(engine, None)
+        pl = ac.planner
+        a = pl.send(rng.standard_normal((8, 8)))  # float64 metadata
+        c = a @ a
+        d = c @ c  # args: RunExprs only
+        assert OffloadPlanner._arg_dtype(d.expr) == "float64"
+        q, r = pl.run("elemental", "tsqr", c, n_outputs=2)
+        prod = pl.run("elemental", "gemm", q, r)  # args: ProjExprs only
+        assert OffloadPlanner._arg_dtype(prod.expr) == "float64"
+        ac.stop()
+
+    def test_set_budget_serialized_and_validated(self, engine):
+        gov = MemoryGovernor(budget=4 * MAT)
+        with pytest.raises(ValueError):
+            gov.set_budget(-1)
+        gov.set_budget(None)  # admissions snapshot the budget: None = no-op
+        assert gov.admit(10 * MAT) == 0
+
+    def test_lazy_chain_shapes_propagate(self, engine, rng):
+        ac = _ctx(engine, None)
+        pl = ac.planner
+        a = rng.standard_normal((32, 8)).astype(np.float32)
+        u, s, v = pl.run("elemental", "truncated_svd", pl.send(a), n_outputs=3, k=4)
+        assert u.shape == (32, 4) and v.shape == (8, 4)
+        proj = pl.send(a) @ v  # (32, 8) @ (8, 4) validates at build time
+        assert proj.shape == (32, 4)
+        with pytest.raises(ShapeError):
+            _ = u @ pl.send(a)  # (32, 4) @ (32, 8): inner mismatch
+        ac.stop()

@@ -5,7 +5,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")
@@ -31,6 +30,10 @@ def test_engine_worker_groups_and_distributed_linalg():
 
 def test_concurrent_sessions_overlap():
     _run("_concurrent_script.py", "MULTIDEVICE_CONCURRENT_OK")
+
+
+def test_padded_sends_roundtrip_arbitrary_shapes():
+    _run("_padding_script.py", "MULTIDEVICE_PADDING_OK")
 
 
 def test_sharded_models_match_single_device():

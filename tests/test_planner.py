@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 import repro
-from repro.core.errors import SessionError
-from repro.core.expr import LazyMatrix, ProjExpr, RunExpr, SendExpr, content_key, iter_nodes
+from repro.core.errors import SessionError, ShapeError
+from repro.core.expr import LazyMatrix, ProjExpr, RunExpr, content_key, iter_nodes
 from repro.core.futures import AlFuture
 from repro.linalg.wrappers import Elemental
 from repro.sparklike import IndexedRowMatrix, SparkLikeContext, mllib, offload
@@ -108,7 +108,8 @@ class TestPlannerExecution:
         a = rng.standard_normal((24, 16)).astype(np.float32)
         b = rng.standard_normal((16, 8)).astype(np.float32)
         c = rng.standard_normal((8, 8)).astype(np.float32)
-        ld = pl.run("elemental", "gemm", pl.run("elemental", "gemm", pl.send(a), pl.send(b)), pl.send(c))
+        lab = pl.run("elemental", "gemm", pl.send(a), pl.send(b))
+        ld = pl.run("elemental", "gemm", lab, pl.send(c))
         np.testing.assert_allclose(np.asarray(pl.collect(ld)), (a @ b) @ c, atol=1e-3)
 
     def test_projection_collects_each_output(self, pl, rng):
@@ -138,11 +139,13 @@ class TestPlannerExecution:
         assert isinstance(h, repro.AlMatrix)
         assert pl.ac.stats.num_receives == 0
 
-    def test_n_outputs_too_high_fails_cleanly(self, pl, rng):
+    def test_n_outputs_too_high_fails_at_graph_build(self, pl, rng):
+        # The per-routine shape rules catch the arity mismatch where the call
+        # is written (PR 3) — previously this died at collect time, deep in
+        # the task queue.
         a = rng.standard_normal((8, 8)).astype(np.float32)
-        outs = pl.run("elemental", "gemm", pl.send(a), pl.send(a), n_outputs=2)
-        with pytest.raises(SessionError):
-            pl.collect(outs[0])
+        with pytest.raises(ShapeError, match="n_outputs"):
+            pl.run("elemental", "gemm", pl.send(a), pl.send(a), n_outputs=2)
 
     def test_ndarray_args_autowrap(self, pl, rng):
         a = rng.standard_normal((8, 8)).astype(np.float32)
@@ -172,7 +175,8 @@ class TestElisionAndDedup:
     def test_identical_sends_dedup(self, pl, rng):
         a = rng.standard_normal((16, 8)).astype(np.float32)
         l1, l2 = pl.send(a), pl.send(a.copy())  # distinct nodes, equal bytes
-        pl.collect(pl.run("elemental", "gemm", pl.run("elemental", "tsqr", l1, n_outputs=2)[1], np.zeros((8, 8), np.float32)))
+        r1 = pl.run("elemental", "tsqr", l1, n_outputs=2)[1]
+        pl.collect(pl.run("elemental", "gemm", r1, np.zeros((8, 8), np.float32)))
         pl.collect(pl.run("elemental", "tsqr", l2, n_outputs=2)[1])
         s = pl.ac.stats.summary()
         assert s["resident_reuses"] == 1
@@ -270,7 +274,11 @@ class TestElisionAndDedup:
         pl.materialize(pl.send(a))
         assert pl.stats()["resident_entries"] == 1
         pl.reset()
-        assert pl.stats() == {"resident_entries": 0, "lowered_nodes": 0}
+        assert pl.stats() == {
+            "resident_entries": 0,
+            "lowered_nodes": 0,
+            "tracked_last_uses": 0,
+        }
         pl.materialize(pl.send(a))
         assert pl.ac.stats.resident_reuses == 0  # cache was genuinely dropped
 
@@ -302,7 +310,9 @@ class TestSparklikeOffload:
         # U stays engine-resident until explicitly collected
         assert ac.stats.num_receives == 1  # V only (sigmas are driver-side)
         u_np = u_off.to_numpy()
-        np.testing.assert_allclose(np.abs(np.diag(u_np.T @ u_ref.to_numpy())), np.ones(4), atol=5e-2)
+        np.testing.assert_allclose(
+            np.abs(np.diag(u_np.T @ u_ref.to_numpy())), np.ones(4), atol=5e-2
+        )
 
     def test_multiply_consumes_resident_u(self, ac, rng):
         a = self._dataset(rng)

@@ -5,9 +5,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh
 
 from repro.core import layouts as L
 from repro.core.errors import LayoutError

@@ -6,12 +6,10 @@ import subprocess
 import sys
 
 import numpy as np
-import pytest
 
 from repro.configs import INPUT_SHAPES, get_config
 from repro.roofline.attention_model import attention_roofline
 from repro.roofline.hlo import parse_collectives, shape_bytes
-from repro.roofline.hw import HW
 
 
 class TestShapeBytes:

@@ -3,13 +3,10 @@ BlockMatrix multiply, MLlib-style computeSVD."""
 
 import numpy as np
 import pytest
-from _hypothesis_compat import given, settings, st
 
 from repro.sparklike import (
-    BlockMatrix,
     ClusterModel,
     IndexedRowMatrix,
-    RDD,
     SparkLikeContext,
     mllib,
 )

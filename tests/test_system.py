@@ -2,7 +2,6 @@
 Spark-application workflow against the engine, and framework-level wiring."""
 
 import numpy as np
-import pytest
 
 import repro
 from repro.configs import get_config, list_configs

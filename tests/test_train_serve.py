@@ -9,7 +9,6 @@ import numpy as np
 import pytest
 
 from repro.configs import InputShape, get_config
-from repro.core.sharding import single_device_mesh
 from repro.models import build_model
 from repro.serve import Request, ServeEngine
 from repro.train import AdamW, SyntheticTokens, constant, cosine_warmup, make_train_step
@@ -136,7 +135,9 @@ class TestTrainLoop:
         np.testing.assert_allclose(float(m1["xent"]), float(m2["xent"]), rtol=1e-3)
         # updated params agree to optimizer tolerance
         diffs = jax.tree_util.tree_map(
-            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))), p1, p2
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+            p1,
+            p2,
         )
         assert max(jax.tree_util.tree_leaves(diffs)) < 5e-3
 
