@@ -31,6 +31,11 @@ GATES = [
     ("offload", "planned_bridge_bytes", "lower"),
     ("offload", "elided_crossings", "higher"),
     ("offload", "resident_reuses", "higher"),
+    # Engine resident store (DESIGN.md §8): the attaching session's bridge
+    # bytes must stay at zero (a baseline of 0 makes the limit 0 — any
+    # re-shipped byte fails), and its attach count must not silently drop.
+    ("cross_session", "second_session_bridge_bytes", "lower"),
+    ("cross_session", "cross_session_reuses", "higher"),
 ]
 
 

@@ -71,7 +71,12 @@ def _bridge_bytes(s: Dict) -> int:
 
 def run(report: List[str], metrics: Optional[Dict] = None) -> None:
     a = _dataset()
-    engine = repro.AlchemistEngine()
+    # Session-scoped residency on purpose: this suite measures the *planner's*
+    # elision/dedup within one session, and the naive-vs-planned sessions
+    # reuse the same dataset — the engine content store (DESIGN.md §8) would
+    # turn the later sessions' sends into attaches and erase the baseline.
+    # Cross-session sharing has its own suite (benchmarks/cross_session.py).
+    engine = repro.AlchemistEngine(share_residents=False)
 
     results = {}
     for name, fn in (("naive", _naive), ("planned", _planned)):

@@ -10,6 +10,10 @@
   spill_pressure     beyond-paper: memory governor with a working set ≥2× the
                      HBM budget — spill/refill counters, bounded high water,
                      padded uneven-shape sends (DESIGN.md §7)
+  cross_session      beyond-paper: engine-level resident store — a second
+                     session's identical dataset attaches with zero bridge
+                     bytes, and two sessions 2× overcommitted against one
+                     shared HBM budget stay bounded + bit-exact (DESIGN.md §8)
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--only`` takes a
 comma-separated subset; ``--json PATH`` additionally writes the structured
@@ -30,6 +34,7 @@ from typing import Dict, List
 
 def main() -> None:
     from benchmarks import (
+        cross_session,
         gemm_table1,
         offload_plan,
         overlap_async,
@@ -45,6 +50,7 @@ def main() -> None:
         "overlap": overlap_async.run,
         "offload": offload_plan.run,
         "spill": spill_pressure.run,
+        "cross": cross_session.run,
     }
 
     ap = argparse.ArgumentParser()

@@ -84,7 +84,12 @@ def _padded_roundtrip(engine) -> str:
 
 
 def run(report: List[str], metrics: Optional[Dict] = None) -> None:
-    engine = repro.AlchemistEngine()
+    # Session-scoped residency on purpose: the warm/unbudgeted/budgeted runs
+    # reuse one dataset, and engine-level content sharing (DESIGN.md §8)
+    # would turn the later runs' sends into attaches — this suite must keep
+    # measuring the governor under genuine send pressure. The shared-budget
+    # multi-tenant case lives in benchmarks/cross_session.py.
+    engine = repro.AlchemistEngine(share_residents=False)
 
     # Warm the jit/relayout caches so the timed passes compare fairly.
     _run_once(engine, None, "warm")

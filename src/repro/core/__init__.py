@@ -22,17 +22,25 @@ Pieces (paper terminology in brackets):
 - ``expr.py``       — deferred-op DAG + :class:`LazyMatrix` proxies
                       (DESIGN.md §6).
 - ``planner.py``    — :class:`OffloadPlanner`: bridge-crossing elision,
-                      resident-matrix dedup, async lowering (DESIGN.md §6).
+                      resident-matrix dedup, CSE, async lowering
+                      (DESIGN.md §6/§8).
+- ``memgov.py``     — :class:`MemoryGovernor`: the engine-wide HBM budget —
+                      spill/refill, admission claims (DESIGN.md §7-§8).
+- ``resident.py``   — :class:`ResidentStore`: engine-level content-addressed
+                      residency — refcounted cross-session placement and
+                      migration-on-close (DESIGN.md §8).
 - ``errors.py``     — structured error hierarchy.
 """
 
 from repro.core.engine import AlchemistContext, AlchemistEngine
-from repro.core.expr import LazyMatrix
+from repro.core.expr import LazyMatrix, register_shape_rule
 from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 from repro.core.layouts import GRID, REPLICATED, ROW, LayoutSpec
+from repro.core.memgov import MemoryGovernor
 from repro.core.planner import OffloadPlanner
 from repro.core.registry import Library, Routine
+from repro.core.resident import ResidentStore
 from repro.core.taskqueue import TaskQueue
 
 __all__ = [
@@ -41,7 +49,9 @@ __all__ = [
     "AlFuture",
     "AlMatrix",
     "LazyMatrix",
+    "MemoryGovernor",
     "OffloadPlanner",
+    "ResidentStore",
     "LayoutSpec",
     "ROW",
     "GRID",
@@ -49,4 +59,5 @@ __all__ = [
     "Library",
     "Routine",
     "TaskQueue",
+    "register_shape_rule",
 ]

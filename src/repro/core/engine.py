@@ -46,11 +46,17 @@ from jax.sharding import Mesh
 
 from repro.core import futures as futures_mod
 from repro.core import params as params_codec
-from repro.core.errors import LibraryError, SessionError, WorkerAllocationError
-from repro.core.expr import arg_shape, infer_run_shapes
+from repro.core.errors import (
+    HandleError,
+    LibraryError,
+    SessionError,
+    WorkerAllocationError,
+)
+from repro.core.expr import arg_shape, content_key, infer_run_shapes
 from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 from repro.core.layouts import AXIS_DATA, AXIS_MODEL, GRID, ROW, LayoutSpec
+from repro.core.memgov import MemoryGovernor
 from repro.core.registry import Library, LibrarySpec, load_library
 from repro.core.relayout import (
     TransferRecord,
@@ -59,6 +65,7 @@ from repro.core.relayout import (
     timed_relayout,
     transfer_cost,
 )
+from repro.core.resident import ResidentEntry, ResidentStore
 from repro.core.session import Session
 
 
@@ -73,9 +80,27 @@ def _near_square_grid(n: int) -> Tuple[int, int]:
 
 class AlchemistEngine:
     """The Alchemist server: owns the worker (device) pool, hands out
-    sessions with dedicated worker-group mesh slices."""
+    sessions with dedicated worker-group mesh slices, and holds the two
+    engine-scoped services every session shares (DESIGN.md §7/§8):
 
-    def __init__(self, devices: Optional[Sequence[jax.Device]] = None, name: str = "alchemist"):
+    - ``memgov`` — the engine-wide memory governor. ``hbm_budget`` caps the
+      *combined* resident footprint of all sessions (each session may lower
+      the shared ceiling further via ``AlchemistContext(hbm_budget=...)``);
+    - ``residents`` — the content-addressed resident store that dedups
+      byte-identical sends across sessions and migrates uniquely-referenced
+      content host-side when its session stops. ``share_residents=False``
+      restores the session-scoped baseline (every session ships its own
+      copy); ``host_retention_bytes`` bounds migrated-content host memory.
+    """
+
+    def __init__(
+        self,
+        devices: Optional[Sequence[jax.Device]] = None,
+        name: str = "alchemist",
+        hbm_budget: Optional[int] = None,
+        share_residents: bool = True,
+        host_retention_bytes: Optional[int] = None,
+    ):
         self.name = name
         self.devices: List[jax.Device] = list(devices if devices is not None else jax.devices())
         if not self.devices:
@@ -83,6 +108,8 @@ class AlchemistEngine:
         self._free: List[jax.Device] = list(self.devices)
         self._lock = threading.Lock()
         self.sessions: Dict[int, Session] = {}
+        self.memgov = MemoryGovernor(budget=hbm_budget, name=f"{name}-memgov")
+        self.residents = ResidentStore(enabled=share_residents, retain_bytes=host_retention_bytes)
 
     # -- worker allocation ---------------------------------------------------
     @property
@@ -139,11 +166,32 @@ class AlchemistEngine:
         hbm_budget: Optional[int] = None,
     ) -> Session:
         mesh, devs = self.allocate(num_workers, grid)
-        session = Session(
-            name=name, mesh=mesh, worker_devices=devs, hbm_budget=hbm_budget
-        )
+        try:
+            session = Session(
+                name=name,
+                mesh=mesh,
+                worker_devices=devs,
+                hbm_budget=hbm_budget,
+                memgov=self.memgov,
+                residents=self.residents,
+            )
+        except BaseException:
+            # A rejected session (e.g. an invalid budget) must hand its
+            # worker group straight back — in canonical order, like release.
+            with self._lock:
+                free = set(self._free) | set(devs)
+                self._free = [d for d in self.devices if d in free]
+            raise
         self.sessions[session.id] = session
         return session
+
+    def shutdown(self) -> None:
+        """Stop every session and drop engine-wide state (the resident
+        store's migrated content and the governor's ledger)."""
+        for session in list(self.sessions.values()):
+            self.release(session)
+        self.residents.clear()
+        self.memgov.clear()
 
 
 class AlchemistContext:
@@ -219,8 +267,21 @@ class AlchemistContext:
         return self._submit_send(array, name=name, block=True).result()
 
     def _submit_send(
-        self, array: Union[jax.Array, np.ndarray], *, name: str, block: bool
+        self,
+        array: Union[jax.Array, np.ndarray],
+        *,
+        name: str,
+        block: bool,
+        key: Optional[Tuple] = None,
+        payload: Optional[np.ndarray] = None,
     ) -> AlFuture:
+        """``key``/``payload`` (internal, DESIGN.md §8): the payload's content
+        key and a private host snapshot of its logical bytes, when the caller
+        (the offload planner) already computed them. With the engine's
+        resident store enabled they are derived here for plain sends too, so
+        every non-cyclic transfer publishes into the content index — and a
+        send whose bytes another session already placed on the engine becomes
+        an attach instead of a bridge crossing."""
         self._check()
         sess = self.session
         # Validate + capture metadata in the caller thread (fail fast, and
@@ -229,7 +290,24 @@ class AlchemistContext:
             array = np.asarray(array)
         if array.ndim != 2:
             raise SessionError(f"send() expects a 2D matrix, got shape {tuple(array.shape)}")
+        store = self._content_store()
+        if store is not None:
+            if key is None:
+                key = content_key(array)
+            entry = store.lookup(key)
+            if entry is not None and entry.live_handle_for(sess.id) is None and entry.usable():
+                # The engine already holds these bytes (another session's
+                # placement, or content migrated out of a closed one): attach
+                # — an engine-internal placement, zero bridge traffic. A
+                # duplicate send *within* a session keeps its classic
+                # full-transfer semantics (independent handles; the planner
+                # is the intra-session dedup layer).
+                return self._submit_attach(key, entry, array, name=name, block=block)
         h = sess.new_pending_handle(array.shape, array.dtype, self.engine_layout, name=name)
+        if store is not None:
+            # Publish before the transfer runs: a concurrent session's attach
+            # may pin the entry now and wait on this pending placement.
+            store.register(key, h, sess, payload=payload)
         # Reserve the *physical* footprint against the HBM budget before
         # enqueueing: logical shape plus the divisibility padding the staging
         # (client) and resident (engine) layouts will append (DESIGN.md §7).
@@ -239,12 +317,15 @@ class AlchemistContext:
         )
 
         def task() -> AlMatrix:
+            admitted = 0
             try:
                 mesh = sess.mesh
                 # Make room before any bytes land on the worker group: the
                 # governor spills last-used resident matrices to host until
-                # the incoming footprint fits the budget.
+                # the incoming footprint fits the budget, and claims the room
+                # so a concurrent session's admission cannot take it first.
                 sess.memgov.admit(reserve_bytes)
+                admitted = reserve_bytes
                 x = jnp.asarray(array)
                 # Stage on the client layout first (rows over all session
                 # workers) so the recorded transfer is the genuine ROW->GRID
@@ -268,18 +349,127 @@ class AlchemistContext:
                     strip=False,  # residency keeps the put-legal physical form
                 )
                 sess.stats.record_transfer(rec)
-                h.materialize(
-                    out, pads=(out.shape[0] - h.shape[0], out.shape[1] - h.shape[1])
-                )
-                sess.memgov.charge(h)
+                with sess.memgov.lock:  # claim -> charge atomically
+                    sess.memgov.settle(admitted)
+                    admitted = 0
+                    h.materialize(
+                        out, pads=(out.shape[0] - h.shape[0], out.shape[1] - h.shape[1])
+                    )
+                    sess.memgov.charge(h)
                 return h
             except BaseException as exc:
                 h.fail(exc)
                 raise
             finally:
+                sess.memgov.settle(admitted)
                 sess.memgov.unreserve(reserve_bytes)
 
         return sess.tasks.submit(task, label=f"send:{name or h.id}")
+
+    def _content_store(self) -> Optional[ResidentStore]:
+        """The engine's resident store, when this session can use it: cyclic
+        layouts store a physical row permutation that does not round-trip
+        through the pure placement plan the attach/refill paths use."""
+        store = self.engine.residents
+        if not store.enabled:
+            return None
+        if self.client_layout.cyclic or self.engine_layout.cyclic:
+            return None
+        return store
+
+    def _submit_attach(
+        self,
+        key: Tuple,
+        entry: ResidentEntry,
+        array: Union[jax.Array, np.ndarray],
+        *,
+        name: str,
+        block: bool,
+    ) -> AlFuture:
+        """Produce this session's placement of an already-engine-resident
+        content entry (DESIGN.md §8): an engine-internal ``device_put`` from
+        the entry's host payload — no client↔engine bridge crossing, so no
+        TransferRecord. Counted as ``cross_session_reuses``.
+
+        ``array`` is the caller's own copy of the bytes: if the engine-side
+        content vanishes between the attach decision and this task running
+        (producer freed, orphan evicted by the retention cap), the placement
+        falls back to it and is accounted as a genuine bridge send — never a
+        spurious failure, never a wait on a handle that cannot materialize.
+        """
+        sess = self.session
+        store = self.engine.residents
+        h = sess.new_pending_handle(entry.shape, entry.dtype, self.engine_layout, name=name)
+        h._placement_only = True  # never a payload source while pending
+        store.register(key, h, sess)
+        pr, pc = pad_amounts(entry.shape, self.engine_layout, sess.mesh)
+        phys = (entry.shape[0] + pr, entry.shape[1] + pc)
+        reserve_bytes = sess.memgov.reserve(
+            phys[0] * phys[1] * jnp.dtype(entry.dtype).itemsize
+        )
+
+        def task() -> AlMatrix:
+            admitted = 0
+            try:
+                # May block on the producing session's in-flight transfer —
+                # a cross-session wait on a send task that depends on no one,
+                # so it cannot deadlock the FIFOs (pending attach placements
+                # are excluded as sources, see ensure_payload).
+                payload = store.ensure_payload(entry)
+                t0 = time.perf_counter()
+                attached = payload is not None
+                if not attached:
+                    # The content died under us: the caller's bytes cross the
+                    # bridge after all. Snapshot them (the caller may mutate
+                    # its array later; the entry payload must stay true to
+                    # the key) and publish so the content is shareable again.
+                    payload = np.array(array)
+                    store.register(key, h, sess, payload=payload)
+                sess.memgov.admit(reserve_bytes)
+                admitted = reserve_bytes
+                x = jnp.asarray(payload)
+                # src == dst: the cached plan is a pure placement (pads only),
+                # exactly the governor's refill path.
+                plan, _hit = sess.relayout_cache.plan(
+                    tuple(x.shape), x.dtype, self.engine_layout, self.engine_layout, sess.mesh
+                )
+                out = plan.apply(x)
+                if block:
+                    out.block_until_ready()
+                h._host_fallback = payload
+                with sess.memgov.lock:  # claim -> charge atomically
+                    sess.memgov.settle(admitted)
+                    admitted = 0
+                    h.materialize(
+                        out, pads=(out.shape[0] - h.shape[0], out.shape[1] - h.shape[1])
+                    )
+                    sess.memgov.charge(h)
+                if attached:
+                    sess.stats.record_cross_session_reuse()
+                    store.record_attach()
+                else:
+                    # Priced analytically: no staging relayout ran, so the
+                    # plan cache's hit rate must not see this (planned=False).
+                    cost = transfer_cost(
+                        h.shape, h.dtype, self.client_layout, self.engine_layout, sess.mesh
+                    )
+                    sess.stats.record_transfer(
+                        TransferRecord(
+                            direction="send",
+                            cost=cost,
+                            seconds=time.perf_counter() - t0,
+                            planned=False,
+                        )
+                    )
+                return h
+            except BaseException as exc:
+                h.fail(exc)
+                raise
+            finally:
+                sess.memgov.settle(admitted)
+                sess.memgov.unreserve(reserve_bytes)
+
+        return sess.tasks.submit(task, label=f"attach:{name or h.id}")
 
     def collect_async(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
         """Future of the client-side array for ``h`` (which may itself be a
@@ -483,6 +673,7 @@ class AlchemistContext:
             }
             inputs = [v for v in (*pos, *kw.values()) if isinstance(v, AlMatrix)]
 
+            admitted = 0
             try:
                 # Inputs stay pinned (unspillable) while the routine runs:
                 # admission for the outputs must not evict an operand, and a
@@ -498,8 +689,11 @@ class AlchemistContext:
                     }
                     # Admit the outputs only after every operand is resolved:
                     # a .data() above may have refilled a spilled input, and
-                    # room made earlier would have been eaten again.
+                    # room made earlier would have been eaten again. The
+                    # claim holds the room against concurrent sessions until
+                    # the outputs' charges land.
                     sess.memgov.admit(reserve_bytes)
+                    admitted = reserve_bytes
 
                     if "mesh" in r.signature().parameters:
                         call_kwargs["mesh"] = sess.mesh
@@ -511,8 +705,12 @@ class AlchemistContext:
                         result = jax.block_until_ready(result)
                     sess.stats.record_compute(time.perf_counter() - t0)
 
-                    return self._wrap_outputs(result, label)
+                    with sess.memgov.lock:  # claim -> charges atomically
+                        sess.memgov.settle(admitted)
+                        admitted = 0
+                        return self._wrap_outputs(result, label)
             finally:
+                sess.memgov.settle(admitted)
                 sess.memgov.unreserve(reserve_bytes)
 
         return sess.tasks.submit(task, label=f"run:{label}")

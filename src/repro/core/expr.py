@@ -154,9 +154,11 @@ def _rule_scalar(routine: str) -> ShapeRule:
     return rule
 
 
-#: routine name -> shape rule, spanning every ElementalLib routine. Unknown
-#: routines simply have no rule: metadata stays unknown until execution, as
-#: before (third-party libraries can extend this table at registration).
+#: routine name -> shape rule, spanning every ElementalLib routine.
+#: Third-party libraries extend this table at registration:
+#: ``Library.register(..., shape_rule=...)`` routes through
+#: :func:`register_shape_rule`, so their routines get the same graph-build
+#: validation and governor output pricing as the built-ins (DESIGN.md §7).
 SHAPE_RULES: Dict[str, ShapeRule] = {
     "gemm": _rule_gemm,
     "multiply": _rule_gemm,
@@ -169,6 +171,41 @@ SHAPE_RULES: Dict[str, ShapeRule] = {
     "normest": _rule_scalar("normest"),
     "sigma_max": _rule_scalar("sigma_max"),
 }
+
+
+def register_shape_rule(
+    routine: str, rule: ShapeRule, *, override: bool = False
+) -> None:
+    """Register a shape rule for a (third-party) routine name.
+
+    The table is engine-global and keyed by routine name — the same key
+    ``ac.run``/``OffloadPlanner.run`` dispatch on — so a registered rule
+    immediately gives the routine graph-build ShapeError validation and
+    output-byte pricing for governor admission (DESIGN.md §7). Registering a
+    *different* rule under an existing name raises unless ``override=True``:
+    two libraries silently disagreeing about one routine name is a bug, not
+    a merge.
+    """
+    if not callable(rule):
+        raise TypeError(f"shape rule for {routine!r} must be callable, got {rule!r}")
+    existing = SHAPE_RULES.get(routine)
+    if existing is not None and not _same_rule(existing, rule) and not override:
+        raise ShapeError(
+            f"routine {routine!r} already has a shape rule; pass override=True "
+            "to replace it"
+        )
+    SHAPE_RULES[routine] = rule
+
+
+def _same_rule(a: ShapeRule, b: ShapeRule) -> bool:
+    """Are two rule callables the same rule? Identity, or the same code
+    object — a library class defining its rule inline (lambda/nested def in
+    ``__init__``) creates a fresh function per instantiation, and registering
+    that library in a second session must not read as a conflict."""
+    if a is b:
+        return True
+    code_a = getattr(a, "__code__", None)
+    return code_a is not None and code_a is getattr(b, "__code__", None)
 
 
 def arg_shape(a: Any) -> ShapeLike:

@@ -81,6 +81,22 @@ class AlMatrix:
     #: physical minus logical extent per dim: the zero rows/cols the bridge
     #: appended so ``device_put`` divisibility holds (DESIGN.md §7).
     pads: Tuple[int, int] = (0, 0)
+    #: content key of the engine ResidentStore entry this handle is a
+    #: per-session placement of, or None for session-private matrices
+    #: (routine outputs, cyclic-layout sends). Store-backed handles pin their
+    #: entry; free/close unpin it through the session layer (DESIGN.md §8).
+    store_key: Optional[Tuple] = dataclasses.field(default=None, repr=False)
+    #: the logical host payload this placement was produced from, when the
+    #: engine holds one (the store entry's snapshot). Lets the governor spill
+    #: without a ``device_get`` and refill/serve collects from host bytes the
+    #: engine already owns.
+    _host_fallback: Optional[object] = dataclasses.field(default=None, repr=False)
+    #: True while this handle is a pending *attach* placement: it consumes
+    #: the store entry's payload rather than producing it, so
+    #: ``ResidentStore.ensure_payload`` must never block on it as a source
+    #: (an attach waiting on its own — or a sibling attach's — pending handle
+    #: would deadlock the task-queue workers).
+    _placement_only: bool = dataclasses.field(default=False, repr=False)
     _data: Optional[jax.Array] = dataclasses.field(default=None, repr=False)
     _state: str = dataclasses.field(default=MATERIALIZED, repr=False)
     _error: Optional[BaseException] = dataclasses.field(default=None, repr=False)

@@ -1,35 +1,46 @@
-"""MemoryGovernor — budgeted spill/refill of engine-resident matrices.
+"""MemoryGovernor — engine-wide budgeted spill/refill of resident matrices.
 
-DESIGN.md §7. Alchemist's value proposition is keeping matrices resident on
-the engine so drivers avoid repeated transfers (arXiv:1806.01270), but the
-resident-matrix cache pins everything in HBM until an explicit free — exactly
-the memory pressure the deployment follow-up flags as the limiting factor for
-long offload pipelines (arXiv:1910.01354). The governor bounds it:
+DESIGN.md §7/§8. Alchemist's value proposition is keeping matrices resident
+on the engine so drivers avoid repeated transfers (arXiv:1806.01270), but
+residency pins HBM until an explicit free — exactly the memory pressure the
+deployment follow-up flags as the limiting factor for long offload pipelines
+(arXiv:1910.01354). The governor bounds it, and it bounds it **engine-wide**:
+one governor per :class:`~repro.core.engine.AlchemistEngine`, shared by every
+connected session, so multi-tenant pressure is charged against a single
+budget instead of N independent ones that sum to N× the hardware.
 
-- every materialized :class:`~repro.core.handles.AlMatrix` is **charged** its
-  physical byte footprint (logical extent plus divisibility padding) against
-  a per-session HBM budget;
-- before a send stages bytes or a routine materializes outputs, the task
-  **admits** the incoming footprint: least-recently-used resident matrices —
-  preferring ones the offload planner has hinted as past their DAG last use —
-  are **spilled** to a pinned host store (``jax.device_get``) until the new
-  bytes fit;
-- a spilled handle stays *live*: its next consumption (``data()``) triggers a
-  transparent **refill** — a ``device_put`` through the session's cached
-  relayout plan — so pipelines whose working set exceeds the budget complete
-  with identical numerics, just extra host↔device traffic;
+- every materialized :class:`~repro.core.handles.AlMatrix` of every session
+  is **charged** its physical byte footprint (logical extent plus
+  divisibility padding) against the shared budget;
+- before a send/attach stages bytes or a routine materializes outputs, the
+  task **admits** the incoming footprint: least-recently-used resident
+  matrices — preferring ones a planner has hinted as past their DAG last
+  use — are **spilled** until the new bytes fit. Victims are chosen *across
+  sessions*, but a matrix pinned by a live run in any session is never
+  spilled;
+- a spilled handle stays *live*: its next consumption (``data()``) triggers
+  a transparent **refill** through its own session's cached relayout plan.
+  Store-backed placements (DESIGN.md §8) spill for free — their logical
+  payload already sits host-side on the entry, so the spill just drops the
+  device bytes and the refill re-places from the payload;
 - ``reserve``/``unreserve`` track bytes promised by not-yet-executed queued
-  tasks (``send_async``/``run_async`` reserve before enqueueing), so
-  ``pressure()`` forecasts demand beyond what is already resident.
+  tasks across all sessions, so ``pressure()`` forecasts engine demand.
 
-The governor is deliberately an *accounting* model — it charges the bytes the
-engine placed, rather than querying allocator internals — which keeps the
-policy identical on emulated-CPU meshes and real HBM. All spill/refill
-mutations run on the session's single task-queue worker; the lock only guards
-the counters that client threads read (reservations, stats snapshots).
+The **effective budget** is the minimum of the engine's base budget
+(``AlchemistEngine(hbm_budget=...)`` or :meth:`set_budget`) and every live
+session's requested budget (``AlchemistContext(hbm_budget=...)`` →
+:meth:`request_budget`): the most conservative live constraint wins, which
+keeps single-session semantics identical to the old per-session governor
+while giving concurrent sessions one shared ceiling.
 
-With ``budget=None`` (the default) nothing spills and the governor is pure
-bookkeeping: ``hbm_high_water`` still lands in ``session.stats.summary()``.
+The governor is deliberately an *accounting* model — it charges the bytes
+the engine placed, rather than querying allocator internals — which keeps
+the policy identical on emulated-CPU meshes and real HBM. Per-handle stats
+(spill/refill/high-water) land on the owning session's ``SessionStats``;
+:attr:`high_water` tracks the engine-wide maximum for multi-tenant gates.
+
+With no budget anywhere (the default) nothing spills and the governor is
+pure bookkeeping.
 """
 
 from __future__ import annotations
@@ -46,6 +57,7 @@ import numpy as np
 from repro.core import handles as handles_mod
 from repro.core.errors import HandleError
 from repro.core.handles import AlMatrix
+from repro.core.relayout import pad_amounts
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
     from repro.core.session import Session
@@ -53,47 +65,111 @@ if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
 _CLOCK = itertools.count(1)
 
 
+def _validate_budget(budget: Optional[int]) -> Optional[int]:
+    if budget is not None and budget <= 0:
+        raise ValueError(f"hbm budget must be positive or None, got {budget}")
+    return budget
+
+
 class MemoryGovernor:
-    """Per-session HBM budget: charge, spill, refill (DESIGN.md §7)."""
+    """Engine-wide HBM budget: charge, spill, refill (DESIGN.md §7/§8)."""
 
     def __init__(self, budget: Optional[int] = None, name: str = "memgov"):
-        if budget is not None and budget <= 0:
-            raise ValueError(f"hbm budget must be positive or None, got {budget}")
-        self.budget = budget
+        self._base_budget = _validate_budget(budget)
         self.name = name
-        self._session: Optional["Session"] = None
+        self._sessions: Dict[int, "Session"] = {}
+        self._session_budgets: Dict[int, int] = {}
         self._lock = threading.RLock()
         # handle id -> handle, for every charged (materialized or spilled)
-        # matrix; _charged holds the bytes each one was charged at.
+        # matrix of any session; _charged holds the bytes each one was
+        # charged at.
         self._handles: Dict[int, AlMatrix] = {}
         self._charged: Dict[int, int] = {}
-        # the pinned host store: physical (padded) payloads of spilled handles
+        # the pinned host store: physical (padded) payloads of spilled
+        # handles that have no store-entry fallback to refill from.
         self._host_store: Dict[int, np.ndarray] = {}
         self._touch: Dict[int, int] = {}
         self._pin_counts: Dict[int, int] = {}
         self._idle: Set[int] = set()  # planner last-use hints: spill these first
         self._used = 0
         self._reserved = 0
+        #: engine-wide maximum of simultaneously charged bytes — the number
+        #: the multi-tenant acceptance gate bounds against the shared budget.
+        self.high_water = 0
+
+    # -- session membership ---------------------------------------------------
+    def attach_session(
+        self, session: "Session", hbm_budget: Optional[int] = None
+    ) -> None:
+        """A session connected: route its handles' spill/refill through its
+        mesh + relayout cache, and fold its requested budget into the shared
+        ceiling. Validates the budget *before* registering anything — a
+        rejected budget must not leave a ghost session in the engine-wide
+        ledger."""
+        _validate_budget(hbm_budget)
+        with self._lock:
+            self._sessions[session.id] = session
+            if hbm_budget is not None:
+                self._session_budgets[session.id] = hbm_budget
+
+    def detach_session(self, session_id: int) -> None:
+        """Session closed: its handles were freed/migrated by the session
+        layer; drop its budget request from the shared ceiling."""
+        with self._lock:
+            self._sessions.pop(session_id, None)
+            self._session_budgets.pop(session_id, None)
 
     def bind(self, session: "Session") -> None:
-        """Attach the owning session (mesh + relayout cache + stats)."""
-        self._session = session
+        """Backwards-compatible alias of :meth:`attach_session`."""
+        self.attach_session(session)
+
+    @property
+    def budget(self) -> Optional[int]:
+        """The effective shared budget: min over the engine's base budget and
+        every live session's request; None when nothing constrains."""
+        with self._lock:
+            constraints = [b for b in self._session_budgets.values()]
+            if self._base_budget is not None:
+                constraints.append(self._base_budget)
+            return min(constraints) if constraints else None
+
+    @property
+    def base_budget(self) -> Optional[int]:
+        """The engine's own budget, before session requests tighten it — what
+        a scoped override (``offloaded(hbm_budget=...)``) must save/restore;
+        restoring the *effective* value would bake one session's request into
+        the engine for good."""
+        with self._lock:
+            return self._base_budget
 
     def set_budget(self, budget: Optional[int]) -> None:
-        """Change the budget (e.g. a scoped override via
+        """Change the engine's base budget (e.g. a scoped override via
         ``offload.offloaded(ac, hbm_budget=...)``), with the same validation
         as construction. Serialized against admissions: an admit() in flight
-        on the queue worker finishes under the budget it snapshotted."""
-        if budget is not None and budget <= 0:
-            raise ValueError(f"hbm budget must be positive or None, got {budget}")
+        on a queue worker finishes under the budget it snapshotted."""
+        _validate_budget(budget)
         with self._lock:
-            self.budget = budget
+            self._base_budget = budget
+
+    def request_budget(self, session_id: int, budget: Optional[int]) -> None:
+        """Fold a per-session budget request into the shared ceiling."""
+        with self._lock:
+            if budget is None:
+                self._session_budgets.pop(session_id, None)
+            else:
+                self._session_budgets[session_id] = _validate_budget(budget)
+
+    def requested_budget(self, session_id: int) -> Optional[int]:
+        """The session's current budget request (None if it has none) — what
+        a scoped per-session override must save and restore."""
+        with self._lock:
+            return self._session_budgets.get(session_id)
 
     @property
     def lock(self) -> threading.RLock:
         """The governor's reentrant lock. Handle reads hold it across the
         check-refill-slice sequence (`AlMatrix.data()`), so a client-thread
-        read can never observe a half-spilled handle from the queue worker."""
+        read can never observe a half-spilled handle from a queue worker."""
         return self._lock
 
     # -- accounting ----------------------------------------------------------
@@ -128,9 +204,15 @@ class MemoryGovernor:
 
     # -- admission -----------------------------------------------------------
     def admit(self, nbytes: int, exclude: Iterable[int] = ()) -> int:
-        """Make room for ``nbytes`` of incoming residency: spill unpinned
-        victims (planner-hinted idle first, then least-recently-used) until
-        ``used + nbytes`` fits the budget. Returns the number of spills.
+        """Make room for ``nbytes`` of incoming residency — spilling unpinned
+        victims (planner-hinted idle first, then least-recently-used, chosen
+        across every session) until ``used + nbytes`` fits the shared budget —
+        and **claim** the bytes: ``used`` grows by ``nbytes`` immediately, so
+        a concurrent admission from another session cannot fill the approved
+        room before the caller materializes into it (the engine-wide budget
+        must hold across interleaved sessions, not just within one FIFO).
+        Pair every admit with :meth:`settle` once the real charge landed (or
+        the task failed). Returns the number of spills.
 
         Admission is *best effort*: if everything else is pinned or the
         incoming matrix alone exceeds the budget, the bytes are admitted
@@ -143,19 +225,34 @@ class MemoryGovernor:
         # another thread (itself an admission) must not spill our chosen
         # victim between the pick and the spill. The budget is snapshotted
         # under the same lock — a scoped override expiring mid-admission
-        # (offloaded() exit flips it back to None) must not yank the loop's
+        # (offloaded() exit flips it back) must not yank the loop's
         # comparison out from under it.
         with self._lock:
             budget = self.budget
-            if budget is None:
-                return 0
-            while self._used + nbytes > budget:
-                victim = self._pick_victim(excluded)
-                if victim is None:
-                    break
-                self.spill(victim)
-                spills += 1
+            if budget is not None:
+                while self._used + nbytes > budget:
+                    victim = self._pick_victim(excluded)
+                    if victim is None:
+                        break
+                    self.spill(victim)
+                    spills += 1
+            self._used += nbytes
+            self.high_water = max(self.high_water, self._used)
         return spills
+
+    def settle(self, nbytes: int) -> None:
+        """Release an :meth:`admit` claim. Callers converting the claim into
+        real charges do both under one lock hold —
+
+            with memgov.lock:
+                memgov.settle(admitted)
+                memgov.charge(h)          # or new_handle(...), which charges
+
+        — so no other session's admission can slip into the gap between the
+        claim ending and the charge landing."""
+        nbytes = max(int(nbytes), 0)
+        with self._lock:
+            self._used -= nbytes
 
     def _pick_victim(self, excluded: Set[int]) -> Optional[AlMatrix]:
         with self._lock:
@@ -170,7 +267,7 @@ class MemoryGovernor:
             if not candidates:
                 return None
             # Planner-hinted idle matrices (past their DAG last use) first,
-            # then least-recently-touched.
+            # then least-recently-touched — regardless of owning session.
             return min(
                 candidates,
                 key=lambda h: (h.id not in self._idle, self._touch.get(h.id, 0)),
@@ -188,7 +285,7 @@ class MemoryGovernor:
             self._used += nbytes - prev
             self._touch[h.id] = next(_CLOCK)
             self._idle.discard(h.id)
-            self._record_high_water()
+            self._record_high_water(h)
 
     def discard(self, h: AlMatrix) -> None:
         """The handle was freed: drop its charge and any host-store bytes."""
@@ -218,7 +315,8 @@ class MemoryGovernor:
     @contextlib.contextmanager
     def pinned(self, hs: Iterable[AlMatrix]):
         """Keep ``hs`` unspillable while a task consumes them (a refilled
-        input must not be re-spilled by the admission of the next one)."""
+        input must not be re-spilled by the admission of the next one) —
+        respected by admissions from *every* session."""
         ids = [h.id for h in hs if isinstance(h, AlMatrix)]
         with self._lock:
             for hid in ids:
@@ -236,65 +334,91 @@ class MemoryGovernor:
 
     # -- spill / refill ------------------------------------------------------
     def spill(self, h: AlMatrix) -> None:
-        """Move a resident matrix's physical bytes to the host store.
+        """Move a resident matrix's bytes off the worker group.
 
-        The whole transition runs under the governor lock: a concurrent
-        ``data()`` on another thread (handles hold the same lock across its
-        check-refill-slice sequence) sees the handle either fully resident or
-        fully spilled, never ``_data is None`` mid-flight.
+        Store-backed placements (a live ``_host_fallback``) spill for free:
+        the engine already holds their logical payload host-side, so only the
+        device array is dropped. Everything else is ``jax.device_get`` into
+        the pinned host store. The whole transition runs under the governor
+        lock: a concurrent ``data()`` on another thread (handles hold the
+        same lock across its check-refill-slice sequence) sees the handle
+        either fully resident or fully spilled, never ``_data is None``
+        mid-flight.
         """
         with self._lock:
             if h.state != handles_mod.MATERIALIZED or h._data is None:
                 raise HandleError(f"cannot spill AlMatrix {h.id} in state {h.state!r}")
-            host = np.asarray(jax.device_get(h._data))
             nbytes = self._charged.get(h.id, h.physical_nbytes())
-            self._host_store[h.id] = host
+            if h._host_fallback is None:
+                self._host_store[h.id] = np.asarray(jax.device_get(h._data))
             self._used -= nbytes
             self._charged[h.id] = 0
             h._data = None
             h._state = handles_mod.SPILLED
-        stats = self._stats()
+        stats = self._stats_for(h)
         if stats is not None:
             stats.record_spill(nbytes)
 
     def refill(self, h: AlMatrix) -> None:
-        """Re-place a spilled matrix on the worker group. Runs on the first
-        consumption after the spill (``AlMatrix.data()``); uses the session's
-        cached relayout plan for the ``device_put`` and may itself spill other
-        matrices to make room. Atomic under the governor lock, like spill."""
+        """Re-place a spilled matrix on its session's worker group. Runs on
+        the first consumption after the spill (``AlMatrix.data()``); uses the
+        session's cached relayout plan for the ``device_put`` and may itself
+        spill other matrices to make room. Atomic under the governor lock,
+        like spill."""
         with self._lock:
+            sess = self._sessions.get(h.session_id)
             host = self._host_store.get(h.id)
-            if host is None or self._session is None:
+            if host is None:
+                host = h._host_fallback
+            if host is None or sess is None:
                 raise HandleError(
                     f"AlMatrix {h.id} ({h.name!r}) has no spilled payload to refill"
                 )
-            self.admit(host.nbytes, exclude={h.id})
-            sess = self._session
-            # The host payload is the *physical* (already padded, already
-            # permuted) form, so src == dst: the cached plan is a pure
-            # placement — no permutation, and pads only if this physical
-            # shape was born unpadded (a routine output) and needs them for
-            # the device_put.
-            plan, _hit = sess.relayout_cache.plan(
-                tuple(host.shape), host.dtype, h.layout, h.layout, sess.mesh
+            # Claim exactly what charge(h) will land: the *physical* extent
+            # (a logical store payload gains divisibility pads at placement)
+            # priced at the handle's declared dtype. Claiming host.nbytes
+            # would under-admit by the pad bytes and silently overshoot the
+            # budget at the charge.
+            pr, pc = pad_amounts(tuple(host.shape), h.layout, sess.mesh)
+            claim = (
+                (host.shape[0] + pr)
+                * (host.shape[1] + pc)
+                * jnp.dtype(h.dtype).itemsize
             )
-            arr = plan.apply(jnp.asarray(host))
+            self.admit(claim, exclude={h.id})
+            # Host-store payloads are the *physical* (already padded, already
+            # permuted) form and store fallbacks the logical one; either way
+            # src == dst, so the cached plan is a pure placement — no
+            # permutation, and pads exactly when the payload needs them for
+            # the device_put.
+            x = jnp.asarray(host)
+            plan, _hit = sess.relayout_cache.plan(
+                tuple(x.shape), x.dtype, h.layout, h.layout, sess.mesh
+            )
+            arr = plan.apply(x)
             h._data = arr
             h.pads = (arr.shape[0] - h.shape[0], arr.shape[1] - h.shape[1])
             h._state = handles_mod.MATERIALIZED
             self._host_store.pop(h.id, None)
+            self.settle(claim)  # claim -> charge, atomic: lock is held
             self.charge(h)
-        stats = self._stats()
+        stats = self._stats_for(h)
         if stats is not None:
             stats.record_refill(int(host.nbytes))
 
     def host_payload(self, h: AlMatrix) -> Optional[np.ndarray]:
-        """The spilled physical payload, or None if ``h`` is not spilled.
-        Lets the collect path serve client-bound bytes straight from the
-        host store — no refill, no admission cascade — while the handle
-        stays spilled for any later engine-side consumption."""
+        """The spilled payload (physical from the host store, or the store
+        entry's logical fallback), or None if ``h`` is not spilled. Lets the
+        collect path serve client-bound bytes straight from host memory — no
+        refill, no admission cascade — while the handle stays spilled for any
+        later engine-side consumption."""
         with self._lock:
-            return self._host_store.get(h.id)
+            if h.state != handles_mod.SPILLED:
+                return None
+            host = self._host_store.get(h.id)
+            if host is None:
+                host = h._host_fallback
+            return host
 
     # -- introspection -------------------------------------------------------
     def spilled_handles(self) -> List[AlMatrix]:
@@ -307,17 +431,23 @@ class MemoryGovernor:
                 "budget": self.budget or 0,
                 "used": self._used,
                 "reserved": self._reserved,
+                "high_water": self.high_water,
+                "sessions": len(self._sessions),
                 "resident_handles": sum(
                     1
                     for h in self._handles.values()
                     if h.state == handles_mod.MATERIALIZED
                 ),
-                "spilled_handles": len(self._host_store),
+                "spilled_handles": sum(
+                    1
+                    for h in self._handles.values()
+                    if h.state == handles_mod.SPILLED
+                ),
                 "host_store_bytes": sum(a.nbytes for a in self._host_store.values()),
             }
 
     def clear(self) -> None:
-        """Session teardown: drop every charge and host-store payload."""
+        """Engine teardown: drop every charge and host-store payload."""
         with self._lock:
             self._handles.clear()
             self._charged.clear()
@@ -328,12 +458,15 @@ class MemoryGovernor:
             self._used = 0
             self._reserved = 0
 
-    def _stats(self):
-        return self._session.stats if self._session is not None else None
+    def _stats_for(self, h: AlMatrix):
+        sess = self._sessions.get(h.session_id)
+        return sess.stats if sess is not None else None
 
-    def _record_high_water(self) -> None:
-        # caller holds self._lock
-        stats = self._stats()
+    def _record_high_water(self, h: AlMatrix) -> None:
+        # caller holds self._lock; per-session stats see the engine-wide
+        # usage at their own charge moments, self.high_water the global max
+        self.high_water = max(self.high_water, self._used)
+        stats = self._stats_for(h)
         if stats is not None:
             stats.record_hbm_usage(self._used)
 
@@ -341,5 +474,6 @@ class MemoryGovernor:
         s = self.snapshot()
         return (
             f"MemoryGovernor(budget={s['budget']}, used={s['used']}, "
-            f"resident={s['resident_handles']}, spilled={s['spilled_handles']})"
+            f"sessions={s['sessions']}, resident={s['resident_handles']}, "
+            f"spilled={s['spilled_handles']})"
         )

@@ -12,11 +12,25 @@ sparklike→Alchemist pipeline from paying the bridge between every call:
    (:func:`repro.core.expr.content_key`); a second send of equal bytes in the
    same session reuses the already-resident matrix
    (``session.stats.resident_reuses``). The cache checks handle liveness, so
-   a freed matrix is transparently re-sent.
+   a freed matrix is transparently re-sent. Dedup is two-level (DESIGN.md
+   §8): behind the session-local memo sits the engine's content-addressed
+   :class:`~repro.core.resident.ResidentStore` — bytes another session
+   already placed on the engine (or content migrated out of a closed
+   session) attach instead of crossing the bridge
+   (``session.stats.cross_session_reuses``).
 3. **Async pipelining.** Lowering emits ``send_async``/``run_async`` in
    dependency order and never blocks: independent subgraphs interleave on the
    session's FIFO exactly as in DESIGN.md §3, and only an explicit
    :meth:`collect` materializes.
+4. **Common-subexpression elimination.** :meth:`run` memoizes structurally
+   identical routine invocations — same ``(library, routine)``, same arg
+   *node ids* (or handle ids/scalars), same canonical params and arity — so
+   a DAG that rebuilds the same compute node twice lowers it once
+   (``session.stats.cse_hits``). Identity is by node id on purpose: two
+   sends of equal bytes stay distinct nodes (their dedup is the content
+   layer's job), and CSE only fires for genuinely shared subexpressions.
+   ``run(..., cse=False)`` opts a call out (e.g. routines that are
+   intentionally re-randomized between calls).
 
 The planner is per-:class:`~repro.core.engine.AlchemistContext` (reached via
 ``ac.planner``), so its caches are session-scoped like the relayout plan
@@ -44,7 +58,15 @@ import numpy as np
 from repro.core import futures as futures_mod
 from repro.core import handles as handles_mod
 from repro.core.errors import SessionError, ShapeError
-from repro.core.expr import Expr, LazyMatrix, ProjExpr, RunExpr, SendExpr, iter_nodes
+from repro.core.expr import (
+    Expr,
+    LazyMatrix,
+    ProjExpr,
+    RunExpr,
+    SendExpr,
+    content_key,
+    iter_nodes,
+)
 from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 
@@ -52,6 +74,37 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.engine import AlchemistContext
 
 LazyLike = Union[LazyMatrix, Expr]
+
+
+class _Uncacheable(Exception):
+    """A param value with no trustworthy canonical identity: the call must
+    opt out of CSE rather than risk a false memo hit (repr() truncates big
+    ndarrays, so two different arrays can print identically)."""
+
+
+def _canon_params(params: Dict[str, Any]) -> Tuple:
+    """Hashable canonical form of a routine's keyword params (codec scalars
+    and small lists), order-insensitive, for the CSE signature. Raises
+    :class:`_Uncacheable` for values whose identity cannot be captured."""
+
+    def canon(v: Any) -> Any:
+        if isinstance(v, np.ndarray):
+            return ("nd", content_key(v))
+        if isinstance(v, (list, tuple)):
+            return ("seq", tuple(canon(x) for x in v))
+        if isinstance(v, dict):
+            return ("map", tuple(sorted((k, canon(x)) for k, x in v.items())))
+        if isinstance(v, AlMatrix):
+            return ("mat", v.id)
+        if isinstance(v, np.generic):
+            return v.item()
+        try:
+            hash(v)
+            return v
+        except TypeError:
+            raise _Uncacheable(repr(type(v))) from None
+
+    return tuple(sorted((k, canon(v)) for k, v in params.items()))
 
 
 class OffloadPlanner:
@@ -64,6 +117,9 @@ class OffloadPlanner:
         self.ac = ac
         # content key -> AlFuture-of-handle / AlMatrix already resident
         self._resident: Dict[Tuple, Any] = {}
+        # structural RunExpr signature -> the LazyMatrix (or tuple of
+        # projections) already built for it (CSE, DESIGN.md §8)
+        self._cse: Dict[Tuple, Any] = {}
         # expr id -> lowered value (AlFuture / AlMatrix / scalar)
         self._lowered: Dict[int, Any] = {}
         # DAG last-use tracking for the memory governor: expr id -> number of
@@ -89,7 +145,13 @@ class OffloadPlanner:
         return LazyMatrix(SendExpr.of(array, name=name, snapshot=snapshot), self)
 
     def run(
-        self, library: str, routine: str, *args: Any, n_outputs: int = 1, **params: Any
+        self,
+        library: str,
+        routine: str,
+        *args: Any,
+        n_outputs: int = 1,
+        cse: bool = True,
+        **params: Any,
     ):
         """Defer ``library.routine``. Args may be LazyMatrix nodes, AlMatrix
         handles, host ndarrays (auto-wrapped as deferred sends, so they dedup
@@ -99,10 +161,37 @@ class OffloadPlanner:
         Chains validate as they are built: routines with a shape rule
         (every ElementalLib routine) raise a client-side ShapeError here on
         mismatched operand dimensions, instead of failing deep inside the
-        task queue at execution time."""
+        task queue at execution time.
+
+        Structurally identical invocations — same routine, same arg node
+        ids, same canonical params — are memoized (common-subexpression
+        elimination, counted as ``cse_hits``): the same LazyMatrix comes
+        back, so the compute lowers at most once per DAG. Pass ``cse=False``
+        for routines that must re-execute per call."""
         if n_outputs < 1:
             raise SessionError(f"n_outputs must be >= 1, got {n_outputs}")
         wrapped = tuple(self._wrap_arg(a) for a in args)
+        sig = None
+        if cse:
+            try:
+                sig = (
+                    library,
+                    routine,
+                    tuple(self._arg_sig(a) for a in wrapped),
+                    _canon_params(params),
+                    n_outputs,
+                )
+            except _Uncacheable:
+                sig = None  # a param defeats canonicalization: never memoize
+        if sig is not None:
+            with self._lock:
+                hit = self._cse.get(sig)
+            if hit is not None:
+                # Freed results re-lower transparently through _stale();
+                # failed ones keep propagating — both exactly the semantics
+                # of consuming the original node twice.
+                self.ac.session.stats.record_cse_hit()
+                return hit
         node = RunExpr(
             library=library,
             routine=routine,
@@ -112,10 +201,27 @@ class OffloadPlanner:
         )
         node.output_shapes()  # graph-build validation; raises ShapeError
         if n_outputs == 1:
-            return LazyMatrix(node, self)
-        return tuple(
-            LazyMatrix(ProjExpr(parent=node, index=i), self) for i in range(n_outputs)
-        )
+            out = LazyMatrix(node, self)
+        else:
+            out = tuple(
+                LazyMatrix(ProjExpr(parent=node, index=i), self)
+                for i in range(n_outputs)
+            )
+        if sig is not None:
+            with self._lock:
+                self._cse.setdefault(sig, out)
+        return out
+
+    @staticmethod
+    def _arg_sig(a: Any) -> Tuple:
+        """Structural identity of one RunExpr argument for the CSE memo:
+        node id for Expr operands (content dedup stays the send layer's
+        job), handle id for resident matrices, value for codec scalars."""
+        if isinstance(a, Expr):
+            return ("expr", a.id)
+        if isinstance(a, AlMatrix):
+            return ("mat", a.id)
+        return ("val", type(a).__name__, repr(a))
 
     def _wrap_arg(self, a: Any) -> Any:
         if isinstance(a, LazyMatrix):
@@ -242,13 +348,14 @@ class OffloadPlanner:
             return val
 
     def _lower_send(self, node: SendExpr) -> Any:
-        stats = self.ac.session.stats
+        sess = self.ac.session
+        stats = sess.stats
         cached = self._resident.get(node.key)
         if cached is not None and self._is_live(cached):
             # The naive pipeline would push these bytes across the bridge
             # again; the planner hands back the already-resident matrix.
             # A *spilled* resident matrix still counts: its bytes live in the
-            # session's host store and refill on consumption — host↔device
+            # engine's host store and refill on consumption — host↔device
             # traffic, never a bridge crossing. Touching the governor resets
             # its LRU age so imminent reuse isn't immediately re-spilled.
             stats.record_resident_reuse()
@@ -256,9 +363,30 @@ class OffloadPlanner:
             if isinstance(val, AlFuture) and val.done() and val.exception() is None:
                 val = val.result()
             if isinstance(val, AlMatrix):
-                self.ac.session.memgov.touch(val)
+                sess.memgov.touch(val)
             return cached
-        fut = self.ac.send_async(node.array, name=node.name)
+        # Session-local memo missed: consult the engine's content index
+        # (DESIGN.md §8). A placement this session already holds (e.g. an
+        # eager send of the same bytes) is reused in place; content resident
+        # only elsewhere attaches without a bridge crossing; a genuine miss
+        # sends — publishing the snapshot payload so later sessions (and this
+        # session after a close/migration cycle) can attach to it.
+        store = self.ac._content_store()
+        if store is not None:
+            entry = store.lookup(node.key)
+            mine = entry.live_handle_for(sess.id) if entry is not None else None
+            if mine is not None:
+                stats.record_resident_reuse()
+                sess.memgov.touch(mine)
+                self._resident[node.key] = mine
+                return mine
+        fut = self.ac._submit_send(
+            node.array,
+            name=node.name,
+            block=False,
+            key=node.key,
+            payload=node.array if isinstance(node.array, np.ndarray) else None,
+        )
         self._resident[node.key] = fut
         return fut
 
@@ -392,6 +520,7 @@ class OffloadPlanner:
         Already-dispatched work is unaffected."""
         with self._lock:
             self._resident.clear()
+            self._cse.clear()
             self._lowered.clear()
             self._remaining_uses.clear()
             self._counted.clear()
@@ -400,6 +529,7 @@ class OffloadPlanner:
         with self._lock:
             return {
                 "resident_entries": len(self._resident),
+                "cse_entries": len(self._cse),
                 "lowered_nodes": len(self._lowered),
                 "tracked_last_uses": len(self._remaining_uses),
             }

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import importlib
 import inspect
-from typing import Any, Callable, Dict, Tuple, Union
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 from repro.core.errors import LibraryError
 
@@ -57,9 +57,44 @@ class Library:
             raise LibraryError(f"{type(self).__name__} must set a class-level name")
         self._routines: Dict[str, Routine] = {}
 
-    def register(self, name: str, fn: Callable[..., Any], doc: str = "") -> None:
+    def register(
+        self,
+        name: str,
+        fn: Callable[..., Any],
+        doc: str = "",
+        *,
+        shape_rule: Optional[Callable] = None,
+        unchecked_shapes: bool = False,
+    ) -> None:
+        """Expose ``fn`` as routine ``name``.
+
+        Every routine must come with a shape story (DESIGN.md §7): the
+        engine prices routine outputs for HBM admission and validates
+        deferred chains at graph-build time through
+        :data:`repro.core.expr.SHAPE_RULES`. Third-party libraries pass
+        ``shape_rule`` — a ``(arg_shapes, params) -> output shapes``
+        callable registered via
+        :func:`repro.core.expr.register_shape_rule` — or explicitly opt out
+        with ``unchecked_shapes=True`` (outputs stay unpriced and chains
+        through the routine stop validating, exactly the pre-rule
+        behaviour). Registering a routine with neither is rejected: a
+        silently unpriced routine is how budgets drift.
+        """
+        # Imported here, not at module top: expr imports nothing from the
+        # registry, but keeping the registry import-light preserves the
+        # "engine has no compiled-in library knowledge" layering.
+        from repro.core.expr import SHAPE_RULES, register_shape_rule
+
         if name in self._routines:
             raise LibraryError(f"routine {name!r} already registered in library {self.name!r}")
+        if shape_rule is not None:
+            register_shape_rule(name, shape_rule)
+        elif name not in SHAPE_RULES and not unchecked_shapes:
+            raise LibraryError(
+                f"routine {name!r} of library {self.name!r} has no shape rule: "
+                "pass shape_rule=... (see repro.core.expr.SHAPE_RULES for the "
+                "contract) or opt out explicitly with unchecked_shapes=True"
+            )
         self._routines[name] = Routine(name=name, fn=fn, doc=doc or (fn.__doc__ or ""))
 
     def routine(self, name: str) -> Routine:

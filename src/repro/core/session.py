@@ -13,12 +13,18 @@ Each session additionally owns (DESIGN.md §3):
   ordering while letting distinct sessions overlap;
 - a :class:`~repro.core.relayout.RelayoutPlanCache` — memoized shard
   geometry for repeated same-shape transfers, with hit/miss counters
-  surfaced through :class:`SessionStats`;
-- a :class:`~repro.core.memgov.MemoryGovernor` — the per-worker-group HBM
-  byte budget that spills least-recently/last-used resident matrices to a
-  pinned host store under pressure and transparently refills them on next
-  consumption (DESIGN.md §7), with spill/refill/high-water counters in
-  :class:`SessionStats`.
+  surfaced through :class:`SessionStats`.
+
+Two engine-scoped services are *viewed* rather than owned (DESIGN.md §7/§8):
+
+- ``session.memgov`` is the **engine-wide** memory governor — one shared HBM
+  byte budget across every connected session; this session's requested
+  budget folds into the shared ceiling while it lives;
+- ``session.residents`` is the engine's content-addressed
+  :class:`~repro.core.resident.ResidentStore`. Store-backed entries in the
+  handle table are per-session *placements* that pin store entries; freeing
+  one unpins it, and closing the session migrates uniquely-referenced
+  content to the host side instead of dropping it.
 """
 
 from __future__ import annotations
@@ -37,6 +43,7 @@ from repro.core.layouts import LayoutSpec
 from repro.core.memgov import MemoryGovernor
 from repro.core.registry import Library
 from repro.core.relayout import RelayoutPlanCache, TransferRecord
+from repro.core.resident import ResidentStore
 from repro.core.taskqueue import TaskQueue
 
 _SESSION_IDS = itertools.count(1)
@@ -59,14 +66,19 @@ class SessionStats:
     # Lazy offload planner counters (DESIGN.md §6): crossings the planner
     # avoided relative to a naive send→run→collect round-trip execution.
     elided_crossings: int = 0  # collect+resend round trips never performed
-    resident_reuses: int = 0  # sends satisfied from the resident-matrix cache
+    resident_reuses: int = 0  # sends satisfied from this session's residents
     planned_ops: int = 0  # routine invocations lowered by the planner
+    cse_hits: int = 0  # structurally identical RunExprs memoized (DESIGN.md §8)
+    # Engine resident-store counters (DESIGN.md §8): sends satisfied from
+    # content another session (or a closed one) already placed on the engine
+    # — an attach-only placement, zero bytes over the client bridge.
+    cross_session_reuses: int = 0
     # Memory-governor counters (DESIGN.md §7): budgeted residency.
     spills: int = 0  # resident matrices moved to the pinned host store
     refills: int = 0  # spilled matrices transparently re-placed on device
     spilled_bytes: int = 0  # cumulative bytes spilled to host
     refilled_bytes: int = 0  # cumulative bytes refilled to device
-    hbm_high_water: int = 0  # max bytes simultaneously charged to the budget
+    hbm_high_water: int = 0  # max engine-wide charged bytes seen at a charge
     transfers: List[TransferRecord] = dataclasses.field(default_factory=list)
 
     def record_transfer(self, rec: TransferRecord) -> None:
@@ -94,6 +106,12 @@ class SessionStats:
 
     def record_resident_reuse(self, n: int = 1) -> None:
         self.resident_reuses += n
+
+    def record_cross_session_reuse(self, n: int = 1) -> None:
+        self.cross_session_reuses += n
+
+    def record_cse_hit(self, n: int = 1) -> None:
+        self.cse_hits += n
 
     def record_planned_op(self, n: int = 1) -> None:
         self.planned_ops += n
@@ -123,6 +141,8 @@ class SessionStats:
             "relayout_cache_misses": self.relayout_cache_misses,
             "elided_crossings": self.elided_crossings,
             "resident_reuses": self.resident_reuses,
+            "cross_session_reuses": self.cross_session_reuses,
+            "cse_hits": self.cse_hits,
             "planned_ops": self.planned_ops,
             "spills": self.spills,
             "refills": self.refills,
@@ -141,6 +161,8 @@ class Session:
         mesh: Mesh,
         worker_devices: List[jax.Device],
         hbm_budget: Optional[int] = None,
+        memgov: Optional[MemoryGovernor] = None,
+        residents: Optional[ResidentStore] = None,
     ):
         self.id = next(_SESSION_IDS)
         self.name = name
@@ -149,11 +171,18 @@ class Session:
         self.handles: Dict[int, AlMatrix] = {}
         self.libraries: Dict[str, Library] = {}
         self.stats = SessionStats()
+        # The engine-wide governor (one shared budget across sessions); a
+        # private one is built only for standalone/unit-test sessions.
+        # Attached before the task queue exists: a rejected budget must fail
+        # the constructor without leaving a live worker thread behind.
+        self._owns_memgov = memgov is None
+        self.memgov = memgov if memgov is not None else MemoryGovernor(name=f"memgov-{self.id}")
+        self.memgov.attach_session(self, hbm_budget=hbm_budget)
         self.tasks = TaskQueue(name=f"session-{self.id}")
         self.relayout_cache = RelayoutPlanCache()
-        # The worker group's HBM budget (None = unlimited: pure accounting).
-        self.memgov = MemoryGovernor(budget=hbm_budget, name=f"memgov-{self.id}")
-        self.memgov.bind(self)
+        # The engine's content-addressed resident store (None when this
+        # session was built without an engine).
+        self.residents = residents
         self.closed = False
 
     # -- handle table -------------------------------------------------------
@@ -166,7 +195,7 @@ class Session:
         """Register an already-resident array (a routine output: born
         unpadded, so logical shape == physical shape — padded sends go
         through new_pending_handle + materialize(pads=...) instead) and
-        charge it against the session's HBM budget."""
+        charge it against the engine's HBM budget."""
         self._check_open()
         h = AlMatrix(
             shape=tuple(data.shape),
@@ -231,6 +260,10 @@ class Session:
     def free_handle(self, h: AlMatrix) -> None:
         live = self.resolve(h)
         live.free()
+        if live.store_key is not None and self.residents is not None:
+            # An explicit free unpins the store entry; with its last pin the
+            # content is gone for good (unlike a close, which migrates).
+            self.residents.release(live.store_key, self.id, live)
         del self.handles[live.id]
 
     # -- lifecycle ----------------------------------------------------------
@@ -242,11 +275,18 @@ class Session:
         if self.closed:
             return
         self.tasks.close(wait=True, timeout=60.0)
+        # Store-backed placements first: uniquely-referenced content migrates
+        # to the host side (DESIGN.md §8) instead of dying with the session.
+        if self.residents is not None:
+            self.residents.detach_session(self)
         for h in list(self.handles.values()):
-            h.free()
+            if h.state != handles_mod.FREED:
+                h.free()
         self.handles.clear()
         self.libraries.clear()
-        self.memgov.clear()
+        if self._owns_memgov:
+            self.memgov.clear()
+        self.memgov.detach_session(self.id)
         self.closed = True
 
     def _check_open(self) -> None:

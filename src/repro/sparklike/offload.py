@@ -76,23 +76,32 @@ _UNSET = object()
 def offloaded(ac_or_planner: Any, hbm_budget: Any = _UNSET):
     """Scope within which sparklike mllib calls offload to Alchemist.
 
-    ``hbm_budget`` (bytes, or None for unlimited) overrides the session's
-    memory-governor budget for the duration of the scope — the drop-in way to
-    bound a pipeline's engine-resident footprint (DESIGN.md §7). The previous
-    budget is restored on exit; already-spilled matrices stay spilled and
-    refill on their next consumption as usual.
+    ``hbm_budget`` (bytes, or None to lift this session's own request for
+    the scope) overrides the session's budget *request* for the duration —
+    the drop-in way to bound a pipeline's engine-resident footprint
+    (DESIGN.md §7/§8). The governor is engine-wide and its effective budget
+    is the min over the engine base and every session's request, so the
+    override tightens (or relaxes) only this session's contribution: scopes
+    in different sessions compose instead of clobbering one shared base, and
+    the engine's own budget can never be lifted from a client scope. The
+    previous request is restored on exit; already-spilled matrices stay
+    spilled and refill on their next consumption as usual.
     """
     planner = _resolve_planner(ac_or_planner)
-    memgov = planner.ac.session.memgov
-    prev_budget = memgov.budget
-    if hbm_budget is not _UNSET:
-        memgov.set_budget(hbm_budget)  # validates before activating the scope
+    session = planner.ac.session
+    memgov = session.memgov
+    prev_budget = memgov.requested_budget(session.id)
+    overrode = hbm_budget is not _UNSET
+    if overrode:
+        # validates before activating the scope
+        memgov.request_budget(session.id, hbm_budget)
     previous = _ACTIVE
     enable(planner)
     try:
         yield planner
     finally:
-        memgov.set_budget(prev_budget)  # lock-serialized against admissions
+        if overrode:
+            memgov.request_budget(session.id, prev_budget)
         if previous is not None:
             enable(previous)
         else:

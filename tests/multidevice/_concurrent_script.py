@@ -37,7 +37,11 @@ import repro
 assert len(jax.devices()) == 8
 
 rng = np.random.default_rng(0)
-engine = repro.AlchemistEngine()
+# Session-scoped residency on purpose: both parts drive identical payloads
+# through concurrent sessions to measure genuine per-session transfer
+# streams; the engine content store (DESIGN.md §8) would attach the second
+# session's sends and erase the traffic this script exists to overlap.
+engine = repro.AlchemistEngine(share_residents=False)
 
 
 def connect(n, name):

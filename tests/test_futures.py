@@ -296,12 +296,15 @@ class TestRelayoutPlanCache:
             np.testing.assert_allclose(np.asarray(ac.collect(ac.send(a))), a, rtol=1e-6)
 
     def test_cache_is_session_scoped(self, engine, rng):
+        # Distinct payloads per session: equal bytes would attach through the
+        # engine's resident store (DESIGN.md §8) and never consult the plan
+        # cache via the send path at all.
         a = rng.standard_normal((16, 16)).astype(np.float32)
         ac1 = repro.AlchemistContext(engine, num_workers=1)
         ac1.send(a)
         ac1.stop()
         ac2 = repro.AlchemistContext(engine, num_workers=1)
-        ac2.send(a)
+        ac2.send(a + 1.0)
         assert ac2.stats.relayout_cache_misses == 1  # fresh cache, no hit
         ac2.stop()
 

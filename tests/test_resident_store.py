@@ -1,0 +1,677 @@
+"""Engine-level resident store tests (DESIGN.md §8): content-addressed
+cross-session placement, refcounted pins, migration-on-close, the shared
+engine-wide HBM budget, the shape-rule registration hook, and planner CSE.
+
+Single-device here (sessions are sequential: close-migrate-attach is the
+cross-session path exercised); concurrent multi-session semantics run on a
+real worker-group mesh in tests/multidevice/ and benchmarks/cross_session.py,
+and the tier2 stress below goes concurrent whenever the host exposes the
+devices for it.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.errors import HandleError, LibraryError, ShapeError
+from repro.core.expr import SHAPE_RULES, content_key, register_shape_rule
+from repro.core.handles import AlMatrix, MATERIALIZED
+from repro.core.layouts import GRID
+from repro.core.registry import Library
+from repro.core.resident import ResidentStore
+
+MAT = 32 * 32 * 4  # bytes of one 32x32 float32
+
+
+@pytest.fixture()
+def engine():
+    return repro.AlchemistEngine()
+
+
+def _connect(engine, name="app", budget=None):
+    ac = repro.AlchemistContext(engine, num_workers=1, name=name, hbm_budget=budget)
+    ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+    return ac
+
+
+def _mats(n, rng, shape=(32, 32)):
+    return [rng.standard_normal(shape).astype(np.float32) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Cross-session placement
+# ---------------------------------------------------------------------------
+
+class TestCrossSessionPlacement:
+    def test_second_session_attaches_zero_bridge(self, engine, rng):
+        a = _mats(1, rng)[0]
+        ac1 = _connect(engine, "s1")
+        ac1.send(a)
+        ac1.stop()  # uniquely referenced: migrated, not freed
+        assert engine.residents.stats()["migrations"] == 1
+
+        ac2 = _connect(engine, "s2")
+        h = ac2.send(a.copy())  # equal bytes, different ndarray
+        np.testing.assert_array_equal(np.asarray(ac2.collect(h)), a)
+        s2 = ac2.stats.summary()
+        assert s2["num_sends"] == 0 and s2["send_bytes"] == 0
+        assert s2["cross_session_reuses"] == 1
+        ac2.stop()
+
+    def test_planner_send_attaches_through_engine_index(self, engine, rng):
+        a = _mats(1, rng)[0]
+        ac1 = _connect(engine, "s1")
+        np.testing.assert_array_equal(np.asarray(ac1.planner.collect(ac1.planner.send(a))), a)
+        ac1.stop()
+
+        ac2 = _connect(engine, "s2")
+        out = np.asarray(ac2.planner.collect(ac2.planner.send(a)))
+        np.testing.assert_array_equal(out, a)
+        s2 = ac2.stats.summary()
+        assert s2["num_sends"] == 0 and s2["cross_session_reuses"] == 1
+        assert s2["resident_reuses"] == 0  # engine-level, not session-level
+        ac2.stop()
+
+    def test_spilled_then_migrated_content_refills_bit_exact(self, engine, rng):
+        mats = _mats(3, rng)
+        ac1 = _connect(engine, "s1", budget=MAT)  # 1-matrix budget: spills
+        for m in mats:
+            ac1.planner.lower(ac1.planner.send(m))
+        ac1.wait()
+        assert ac1.stats.spills >= 2
+        ac1.stop()  # migration must stage the spilled payloads host-side
+
+        ac2 = _connect(engine, "s2")
+        for m in mats:
+            h = ac2.send(m.copy())
+            np.testing.assert_array_equal(np.asarray(ac2.collect(h)), m)
+            # engine-side consumption exercises the refill path too
+            norm = float(ac2.run("elemental", "normest", h))
+            assert abs(norm - np.linalg.norm(m)) < 1e-3
+        assert ac2.stats.num_sends == 0
+        assert ac2.stats.cross_session_reuses == 3
+        ac2.stop()
+
+    def test_attach_survives_different_worker_group_shape(self, rng):
+        # Content placed by a 1-worker session refills into a session whose
+        # grid needs different divisibility padding.
+        if len(repro.AlchemistEngine().devices) < 4:
+            pytest.skip("needs 4 devices")
+        engine = repro.AlchemistEngine()
+        a = rng.standard_normal((6, 6)).astype(np.float32)  # pads on 4 workers
+        ac1 = _connect(engine, "s1")
+        ac1.send(a)
+        ac1.stop()
+        ac2 = repro.AlchemistContext(engine, num_workers=4, name="s2")
+        np.testing.assert_array_equal(np.asarray(ac2.collect(ac2.send(a))), a)
+        assert ac2.stats.cross_session_reuses == 1
+        ac2.stop()
+
+    def test_explicit_free_drops_entry_for_good(self, engine, rng):
+        a = _mats(1, rng)[0]
+        ac1 = _connect(engine, "s1")
+        h = ac1.send(a)
+        ac1.free(h)
+        assert len(engine.residents) == 0  # user free != migration
+        with pytest.raises(HandleError):
+            ac1.collect(h)
+        # a re-send is a genuine transfer again
+        h2 = ac1.send(a)
+        np.testing.assert_array_equal(np.asarray(ac1.collect(h2)), a)
+        assert ac1.stats.num_sends == 2
+        ac1.stop()
+
+    def test_duplicate_eager_send_keeps_classic_semantics(self, engine, rng):
+        # Within one session, eager sends stay independent full transfers
+        # (the planner is the intra-session dedup layer): freeing one copy
+        # must not kill the other.
+        a = _mats(1, rng)[0]
+        ac = _connect(engine)
+        h1, h2 = ac.send(a), ac.send(a)
+        assert h1.id != h2.id
+        assert ac.stats.num_sends == 2
+        ac.free(h1)
+        np.testing.assert_array_equal(np.asarray(ac.collect(h2)), a)
+        ac.stop()
+
+    def test_share_residents_false_restores_baseline(self, rng):
+        engine = repro.AlchemistEngine(share_residents=False)
+        a = _mats(1, rng)[0]
+        ac1 = _connect(engine, "s1")
+        ac1.send(a)
+        ac1.stop()
+        ac2 = _connect(engine, "s2")
+        ac2.send(a)
+        s2 = ac2.stats.summary()
+        assert s2["num_sends"] == 1 and s2["cross_session_reuses"] == 0
+        assert len(engine.residents) == 0
+        ac2.stop()
+
+    def test_cyclic_layouts_bypass_store(self, engine, rng):
+        a = _mats(1, rng, shape=(8, 8))[0]
+        ac = repro.AlchemistContext(
+            engine, num_workers=1, name="cyc", engine_layout=GRID.with_cyclic()
+        )
+        np.testing.assert_array_equal(np.asarray(ac.collect(ac.send(a))), a)
+        assert len(engine.residents) == 0  # never published
+        ac.stop()
+
+    def test_attach_falls_back_to_send_when_content_vanishes(self, rng):
+        # The attach decision and the attach task are separated by the queue:
+        # if the producer's placement is freed in between (and no payload was
+        # ever captured — eager sends publish none), the task must fall back
+        # to a genuine bridge send of the caller's bytes, not hang on its own
+        # pending placement and not fail the future.
+        if len(repro.AlchemistEngine().devices) < 2:
+            pytest.skip("needs 2 devices for two live sessions")
+        import time
+
+        engine = repro.AlchemistEngine()
+        a = _mats(1, rng)[0]
+        ac1 = _connect(engine, "s1")
+        h1 = ac1.send(a)  # eager: entry has a live placement, no payload
+        ac2 = _connect(engine, "s2")
+        ac2.session.tasks.submit(lambda: time.sleep(0.3), label="stall")
+        fut = ac2.send_async(a)  # attach decided now, runs after the stall
+        ac1.free(h1)  # the only payload source dies before the task runs
+        h2 = fut.result(30)
+        np.testing.assert_array_equal(np.asarray(ac2.collect(h2)), a)
+        s2 = ac2.stats.summary()
+        assert s2["num_sends"] == 1 and s2["send_bytes"] == a.nbytes  # honest
+        assert s2["cross_session_reuses"] == 0
+        # the fallback republished the payload: a third session attaches
+        ac1.stop()
+        ac3 = _connect(engine, "s3")
+        np.testing.assert_array_equal(np.asarray(ac3.collect(ac3.send(a))), a)
+        assert ac3.stats.cross_session_reuses == 1
+        ac3.stop()
+        ac2.stop()
+
+    def test_offloaded_override_restores_engine_base_budget(self, engine, rng):
+        # Regression: offloaded() used to save the *effective* budget (which
+        # folds in this session's own request) and restore it into the base —
+        # permanently clamping the engine for every later session.
+        from repro.sparklike import offload
+
+        ac = _connect(engine, budget=2 * MAT)
+        with offload.offloaded(ac):  # no hbm_budget arg: must not touch it
+            pass
+        with offload.offloaded(ac, hbm_budget=MAT):
+            assert engine.memgov.budget == MAT
+        assert engine.memgov.budget == 2 * MAT  # session request only
+        ac.stop()
+        assert engine.memgov.budget is None  # base never absorbed the request
+
+    def test_engine_shutdown_clears_everything(self, engine, rng):
+        ac = _connect(engine)
+        ac.send(_mats(1, rng)[0])
+        engine.shutdown()
+        assert len(engine.residents) == 0
+        assert engine.memgov.used == 0
+        assert engine.available_workers == engine.num_workers
+
+    def test_retention_cap_evicts_oldest_orphans(self, rng):
+        engine = repro.AlchemistEngine(host_retention_bytes=2 * MAT)
+        mats = _mats(4, rng)
+        for i, m in enumerate(mats):
+            ac = _connect(engine, f"s{i}")
+            ac.send(m)
+            ac.stop()  # each close migrates one entry
+        s = engine.residents.stats()
+        assert s["entries"] == 2 and s["evictions"] == 2
+        # the newest content survived and still attaches
+        ac = _connect(engine, "reader")
+        np.testing.assert_array_equal(np.asarray(ac.collect(ac.send(mats[-1]))), mats[-1])
+        assert ac.stats.cross_session_reuses == 1
+        ac.stop()
+
+
+# ---------------------------------------------------------------------------
+# Refcount / pin mechanics on the store itself
+# ---------------------------------------------------------------------------
+
+class _StubSession:
+    _ids = iter(range(50_000, 60_000))
+
+    def __init__(self):
+        self.id = next(self._ids)
+
+
+def _stub_handle(sid, payload):
+    return AlMatrix(
+        shape=payload.shape,
+        dtype=np.float32,
+        layout=GRID,
+        session_id=sid,
+        _state=MATERIALIZED,
+    )
+
+
+class TestStoreMechanics:
+    def test_refcount_and_session_pins(self):
+        store = ResidentStore()
+        payload = np.ones((4, 4), np.float32)
+        key = content_key(payload)
+        s1, s2 = _StubSession(), _StubSession()
+        h1 = _stub_handle(s1.id, payload)
+        h2 = _stub_handle(s2.id, payload)
+        entry = store.register(key, h1, s1, payload=payload)
+        store.register(key, h2, s2)
+        assert entry.refcount == 2
+        assert entry.sessions == tuple(sorted((s1.id, s2.id)))
+        store.release(key, s1.id, h1)
+        assert entry.refcount == 1 and entry.sessions == (s2.id,)
+        # releasing the same placement twice is a no-op, never a double-free
+        store.release(key, s1.id, h1)
+        assert entry.refcount == 1
+        store.release(key, s2.id, h2)
+        assert len(store) == 0
+
+    def test_register_is_idempotent_per_handle(self):
+        store = ResidentStore()
+        payload = np.ones((2, 2), np.float32)
+        key = content_key(payload)
+        s = _StubSession()
+        h = _stub_handle(s.id, payload)
+        store.register(key, h, s, payload=payload)
+        store.register(key, h, s)
+        assert store.lookup(key).refcount == 1
+
+    def test_disabled_store_never_indexes(self):
+        store = ResidentStore(enabled=False)
+        payload = np.ones((2, 2), np.float32)
+        key = content_key(payload)
+        s = _StubSession()
+        store.register(key, _stub_handle(s.id, payload), s, payload=payload)
+        assert store.lookup(key) is None and len(store) == 0
+
+
+# ---------------------------------------------------------------------------
+# Shared engine-wide budget
+# ---------------------------------------------------------------------------
+
+class TestSharedBudget:
+    def test_effective_budget_is_min_of_engine_and_session(self, rng):
+        engine = repro.AlchemistEngine(hbm_budget=4 * MAT)
+        assert engine.memgov.budget == 4 * MAT
+        ac = _connect(engine, budget=2 * MAT)
+        assert engine.memgov.budget == 2 * MAT  # session tightened the ceiling
+        ac.stop()
+        assert engine.memgov.budget == 4 * MAT  # request dropped with the session
+
+    def test_engine_budget_spills_without_session_budget(self, rng):
+        engine = repro.AlchemistEngine(hbm_budget=2 * MAT, share_residents=False)
+        ac = _connect(engine)  # no per-session budget at all
+        mats = _mats(4, rng)
+        hs = [ac.send(m) for m in mats]
+        ac.wait()
+        s = ac.stats.summary()
+        assert s["spills"] == 2
+        assert s["hbm_high_water"] <= 2 * MAT
+        assert engine.memgov.high_water <= 2 * MAT
+        for m, h in zip(mats, hs):
+            np.testing.assert_array_equal(np.asarray(ac.collect(h)), m)
+        ac.stop()
+
+    def test_invalid_session_budget_leaves_no_ghost_state(self, engine):
+        # Regression: the governor used to register the session before
+        # validating its budget, and connect() leaked the allocated devices.
+        before = engine.available_workers
+        with pytest.raises(ValueError):
+            repro.AlchemistContext(engine, num_workers=1, hbm_budget=-5)
+        assert engine.available_workers == before
+        assert engine.memgov.snapshot()["sessions"] == 0
+
+    def test_interleaved_offloaded_scopes_compose(self, rng):
+        # Regression: per-session override requests replace a shared-base
+        # save/restore that baked a stale budget into the engine when scopes
+        # in two sessions closed out of LIFO order.
+        from repro.sparklike import offload
+
+        engine = repro.AlchemistEngine()
+        if engine.num_workers < 2:
+            pytest.skip("needs 2 devices for two live sessions")
+        ac1, ac2 = _connect(engine, "s1"), _connect(engine, "s2")
+        try:
+            scope1 = offload.offloaded(ac1, hbm_budget=3 * MAT)
+            scope2 = offload.offloaded(ac2, hbm_budget=4 * MAT)
+            scope1.__enter__()
+            scope2.__enter__()
+            assert engine.memgov.budget == 3 * MAT  # min of both requests
+            scope1.__exit__(None, None, None)  # non-LIFO on purpose
+            assert engine.memgov.budget == 4 * MAT
+            scope2.__exit__(None, None, None)
+            assert engine.memgov.budget is None  # nothing baked in
+        finally:
+            offload.disable()
+            ac1.stop()
+            ac2.stop()
+
+    def test_padded_store_refill_respects_budget(self, rng):
+        # Regression: refill claimed the logical store-payload bytes but
+        # charged the padded physical footprint, overshooting the budget by
+        # the pad bytes without attempting a spill.
+        engine = repro.AlchemistEngine()
+        if engine.num_workers < 4:
+            pytest.skip("needs 4 devices for a padding grid")
+        from repro.core.handles import SPILLED
+
+        budget = 232  # phys(7x6 -> 8x6x4 = 192) + 40: filler must be evicted
+        ac = repro.AlchemistContext(engine, num_workers=4, name="pad", hbm_budget=budget)
+        ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+        pl = ac.planner
+        a = rng.standard_normal((7, 6)).astype(np.float32)  # pads to 8x6
+        ha = pl.materialize(pl.send(a))
+        ac.wait()
+        hf = pl.materialize(pl.send(rng.standard_normal((4, 3)).astype(np.float32)))
+        ac.wait()  # filler's admission spilled the padded matrix
+        assert ac.session.resolve(ha).state == SPILLED and hf.state != SPILLED
+        norm = float(ac.run("elemental", "normest", ha))  # refill under budget
+        assert abs(norm - np.linalg.norm(a)) < 1e-3
+        assert ac.stats.hbm_high_water <= budget, ac.stats.summary()
+        assert engine.memgov.high_water <= budget
+        ac.stop()
+
+    def test_sequential_sessions_share_one_ledger(self, rng):
+        engine = repro.AlchemistEngine(hbm_budget=2 * MAT, share_residents=False)
+        for i in range(3):
+            ac = _connect(engine, f"s{i}")
+            for m in _mats(3, rng):
+                ac.send(m)
+            ac.stop()
+            assert engine.memgov.used == 0  # close discharged everything
+        assert engine.memgov.high_water <= 2 * MAT
+
+
+# ---------------------------------------------------------------------------
+# Shape-rule registration hook (third-party libraries)
+# ---------------------------------------------------------------------------
+
+def _rule_double(shapes, params):
+    a = shapes[0] if shapes else None
+    if a is None:
+        return (None,)
+    return ((a[0], 2 * a[1]),)
+
+
+class TestShapeRuleRegistration:
+    def _lib(self, **register_kwargs):
+        import jax.numpy as jnp
+
+        def widen(x):
+            return jnp.concatenate([x, x], axis=1)
+
+        class ThirdParty(Library):
+            name = "third"
+
+            def __init__(self):
+                super().__init__()
+                self.register("widen", widen, **register_kwargs)
+
+        return ThirdParty
+
+    def test_register_with_rule_validates_and_prices(self, engine, rng):
+        try:
+            ac = _connect(engine)
+            ac.register_library("third", self._lib(shape_rule=_rule_double))
+            assert SHAPE_RULES["widen"] is _rule_double
+            la = ac.planner.send(_mats(1, rng, shape=(8, 4))[0])
+            out = ac.planner.run("third", "widen", la)
+            assert out.shape == (8, 8)  # the rule drives graph-build inference
+            ac.stop()
+        finally:
+            SHAPE_RULES.pop("widen", None)
+
+    def test_register_without_rule_or_opt_out_rejected(self):
+        with pytest.raises(LibraryError, match="shape rule"):
+            self._lib()()
+
+    def test_register_with_explicit_opt_out(self, engine, rng):
+        ac = _connect(engine)
+        ac.register_library("third", self._lib(unchecked_shapes=True))
+        assert "widen" not in SHAPE_RULES
+        a = _mats(1, rng, shape=(8, 4))[0]
+        out = np.asarray(ac.collect(ac.run("third", "widen", ac.send(a))))
+        np.testing.assert_array_equal(out, np.concatenate([a, a], axis=1))
+        ac.stop()
+
+    def test_builtin_routine_names_need_no_rule_argument(self):
+        class Alias(Library):
+            name = "alias"
+
+            def __init__(self):
+                super().__init__()
+                self.register("gemm", lambda a, b: a @ b)  # rule already known
+
+        assert "gemm" in Alias().routine_names()
+
+    def test_library_with_inline_rule_reregisters_across_sessions(self, engine):
+        # Regression: the conflict check compared rule identity, so a library
+        # defining its rule inline (fresh function object per instantiation)
+        # raised ShapeError on its second session's register_library.
+        try:
+            class Inline(Library):
+                name = "inline"
+
+                def __init__(self):
+                    super().__init__()
+                    self.register("twice", lambda x: x + x, shape_rule=lambda s, p: (s[0],))
+
+            ac1 = _connect(engine, "s1")
+            ac1.register_library("inline", Inline)
+            ac1.stop()
+            ac2 = _connect(engine, "s2")
+            ac2.register_library("inline", Inline)  # fresh instance, same rule
+            ac2.stop()
+        finally:
+            SHAPE_RULES.pop("twice", None)
+
+    def test_conflicting_rule_rejected_unless_override(self):
+        try:
+            register_shape_rule("widen", _rule_double)
+            with pytest.raises(ShapeError, match="already has a shape rule"):
+                register_shape_rule("widen", lambda s, p: (None,))
+            register_shape_rule("widen", lambda s, p: (None,), override=True)
+        finally:
+            SHAPE_RULES.pop("widen", None)
+
+    def test_rule_must_be_callable(self):
+        with pytest.raises(TypeError):
+            register_shape_rule("nope", "not-a-rule")
+
+
+# ---------------------------------------------------------------------------
+# Planner common-subexpression elimination
+# ---------------------------------------------------------------------------
+
+class TestPlannerCSE:
+    def test_identical_runs_memoize(self, engine, rng):
+        ac = _connect(engine)
+        pl = ac.planner
+        la = pl.send(_mats(1, rng)[0])
+        c1 = pl.run("elemental", "gemm", la, la)
+        c2 = pl.run("elemental", "gemm", la, la)
+        assert c2 is c1  # same LazyMatrix: the DAG holds one node
+        assert ac.stats.cse_hits == 1
+        pl.collect(c1)
+        pl.collect(c2)
+        assert ac.stats.planned_ops == 1  # lowered once
+        ac.stop()
+
+    def test_params_and_arity_distinguish(self, engine, rng):
+        ac = _connect(engine)
+        pl = ac.planner
+        la = pl.send(_mats(1, rng, shape=(16, 8))[0])
+        s1 = pl.run("elemental", "truncated_svd", la, n_outputs=3, k=4)
+        s2 = pl.run("elemental", "truncated_svd", la, n_outputs=3, k=4)
+        s3 = pl.run("elemental", "truncated_svd", la, n_outputs=3, k=2)
+        assert s2 is s1 and s3 is not s1
+        assert ac.stats.cse_hits == 1
+        ac.stop()
+
+    def test_distinct_nodes_with_equal_bytes_do_not_cse(self, engine, rng):
+        # CSE keys on node identity: content dedup is the send layer's job,
+        # so equal-byte sends stay distinct nodes and the runs over them
+        # re-execute (matching the documented planner counters).
+        ac = _connect(engine)
+        pl = ac.planner
+        a = _mats(1, rng)[0]
+        c1 = pl.run("elemental", "gemm", pl.send(a), pl.send(a))
+        c2 = pl.run("elemental", "gemm", pl.send(a), pl.send(a))
+        assert c2 is not c1
+        assert ac.stats.cse_hits == 0
+        ac.stop()
+
+    def test_opt_out(self, engine, rng):
+        ac = _connect(engine)
+        pl = ac.planner
+        la = pl.send(_mats(1, rng)[0])
+        c1 = pl.run("elemental", "gemm", la, la, cse=False)
+        c2 = pl.run("elemental", "gemm", la, la, cse=False)
+        assert c2 is not c1
+        assert ac.stats.cse_hits == 0
+        ac.stop()
+
+    def test_freed_cse_result_reruns_transparently(self, engine, rng):
+        ac = _connect(engine)
+        pl = ac.planner
+        a = _mats(1, rng)[0]
+        la = pl.send(a)
+        c1 = pl.run("elemental", "gemm", la, la)
+        ac.free(pl.materialize(c1))
+        c2 = pl.run("elemental", "gemm", la, la)  # CSE hit on a freed result
+        assert c2 is c1
+        np.testing.assert_allclose(np.asarray(pl.collect(c2)), a @ a, atol=1e-3)
+        ac.stop()
+
+    def test_ndarray_params_key_by_content_not_repr(self, engine, rng):
+        # Regression: repr() truncates big ndarrays, so two different arrays
+        # could collide into one memo entry. Content-keying disambiguates;
+        # identity-equal content still memoizes.
+        from repro.core.planner import _Uncacheable, _canon_params
+
+        big1 = np.zeros(2048, np.float64)
+        big2 = big1.copy()
+        big2[1000] = 5.0  # differs only inside repr's "..." elision
+        assert repr(big1) == repr(big2)
+        assert _canon_params({"w": big1}) != _canon_params({"w": big2})
+        assert _canon_params({"w": big1}) == _canon_params({"w": big1.copy()})
+        with pytest.raises(_Uncacheable):
+            _canon_params({"w": {1, 2}})  # no canonical identity: opt out
+
+    def test_uncacheable_param_opts_out_of_cse(self, engine, rng):
+        ac = _connect(engine)
+        pl = ac.planner
+        la = pl.send(_mats(1, rng)[0])
+        c1 = pl.run("elemental", "gemm", la, la, weird={1, 2})
+        c2 = pl.run("elemental", "gemm", la, la, weird={1, 2})
+        assert c2 is not c1 and ac.stats.cse_hits == 0
+        ac.stop()
+
+    def test_summary_exposes_counters(self, engine):
+        ac = _connect(engine)
+        s = ac.stats.summary()
+        assert s["cse_hits"] == 0 and s["cross_session_reuses"] == 0
+        ac.stop()
+
+
+# ---------------------------------------------------------------------------
+# Soak / stress (tier2): refcount lifecycle under churn + injected failures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.tier2
+class TestResidentStoreStress:
+    ROUNDS = 16
+    CONTENT = 5
+
+    def _verify_engine_clean(self, engine):
+        snap = engine.memgov.snapshot()
+        assert snap["used"] == 0, snap
+        assert snap["resident_handles"] == 0 and snap["spilled_handles"] == 0, snap
+        assert snap["host_store_bytes"] == 0, snap
+        for info in engine.residents.snapshot().values():
+            assert info["refcount"] == 0, info  # no pin survived its session
+            assert info["payload"], info  # migrated content kept its bytes
+
+    def test_churn_overlapping_content_never_leaks(self, rng):
+        engine = repro.AlchemistEngine()
+        payloads = _mats(self.CONTENT, rng)
+        refs = [np.array(p) for p in payloads]
+
+        for i in range(self.ROUNDS):
+            budget = [None, 2 * MAT, MAT][i % 3]  # rotate spill pressure
+            ac = _connect(engine, f"churn{i}", budget=budget)
+            pl = ac.planner
+            picks = rng.choice(self.CONTENT, size=3, replace=False)
+            handles = {}
+            for j in picks:
+                if j % 2 == 0:
+                    handles[j] = pl.materialize(pl.send(payloads[j]))
+                else:
+                    handles[j] = ac.send(payloads[j])
+            # injected failures: codec garbage + a task raising in the worker
+            bad = ac.run_async("elemental", "gemm", handles[picks[0]], object())
+            boom = ac.session.tasks.submit(self._boom, label="injected")
+            # engine-side consumption (may refill spilled placements) …
+            for j in picks:
+                norm = float(ac.run("elemental", "normest", handles[j]))
+                assert abs(norm - np.linalg.norm(refs[j])) < 1e-3
+            # … and bit-exact collects, wherever the bytes currently live
+            for j in picks:
+                np.testing.assert_array_equal(np.asarray(ac.collect(handles[j])), refs[j])
+            if i % 4 == 0:  # explicit frees mixed into the churn
+                ac.free(handles[picks[0]])
+            assert bad.exception(timeout=30) is not None
+            assert boom.exception(timeout=30) is not None
+            ac.stop()
+            assert engine.memgov.used == 0, f"round {i} leaked charges"
+
+        self._verify_engine_clean(engine)
+        # after all that churn the payloads in the store are still bit-exact
+        ac = _connect(engine, "final")
+        for p, ref in zip(payloads, refs):
+            np.testing.assert_array_equal(np.asarray(ac.collect(ac.send(p))), ref)
+        assert ac.stats.cross_session_reuses > 0
+        ac.stop()
+        engine.shutdown()
+        assert len(engine.residents) == 0 and engine.memgov.used == 0
+
+    def test_concurrent_sessions_share_and_churn(self, rng):
+        engine = repro.AlchemistEngine(hbm_budget=6 * MAT)
+        if engine.num_workers < 2:
+            pytest.skip("needs 2 devices for concurrent sessions")
+        payloads = _mats(self.CONTENT, rng)
+        refs = [np.array(p) for p in payloads]
+        errors = []
+
+        def churn(tag):
+            try:
+                local = np.random.default_rng(hash(tag) % 2**32)
+                for i in range(6):
+                    ac = _connect(engine, f"{tag}{i}")
+                    pl = ac.planner
+                    picks = local.choice(self.CONTENT, size=2, replace=False)
+                    for j in picks:
+                        out = np.asarray(pl.collect(pl.send(payloads[j])))
+                        np.testing.assert_array_equal(out, refs[j])
+                    if i % 2 == 0:
+                        with pytest.raises(Exception):
+                            ac.run("elemental", "gemm", object(), object())
+                    ac.stop()
+            except BaseException as exc:  # surfaced after join
+                errors.append((tag, exc))
+
+        threads = [threading.Thread(target=churn, args=(t,)) for t in ("a", "b")]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors, errors
+        self._verify_engine_clean(engine)
+        assert engine.memgov.high_water <= 6 * MAT
+
+    @staticmethod
+    def _boom():
+        raise RuntimeError("injected worker failure")
