@@ -5,12 +5,15 @@ clients: several applications connect to one Alchemist instance and share its
 worker-side matrices (arXiv:1805.11800, arXiv:1910.01354). This benchmark
 asserts the two acceptance properties of the engine-level refactor:
 
-1. **Zero-bridge second session.** Session 1 sends a dataset and computes on
-   it; session 2 sends the byte-identical dataset. With the engine's
-   content-addressed store, session 2's sends become attach-only placements:
-   ``send_bytes == 0`` and ``num_sends == 0`` while every result stays
-   bit-identical, with ``cross_session_reuses`` counting the attaches. The
-   session-scoped baseline (``share_residents=False``) re-ships everything.
+1. **Zero-bridge second session, admitted via the queue.** Session 1 holds
+   the whole worker pool, sends a dataset and computes on it; session 2's
+   ``connect`` is *queued* (DESIGN.md §9) until session 1 stops, then sends
+   the byte-identical dataset. With the engine's content-addressed store,
+   session 2's sends become attach-only placements: ``send_bytes == 0`` and
+   ``num_sends == 0`` while every result stays bit-identical, with
+   ``cross_session_reuses`` counting the attaches. The session-scoped
+   baseline (``share_residents=False``) re-ships everything (but still
+   queues — admission and content dedup are independent layers).
 
 2. **Shared HBM budget.** Two sessions with *distinct* working sets, each
    sized to the whole budget (2× overcommitted combined), run against one
@@ -67,28 +70,37 @@ def _workload(ac, mats: List[np.ndarray]) -> Tuple[List[np.ndarray], List[float]
     return outs, norms, ac.stats.summary()
 
 
-def _connect(engine, name: str, workers: Optional[int] = None):
-    ac = repro.AlchemistContext(engine, num_workers=workers, name=name)
+def _connect(engine, name: str, workers: Optional[int] = None, timeout: Optional[float] = None):
+    ac = repro.connect(engine, workers=workers, name=name, timeout=timeout)
     ac.register_library("elemental", "repro.linalg.library:ElementalLib")
     return ac
 
 
 def _two_sessions(engine, tag: str) -> Tuple[Dict, Dict, List[np.ndarray], List[np.ndarray]]:
-    """The same dataset through two sessions of one engine, sequentially
-    (session 2 connects while session 1 is still live when the device pool
-    allows, else after it stopped — the store serves both: live placements
-    and migrated content)."""
-    concurrent = engine.num_workers >= 2
-    w = engine.num_workers // 2 if concurrent else None
-    ac1 = _connect(engine, f"{tag}_s1", w)
+    """The same dataset through two sessions of one engine, with the second
+    session admitted via the **queued path** (DESIGN.md §9): session 1 holds
+    the whole worker pool, so session 2's ``connect`` waits in the admission
+    queue until session 1 stops — at which point session 1's
+    uniquely-referenced residents have migrated host-side and session 2's
+    sends attach to them with zero bridge bytes."""
+    ac1 = _connect(engine, f"{tag}_s1")  # the whole pool
     outs1, norms1, s1 = _workload(ac1, _SHARED)
-    if not concurrent:
-        ac1.stop()
-    ac2 = _connect(engine, f"{tag}_s2", w)
+
+    queued_before = engine.admissions["queued"]
+
+    def release_when_queued() -> None:
+        deadline = time.time() + 60
+        while engine.queued_connects == 0 and time.time() < deadline:
+            time.sleep(0.01)
+        ac1.close()
+
+    t = threading.Thread(target=release_when_queued)
+    t.start()
+    ac2 = _connect(engine, f"{tag}_s2", timeout=120)  # queued, then placed
+    t.join()
+    assert engine.admissions["queued"] == queued_before + 1, engine.admissions
     outs2, norms2, s2 = _workload(ac2, _SHARED)
-    ac2.stop()
-    if concurrent:
-        ac1.stop()
+    ac2.close()
     assert norms1 == norms2, (norms1, norms2)
     for x, y in zip(outs1, outs2):
         np.testing.assert_array_equal(x, y)
@@ -187,8 +199,13 @@ def run(report: List[str], metrics: Optional[Dict] = None) -> None:
             "cross_session_reuses": s2["cross_session_reuses"],
             "first_session_bridge_bytes": s1["send_bytes"],
             "scoped_second_session_bridge_bytes": b2["send_bytes"],
+            "queued_admissions": shared_engine.admissions["queued"],
             "shared_budget_bytes": BUDGET,
             "capped_high_water": hw_cap,
             "uncapped_high_water": hw_free,
             "shared_seconds": t_shared,
+            # the merged observability snapshot (engine pool + admission
+            # queue, per-session stats, governor pressure, resident store) —
+            # DESIGN.md §9's engine.stats(), surfaced in the CI artifact
+            "engine_stats": shared_engine.stats(),
         }

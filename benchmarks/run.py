@@ -10,15 +10,19 @@
   spill_pressure     beyond-paper: memory governor with a working set ≥2× the
                      HBM budget — spill/refill counters, bounded high water,
                      padded uneven-shape sends (DESIGN.md §7)
-  cross_session      beyond-paper: engine-level resident store — a second
-                     session's identical dataset attaches with zero bridge
-                     bytes, and two sessions 2× overcommitted against one
+  cross_session      beyond-paper: engine-level resident store + v2 admission
+                     — a second session is *queued* for admission (DESIGN.md
+                     §9), then its identical dataset attaches with zero
+                     bridge bytes; two sessions 2× overcommitted against one
                      shared HBM budget stay bounded + bit-exact (DESIGN.md §8)
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--only`` takes a
 comma-separated subset; ``--json PATH`` additionally writes the structured
-metrics each suite records — the file CI uploads as ``BENCH_ci.json`` and
-gates against ``benchmarks/BENCH_baseline.json`` (see check_regression.py).
+metrics each suite records — including the merged ``engine.stats()``
+snapshot (worker pool + admission queue, per-session stats, governor
+pressure, resident store; DESIGN.md §9) that cross_session embeds — the
+file CI uploads as ``BENCH_ci.json`` and gates against
+``benchmarks/BENCH_baseline.json`` (see check_regression.py).
 
     PYTHONPATH=src python -m benchmarks.run [--only offload,spill] [--json out.json]
 """

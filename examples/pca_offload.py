@@ -1,15 +1,17 @@
-"""PCA offload — the paper's headline workflow (§4.2), three ways.
+"""PCA offload — the paper's headline workflow (§4.2), three ways, on v2.
 
 A "Spark application" computes top-k PCA of a tall-skinny dataset and then
 projects the dataset onto the principal components:
   1. MLlib-style (sparklike computeSVD: driver Lanczos, one cluster
      round-trip per matvec),
-  2. naively offloaded through Alchemist — each routine is a full
-     send→run→collect round trip, the anti-pattern arXiv:1805.11800 warns
-     about: the PCA components are collected to the client and re-sent for
-     the projection,
-  3. planned offload (DESIGN.md §6) — the lazy planner keeps the components
-     engine-resident, dedups the dataset send, and collects once.
+  2. naively offloaded through Alchemist — an **eager-policy** session where
+     each call executes immediately and the PCA components are collected to
+     the client and re-sent for the projection: the anti-pattern
+     arXiv:1805.11800 warns about, now just a policy + two redundant
+     crossings rather than a separate API,
+  3. planned offload (DESIGN.md §6/§9) — the same code under the default
+     **Planned** policy: the DAG keeps the components engine-resident, dedups
+     the dataset send, and collects once.
 It prints the paper's Send/Compute/Receive decomposition, the counted
 Spark-side overheads (stages, driver syncs, shuffle bytes), and the planner's
 elided-crossing / resident-reuse counters.
@@ -21,7 +23,7 @@ import time
 
 import numpy as np
 
-from repro import AlchemistContext, AlchemistEngine
+import repro
 from repro.sparklike import IndexedRowMatrix, SparkLikeContext, mllib
 from repro.sparklike import offload
 
@@ -47,78 +49,76 @@ def main() -> None:
           f"driver_syncs={ctx.stats.driver_syncs} "
           f"broadcast_MB={ctx.stats.broadcast_bytes/1e6:.1f}")
 
-    # ---------- path 2: naive offload (round trip per routine) ----------
-    engine = AlchemistEngine()
-    ac = AlchemistContext(engine, name="pca_naive")
-    ac.register_library("elemental", "repro.linalg.library:ElementalLib")
-
+    # ---------- path 2: naive offload (eager policy, round trips) --------
+    engine = repro.AlchemistEngine()
     a32 = a.astype(np.float32)
     t0 = time.perf_counter()
-    al_a = ac.send(a32, name="dataset")
-    al_comps, al_scores, variance = ac.run("elemental", "pca", al_a, k=k)
-    comps = np.asarray(ac.collect(al_comps))         # bridge: engine → client
-    al_comps_again = ac.send(comps, name="comps")    # bridge: client → engine
-    proj_naive = np.asarray(ac.collect(ac.run("elemental", "gemm", al_a, al_comps_again)))
-    t_naive = time.perf_counter() - t0
-    s_naive = ac.stats.summary()
+    with repro.connect(engine, name="pca_naive", policy="eager") as s:
+        s.register_library("elemental", "repro.linalg.library:ElementalLib")
+        al_a = s.send(a32, name="dataset")
+        al_comps, al_scores, variance = s.run("elemental", "pca", al_a, n_outputs=3, k=k)
+        comps = np.asarray(al_comps.data())          # bridge: engine → client
+        al_comps_again = s.send(comps, name="comps")  # bridge: client → engine
+        proj_naive = np.asarray((al_a @ al_comps_again).data())
+        variance = np.asarray(variance.data())
+        t_naive = time.perf_counter() - t0
+        s_naive = s.stats.summary()
     naive_bytes = s_naive["send_bytes"] + s_naive["recv_bytes"]
-    print(f"[naive      ] {t_naive*1e3:8.1f} ms | send={s_naive['send_seconds']*1e3:.1f}ms "
+    print(f"[naive/eager] {t_naive*1e3:8.1f} ms | send={s_naive['send_seconds']*1e3:.1f}ms "
           f"compute={s_naive['compute_seconds']*1e3:.1f}ms "
           f"recv={s_naive['recv_seconds']*1e3:.1f}ms "
           f"bridge_MB={naive_bytes/1e6:.2f}")
-    ac.stop()
 
-    # ---------- path 3: planned offload (lazy DAG, crossings elided) ----
-    ac2 = AlchemistContext(engine, name="pca_planned")
-    ac2.register_library("elemental", "repro.linalg.library:ElementalLib")
-
+    # ---------- path 3: planned offload (default policy, crossings elided)
     t0 = time.perf_counter()
-    planner = ac2.planner
-    la = planner.send(a32, name="dataset")
-    comps_l, scores_l, var_l = planner.run("elemental", "pca", la, n_outputs=3, k=k)
-    # projection consumes the engine-resident components: no collect, no
-    # re-send — and the dataset node is reused, not re-shipped
-    proj_l = planner.run("elemental", "gemm", la, comps_l)
-    proj_planned = np.asarray(planner.collect(proj_l))
-    variance2 = planner.collect(var_l)
-    t_planned = time.perf_counter() - t0
-    s_planned = ac2.stats.summary()
-    planned_bytes = s_planned["send_bytes"] + s_planned["recv_bytes"]
-    print(f"[planned    ] {t_planned*1e3:8.1f} ms | send={s_planned['send_seconds']*1e3:.1f}ms "
-          f"compute={s_planned['compute_seconds']*1e3:.1f}ms "
-          f"recv={s_planned['recv_seconds']*1e3:.1f}ms "
-          f"bridge_MB={planned_bytes/1e6:.2f} "
-          f"elided={s_planned['elided_crossings']} reuses={s_planned['resident_reuses']}")
+    with repro.connect(engine, name="pca_planned") as s2:
+        s2.register_library("elemental", "repro.linalg.library:ElementalLib")
+        la = s2.send(a32, name="dataset")
+        comps_l, scores_l, var_l = s2.run("elemental", "pca", la, n_outputs=3, k=k)
+        # projection consumes the engine-resident components: no collect, no
+        # re-send — and the dataset node is reused, not re-shipped
+        proj_l = la @ comps_l
+        proj_planned = np.asarray(proj_l.data())
+        variance2 = np.asarray(var_l.data())
+        t_planned = time.perf_counter() - t0
+        s_planned = s2.stats.summary()
+        planned_bytes = s_planned["send_bytes"] + s_planned["recv_bytes"]
+        print(f"[planned    ] {t_planned*1e3:8.1f} ms | "
+              f"send={s_planned['send_seconds']*1e3:.1f}ms "
+              f"compute={s_planned['compute_seconds']*1e3:.1f}ms "
+              f"recv={s_planned['recv_seconds']*1e3:.1f}ms "
+              f"bridge_MB={planned_bytes/1e6:.2f} "
+              f"elided={s_planned['elided_crossings']} "
+              f"reuses={s_planned['resident_reuses'] + s_planned['cross_session_reuses']}")
 
-    # ---------- agreement ------------------------------------------------
-    sig_alch = np.sqrt(np.asarray(variance) * (a.shape[0] - 1))
-    rel = np.abs(sig_alch[:3] - sig_spark[:3]) / sig_spark[:3]
-    print(f"top-3 sigma agreement: {np.round(rel, 4)} (relative)")
-    # subspace agreement (principal angles ~ 0)
-    overlap = np.linalg.svd(comps.T @ v_spark, compute_uv=False)
-    print(f"subspace overlap (should be ~1): {np.round(overlap[:3], 4)}")
-    assert (rel < 5e-2).all()
+        # ---------- agreement ------------------------------------------------
+        sig_alch = np.sqrt(np.asarray(variance) * (a.shape[0] - 1))
+        rel = np.abs(sig_alch[:3] - sig_spark[:3]) / sig_spark[:3]
+        print(f"top-3 sigma agreement: {np.round(rel, 4)} (relative)")
+        # subspace agreement (principal angles ~ 0)
+        overlap = np.linalg.svd(comps.T @ v_spark, compute_uv=False)
+        print(f"subspace overlap (should be ~1): {np.round(overlap[:3], 4)}")
+        assert (rel < 5e-2).all()
 
-    # planned == naive numerics, strictly fewer bytes over the bridge
-    np.testing.assert_allclose(proj_planned, proj_naive, atol=2e-2)
-    np.testing.assert_allclose(np.asarray(variance2), np.asarray(variance), rtol=1e-5)
-    assert s_planned["elided_crossings"] > 0, s_planned
-    assert planned_bytes < naive_bytes, (planned_bytes, naive_bytes)
-    print(f"bridge bytes: naive={naive_bytes/1e6:.2f} MB → "
-          f"planned={planned_bytes/1e6:.2f} MB "
-          f"({100 * (1 - planned_bytes / naive_bytes):.0f}% elided)")
+        # planned == naive numerics, strictly fewer bytes over the bridge
+        np.testing.assert_allclose(proj_planned, proj_naive, atol=2e-2)
+        np.testing.assert_allclose(variance2, variance, rtol=1e-5)
+        assert s_planned["elided_crossings"] > 0, s_planned
+        assert planned_bytes < naive_bytes, (planned_bytes, naive_bytes)
+        print(f"bridge bytes: naive={naive_bytes/1e6:.2f} MB → "
+              f"planned={planned_bytes/1e6:.2f} MB "
+              f"({100 * (1 - planned_bytes / naive_bytes):.0f}% elided)")
 
-    # ---------- drop-in: same MLlib call, engine-backed ------------------
-    # arXiv:1805.11800's pitch verbatim: the path-1 code, unchanged, inside
-    # an offloaded scope. U stays engine-resident; sigmas match Spark's.
-    with offload.offloaded(ac2):
-        u_lazy, sig_dropin, _ = mllib.compute_svd(ir, k)
-    rel2 = np.abs(sig_dropin[:3] - sig_spark[:3]) / sig_spark[:3]
-    print(f"[drop-in    ] mllib.compute_svd offloaded: U resident as {type(u_lazy).__name__}, "
-          f"top-3 sigma agreement {np.round(rel2, 4)}")
-    assert (rel2 < 5e-2).all()
-
-    ac2.stop()
+        # ---------- drop-in: same MLlib call, engine-backed ------------------
+        # arXiv:1805.11800's pitch verbatim: the path-1 code, unchanged,
+        # inside an offloaded scope over the v2 session. U stays
+        # engine-resident; sigmas match Spark's.
+        with offload.offloaded(s2):
+            u_lazy, sig_dropin, _ = mllib.compute_svd(ir, k)
+        rel2 = np.abs(sig_dropin[:3] - sig_spark[:3]) / sig_spark[:3]
+        print(f"[drop-in    ] mllib.compute_svd offloaded: U resident as "
+              f"{type(u_lazy).__name__}, top-3 sigma agreement {np.round(rel2, 4)}")
+        assert (rel2 < 5e-2).all()
 
 
 if __name__ == "__main__":

@@ -1,57 +1,68 @@
-"""Quickstart — the paper's §3.3 Scala listing, line-for-line in Python.
+"""Quickstart — the paper's §3.3 listing on the v2 surface (DESIGN.md §9).
 
-Paper:                                    | Here:
-  val ac = new AlchemistContext(sc, n)    |   ac = AlchemistContext(engine, n)
-  ac.registerLibrary("libA", loc)         |   ac.register_library(...)
-  val alA = AlMatrix(A)                   |   al_a = ac.send(A)
-  val out = ac.run("libA","condest",alA)  |   out = ac.run("elemental","condest",al_a)
-  ac.stop()                               |   ac.stop()
+Paper:                                    | Here (v2):
+  val ac = new AlchemistContext(sc, n)    |   session = repro.connect(engine, workers=n)
+  ac.registerLibrary("libA", loc)         |   session.register_library(...)
+  val alA = AlMatrix(A)                   |   al_a = session.send(A)     # AlArray
+  val out = ac.run("libA","condest",alA)  |   out = session.run("elemental","condest",al_a)
+  ac.stop()                               |   session.close()
+
+Everything is lazy by default (the Planned policy): operations build a DAG
+and nothing crosses the client↔engine bridge until ``.data()`` demands a
+result — intermediates stay engine-resident, exactly the AlMatrix contract.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro import AlchemistContext, AlchemistEngine
+import repro
 
 
 def main() -> None:
     # start the Alchemist "server" (worker pool = this host's devices)
-    engine = AlchemistEngine()
+    engine = repro.AlchemistEngine()
     print(f"engine up: {engine.num_workers} worker(s)")
 
-    # connect an application and load a library (the dlopen moment)
-    ac = AlchemistContext(engine, name="quickstart")
-    ac.register_library("elemental", "repro.linalg.library:ElementalLib")
+    # connect an application and load a library (the dlopen moment).
+    # connect() is admission-aware: were the pool busy, this would queue
+    # until a worker group frees up instead of failing.
+    with repro.connect(engine, name="quickstart") as session:
+        session.register_library("elemental", "repro.linalg.library:ElementalLib")
 
-    # client-side data (the "RDD")
-    rng = np.random.default_rng(0)
-    a = rng.standard_normal((2000, 128)).astype(np.float32)
+        # client-side data (the "RDD")
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((2000, 128)).astype(np.float32)
 
-    # ship it once; handles keep it engine-resident across calls
-    al_a = ac.send(a, name="A")
-    print("sent:", al_a)
+        # declare the transfer; the AlArray handle chains without executing
+        al_a = session.send(a, name="A")
+        print("declared:", al_a.state, al_a.shape)
 
-    # the paper's running example: condition-number estimation
-    cond = ac.run("elemental", "condest", al_a)
-    print(f"condest(A) = {float(cond):.2f}  (numpy: "
-          f"{np.linalg.cond(a):.2f})")
+        # the paper's running example: condition-number estimation
+        cond = session.run("elemental", "condest", al_a)
+        print(f"condest(A) = {float(cond.data()):.2f}  (numpy: "
+              f"{np.linalg.cond(a):.2f})")
 
-    # chained calls: TSQR's R factor squared, no client<->engine transfer —
-    # the intermediate AlMatrix handles never leave the engine
-    al_q, al_r = ac.run("elemental", "tsqr", al_a)
-    al_r2 = ac.run("elemental", "gemm", al_r, al_r)
-    print("chained result:", al_r2)
+        # chained calls: TSQR's R factor squared — the intermediates never
+        # leave the engine, and @ builds the same DAG session.run does
+        al_q, al_r = session.run("elemental", "tsqr", al_a, n_outputs=2)
+        al_r2 = al_r @ al_r
+        print("chained result:", al_r2.state, "->", al_r2.shape)
 
-    # rank-10 truncated SVD (the paper's flagship §4.2 routine)
-    al_u, sigmas, al_v = ac.run("elemental", "truncated_svd", al_a, k=10)
-    print("top-3 singular values:", np.round(np.asarray(sigmas[:3]), 3))
+        # rank-10 truncated SVD (the paper's flagship §4.2 routine)
+        al_u, sigmas, al_v = session.run(
+            "elemental", "truncated_svd", al_a, n_outputs=3, k=10
+        )
+        print("top-3 singular values:", np.round(np.asarray(sigmas.data())[:3], 3))
 
-    # only now does bulk data cross back (the AlMatrix contract)
-    u = np.asarray(ac.collect(al_u))
-    print("U:", u.shape, "| transfer stats:", ac.stats.summary())
+        # only now does bulk data cross back (the one explicit crossing);
+        # under `with session.policy("eager")` every call would instead
+        # execute immediately — same numbers, different schedule.
+        u = np.asarray(al_u.data())
+        print("U:", u.shape, "| transfer stats:", session.stats.summary())
 
-    ac.stop()
+    # the engine-wide picture: sessions, governor pressure, resident store
+    print("engine snapshot:", {k: v for k, v in engine.stats()["engine"].items()})
 
 
 if __name__ == "__main__":

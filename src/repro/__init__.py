@@ -4,21 +4,43 @@ linear algebra, embedded in a multi-pod training/serving framework.
 Reproduction of: Gittens, Rothauge, et al., "Alchemist: An Apache Spark <=>
 MPI Interface" (CS.DC 2018), adapted from Spark/MPI/Cori to JAX/XLA/TPU.
 
-Public API (mirrors the paper's ACI, plus the async task-queue surface —
-see DESIGN.md):
+Public API — the v2 client surface (DESIGN.md §9): one lazy-by-default
+``connect()`` returning a :class:`Session` of uniform :class:`AlArray`
+handles, with execution selected by a pluggable :class:`ExecutionPolicy`
+(:class:`Eager` / :class:`Pipelined` / :class:`Planned`)::
 
-    from repro import AlchemistContext, AlchemistEngine, AlMatrix, AlFuture
+    import repro
+
+    engine = repro.AlchemistEngine()
+    with repro.connect(engine, workers=4) as session:
+        session.register_library("elemental", "repro.linalg.library:ElementalLib")
+        a = session.send(A)
+        u, s, v = session.run("elemental", "truncated_svd", a, n_outputs=3, k=8)
+        U = u.data()           # the one explicit bridge crossing
+
+The v1 :class:`AlchemistContext` (the paper's ACI, plus the async task-queue
+surface) remains as a deprecation shim over the same transport core.
 """
 
-from repro.core.engine import AlchemistContext, AlchemistEngine
+from repro.core.client import AlArray, AlchemistContext, Session, connect
+from repro.core.engine import AlchemistEngine
 from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 from repro.core.layouts import GRID, REPLICATED, ROW, LayoutSpec
+from repro.core.policy import Eager, ExecutionPolicy, Pipelined, Planned
 
-__version__ = "1.2.0"
+__version__ = "2.0.0"
 
 __all__ = [
-    "AlchemistContext",
+    # v2 surface (DESIGN.md §9)
+    "connect",
+    "Session",
+    "AlArray",
+    "ExecutionPolicy",
+    "Eager",
+    "Pipelined",
+    "Planned",
+    # engine + building blocks
     "AlchemistEngine",
     "AlFuture",
     "AlMatrix",
@@ -26,4 +48,6 @@ __all__ = [
     "ROW",
     "GRID",
     "REPLICATED",
+    # deprecated v1 shim
+    "AlchemistContext",
 ]

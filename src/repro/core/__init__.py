@@ -3,8 +3,13 @@
 Pieces (paper terminology in brackets):
 
 - ``engine.py``     — :class:`AlchemistEngine` (the Alchemist server: driver +
-                      worker pool) and :class:`AlchemistContext` (the ACI, the
-                      client-side handle a "Spark application" holds).
+                      worker pool, admission-aware allocation, DESIGN.md §9).
+- ``client.py``     — the v2 client surface: ``connect()`` →
+                      :class:`Session` → :class:`AlArray`, over the
+                      :class:`ClientCore` transport; the deprecated
+                      :class:`AlchemistContext` shim (DESIGN.md §9).
+- ``policy.py``     — :class:`ExecutionPolicy` (Eager / Pipelined / Planned):
+                      when the DAG a session builds actually executes.
 - ``session.py``    — per-client sessions with dedicated worker groups
                       [dedicated MPI communicator per connected application].
 - ``handles.py``    — :class:`AlMatrix` matrix handles [AlMatrix proxies].
@@ -32,13 +37,15 @@ Pieces (paper terminology in brackets):
 - ``errors.py``     — structured error hierarchy.
 """
 
-from repro.core.engine import AlchemistContext, AlchemistEngine
+from repro.core.client import AlArray, AlchemistContext, ClientCore, Session, connect
+from repro.core.engine import AlchemistEngine
 from repro.core.expr import LazyMatrix, register_shape_rule
 from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 from repro.core.layouts import GRID, REPLICATED, ROW, LayoutSpec
 from repro.core.memgov import MemoryGovernor
 from repro.core.planner import OffloadPlanner
+from repro.core.policy import Eager, ExecutionPolicy, Pipelined, Planned
 from repro.core.registry import Library, Routine
 from repro.core.resident import ResidentStore
 from repro.core.taskqueue import TaskQueue
@@ -46,12 +53,20 @@ from repro.core.taskqueue import TaskQueue
 __all__ = [
     "AlchemistEngine",
     "AlchemistContext",
+    "AlArray",
     "AlFuture",
     "AlMatrix",
+    "ClientCore",
+    "connect",
+    "Eager",
+    "ExecutionPolicy",
     "LazyMatrix",
     "MemoryGovernor",
     "OffloadPlanner",
+    "Pipelined",
+    "Planned",
     "ResidentStore",
+    "Session",
     "LayoutSpec",
     "ROW",
     "GRID",

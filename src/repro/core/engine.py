@@ -1,71 +1,43 @@
-"""AlchemistEngine (the server) and AlchemistContext (the ACI, client side).
+"""AlchemistEngine — the server: device pool, sessions, admission control.
 
-Paper §2/§3: Alchemist runs as a driver + worker-pool server; a Spark
-application connects through the Alchemist-Client Interface, requests a
-number of workers, registers the MPI libraries it needs, ships matrices over,
-invokes routines by (library, routine) name, and collects results back.
+Paper §2/§3: Alchemist runs as a driver + worker-pool server; a client
+application connects, requests a number of workers, and gets a dedicated
+worker group. TPU adaptation (DESIGN.md §2): the worker pool is the device
+set of a mesh; a worker group is a mesh slice; the socket transfer is a
+relayout; ``dlopen`` is import-by-path.
 
-TPU adaptation (DESIGN.md §2): the server's worker pool is the device set of
-a mesh; a worker group is a mesh slice; the socket transfer is a relayout;
-``dlopen`` is import-by-path. The client-visible API is kept nearly
-line-for-line with the paper's Scala listings (§3.3):
+The client side lives in :mod:`repro.core.client` (DESIGN.md §9): the v2
+``connect()``/:class:`~repro.core.client.Session`/:class:`AlArray` surface,
+with the v1 :class:`~repro.core.client.AlchemistContext` kept as a
+deprecation shim over the same transport core.
 
-    engine = AlchemistEngine()                         # start the server
-    ac = AlchemistContext(engine, num_workers=4)       # connect
-    ac.register_library("elemental", "repro.linalg.library:ElementalLib")
-    al_a = ac.send(A)                                  # RDD -> AlMatrix
-    (al_u, s, al_v) = ac.run("elemental", "truncated_svd", al_a, k=20)
-    U = ac.collect(al_u)                               # AlMatrix -> RDD
-    ac.stop()
-
-Execution is an asynchronous task queue (DESIGN.md §3): every ACI call is a
-task on the session's single-worker FIFO, so the paper's overlap story —
-"communication for one application proceeds while computation runs for
-another" (§2, §3.3) — is structural. The ``*_async`` variants return
-:class:`~repro.core.futures.AlFuture` immediately and exploit JAX's async
-dispatch (no ``block_until_ready`` on the pipelined path); the synchronous
-API above is a thin submit-and-wait wrapper over the same queue, so its
-semantics, stats, and error surface are unchanged.
-
-    f_a = ac.send_async(A)                             # returns at once
-    f_c = ac.run_async("elemental", "gemm", f_a, f_a)  # futures chain freely
-    C = ac.collect(f_c)                                # resolves + collects
-    ac.wait()                                          # barrier, if needed
+Since PR 5 allocation is **admission-aware** (DESIGN.md §9): the paper's
+"assuming a sufficient number of workers is available" failure mode (§2.4)
+becomes a bounded *queue* — ``allocate(queue=True, timeout=...)`` waits for a
+worker group to free up instead of failing, raising
+:class:`~repro.core.errors.AdmissionTimeout` only when the wait expires — and
+placement is **content-affine**: a session that declares the datasets it will
+send is placed on the free device block whose resident-store entries
+(DESIGN.md §8) those content keys can reuse, with ``memgov.pressure()``
+recorded at each admission decision for the :meth:`AlchemistEngine.stats`
+snapshot.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import futures as futures_mod
-from repro.core import params as params_codec
-from repro.core.errors import (
-    HandleError,
-    LibraryError,
-    SessionError,
-    WorkerAllocationError,
-)
-from repro.core.expr import arg_shape, content_key, infer_run_shapes
-from repro.core.futures import AlFuture
-from repro.core.handles import AlMatrix
-from repro.core.layouts import AXIS_DATA, AXIS_MODEL, GRID, ROW, LayoutSpec
+from repro.core.errors import AdmissionTimeout, WorkerAllocationError
+from repro.core.expr import content_key
+from repro.core.layouts import AXIS_DATA, AXIS_MODEL
 from repro.core.memgov import MemoryGovernor
-from repro.core.registry import Library, LibrarySpec, load_library
-from repro.core.relayout import (
-    TransferRecord,
-    pad_amounts,
-    pad_for,
-    timed_relayout,
-    transfer_cost,
-)
-from repro.core.resident import ResidentEntry, ResidentStore
+from repro.core.resident import ResidentStore
 from repro.core.session import Session
 
 
@@ -78,6 +50,38 @@ def _near_square_grid(n: int) -> Tuple[int, int]:
     return r, n // r
 
 
+def _dataset_keys(datasets: Sequence[Any]) -> List[Tuple]:
+    """Normalize declared datasets to resident-store content keys.
+
+    Accepts precomputed key tuples, host/device arrays (hashed here), and
+    deferred send nodes (an :class:`~repro.core.client.AlArray`/LazyMatrix
+    over a SendExpr, whose key was computed at graph build). A *derived*
+    expression (a routine output) has no content identity until it executes
+    — declaring one is rejected rather than silently hashed to garbage."""
+    keys: List[Tuple] = []
+    for d in datasets:
+        if isinstance(d, tuple):
+            keys.append(d)
+            continue
+        node = getattr(d, "expr", None)
+        if node is not None:
+            node_key = getattr(node, "key", None)
+            if node_key:
+                keys.append(node_key)
+                continue
+            raise WorkerAllocationError(
+                "declared dataset is a derived expression with no content key; "
+                "declare the source array (or its send node) instead"
+            )
+        if isinstance(d, (np.ndarray, jax.Array)):
+            keys.append(content_key(d))
+            continue
+        raise WorkerAllocationError(
+            f"cannot derive a content key from declared dataset {type(d).__name__}"
+        )
+    return keys
+
+
 class AlchemistEngine:
     """The Alchemist server: owns the worker (device) pool, hands out
     sessions with dedicated worker-group mesh slices, and holds the two
@@ -85,7 +89,7 @@ class AlchemistEngine:
 
     - ``memgov`` — the engine-wide memory governor. ``hbm_budget`` caps the
       *combined* resident footprint of all sessions (each session may lower
-      the shared ceiling further via ``AlchemistContext(hbm_budget=...)``);
+      the shared ceiling further via a per-session ``hbm_budget``);
     - ``residents`` — the content-addressed resident store that dedups
       byte-identical sends across sessions and migrates uniquely-referenced
       content host-side when its session stops. ``share_residents=False``
@@ -107,6 +111,17 @@ class AlchemistEngine:
             raise WorkerAllocationError("engine started with an empty device pool")
         self._free: List[jax.Device] = list(self.devices)
         self._lock = threading.Lock()
+        # Admission queue (DESIGN.md §9): allocations that cannot be placed
+        # now wait on this condition; release()/failed-connect cleanup notify.
+        self._admission = threading.Condition(self._lock)
+        self._queued = 0  # allocations currently waiting for a worker group
+        self.admissions: Dict[str, Any] = {
+            "immediate": 0,  # placed without waiting
+            "queued": 0,  # placed after waiting in the admission queue
+            "timeouts": 0,  # gave up waiting (AdmissionTimeout)
+            "affinity_hits": 0,  # placements steered by declared-dataset reuse
+            "last_queued_pressure": None,  # memgov.pressure() when a wait began
+        }
         self.sessions: Dict[int, Session] = {}
         self.memgov = MemoryGovernor(budget=hbm_budget, name=f"{name}-memgov")
         self.residents = ResidentStore(enabled=share_residents, retain_bytes=host_retention_bytes)
@@ -120,43 +135,130 @@ class AlchemistEngine:
     def available_workers(self) -> int:
         return len(self._free)
 
+    @property
+    def queued_connects(self) -> int:
+        """Allocation requests currently waiting for admission."""
+        return self._queued
+
     def allocate(
-        self, num_workers: Optional[int] = None, grid: Optional[Tuple[int, int]] = None
+        self,
+        num_workers: Optional[int] = None,
+        grid: Optional[Tuple[int, int]] = None,
+        *,
+        datasets: Sequence[Any] = (),
+        queue: bool = False,
+        timeout: Optional[float] = None,
     ) -> Tuple[Mesh, List[jax.Device]]:
-        with self._lock:
-            if grid is not None:
-                r, c = grid
-                n = r * c
-            else:
-                n = num_workers if num_workers is not None else len(self._free)
-                if n <= 0:
-                    raise WorkerAllocationError(f"requested {n} workers")
-                r, c = _near_square_grid(n)
-            if n > len(self._free):
-                raise WorkerAllocationError(
-                    f"requested {n} workers but only {len(self._free)} of "
-                    f"{self.num_workers} are available"
-                )
-            devs = self._free[:n]
-            self._free = self._free[n:]
+        """Carve a worker group out of the free pool.
+
+        With ``queue=False`` (the v1 default) an unplaceable request raises
+        :class:`WorkerAllocationError` immediately. With ``queue=True`` it
+        waits — bounded by ``timeout`` seconds — until ``release`` returns
+        enough devices, raising :class:`AdmissionTimeout` if the wait
+        expires; a request larger than the whole engine still fails fast
+        (it can never be placed). ``datasets`` steers placement: among the
+        contiguous free blocks that fit, the one whose devices last held the
+        declared content keys (DESIGN.md §8) is preferred, so warm
+        resident-store entries are reused in place.
+        """
+        # An explicitly non-positive request can never be placed — fail fast
+        # even when queueing (only ``num_workers=None`` on a momentarily
+        # empty pool legitimately waits: it means "all free devices").
+        if grid is not None and grid[0] * grid[1] <= 0:
+            raise WorkerAllocationError(f"requested a {grid[0]}x{grid[1]} grid")
+        if num_workers is not None and num_workers <= 0:
+            raise WorkerAllocationError(f"requested {num_workers} workers")
+        # Hash declared datasets only when affinity can actually apply — the
+        # signal is discarded with the store disabled, and content_key reads
+        # every byte of every declared array.
+        keys = _dataset_keys(datasets) if datasets and self.residents.enabled else []
+        deadline = None if timeout is None else time.monotonic() + timeout
+        queued = False
+        with self._admission:
+            try:
+                while True:
+                    if grid is not None:
+                        r, c = grid
+                        n = r * c
+                    else:
+                        n = num_workers if num_workers is not None else len(self._free)
+                        r, c = _near_square_grid(n) if n > 0 else (0, 0)
+                    if n > len(self.devices):
+                        # Never placeable: fail fast even when queueing.
+                        raise WorkerAllocationError(
+                            f"requested {n} workers but the engine only has "
+                            f"{self.num_workers}"
+                        )
+                    if 0 < n <= len(self._free):
+                        devs = self._pick_block(n, keys)
+                        self._free = [d for d in self._free if d not in devs]
+                        self.admissions["queued" if queued else "immediate"] += 1
+                        break
+                    if not queue:
+                        raise WorkerAllocationError(
+                            f"requested {n} workers but only {len(self._free)} of "
+                            f"{self.num_workers} are available"
+                        )
+                    if not queued:
+                        queued = True
+                        self._queued += 1
+                        # Forecast at queue time — surfaced via stats() so an
+                        # operator can see what load queued admissions faced.
+                        self.admissions["last_queued_pressure"] = self.memgov.pressure()
+                    remaining = None if deadline is None else deadline - time.monotonic()
+                    if remaining is not None and remaining <= 0:
+                        self.admissions["timeouts"] += 1
+                        raise AdmissionTimeout(
+                            f"connect queued for {timeout}s waiting for "
+                            f"{n} worker(s); {len(self._free)} of "
+                            f"{self.num_workers} free"
+                        )
+                    self._admission.wait(remaining)
+            finally:
+                if queued:
+                    self._queued -= 1
         mesh = Mesh(np.asarray(devs, dtype=object).reshape(r, c), (AXIS_DATA, AXIS_MODEL))
         return mesh, devs
 
+    def _pick_block(self, n: int, keys: Sequence[Tuple]) -> List[jax.Device]:
+        """Choose ``n`` devices from the free pool (caller holds the lock).
+
+        Default: the first free block, in canonical device order (contiguous
+        worker groups, §2.4). With declared dataset keys and a non-empty
+        resident store, contiguous candidate windows are scored by overlap
+        with the devices that last held each key's content — the session
+        lands where its data is warm (DESIGN.md §9 store-aware placement).
+        """
+        if keys and self.residents.enabled:
+            affinity = self.residents.device_affinity(keys)
+            if affinity:
+                best_i, best_score = 0, 0
+                for i in range(len(self._free) - n + 1):
+                    ids = {d.id for d in self._free[i : i + n]}
+                    score = sum(len(ids & devs) for devs in affinity)
+                    if score > best_score:
+                        best_i, best_score = i, score
+                if best_score > 0:
+                    self.admissions["affinity_hits"] += 1
+                return list(self._free[best_i : best_i + n])
+        return list(self._free[:n])
+
     def release(self, session: Session) -> None:
-        with self._lock:
+        with self._admission:
             owned = self.sessions.pop(session.id, None) is not None
         # Drain the session's task queue BEFORE the devices go back in the
         # pool: a concurrent connect() must never be handed devices whose old
         # session still has tasks dispatching (disjoint worker groups, §2.4).
         session.close()
         if owned:
-            with self._lock:
+            with self._admission:
                 # Restore the pool in canonical device order: naive appending
                 # fragments the pool across connect/stop cycles, and a later
                 # allocate would hand out a scrambled, non-contiguous mesh
                 # slice (worker groups should be contiguous blocks).
                 free = set(self._free) | set(session.worker_devices)
                 self._free = [d for d in self.devices if d in free]
+                self._admission.notify_all()  # wake queued connects
 
     def connect(
         self,
@@ -164,8 +266,14 @@ class AlchemistEngine:
         num_workers: Optional[int] = None,
         grid: Optional[Tuple[int, int]] = None,
         hbm_budget: Optional[int] = None,
+        *,
+        datasets: Sequence[Any] = (),
+        queue: bool = False,
+        timeout: Optional[float] = None,
     ) -> Session:
-        mesh, devs = self.allocate(num_workers, grid)
+        mesh, devs = self.allocate(
+            num_workers, grid, datasets=datasets, queue=queue, timeout=timeout
+        )
         try:
             session = Session(
                 name=name,
@@ -178,12 +286,45 @@ class AlchemistEngine:
         except BaseException:
             # A rejected session (e.g. an invalid budget) must hand its
             # worker group straight back — in canonical order, like release.
-            with self._lock:
+            with self._admission:
                 free = set(self._free) | set(devs)
                 self._free = [d for d in self.devices if d in free]
+                self._admission.notify_all()
             raise
         self.sessions[session.id] = session
         return session
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """One merged engine snapshot (DESIGN.md §9): the worker pool and
+        admission queue, every live session's ``SessionStats``, the
+        engine-wide governor (``pressure()``, budget, high water), and the
+        resident store. This is what ``benchmarks/run.py --json`` embeds."""
+        with self._admission:
+            pool = {
+                "workers": self.num_workers,
+                "available_workers": len(self._free),
+                "queued_connects": self._queued,
+                "live_sessions": len(self.sessions),
+                "admissions": dict(self.admissions),
+            }
+            sessions = dict(self.sessions)
+        mg = self.memgov
+        return {
+            "engine": pool,
+            "sessions": {
+                str(sid): {"name": s.name, "workers": s.num_workers, **s.stats.summary()}
+                for sid, s in sessions.items()
+            },
+            "memgov": {
+                "pressure": mg.pressure(),
+                "used": mg.used,
+                "reserved": mg.reserved,
+                "high_water": mg.high_water,
+                "budget": mg.budget,
+            },
+            "residents": self.residents.stats(),
+        }
 
     def shutdown(self) -> None:
         """Stop every session and drop engine-wide state (the resident
@@ -194,590 +335,7 @@ class AlchemistEngine:
         self.memgov.clear()
 
 
-class AlchemistContext:
-    """The ACI — what the client application imports and talks to.
-
-    All operations flow through the session's task queue. The synchronous
-    methods (``send``/``run``/``collect``/``free``) submit a task and wait;
-    the ``*_async`` twins submit and return an :class:`AlFuture`, letting
-    transfers pipeline against compute within the session and letting
-    independent sessions overlap across the engine.
-
-    ``hbm_budget`` (bytes, optional) caps the worker group's resident-matrix
-    footprint: sends and routine outputs are admitted against it, spilling
-    least-recently/last-used matrices to a pinned host store and refilling
-    them transparently on next use (DESIGN.md §7). Default: unlimited.
-    """
-
-    def __init__(
-        self,
-        engine: AlchemistEngine,
-        num_workers: Optional[int] = None,
-        *,
-        name: str = "app",
-        grid: Optional[Tuple[int, int]] = None,
-        client_layout: LayoutSpec = ROW,
-        engine_layout: LayoutSpec = GRID,
-        hbm_budget: Optional[int] = None,
-    ):
-        self.engine = engine
-        self.session = engine.connect(
-            name=name, num_workers=num_workers, grid=grid, hbm_budget=hbm_budget
-        )
-        self.client_layout = client_layout
-        self.engine_layout = engine_layout
-        self._planner = None
-        self._stopped = False
-
-    # -- libraries -----------------------------------------------------------
-    def register_library(self, name: str, spec: LibrarySpec) -> Library:
-        """Load a library into this session (the paper's registerLibrary).
-
-        ``spec`` may be a Library instance/class or an import-path string
-        ``"repro.linalg.library:ElementalLib"`` — resolved only now, the
-        runtime-dynamic-linking analogue.
-        """
-        self._check()
-        lib = load_library(spec)
-        if name != lib.name:
-            # allow aliasing but keep it explicit in the session table
-            lib.name = name
-        self.session.libraries[name] = lib
-        return lib
-
-    def library(self, name: str) -> Library:
-        self._check()
-        try:
-            return self.session.libraries[name]
-        except KeyError:
-            raise LibraryError(
-                f"library {name!r} not registered in session {self.session.id}; "
-                f"registered: {sorted(self.session.libraries)}"
-            ) from None
-
-    # -- matrix movement (the bridge) -----------------------------------------
-    def send_async(self, array: Union[jax.Array, np.ndarray], name: str = "") -> AlFuture:
-        """Pipelined RDD→Alchemist transfer: returns immediately with a
-        future of the handle; the session worker stages + reshards it."""
-        return self._submit_send(array, name=name, block=False)
-
-    def send(self, array: Union[jax.Array, np.ndarray], name: str = "") -> AlMatrix:
-        """Ship a client-side (row-partitioned) matrix to the engine's grid
-        layout and return its handle. The paper's RDD→Alchemist transfer."""
-        return self._submit_send(array, name=name, block=True).result()
-
-    def _submit_send(
-        self,
-        array: Union[jax.Array, np.ndarray],
-        *,
-        name: str,
-        block: bool,
-        key: Optional[Tuple] = None,
-        payload: Optional[np.ndarray] = None,
-    ) -> AlFuture:
-        """``key``/``payload`` (internal, DESIGN.md §8): the payload's content
-        key and a private host snapshot of its logical bytes, when the caller
-        (the offload planner) already computed them. With the engine's
-        resident store enabled they are derived here for plain sends too, so
-        every non-cyclic transfer publishes into the content index — and a
-        send whose bytes another session already placed on the engine becomes
-        an attach instead of a bridge crossing."""
-        self._check()
-        sess = self.session
-        # Validate + capture metadata in the caller thread (fail fast, and
-        # pending handles need shape/dtype before the transfer runs).
-        if not isinstance(array, jax.Array):
-            array = np.asarray(array)
-        if array.ndim != 2:
-            raise SessionError(f"send() expects a 2D matrix, got shape {tuple(array.shape)}")
-        store = self._content_store()
-        if store is not None:
-            if key is None:
-                key = content_key(array)
-            entry = store.lookup(key)
-            if entry is not None and entry.live_handle_for(sess.id) is None and entry.usable():
-                # The engine already holds these bytes (another session's
-                # placement, or content migrated out of a closed one): attach
-                # — an engine-internal placement, zero bridge traffic. A
-                # duplicate send *within* a session keeps its classic
-                # full-transfer semantics (independent handles; the planner
-                # is the intra-session dedup layer).
-                return self._submit_attach(key, entry, array, name=name, block=block)
-        h = sess.new_pending_handle(array.shape, array.dtype, self.engine_layout, name=name)
-        if store is not None:
-            # Publish before the transfer runs: a concurrent session's attach
-            # may pin the entry now and wait on this pending placement.
-            store.register(key, h, sess, payload=payload)
-        # Reserve the *physical* footprint against the HBM budget before
-        # enqueueing: logical shape plus the divisibility padding the staging
-        # (client) and resident (engine) layouts will append (DESIGN.md §7).
-        phys = self._send_physical_shape(tuple(int(d) for d in array.shape))
-        reserve_bytes = sess.memgov.reserve(
-            phys[0] * phys[1] * jnp.dtype(array.dtype).itemsize
-        )
-
-        def task() -> AlMatrix:
-            admitted = 0
-            try:
-                mesh = sess.mesh
-                # Make room before any bytes land on the worker group: the
-                # governor spills last-used resident matrices to host until
-                # the incoming footprint fits the budget, and claims the room
-                # so a concurrent session's admission cannot take it first.
-                sess.memgov.admit(reserve_bytes)
-                admitted = reserve_bytes
-                x = jnp.asarray(array)
-                # Stage on the client layout first (rows over all session
-                # workers) so the recorded transfer is the genuine ROW->GRID
-                # redistribution; uneven shapes are zero-padded to the next
-                # worker-count multiple so the device_put is legal. Cyclic
-                # layouts are never pre-padded — the emulation's permutation
-                # would interleave the zero rows (see pad_amounts) — so they
-                # keep the pre-padding behaviour: even shapes work, uneven
-                # ones fail loudly at the device_put.
-                if not (self.client_layout.cyclic or self.engine_layout.cyclic):
-                    x, _stage_pads = pad_for(x, self.client_layout, mesh)
-                x = jax.device_put(x, self.client_layout.sharding(mesh))
-                out, rec = timed_relayout(
-                    x,
-                    self.engine_layout,
-                    mesh,
-                    src=self.client_layout,
-                    direction="send",
-                    cache=sess.relayout_cache,
-                    block=block,
-                    strip=False,  # residency keeps the put-legal physical form
-                )
-                sess.stats.record_transfer(rec)
-                with sess.memgov.lock:  # claim -> charge atomically
-                    sess.memgov.settle(admitted)
-                    admitted = 0
-                    h.materialize(
-                        out, pads=(out.shape[0] - h.shape[0], out.shape[1] - h.shape[1])
-                    )
-                    sess.memgov.charge(h)
-                return h
-            except BaseException as exc:
-                h.fail(exc)
-                raise
-            finally:
-                sess.memgov.settle(admitted)
-                sess.memgov.unreserve(reserve_bytes)
-
-        return sess.tasks.submit(task, label=f"send:{name or h.id}")
-
-    def _content_store(self) -> Optional[ResidentStore]:
-        """The engine's resident store, when this session can use it: cyclic
-        layouts store a physical row permutation that does not round-trip
-        through the pure placement plan the attach/refill paths use."""
-        store = self.engine.residents
-        if not store.enabled:
-            return None
-        if self.client_layout.cyclic or self.engine_layout.cyclic:
-            return None
-        return store
-
-    def _submit_attach(
-        self,
-        key: Tuple,
-        entry: ResidentEntry,
-        array: Union[jax.Array, np.ndarray],
-        *,
-        name: str,
-        block: bool,
-    ) -> AlFuture:
-        """Produce this session's placement of an already-engine-resident
-        content entry (DESIGN.md §8): an engine-internal ``device_put`` from
-        the entry's host payload — no client↔engine bridge crossing, so no
-        TransferRecord. Counted as ``cross_session_reuses``.
-
-        ``array`` is the caller's own copy of the bytes: if the engine-side
-        content vanishes between the attach decision and this task running
-        (producer freed, orphan evicted by the retention cap), the placement
-        falls back to it and is accounted as a genuine bridge send — never a
-        spurious failure, never a wait on a handle that cannot materialize.
-        """
-        sess = self.session
-        store = self.engine.residents
-        h = sess.new_pending_handle(entry.shape, entry.dtype, self.engine_layout, name=name)
-        h._placement_only = True  # never a payload source while pending
-        store.register(key, h, sess)
-        pr, pc = pad_amounts(entry.shape, self.engine_layout, sess.mesh)
-        phys = (entry.shape[0] + pr, entry.shape[1] + pc)
-        reserve_bytes = sess.memgov.reserve(
-            phys[0] * phys[1] * jnp.dtype(entry.dtype).itemsize
-        )
-
-        def task() -> AlMatrix:
-            admitted = 0
-            try:
-                # May block on the producing session's in-flight transfer —
-                # a cross-session wait on a send task that depends on no one,
-                # so it cannot deadlock the FIFOs (pending attach placements
-                # are excluded as sources, see ensure_payload).
-                payload = store.ensure_payload(entry)
-                t0 = time.perf_counter()
-                attached = payload is not None
-                if not attached:
-                    # The content died under us: the caller's bytes cross the
-                    # bridge after all. Snapshot them (the caller may mutate
-                    # its array later; the entry payload must stay true to
-                    # the key) and publish so the content is shareable again.
-                    payload = np.array(array)
-                    store.register(key, h, sess, payload=payload)
-                sess.memgov.admit(reserve_bytes)
-                admitted = reserve_bytes
-                x = jnp.asarray(payload)
-                # src == dst: the cached plan is a pure placement (pads only),
-                # exactly the governor's refill path.
-                plan, _hit = sess.relayout_cache.plan(
-                    tuple(x.shape), x.dtype, self.engine_layout, self.engine_layout, sess.mesh
-                )
-                out = plan.apply(x)
-                if block:
-                    out.block_until_ready()
-                h._host_fallback = payload
-                with sess.memgov.lock:  # claim -> charge atomically
-                    sess.memgov.settle(admitted)
-                    admitted = 0
-                    h.materialize(
-                        out, pads=(out.shape[0] - h.shape[0], out.shape[1] - h.shape[1])
-                    )
-                    sess.memgov.charge(h)
-                if attached:
-                    sess.stats.record_cross_session_reuse()
-                    store.record_attach()
-                else:
-                    # Priced analytically: no staging relayout ran, so the
-                    # plan cache's hit rate must not see this (planned=False).
-                    cost = transfer_cost(
-                        h.shape, h.dtype, self.client_layout, self.engine_layout, sess.mesh
-                    )
-                    sess.stats.record_transfer(
-                        TransferRecord(
-                            direction="send",
-                            cost=cost,
-                            seconds=time.perf_counter() - t0,
-                            planned=False,
-                        )
-                    )
-                return h
-            except BaseException as exc:
-                h.fail(exc)
-                raise
-            finally:
-                sess.memgov.settle(admitted)
-                sess.memgov.unreserve(reserve_bytes)
-
-        return sess.tasks.submit(task, label=f"attach:{name or h.id}")
-
-    def collect_async(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
-        """Future of the client-side array for ``h`` (which may itself be a
-        future or a still-pending handle)."""
-        return self._submit_collect(h)
-
-    def collect(self, h: Union[AlMatrix, AlFuture]) -> jax.Array:
-        """Materialize an engine-resident matrix back on the client layout.
-        The only path that moves bulk data engine→client (paper §3.3)."""
-        return self._submit_collect(h).result()
-
-    def _submit_collect(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
-        self._check()
-        sess = self.session
-
-        def task() -> jax.Array:
-            live = sess.resolve(self._resolve_handle(h))
-            # A spilled matrix's bytes already sit in the host store — the
-            # client side of the machine. Serving the collect from there
-            # skips a pointless refill (device_put + admission that may
-            # evict live working-set matrices) for data that would be pulled
-            # straight back off the device. The handle stays spilled; a later
-            # engine-side consumption refills as usual. Cyclic layouts store
-            # permuted rows, so they take the ordinary refill path.
-            host = sess.memgov.host_payload(live)
-            if host is not None and not live.layout.cyclic:
-                # Priced analytically (transfer_cost), not via cache.plan():
-                # no relayout ran, so the plan cache and its hit/miss rate
-                # must not see this transfer (planned=False below).
-                cost = transfer_cost(
-                    live.shape, live.dtype, live.layout, self.client_layout, sess.mesh
-                )
-                t0 = time.perf_counter()
-                out = jnp.asarray(host[: live.shape[0], : live.shape[1]])
-                out.block_until_ready()
-                rec = TransferRecord(
-                    direction="receive",
-                    cost=cost,
-                    seconds=time.perf_counter() - t0,
-                    planned=False,
-                )
-                sess.stats.record_transfer(rec)
-                return out
-            out, rec = timed_relayout(
-                live.data(),
-                self.client_layout,
-                sess.mesh,
-                src=live.layout,
-                direction="receive",
-                cache=sess.relayout_cache,
-                block=True,  # collect crosses the bridge: always materialize
-            )
-            sess.stats.record_transfer(rec)
-            return out
-
-        return sess.tasks.submit(task, label="collect")
-
-    def free_async(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
-        self._check()
-        sess = self.session
-        return sess.tasks.submit(
-            lambda: sess.free_handle(self._resolve_handle(h)), label="free"
-        )
-
-    def free(self, h: Union[AlMatrix, AlFuture]) -> None:
-        # Routed through the queue so frees stay FIFO-ordered behind any
-        # already-submitted task that still consumes the handle.
-        self.free_async(h).result()
-
-    def _send_physical_shape(self, shape: Tuple[int, int]) -> Tuple[int, int]:
-        """Physical shape a sent matrix will occupy once resident: the
-        logical shape padded first for the client-layout staging put, then
-        for the engine-layout relayout — the exact sequence the send task
-        performs (pad_for + timed_relayout(strip=False)). Keep the two in
-        lockstep: memgov reservations are priced off this prediction, and the
-        eventual charge uses the materialized array's real shape."""
-        if self.client_layout.cyclic or self.engine_layout.cyclic:
-            return shape  # cyclic layouts are never pre-padded (see the task)
-        mesh = self.session.mesh
-        pr, pc = pad_amounts(shape, self.client_layout, mesh)
-        phys = (shape[0] + pr, shape[1] + pc)
-        pr, pc = pad_amounts(phys, self.engine_layout, mesh)
-        return (phys[0] + pr, phys[1] + pc)
-
-    @staticmethod
-    def _resolve_handle(h: Union[AlMatrix, AlFuture]) -> AlMatrix:
-        resolved = futures_mod.resolve(h)
-        if not isinstance(resolved, AlMatrix):
-            raise SessionError(
-                f"expected an AlMatrix (or a future of one), got {type(resolved).__name__}"
-            )
-        return resolved
-
-    # -- routine invocation ----------------------------------------------------
-    def run_async(
-        self,
-        library: str,
-        routine: str,
-        *args: Any,
-        _out_shapes: Optional[Sequence] = None,
-        _out_dtype: Any = None,
-        **params: Any,
-    ) -> AlFuture:
-        """Pipelined ``ac.run``: enqueue the routine and return a future of
-        its (wrapped) outputs. Arguments may be AlMatrix handles, futures of
-        handles from earlier async calls, or plain scalars; the compute is
-        async-dispatched, so the worker immediately proceeds to the next task
-        while XLA executes.
-
-        ``_out_shapes`` / ``_out_dtype`` (internal) let a caller that already
-        ran shape inference — the offload planner, whose operands are still
-        futures here — pass the routine's output shapes and element type so
-        the memory governor can reserve their bytes up front."""
-        return self._submit_run(
-            library,
-            routine,
-            args,
-            params,
-            block=False,
-            out_shapes=_out_shapes,
-            out_dtype=_out_dtype,
-        )
-
-    def run(self, library: str, routine: str, *args: Any, **params: Any) -> Any:
-        """Invoke ``library.routine`` on the engine (the paper's ``ac.run``).
-
-        Positional args may be AlMatrix handles (resolved engine-side) or
-        plain scalars; keyword params must be scalars/small lists and travel
-        through the Parameters codec, exactly like the paper's driver-to-
-        driver metadata channel.
-        """
-        return self._submit_run(library, routine, args, params, block=True).result()
-
-    def _submit_run(
-        self,
-        library: str,
-        routine: str,
-        args: Tuple[Any, ...],
-        params: Dict[str, Any],
-        *,
-        block: bool,
-        out_shapes: Optional[Sequence] = None,
-        out_dtype: Any = None,
-    ) -> AlFuture:
-        self._check()
-        lib = self.library(library)
-        r = lib.routine(routine)  # unknown-routine errors fail fast, caller-side
-        sess = self.session
-        label = f"{library}.{routine}"
-        # Caller-side shape inference (per-routine rules, DESIGN.md §7): a
-        # dimension mismatch raises ShapeError here, at the call site, and a
-        # successful inference prices the routine's matrix outputs so the
-        # governor can reserve their bytes before the task is enqueued. The
-        # planner passes its own inference in (its operands are futures whose
-        # shapes this layer cannot see).
-        if out_shapes is None:
-            out_shapes = infer_run_shapes(
-                routine, [arg_shape(a) for a in args], params
-            )
-        reserve_bytes = 0
-        if out_shapes:
-            if out_dtype is None:
-                # Best-known operand dtype: a handle directly, or one behind
-                # an already-resolved future (the planner also passes an
-                # explicit hint, since its operands may still be in flight).
-                for a in args:
-                    if isinstance(a, AlFuture) and a.done() and a.exception() is None:
-                        a = a.result()
-                    if isinstance(a, AlMatrix):
-                        out_dtype = a.dtype
-                        break
-            itemsize = jnp.dtype(out_dtype).itemsize if out_dtype is not None else 4
-            est = sum(
-                int(np.prod(s)) for s in out_shapes if s is not None and len(s) == 2
-            )
-            reserve_bytes = sess.memgov.reserve(est * itemsize)
-
-        def task() -> Any:
-            # Resolve futures from earlier tasks (same-session ones are
-            # guaranteed done: the FIFO ran their producers first).
-            rargs = tuple(futures_mod.resolve(a) for a in args)
-            rparams = {k: futures_mod.resolve(v) for k, v in params.items()}
-
-            # Drive every scalar through the wire codec: this is the
-            # driver->driver parameter frame of §2.1 (and catches
-            # unserializable arguments at the API boundary, as the real
-            # system would).
-            frame = params_codec.pack(
-                {f"__pos_{i}": a for i, a in enumerate(rargs)} | rparams
-            )
-            decoded = params_codec.unpack(frame)
-
-            def handle_of(v: Any) -> Any:
-                return sess.get_handle(v.id) if isinstance(v, params_codec.HandleRef) else v
-
-            pos = [handle_of(decoded[f"__pos_{i}"]) for i in range(len(rargs))]
-            kw = {
-                k: handle_of(v)
-                for k, v in decoded.items()
-                if not k.startswith("__pos_")
-            }
-            inputs = [v for v in (*pos, *kw.values()) if isinstance(v, AlMatrix)]
-
-            admitted = 0
-            try:
-                # Inputs stay pinned (unspillable) while the routine runs:
-                # admission for the outputs must not evict an operand, and a
-                # spilled operand refills exactly once. Reading .data()
-                # inside the pin is what triggers those refills.
-                with sess.memgov.pinned(inputs):
-                    call_args = [
-                        v.data() if isinstance(v, AlMatrix) else v for v in pos
-                    ]
-                    call_kwargs = {
-                        k: (v.data() if isinstance(v, AlMatrix) else v)
-                        for k, v in kw.items()
-                    }
-                    # Admit the outputs only after every operand is resolved:
-                    # a .data() above may have refilled a spilled input, and
-                    # room made earlier would have been eaten again. The
-                    # claim holds the room against concurrent sessions until
-                    # the outputs' charges land.
-                    sess.memgov.admit(reserve_bytes)
-                    admitted = reserve_bytes
-
-                    if "mesh" in r.signature().parameters:
-                        call_kwargs["mesh"] = sess.mesh
-
-                    t0 = time.perf_counter()
-                    with sess.mesh:
-                        result = r.fn(*call_args, **call_kwargs)
-                    if block:
-                        result = jax.block_until_ready(result)
-                    sess.stats.record_compute(time.perf_counter() - t0)
-
-                    with sess.memgov.lock:  # claim -> charges atomically
-                        sess.memgov.settle(admitted)
-                        admitted = 0
-                        return self._wrap_outputs(result, label)
-            finally:
-                sess.memgov.settle(admitted)
-                sess.memgov.unreserve(reserve_bytes)
-
-        return sess.tasks.submit(task, label=f"run:{label}")
-
-    def _wrap_outputs(self, result: Any, label: str) -> Any:
-        """Array outputs become engine-resident handles; scalars/vectors are
-        non-distributed outputs and return to the driver directly."""
-        if isinstance(result, (tuple, list)):
-            wrapped = tuple(self._wrap_outputs(r, label) for r in result)
-            return type(result)(wrapped) if isinstance(result, list) else wrapped
-        if isinstance(result, jax.Array) and result.ndim == 2:
-            return self.session.new_handle(result, self.engine_layout, name=label)
-        if isinstance(result, jax.Array) and result.ndim <= 1:
-            return np.asarray(result)
-        return result
-
-    # -- lazy offload planner -----------------------------------------------
-    @property
-    def planner(self):
-        """This session's :class:`~repro.core.planner.OffloadPlanner` (lazily
-        created, one per context so its resident-matrix cache and elision
-        counters are session-scoped, DESIGN.md §6)::
-
-            pl = ac.planner
-            la = pl.send(a)
-            u, s, v = pl.run("elemental", "truncated_svd", la, n_outputs=3, k=8)
-            proj = pl.run("elemental", "gemm", la, u)   # u never leaves the engine
-            P = pl.collect(proj)                        # the one bridge crossing
-        """
-        self._check()
-        if self._planner is None:
-            from repro.core.planner import OffloadPlanner
-
-            self._planner = OffloadPlanner(self)
-        return self._planner
-
-    # -- lifecycle ---------------------------------------------------------------
-    def wait(self, timeout: Optional[float] = None) -> None:
-        """Barrier: block until every task this session has queued so far
-        (sends, runs, collects, frees) has executed."""
-        self._check()
-        self.session.drain(timeout)
-
-    @property
-    def stats(self):
-        return self.session.stats
-
-    @property
-    def mesh(self) -> Mesh:
-        return self.session.mesh
-
-    def stop(self) -> None:
-        """Disconnect and release the worker group (paper's ``ac.stop()``).
-
-        Queued tasks are drained first (their futures resolve), then the
-        worker-group devices return to the engine pool in canonical order.
-        """
-        if not self._stopped:
-            self.engine.release(self.session)
-            self._stopped = True
-
-    def __enter__(self) -> "AlchemistContext":
-        return self
-
-    def __exit__(self, *exc) -> None:
-        self.stop()
-
-    def _check(self) -> None:
-        if self._stopped:
-            raise SessionError("AlchemistContext has been stopped")
+# Backwards-compatible re-exports: the client surface lived in this module
+# until DESIGN.md §9 split it out. Imported late to keep the module graph
+# acyclic (client.py never imports engine.py at runtime).
+from repro.core.client import AlchemistContext  # noqa: E402,F401

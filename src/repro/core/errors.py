@@ -19,6 +19,16 @@ class WorkerAllocationError(AlchemistError):
     """
 
 
+class AdmissionTimeout(WorkerAllocationError):
+    """A queued ``connect()`` waited out its admission timeout (DESIGN.md §9).
+
+    Subclasses :class:`WorkerAllocationError`: callers that handled the old
+    fail-fast allocation error keep working when queued admission is enabled.
+    Raised *before* any worker group, session, or governor registration
+    exists, so there is nothing to clean up.
+    """
+
+
 class LibraryError(AlchemistError):
     """Unknown library / routine, or a routine signature mismatch."""
 

@@ -242,6 +242,29 @@ def infer_run_shapes(
     return out
 
 
+def peeked_state(val: Any) -> str:
+    """Classify a planner-peeked value (``OffloadPlanner.peek``) into the
+    uniform placement-state vocabulary the v2 handles expose (DESIGN.md §9):
+    ``deferred`` (never lowered), ``pending`` (queued/in flight), or the
+    underlying :class:`~repro.core.handles.AlMatrix` lifecycle state
+    (``materialized``/``spilled``/``failed``/``freed``). Driver-side values
+    (scalars, vectors, already-collected arrays) read as ``materialized``.
+    Never forces execution. Shared by :class:`~repro.core.client.AlArray`
+    and sparklike's ``LazyRowMatrix``."""
+    from repro.core.futures import AlFuture
+    from repro.core.handles import AlMatrix
+
+    if val is None:
+        return "deferred"
+    if isinstance(val, AlFuture):
+        if not val.done():
+            return "pending"
+        if val.exception() is not None:
+            return "failed"
+        val = val.result()
+    return val.state if isinstance(val, AlMatrix) else "materialized"
+
+
 def content_key(array: Any) -> Tuple:
     """Content-identity of a host array: (shape, dtype, sha1 of the bytes).
 

@@ -100,6 +100,16 @@ class AlFuture:
         self.add_done_callback(_chain)
         return out
 
+    def __await__(self):
+        """``await fut`` inside an event loop: the blocking :meth:`result`
+        runs in the loop's default executor, so independent futures awaited
+        concurrently resolve in parallel — the same unification the v2
+        ``AlArray.__await__`` offers (DESIGN.md §9)."""
+        import asyncio
+
+        loop = asyncio.get_running_loop()
+        return loop.run_in_executor(None, self.result).__await__()
+
     # -- engine side ---------------------------------------------------------
     def _set_result(self, value: Any) -> None:
         self._finish(RESOLVED, value=value)

@@ -6,9 +6,16 @@ Only when the user explicitly converts this object into an RDD will the data
 in the matrix be sent between Alchemist to Spark."
 
 Here the handle wraps an engine-resident ``jax.Array`` plus its layout tag.
-Chained library calls pass handles; `AlchemistContext.collect()` is the only
-path that reshards data back to the client's row layout — so, exactly as in
-the paper, the bridge is crossed only on explicit request.
+Chained library calls pass handles; the client collect path is the only one
+that reshards data back to the client's row layout — so, exactly as in the
+paper, the bridge is crossed only on explicit request.
+
+Under the v2 surface (DESIGN.md §9) AlMatrix is the *engine-side* handle
+behind the uniform client-facing :class:`~repro.core.client.AlArray`: an
+AlArray's expression node lowers to (a future of) an AlMatrix, and the
+lifecycle states below are exactly what ``AlArray.state`` reports once
+execution has started (``deferred`` exists only client-side, before any
+handle is created).
 
 With the asynchronous task-queue engine (DESIGN.md §3-§4) a handle has a
 lifecycle::

@@ -32,9 +32,13 @@ sparklike→Alchemist pipeline from paying the bridge between every call:
    ``run(..., cse=False)`` opts a call out (e.g. routines that are
    intentionally re-randomized between calls).
 
-The planner is per-:class:`~repro.core.engine.AlchemistContext` (reached via
-``ac.planner``), so its caches are session-scoped like the relayout plan
-cache, and its counters land in the same ``session.stats.summary()``.
+The planner is per-client (one per :class:`~repro.core.client.ClientCore`,
+reached via ``ac.planner`` — so one per v2 ``Session`` and per legacy
+``AlchemistContext`` alike), so its caches are session-scoped like the
+relayout plan cache, and its counters land in the same
+``session.stats.summary()``. Under the v2 surface (DESIGN.md §9) *every*
+client call builds nodes here; the session's ExecutionPolicy only decides
+when :meth:`OffloadPlanner.lower` runs.
 
 Two DESIGN.md §7 responsibilities ride on the DAG:
 
@@ -71,7 +75,7 @@ from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
-    from repro.core.engine import AlchemistContext
+    from repro.core.client import ClientCore
 
 LazyLike = Union[LazyMatrix, Expr]
 
@@ -113,7 +117,7 @@ class OffloadPlanner:
     #: (library, routine) used by ``LazyMatrix.__matmul__``.
     matmul_routine: Tuple[str, str] = ("elemental", "gemm")
 
-    def __init__(self, ac: "AlchemistContext"):
+    def __init__(self, ac: "ClientCore"):
         self.ac = ac
         # content key -> AlFuture-of-handle / AlMatrix already resident
         self._resident: Dict[Tuple, Any] = {}

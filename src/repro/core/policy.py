@@ -1,0 +1,163 @@
+"""ExecutionPolicy — pluggable execution strategies for the v2 client surface.
+
+DESIGN.md §9. Before v2 the repo exposed *three* parallel client APIs — eager
+``ac.send/run/collect``, async ``send_async/run_async`` futures, and the
+planner's ``LazyMatrix`` DAG — each with its own handle type and failure
+surface. The Cray follow-up (arXiv:1910.01354) keeps multiple frontends
+maintainable only behind one coherent core interface; v2 collapses the choice
+into a *policy object* selected per session (or per ``with session.policy(...)``
+scope), not per call:
+
+- :class:`Eager`     — every :class:`~repro.core.client.AlArray` node is
+  lowered and resolved the moment it is built: the call blocks until its
+  engine-side value exists, exactly like the v1 synchronous API.
+- :class:`Pipelined` — nodes are lowered (dispatched onto the session's task
+  queue) as they are built but never waited on: transfers and compute
+  pipeline like the v1 ``*_async`` surface, with uniform ``AlArray`` handles
+  instead of raw futures.
+- :class:`Planned`   — the default. Nothing executes until a result is
+  demanded (``.data()`` / ``.result()`` / ``await``); the whole DAG reaches
+  the :class:`~repro.core.planner.OffloadPlanner` at once, so CSE,
+  content-dedup, and bridge-crossing elision see maximal scope.
+
+All three build the *same* expression DAG and execute through the *same*
+planner and task queue — a policy only chooses **when** lowering happens, so
+results are bit-identical across policies (the v2 acceptance property).
+
+The same three objects also back the legacy
+:class:`~repro.linalg.wrappers.LibraryWrapper` namespaces (``el.<routine>`` /
+``el.submit.<routine>`` / ``el.lazy.<routine>``) through :meth:`dispatch`, so
+the wrapper's per-kind closures collapsed into one policy-routed call path.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Dict, Tuple, Type, Union
+
+from repro.core import futures as futures_mod
+from repro.core.errors import SessionError
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
+    from repro.core.client import ClientCore
+    from repro.core.planner import OffloadPlanner
+
+
+class ExecutionPolicy:
+    """How (and when) a session executes the expression nodes it builds.
+
+    Subclasses override two hooks:
+
+    - :meth:`apply` — called by the v2 :class:`~repro.core.client.Session`
+      each time an :class:`~repro.core.client.AlArray` node is built; decides
+      whether lowering happens now (and whether to block on it).
+    - :meth:`dispatch` — called by the legacy library-wrapper namespaces with
+      a raw ``(library, routine, args, params)`` invocation; returns whatever
+      that namespace historically returned (resolved values, an
+      :class:`~repro.core.futures.AlFuture`, or a
+      :class:`~repro.core.expr.LazyMatrix`).
+
+    Policies are stateless and shareable across sessions; ``Eager()``,
+    ``Eager``, and the string ``"eager"`` all resolve to the same behaviour
+    through :func:`as_policy`.
+    """
+
+    name: str = "policy"
+
+    # -- v2 surface -----------------------------------------------------------
+    def apply(self, planner: "OffloadPlanner", lazy: Any) -> None:
+        """An ``AlArray`` node was just built under this policy."""
+        raise NotImplementedError
+
+    # -- legacy wrapper surface ----------------------------------------------
+    def dispatch(
+        self,
+        ac: "ClientCore",
+        library: str,
+        routine: str,
+        args: Tuple[Any, ...],
+        params: Dict[str, Any],
+        n_outputs: int = 1,
+    ) -> Any:
+        """One routine invocation from a wrapper namespace."""
+        raise NotImplementedError
+
+    def _reject_n_outputs(self, n_outputs: int) -> None:
+        if n_outputs != 1:
+            raise SessionError(
+                f"n_outputs is a planner concept; the {self.name} policy returns "
+                "the routine's full result — use Planned (or the .lazy namespace) "
+                "to project individual outputs"
+            )
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}()"
+
+
+class Eager(ExecutionPolicy):
+    """Execute every node as it is built; block until its value exists."""
+
+    name = "eager"
+
+    def apply(self, planner: "OffloadPlanner", lazy: Any) -> None:
+        # Lower and wait: by the time the call returns, the node's engine-side
+        # value (handle or driver scalar) is materialized — v1 sync semantics.
+        futures_mod.resolve(planner.lower(lazy))
+
+    def dispatch(self, ac, library, routine, args, params, n_outputs=1):
+        self._reject_n_outputs(n_outputs)
+        return ac.run_eager(library, routine, *args, **params)
+
+
+class Pipelined(ExecutionPolicy):
+    """Dispatch every node as it is built; never wait (v1 async semantics)."""
+
+    name = "pipelined"
+
+    def apply(self, planner: "OffloadPlanner", lazy: Any) -> None:
+        planner.lower(lazy)  # enqueue, don't block
+
+    def dispatch(self, ac, library, routine, args, params, n_outputs=1):
+        self._reject_n_outputs(n_outputs)
+        return ac.run_async(library, routine, *args, **params)
+
+
+class Planned(ExecutionPolicy):
+    """Defer everything until a result is demanded (the v2 default)."""
+
+    name = "planned"
+
+    def apply(self, planner: "OffloadPlanner", lazy: Any) -> None:
+        pass  # the force (.data()/.result()/await) lowers the whole DAG
+
+    def dispatch(self, ac, library, routine, args, params, n_outputs=1):
+        return ac.planner.run(library, routine, *args, n_outputs=n_outputs, **params)
+
+
+#: accepted spellings for each policy, for ``connect(policy=...)`` and
+#: ``session.policy(...)``.
+_POLICIES: Dict[str, Type[ExecutionPolicy]] = {
+    "eager": Eager,
+    "pipelined": Pipelined,
+    "planned": Planned,
+}
+
+PolicyLike = Union[ExecutionPolicy, Type[ExecutionPolicy], str, None]
+
+
+def as_policy(policy: PolicyLike, default: Type[ExecutionPolicy] = Planned) -> ExecutionPolicy:
+    """Normalize a policy spec — instance, class, name, or None — to an
+    :class:`ExecutionPolicy` instance."""
+    if policy is None:
+        return default()
+    if isinstance(policy, ExecutionPolicy):
+        return policy
+    if isinstance(policy, type) and issubclass(policy, ExecutionPolicy):
+        return policy()
+    if isinstance(policy, str):
+        cls = _POLICIES.get(policy.lower())
+        if cls is not None:
+            return cls()
+        raise SessionError(
+            f"unknown execution policy {policy!r}; choose from {sorted(_POLICIES)}"
+        )
+    raise SessionError(f"cannot interpret {policy!r} as an ExecutionPolicy")

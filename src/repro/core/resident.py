@@ -75,6 +75,11 @@ class ResidentEntry:
         self.payload: Optional[np.ndarray] = None
         #: session id -> that session's placement handles (usually one).
         self.placements: Dict[int, List[AlMatrix]] = {}
+        #: ids of the worker-group devices that most recently held a
+        #: placement of this content — the admission-time affinity signal
+        #: (DESIGN.md §9): a later ``connect(datasets=...)`` prefers the free
+        #: block these ids name, so warm content is reused in place.
+        self.device_ids: frozenset = frozenset()
         self.last_use: int = next(_CLOCK)
 
     # -- pin accounting ------------------------------------------------------
@@ -194,12 +199,37 @@ class ResidentStore:
             handle.store_key = key
             if entry.payload is not None:
                 handle._host_fallback = entry.payload
+            devices = getattr(session, "worker_devices", ())
+            if devices:
+                entry.device_ids = frozenset(d.id for d in devices)
             entry.last_use = next(_CLOCK)
             return entry
 
     def record_attach(self) -> None:
         with self._lock:
             self.attaches += 1
+
+    def device_affinity(self, keys) -> List[frozenset]:
+        """Device-id sets that last held each of the given content keys.
+
+        The admission-time placement signal (DESIGN.md §9): only *usable*
+        entries count — content that can actually produce a new placement
+        without a bridge crossing (a live placement or a host payload).
+        Unknown keys and dead entries contribute nothing, so a declared
+        dataset the engine has never seen simply doesn't steer placement.
+        """
+        if not self.enabled:
+            return []
+        out: List[frozenset] = []
+        with self._lock:
+            for key in keys:
+                entry = self._entries.get(key)
+                if entry is None:
+                    continue
+                self._prune(entry)
+                if entry.device_ids and entry.usable():
+                    out.append(entry.device_ids)
+        return out
 
     # -- unpin / teardown ----------------------------------------------------
     def release(self, key: Tuple, session_id: int, handle: AlMatrix) -> None:

@@ -6,7 +6,7 @@ make minimal changes to existing code when switching from MLlib ... to an
 MPI-based library called through Alchemist."
 
 The Scala listing defines per-routine objects (``CondEst(alA)``); here a
-:class:`LibraryWrapper` binds an AlchemistContext + library name once and
+:class:`LibraryWrapper` binds a client session + library name once and
 exposes each routine as a method, so application code reads like a local
 math library:
 
@@ -16,60 +16,52 @@ math library:
     cond = el.condest(al_a)
     u, s, v = el.truncated_svd(al_a, k=20)
 
-Every wrapper also carries an asynchronous view over the task-queue engine
-(DESIGN.md §3): ``el.submit`` exposes the same routines but returns
-:class:`~repro.core.futures.AlFuture` immediately, so call chains pipeline —
-futures feed straight into further routines or into ``ac.collect``:
+Since DESIGN.md §9 every namespace dispatches through one
+:class:`~repro.core.policy.ExecutionPolicy` object — the same objects the v2
+``Session`` takes — instead of per-kind closures:
 
-    f = el.submit.gemm(al_a, al_b)      # returns at once
-    g = el.submit.gemm(f, al_b)         # chains on the unresolved future
-    C = ac.collect(g)                   # materializes when ready
+- direct methods (``el.gemm``)      → :class:`~repro.core.policy.Eager`
+- ``el.submit.gemm`` (AlFuture)     → :class:`~repro.core.policy.Pipelined`
+- ``el.lazy.gemm``   (LazyMatrix)   → :class:`~repro.core.policy.Planned`
+  (takes ``n_outputs`` for multi-output routines)
 
-and a lazy view over the offload planner (DESIGN.md §6): ``el.lazy`` builds
-deferred-op DAG nodes instead of executing, so chained calls elide the
-bridge entirely and host-array arguments dedup against the session's
-resident-matrix cache; multi-output routines take ``n_outputs``:
-
-    u, s, v = el.lazy.truncated_svd(a, n_outputs=3, k=20)   # a: host ndarray
-    p = el.lazy.gemm(a, u)              # a deduped, u never collected
-    P = p.collect()                     # the one bridge crossing
+so call chains pipeline (futures feed further routines or ``ac.collect``)
+and lazy chains elide the bridge entirely, exactly as before — the wrapper
+is now just sugar over the policy layer.
 """
 
 from __future__ import annotations
 
 from typing import Any
 
-from repro.core.engine import AlchemistContext
-from repro.core.futures import AlFuture
+from repro.core.client import ClientCore
+from repro.core.policy import Eager, ExecutionPolicy, Pipelined, Planned
 
 
 class _RoutineNamespace:
-    """Routine namespace dispatching through an alternate execution path.
+    """Routine namespace dispatching through one execution policy.
 
-    ``el.submit`` routes through ``run_async`` (futures), ``el.lazy`` through
-    the offload planner (deferred-op DAG nodes, taking ``n_outputs``).
+    One generic call path for every kind (DESIGN.md §9): the bound policy
+    object decides eager-blocking, future, or deferred-DAG execution, and
+    the namespace only validates the routine name.
     """
 
-    def __init__(self, wrapper: "LibraryWrapper", kind: str):
+    def __init__(self, wrapper: "LibraryWrapper", policy: ExecutionPolicy):
         self._wrapper = wrapper
-        self._kind = kind
+        self._policy = policy
 
     def __getattr__(self, name: str):
         w = self._wrapper
         if name.startswith("_") or name not in w._routines:
             raise AttributeError(
-                f"{type(w).__name__}.{self._kind} has no routine {name!r}; "
+                f"{type(w).__name__}.{self._policy.name} has no routine {name!r}; "
                 f"available: {w._routines}"
             )
 
-        if self._kind == "submit":
-            def call(*args: Any, **kwargs: Any) -> AlFuture:
-                return w._ac.run_async(w.library_name, name, *args, **kwargs)
-        else:
-            def call(*args: Any, n_outputs: int = 1, **kwargs: Any):
-                return w._ac.planner.run(
-                    w.library_name, name, *args, n_outputs=n_outputs, **kwargs
-                )
+        def call(*args: Any, n_outputs: int = 1, **kwargs: Any) -> Any:
+            return self._policy.dispatch(
+                w._ac, w.library_name, name, args, kwargs, n_outputs=n_outputs
+            )
 
         call.__name__ = name
         return call
@@ -79,31 +71,29 @@ class _RoutineNamespace:
 
 
 class LibraryWrapper:
-    """Binds (context, library) and exposes routines as methods."""
+    """Binds (client, library) and exposes routines as methods."""
 
     library_name: str = ""
     library_path: str = ""
 
-    def __init__(self, ac: AlchemistContext):
+    def __init__(self, ac: ClientCore):
         self._ac = ac
         if self.library_name not in ac.session.libraries:
             ac.register_library(self.library_name, self.library_path)
         self._routines = ac.library(self.library_name).routine_names()
-        self.submit = _RoutineNamespace(self, "submit")
-        self.lazy = _RoutineNamespace(self, "lazy")
+        self._eager = _RoutineNamespace(self, Eager())
+        self.submit = _RoutineNamespace(self, Pipelined())
+        self.lazy = _RoutineNamespace(self, Planned())
 
     def __getattr__(self, name: str):
+        # Direct methods are the eager namespace: same policy-routed call
+        # path as .submit/.lazy, blocking semantics.
         if name.startswith("_") or name not in self._routines:
             raise AttributeError(
                 f"{type(self).__name__} has no routine {name!r}; "
                 f"available: {self._routines}"
             )
-
-        def call(*args: Any, **kwargs: Any):
-            return self._ac.run(self.library_name, name, *args, **kwargs)
-
-        call.__name__ = name
-        return call
+        return getattr(self._eager, name)
 
     def __dir__(self):
         return sorted(set(super().__dir__()) | set(self._routines))

@@ -31,9 +31,7 @@ from typing import Any, Optional, Tuple, Union
 import numpy as np
 
 from repro.core.errors import SessionError
-from repro.core.expr import LazyMatrix
-from repro.core.futures import AlFuture
-from repro.core.handles import AlMatrix
+from repro.core.expr import LazyMatrix, peeked_state
 from repro.core.planner import OffloadPlanner
 from repro.sparklike.matrices import IndexedRowMatrix
 from repro.sparklike.rdd import SparkLikeContext
@@ -44,6 +42,8 @@ _ACTIVE: Optional[OffloadPlanner] = None
 
 
 def _resolve_planner(ac_or_planner: Any) -> OffloadPlanner:
+    """Accepts an OffloadPlanner, a v2 ``Session``, or the deprecated
+    ``AlchemistContext`` shim — anything carrying a ``.planner``."""
     return (
         ac_or_planner
         if isinstance(ac_or_planner, OffloadPlanner)
@@ -131,17 +131,9 @@ class LazyRowMatrix:
         """Where the rows physically are: ``deferred`` (not lowered yet),
         ``pending`` (transfer/compute queued), ``materialized`` (device-
         resident), ``spilled`` (governor moved them to the host store; the
-        next consumption refills), ``failed``, or ``freed``."""
-        val = self.planner.peek(self.lazy)
-        if val is None:
-            return "deferred"
-        if isinstance(val, AlFuture):
-            if not val.done():
-                return "pending"
-            if val.exception() is not None:
-                return "failed"
-            val = val.result()
-        return val.state if isinstance(val, AlMatrix) else "materialized"
+        next consumption refills), ``failed``, or ``freed`` — the same
+        vocabulary (and classifier) as the v2 ``AlArray.state``."""
+        return peeked_state(self.planner.peek(self.lazy))
 
     def to_numpy(self) -> np.ndarray:
         """Collect: the explicit engine→client bridge crossing."""

@@ -5,6 +5,8 @@ import os
 
 assert "--xla_force_host_platform_device_count=8" in os.environ.get("XLA_FLAGS", "")
 
+import threading
+
 import numpy as np
 import jax
 
@@ -101,4 +103,38 @@ assert gs["refills"] > 0, gs
 assert gs["hbm_high_water"] <= 3 * mat_bytes, gs
 ac3.stop()
 assert engine.available_workers == 8
+
+# --- v2 admission-aware connect on a real mesh (DESIGN.md §9) -------------
+# Content-affinity placement end-to-end: content X was last placed on the
+# SECOND half of the device pool; a new session declaring X must be steered
+# there (the canonical default pick would be devices 0-3), and its send of X
+# must attach with zero bridge bytes.
+aff_engine = repro.AlchemistEngine()
+s_a = repro.connect(aff_engine, workers=4, name="aff_a")  # devices 0-3
+s_b = repro.connect(aff_engine, workers=4, name="aff_b")  # devices 4-7
+assert {d.id for d in s_b.session.worker_devices} == {4, 5, 6, 7}
+x_payload = rng.standard_normal((64, 32)).astype(np.float32)
+s_b.send(x_payload, name="X").materialize()  # placed (and published) on 4-7
+s_a.close()
+s_b.close()  # uniquely-referenced content migrates host-side, keyed by X
+assert aff_engine.available_workers == 8
+s_c = repro.connect(aff_engine, workers=4, name="aff_c", datasets=[x_payload])
+assert {d.id for d in s_c.session.worker_devices} == {4, 5, 6, 7}, (
+    "content affinity should pick the reuse-bearing group"
+)
+assert aff_engine.admissions["affinity_hits"] == 1
+with s_c.policy("eager"):
+    s_c.send(x_payload, name="X")
+summ = s_c.stats.summary()
+assert summ["cross_session_reuses"] == 1 and summ["send_bytes"] == 0, summ
+
+# Queued admission under real contention: a connect for the whole pool waits
+# for the running session instead of failing, then is placed.
+threading.Timer(0.3, s_c.close).start()
+s_d = repro.connect(aff_engine, workers=8, name="aff_d", timeout=60)
+assert aff_engine.admissions["queued"] == 1
+assert len(s_d.session.worker_devices) == 8
+s_d.close()
+snap = aff_engine.stats()
+assert snap["engine"]["admissions"]["queued"] == 1, snap
 print("MULTIDEVICE_ENGINE_OK")

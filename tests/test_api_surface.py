@@ -1,0 +1,46 @@
+"""Public-API snapshot (DESIGN.md §9): ``repro.__all__`` is a contract.
+
+An accidental addition, removal, or rename in the package's public surface
+must fail here first — update the snapshot *deliberately*, in the same PR
+that changes the surface, and record the change in DESIGN.md §9's migration
+table if it affects callers.
+"""
+
+import repro
+
+# The frozen v2 surface. Sorted; update deliberately (see module docstring).
+PUBLIC_API = [
+    "AlArray",
+    "AlFuture",
+    "AlMatrix",
+    "AlchemistContext",
+    "AlchemistEngine",
+    "Eager",
+    "ExecutionPolicy",
+    "GRID",
+    "LayoutSpec",
+    "Pipelined",
+    "Planned",
+    "REPLICATED",
+    "ROW",
+    "Session",
+    "connect",
+]
+
+
+def test_public_api_snapshot():
+    assert sorted(repro.__all__) == PUBLIC_API
+
+
+def test_all_names_resolve():
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None
+
+
+def test_no_duplicate_exports():
+    assert len(repro.__all__) == len(set(repro.__all__))
+
+
+def test_version_is_v2():
+    major = int(repro.__version__.split(".")[0])
+    assert major >= 2

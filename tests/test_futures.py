@@ -204,12 +204,12 @@ class TestAsyncContext:
         )
 
     def test_failed_send_marks_handle_failed(self, ac, monkeypatch):
-        import repro.core.engine as engine_mod
+        import repro.core.client as client_mod
 
         def boom(*a, **k):
             raise RuntimeError("transfer died")
 
-        monkeypatch.setattr(engine_mod, "timed_relayout", boom)
+        monkeypatch.setattr(client_mod, "timed_relayout", boom)
         f = ac.send_async(np.zeros((4, 4), dtype=np.float32))
         with pytest.raises(RuntimeError, match="transfer died"):
             f.result(30)

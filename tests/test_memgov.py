@@ -254,14 +254,14 @@ class TestReservations:
         ac.stop()
 
     def test_failed_send_releases_reservation(self, engine, monkeypatch):
-        import repro.core.engine as engine_mod
+        import repro.core.client as client_mod
 
         ac = _ctx(engine, None)
 
         def boom(*a, **k):
             raise RuntimeError("transfer died")
 
-        monkeypatch.setattr(engine_mod, "timed_relayout", boom)
+        monkeypatch.setattr(client_mod, "timed_relayout", boom)
         f = ac.send_async(np.zeros((32, 32), dtype=np.float32))
         with pytest.raises(RuntimeError):
             f.result(30)

@@ -1,0 +1,539 @@
+"""The v2 client surface (DESIGN.md §9): connect()/Session/AlArray, pluggable
+execution policies, admission-aware placement, and the v1 deprecation shim.
+
+Runs warning-clean: CI executes this module (plus the API snapshot test)
+with ``-W error::DeprecationWarning``, so nothing here may lean on the
+deprecated AlchemistContext surface except the shim tests, which catch the
+warning explicitly.
+"""
+
+import asyncio
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.errors import AdmissionTimeout, SessionError, WorkerAllocationError
+from repro.core.expr import content_key
+from repro.core.futures import AlFuture
+from repro.core.handles import AlMatrix
+from repro.core.layouts import GRID
+from repro.core.policy import Eager, ExecutionPolicy, Pipelined, Planned, as_policy
+from repro.linalg.wrappers import Elemental
+
+ELEMENTAL = "repro.linalg.library:ElementalLib"
+
+
+def _session(engine, **kw):
+    s = repro.connect(engine, **kw)
+    s.register_library("elemental", ELEMENTAL)
+    return s
+
+
+@pytest.fixture()
+def engine():
+    return repro.AlchemistEngine()
+
+
+@pytest.fixture()
+def data():
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((48, 32)).astype(np.float32)
+    b = rng.standard_normal((32, 24)).astype(np.float32)
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# the uniform AlArray handle
+# ---------------------------------------------------------------------------
+
+
+class TestAlArray:
+    def test_send_run_data_roundtrip(self, engine, data):
+        a, b = data
+        with _session(engine, name="v2") as s:
+            la = s.send(a, name="A")
+            assert isinstance(la, repro.AlArray)
+            assert la.shape == a.shape
+            assert la.state == "deferred"  # Planned default: nothing ran
+            lc = la @ s.send(b)
+            out = lc.data()
+            np.testing.assert_allclose(np.asarray(out), a @ b, atol=1e-4)
+            assert lc.state in ("materialized", "spilled")
+
+    def test_result_is_data_and_takes_timeout(self, engine, data):
+        a, b = data
+        with _session(engine) as s:
+            lc = s.send(a) @ s.send(b)
+            r1 = np.asarray(lc.result(timeout=60))
+            r2 = np.asarray(lc.data())
+            np.testing.assert_array_equal(r1, r2)
+
+    def test_multi_output_run(self, engine, data):
+        a, _ = data
+        with _session(engine) as s:
+            u, sv, v = s.run("elemental", "truncated_svd", s.send(a), n_outputs=3, k=4)
+            assert isinstance(u, repro.AlArray)
+            assert np.asarray(u.data()).shape == (48, 4)
+            assert np.asarray(sv.data()).shape == (4,)
+            assert np.asarray(v.data()).shape == (32, 4)
+
+    def test_scalar_routine_returns_driver_value(self, engine, data):
+        a, _ = data
+        with _session(engine) as s:
+            n = s.run("elemental", "normest", s.send(a))
+            assert float(n.data()) == pytest.approx(
+                float(np.linalg.norm(a)), rel=1e-3
+            )
+
+    def test_await_forces(self, engine, data):
+        a, b = data
+        with _session(engine) as s:
+
+            async def go():
+                return await (s.send(a) @ s.send(b))
+
+            out = asyncio.run(go())
+            np.testing.assert_allclose(np.asarray(out), a @ b, atol=1e-4)
+
+    def test_alfuture_await(self, engine, data):
+        a, _ = data
+        with _session(engine) as s:
+            fut = s.send_async(a)
+            assert isinstance(fut, AlFuture)
+
+            async def go():
+                return await fut
+
+            h = asyncio.run(go())
+            assert isinstance(h, AlMatrix)
+
+    def test_free_then_reforce_resends(self, engine, data):
+        a, _ = data
+        with _session(engine) as s:
+            la = s.send(a)
+            first = np.asarray(la.data())
+            la.free()
+            assert la.state == "freed"
+            again = np.asarray(la.data())  # transparent re-send
+            np.testing.assert_array_equal(first, again)
+
+    def test_free_of_deferred_node_is_noop(self, engine, data):
+        a, _ = data
+        with _session(engine) as s:
+            la = s.send(a)
+            la.free()  # never lowered: nothing to release
+            assert la.state == "deferred"
+
+    def test_session_collect_and_free_accept_alarray(self, engine, data):
+        a, _ = data
+        with _session(engine) as s:
+            la = s.send(a)
+            np.testing.assert_array_equal(np.asarray(s.collect(la)), a)
+            s.free(la)
+            assert la.state == "freed"
+
+
+# ---------------------------------------------------------------------------
+# execution policies
+# ---------------------------------------------------------------------------
+
+
+class TestPolicies:
+    def _roundtrip(self, policy, data):
+        """connect → send → gemm → svd → .data() under one policy."""
+        a, b = data
+        engine = repro.AlchemistEngine()
+        with _session(engine, policy=policy, name=f"p_{policy}") as s:
+            lc = s.send(a, name="A") @ s.send(b, name="B")
+            u, sv, v = s.run("elemental", "truncated_svd", lc, n_outputs=3, k=4)
+            out = (
+                np.asarray(lc.data()),
+                np.asarray(u.data()),
+                np.asarray(sv.data()),
+                np.asarray(v.data()),
+            )
+        engine.shutdown()
+        return out
+
+    def test_roundtrip_identical_under_all_policies(self, data):
+        eager = self._roundtrip("eager", data)
+        pipelined = self._roundtrip("pipelined", data)
+        planned = self._roundtrip("planned", data)
+        for e, p in zip(eager, pipelined):
+            np.testing.assert_array_equal(e, p)  # bit-exact vs eager
+        for e, p in zip(eager, planned):
+            np.testing.assert_array_equal(e, p)
+
+    def test_eager_policy_materializes_at_build(self, engine, data):
+        a, _ = data
+        with _session(engine, policy="eager") as s:
+            la = s.send(a)
+            assert la.state in ("materialized", "spilled")
+
+    def test_pipelined_policy_dispatches_without_blocking(self, engine, data):
+        a, _ = data
+        with _session(engine, policy=Pipelined()) as s:
+            la = s.send(a)
+            assert la.state in ("pending", "materialized")
+            s.wait()
+            assert la.state == "materialized"
+
+    def test_policy_scope_restores(self, engine, data):
+        a, _ = data
+        with _session(engine) as s:
+            assert isinstance(s.execution_policy, Planned)
+            with s.policy("eager"):
+                assert isinstance(s.execution_policy, Eager)
+                le = s.send(a)
+                assert le.state in ("materialized", "spilled")
+            assert isinstance(s.execution_policy, Planned)
+
+    def test_as_policy_spellings(self):
+        assert isinstance(as_policy(None), Planned)
+        assert isinstance(as_policy("eager"), Eager)
+        assert isinstance(as_policy(Pipelined), Pipelined)
+        p = Planned()
+        assert as_policy(p) is p
+        with pytest.raises(SessionError):
+            as_policy("warp-speed")
+        with pytest.raises(SessionError):
+            as_policy(42)
+
+    def test_policies_share_one_dag_and_counters(self, engine, data):
+        a, b = data
+        with _session(engine, policy="planned") as s:
+            lc = s.send(a) @ s.send(b)
+            lc.data()
+            stats = s.stats.summary()
+            assert stats["planned_ops"] == 1
+            assert stats["num_sends"] == 2
+
+
+# ---------------------------------------------------------------------------
+# policy-routed library wrappers (the per-kind closures are gone)
+# ---------------------------------------------------------------------------
+
+
+class TestWrapperPolicies:
+    def test_three_kinds_route_through_policies(self, engine, data):
+        a, _ = data
+        sq = a.T @ a  # square, so gemm(h, h) composes
+        with _session(engine) as s:
+            el = Elemental(s)
+            assert isinstance(el._eager._policy, Eager)
+            assert isinstance(el.submit._policy, Pipelined)
+            assert isinstance(el.lazy._policy, Planned)
+
+            h = s.send(sq).materialize()  # an engine-side AlMatrix
+            eager_out = el.gemm(h, h)
+            assert isinstance(eager_out, AlMatrix)
+
+            fut = el.submit.gemm(h, h)
+            assert isinstance(fut, AlFuture)
+            assert isinstance(fut.result(60), AlMatrix)
+
+            lazy_out = el.lazy.gemm(sq, sq)
+            np.testing.assert_allclose(
+                np.asarray(lazy_out.collect()), sq @ sq, atol=1e-2
+            )
+
+    def test_eager_and_submit_reject_n_outputs(self, engine, data):
+        a, _ = data
+        with _session(engine) as s:
+            el = Elemental(s)
+            h = s.send(a).materialize()
+            with pytest.raises(SessionError, match="n_outputs"):
+                el.truncated_svd(h, n_outputs=3, k=2)
+            with pytest.raises(SessionError, match="n_outputs"):
+                el.submit.truncated_svd(h, n_outputs=3, k=2)
+            u, sv, v = el.lazy.truncated_svd(a, n_outputs=3, k=2)
+            assert np.asarray(u.collect()).shape == (48, 2)
+
+    def test_unknown_routine_still_fails_fast(self, engine):
+        with _session(engine) as s:
+            el = Elemental(s)
+            with pytest.raises(AttributeError):
+                el.not_a_routine
+            with pytest.raises(AttributeError):
+                el.submit.not_a_routine
+            with pytest.raises(AttributeError):
+                el.lazy.not_a_routine
+
+
+# ---------------------------------------------------------------------------
+# admission-aware connect()
+# ---------------------------------------------------------------------------
+
+
+class TestAdmission:
+    def test_queued_then_placed(self, engine, data):
+        a, _ = data
+        hog = repro.connect(engine, workers=engine.num_workers, name="hog")
+
+        def release_later():
+            time.sleep(0.25)
+            hog.close()
+
+        t = threading.Thread(target=release_later)
+        t.start()
+        t0 = time.perf_counter()
+        s = _session(engine, workers=1, timeout=30, name="queued")
+        waited = time.perf_counter() - t0
+        t.join()
+        assert waited >= 0.2, waited  # genuinely queued, not failed
+        assert engine.admissions["queued"] == 1
+        np.testing.assert_array_equal(np.asarray(s.send(a).data()), a)
+        s.close()
+
+    def test_timeout_raises_cleanly_no_leaks(self, engine):
+        hog = repro.connect(engine, workers=engine.num_workers, name="hog")
+        gov_sessions = set(engine.memgov._sessions)
+        t0 = time.perf_counter()
+        with pytest.raises(AdmissionTimeout):
+            repro.connect(engine, workers=1, timeout=0.2, hbm_budget=1 << 20)
+        assert time.perf_counter() - t0 < 5
+        # nothing leaked: no worker group, no governor registration, no
+        # session table entry, no waiter left behind
+        assert engine.available_workers == 0
+        assert set(engine.memgov._sessions) == gov_sessions
+        assert len(engine.sessions) == 1
+        assert engine.queued_connects == 0
+        assert engine.admissions["timeouts"] == 1
+        hog.close()
+        # the pool recovered: a later connect is immediate
+        s = repro.connect(engine, workers=1)
+        s.close()
+
+    def test_admission_timeout_is_a_worker_allocation_error(self):
+        assert issubclass(AdmissionTimeout, WorkerAllocationError)
+
+    def test_impossible_request_fails_fast_even_queued(self, engine):
+        t0 = time.perf_counter()
+        with pytest.raises(WorkerAllocationError, match="only has"):
+            repro.connect(engine, workers=engine.num_workers + 1, timeout=30)
+        assert time.perf_counter() - t0 < 5  # did not sit in the queue
+
+    def test_queue_false_preserves_v1_fail_fast(self, engine):
+        hog = repro.connect(engine, workers=engine.num_workers)
+        with pytest.raises(WorkerAllocationError):
+            repro.connect(engine, workers=1, queue=False)
+        hog.close()
+
+    def test_nonpositive_request_fails_fast_even_queued(self, engine):
+        # must never sit in the admission queue waiting for 0 workers
+        t0 = time.perf_counter()
+        with pytest.raises(WorkerAllocationError, match="0 workers"):
+            repro.connect(engine, workers=0)  # queue=True default, no timeout
+        with pytest.raises(WorkerAllocationError):
+            repro.connect(engine, workers=-2)
+        with pytest.raises(WorkerAllocationError, match="grid"):
+            repro.connect(engine, grid=(0, 3))
+        assert time.perf_counter() - t0 < 5
+
+    def test_derived_expression_dataset_rejected(self, engine, data):
+        a, b = data
+        with _session(engine) as s:
+            derived = s.send(a) @ s.send(b)  # RunExpr: no content key
+            with pytest.raises(WorkerAllocationError, match="derived expression"):
+                repro.connect(engine, workers=1, datasets=[derived], queue=False)
+            # a send node's key, by contrast, is declared for free
+            engine._pick_block(1, [])  # engine still consistent
+            assert repro.core.engine._dataset_keys([s.send(a)]) == [content_key(a)]
+
+    def test_datasets_not_hashed_when_store_disabled(self, monkeypatch):
+        engine = repro.AlchemistEngine(share_residents=False)
+
+        def boom(_array):
+            raise AssertionError("content_key must not run with the store disabled")
+
+        monkeypatch.setattr(repro.core.engine, "content_key", boom)
+        s = repro.connect(engine, workers=1, datasets=[np.ones((256, 256))])
+        s.close()
+
+
+class _FakeDev(SimpleNamespace):
+    def __init__(self, i):
+        super().__init__(id=i)
+
+    def __hash__(self):
+        return hash(("fake", self.id))
+
+
+class TestContentAffinity:
+    """Placement prefers the free block whose resident-store content the
+    declared datasets can reuse. Unit-level (fake device pool) — the
+    end-to-end path runs on a real 8-device mesh in
+    tests/multidevice/_engine_script.py."""
+
+    def _store_with_placement(self, engine, devs, payload):
+        key = content_key(payload)
+        handle = AlMatrix(
+            shape=payload.shape, dtype=payload.dtype, layout=GRID, session_id=99
+        )
+        fake_session = SimpleNamespace(id=99, worker_devices=devs)
+        engine.residents.register(key, handle, fake_session, payload=payload)
+        return key
+
+    def test_affinity_picks_reuse_bearing_block(self):
+        devs = [_FakeDev(i) for i in range(8)]
+        engine = repro.AlchemistEngine(devices=devs)
+        payload = np.arange(12, dtype=np.float32).reshape(3, 4)
+        key = self._store_with_placement(engine, devs[4:8], payload)
+
+        # default pick is the canonical first block ...
+        assert [d.id for d in engine._pick_block(4, [])] == [0, 1, 2, 3]
+        # ... but a declared dataset steers to the warm block
+        assert [d.id for d in engine._pick_block(4, [key])] == [4, 5, 6, 7]
+        assert engine.admissions["affinity_hits"] == 1
+        # ndarray datasets hash to the same key engine-side
+        from repro.core.engine import _dataset_keys
+
+        assert _dataset_keys([payload]) == [key]
+
+    def test_unknown_key_keeps_canonical_placement(self):
+        devs = [_FakeDev(i) for i in range(8)]
+        engine = repro.AlchemistEngine(devices=devs)
+        other = content_key(np.ones((2, 2), dtype=np.float32))
+        assert [d.id for d in engine._pick_block(4, [other])] == [0, 1, 2, 3]
+        assert engine.admissions["affinity_hits"] == 0
+
+    def test_device_affinity_skips_unusable_entries(self):
+        devs = [_FakeDev(i) for i in range(4)]
+        engine = repro.AlchemistEngine(devices=devs)
+        payload = np.ones((2, 2), dtype=np.float32)
+        key = self._store_with_placement(engine, devs, payload)
+        assert engine.residents.device_affinity([key]) == [frozenset({0, 1, 2, 3})]
+        assert engine.residents.device_affinity([("no", "such", "key")]) == []
+
+
+# ---------------------------------------------------------------------------
+# engine.stats(): the merged observability snapshot
+# ---------------------------------------------------------------------------
+
+
+class TestEngineStats:
+    def test_merged_snapshot(self, engine, data):
+        a, _ = data
+        with _session(engine, name="obs") as s:
+            s.send(a).data()
+            snap = engine.stats()
+            assert set(snap) == {"engine", "sessions", "memgov", "residents"}
+            eng = snap["engine"]
+            assert eng["workers"] == engine.num_workers
+            assert eng["live_sessions"] == 1
+            assert eng["queued_connects"] == 0
+            assert eng["admissions"]["immediate"] == 1
+            (sess,) = snap["sessions"].values()
+            assert sess["name"] == "obs"
+            assert sess["num_sends"] == 1
+            assert snap["memgov"]["pressure"] == snap["memgov"]["used"]
+            assert snap["memgov"]["high_water"] > 0
+            assert snap["residents"]["entries"] >= 1
+        after = engine.stats()
+        assert after["engine"]["live_sessions"] == 0
+        assert after["sessions"] == {}
+
+    def test_snapshot_is_json_serializable(self, engine, data):
+        import json
+
+        a, _ = data
+        with _session(engine) as s:
+            s.send(a).data()
+            json.dumps(engine.stats())
+
+
+# ---------------------------------------------------------------------------
+# the v1 deprecation shim
+# ---------------------------------------------------------------------------
+
+
+class TestV1Shim:
+    def test_alchemist_context_warns_and_works(self, engine, data):
+        a, b = data
+        with pytest.warns(DeprecationWarning, match="repro.connect"):
+            ac = repro.AlchemistContext(engine, num_workers=1, name="v1")
+        ac.register_library("elemental", ELEMENTAL)
+        ha = ac.send(a)
+        hb = ac.send(b)
+        hc = ac.run("elemental", "gemm", ha, hb)
+        np.testing.assert_allclose(np.asarray(ac.collect(hc)), a @ b, atol=1e-4)
+        ac.stop()
+
+    def test_shim_and_v2_share_the_transport_core(self):
+        from repro.core.client import ClientCore
+
+        assert issubclass(repro.AlchemistContext, ClientCore)
+        assert issubclass(repro.Session, ClientCore)
+        # the v1 verbs are literally the core's eager methods
+        assert repro.AlchemistContext.send is ClientCore.send_eager
+        assert repro.AlchemistContext.run is ClientCore.run_eager
+
+    def test_v2_session_emits_no_deprecation_warning(self, engine, data):
+        import warnings
+
+        a, _ = data
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            with _session(engine) as s:
+                s.send(a).data()
+                with s.policy("eager"):
+                    s.send(np.ones((4, 4), dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# v2 + the offload / sparklike layers
+# ---------------------------------------------------------------------------
+
+
+class TestV2Offload:
+    def test_offloaded_accepts_v2_session(self, engine, data):
+        from repro.sparklike import offload
+
+        a, _ = data
+        with _session(engine) as s:
+            with offload.offloaded(s) as planner:
+                assert planner is s.planner
+                u, sv, v = offload.compute_svd(planner, a, k=3)
+                assert u.num_rows == a.shape[0] and u.num_cols == 3
+                assert sv.shape == (3,)
+            assert offload.active() is None
+
+    def test_lazyrowmatrix_state_matches_alarray_vocab(self, engine, data):
+        from repro.sparklike import offload
+
+        a, _ = data
+        with _session(engine) as s:
+            with offload.offloaded(s) as planner:
+                u, _, _ = offload.compute_svd(planner, a, k=3)
+                assert u.state in (
+                    "deferred",
+                    "pending",
+                    "materialized",
+                    "spilled",
+                )
+
+
+class TestPolicyProtocol:
+    def test_custom_policy_plugs_in(self, engine, data):
+        """The policy surface is genuinely pluggable: a user-defined policy
+        (here: lower after every N nodes) drives the same DAG."""
+        a, b = data
+
+        class EveryOther(ExecutionPolicy):
+            name = "every-other"
+
+            def __init__(self):
+                self.n = 0
+
+            def apply(self, planner, lazy):
+                self.n += 1
+                if self.n % 2 == 0:
+                    planner.lower(lazy)
+
+        with _session(engine, policy=EveryOther()) as s:
+            lc = s.send(a) @ s.send(b)
+            np.testing.assert_allclose(np.asarray(lc.data()), a @ b, atol=1e-4)
