@@ -15,16 +15,25 @@
                      §9), then its identical dataset attaches with zero
                      bridge bytes; two sessions 2× overcommitted against one
                      shared HBM budget stay bounded + bit-exact (DESIGN.md §8)
+  overlap_spill      beyond-paper: asynchronous data plane — spill copy-outs
+                     on the transfer ring overlapped with queue-worker
+                     compute, measured as an overlap ratio and compared
+                     bit-exactly against the synchronous baseline
+                     (DESIGN.md §10)
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--only`` takes a
 comma-separated subset; ``--json PATH`` additionally writes the structured
-metrics each suite records — including the merged ``engine.stats()``
-snapshot (worker pool + admission queue, per-session stats, governor
-pressure, resident store; DESIGN.md §9) that cross_session embeds — the
-file CI uploads as ``BENCH_ci.json`` and gates against
-``benchmarks/BENCH_baseline.json`` (see check_regression.py).
+metrics each suite records — each suite block carries a ``runtime`` config
+record (allocator, XLA flags, device count; repro.launch.runtime) so a
+regression is attributable to environment drift, plus the merged
+``engine.stats()`` snapshot that cross_session embeds — the file CI uploads
+as ``BENCH_ci.json`` and gates against ``benchmarks/BENCH_baseline.json``
+(see check_regression.py). ``--tuned`` re-execs the process under the tuned
+runtime recipe (tcmalloc LD_PRELOAD when installed, emulated device count,
+32-bit dtype defaults) before any jax import binds the environment.
 
-    PYTHONPATH=src python -m benchmarks.run [--only offload,spill] [--json out.json]
+    PYTHONPATH=src python -m benchmarks.run [--only offload,spill] \
+        [--tuned] [--json out.json]
 """
 
 from __future__ import annotations
@@ -35,17 +44,48 @@ import sys
 import time
 from typing import Dict, List
 
+SUITE_NAMES = ["gemm", "svd", "transfer", "overlap", "offload", "spill", "cross", "overlap_spill"]
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--only",
+        default=None,
+        help=f"comma-separated subset of: {','.join(SUITE_NAMES)}",
+    )
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="PATH",
+        help="also write structured per-suite metrics as JSON",
+    )
+    ap.add_argument(
+        "--tuned",
+        action="store_true",
+        help="re-exec under the tuned runtime recipe (repro.launch.runtime)",
+    )
+    args = ap.parse_args()
+
+    if args.tuned:
+        # Before any benchmark import pulls in jax: LD_PRELOAD and XLA flags
+        # bind at process start, so the only honest application is a re-exec
+        # (a no-op if this process is already the tuned one).
+        from repro.launch import runtime
+
+        runtime.ensure_tuned()
+
     from benchmarks import (
         cross_session,
         gemm_table1,
         offload_plan,
         overlap_async,
+        overlap_spill,
         spill_pressure,
         svd_fig34,
         transfer_tables23,
     )
+    from repro.launch import runtime
 
     suites = {
         "gemm": gemm_table1.run,
@@ -55,21 +95,8 @@ def main() -> None:
         "offload": offload_plan.run,
         "spill": spill_pressure.run,
         "cross": cross_session.run,
+        "overlap_spill": overlap_spill.run,
     }
-
-    ap = argparse.ArgumentParser()
-    ap.add_argument(
-        "--only",
-        default=None,
-        help=f"comma-separated subset of: {','.join(suites)}",
-    )
-    ap.add_argument(
-        "--json",
-        default=None,
-        metavar="PATH",
-        help="also write structured per-suite metrics as JSON",
-    )
-    args = ap.parse_args()
 
     if args.only:
         names = [n.strip() for n in args.only.split(",") if n.strip()]
@@ -87,6 +114,12 @@ def main() -> None:
     sys.stderr.write(f"[benchmarks] done in {time.perf_counter()-t0:.1f}s\n")
     print("\n".join(report))
     if args.json:
+        # Every suite's block records the runtime it actually ran under —
+        # regressions must be attributable to environment drift (allocator,
+        # device count, flags), not guessed at.
+        rt = runtime.snapshot()
+        for block in metrics.values():
+            block["runtime"] = rt
         with open(args.json, "w") as f:
             json.dump(metrics, f, indent=2, sort_keys=True)
         sys.stderr.write(f"[benchmarks] metrics written to {args.json}\n")

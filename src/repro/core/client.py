@@ -64,6 +64,7 @@ from repro.core.layouts import GRID, ROW, LayoutSpec
 from repro.core.policy import ExecutionPolicy, PolicyLike, as_policy
 from repro.core.registry import Library, LibrarySpec, load_library
 from repro.core.relayout import (
+    FUSED_PATHS,
     TransferRecord,
     pad_amounts,
     pad_for,
@@ -230,8 +231,9 @@ class ClientCore:
                 # would interleave the zero rows (see pad_amounts) — so they
                 # keep the pre-padding behaviour: even shapes work, uneven
                 # ones fail loudly at the device_put.
+                stage_path = "none"
                 if not (self.client_layout.cyclic or self.engine_layout.cyclic):
-                    x, _stage_pads = pad_for(x, self.client_layout, mesh)
+                    x, _stage_pads, stage_path = pad_for(x, self.client_layout, mesh)
                 x = jax.device_put(x, self.client_layout.sharding(mesh))
                 out, rec = timed_relayout(
                     x,
@@ -243,6 +245,7 @@ class ClientCore:
                     block=block,
                     strip=False,  # residency keeps the put-legal physical form
                 )
+                rec.fused = rec.fused or stage_path in FUSED_PATHS
                 sess.stats.record_transfer(rec)
                 with sess.memgov.lock:  # claim -> charge atomically
                     sess.memgov.settle(admitted)
@@ -329,6 +332,8 @@ class ClientCore:
                     tuple(x.shape), x.dtype, self.engine_layout, self.engine_layout, sess.mesh
                 )
                 out = plan.apply(x)
+                if plan.fused_path in FUSED_PATHS:
+                    sess.stats.record_fused_relayout()
                 if block:
                     out.block_until_ready()
                 h._host_fallback = payload

@@ -104,6 +104,7 @@ class AlchemistEngine:
         hbm_budget: Optional[int] = None,
         share_residents: bool = True,
         host_retention_bytes: Optional[int] = None,
+        async_spill: bool = True,
     ):
         self.name = name
         self.devices: List[jax.Device] = list(devices if devices is not None else jax.devices())
@@ -123,7 +124,11 @@ class AlchemistEngine:
             "last_queued_pressure": None,  # memgov.pressure() when a wait began
         }
         self.sessions: Dict[int, Session] = {}
-        self.memgov = MemoryGovernor(budget=hbm_budget, name=f"{name}-memgov")
+        # async_spill=False restores the synchronous copy-out baseline —
+        # benchmarks/overlap_spill.py uses it as the numerics control.
+        self.memgov = MemoryGovernor(
+            budget=hbm_budget, name=f"{name}-memgov", async_spill=async_spill
+        )
         self.residents = ResidentStore(enabled=share_residents, retain_bytes=host_retention_bytes)
 
     # -- worker allocation ---------------------------------------------------

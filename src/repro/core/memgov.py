@@ -41,13 +41,30 @@ the policy identical on emulated-CPU meshes and real HBM. Per-handle stats
 
 With no budget anywhere (the default) nothing spills and the governor is
 pure bookkeeping.
+
+**The asynchronous data plane (DESIGN.md §10).** Spill copy-outs are enqueued
+onto a dedicated :class:`~repro.core.taskqueue.TransferExecutor` (a bounded
+double-buffer ring) so the owning session's queue worker overlaps the next
+task's compute with the previous victim's D2H. Only the *state transition*
+runs under the governor lock; the bytes stream on the transfer thread, with
+an ``in_flight_spill_bytes`` ledger tracking victims whose device reference
+is still held pending copy. A refill of a still-in-flight victim *joins* the
+pending copy — it cancels the job and restores the retained device array,
+zero copies — and a collect of one waits on the job's event. Host staging
+buffers come from a small reuse pool and are donated back after refill,
+eliminating one host copy per spill/refill cycle; a buffer served to a client
+(``host_payload``) is marked read-only and never recycled, and a buffer the
+refill's zero-copy ``device_put`` aliased stays owned by the device array
+(pooling it would let a later gather corrupt the resident matrix).
 """
 
 from __future__ import annotations
 
 import contextlib
+import dataclasses
 import itertools
 import threading
+import time
 from typing import TYPE_CHECKING, Dict, Iterable, List, Optional, Set
 
 import jax
@@ -57,12 +74,85 @@ import numpy as np
 from repro.core import handles as handles_mod
 from repro.core.errors import HandleError
 from repro.core.handles import AlMatrix
-from repro.core.relayout import pad_amounts
+from repro.core.relayout import FUSED_PATHS, pad_amounts
+from repro.core.taskqueue import TransferExecutor
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
     from repro.core.session import Session
 
 _CLOCK = itertools.count(1)
+
+
+@dataclasses.dataclass
+class _SpillJob:
+    """One victim's pending copy-out on the transfer ring.
+
+    ``array`` holds the device reference until the copy lands (or a refill
+    joins / a free cancels); whoever nulls it under the governor lock also
+    decrements the in-flight ledger, exactly once. ``event`` is set when the
+    job reaches a terminal state (done, cancelled, failed) — collect-side
+    waiters key off it.
+    """
+
+    handle: AlMatrix
+    array: Optional[jax.Array]
+    nbytes: int
+    state: str = "queued"  # queued -> copying -> done | cancelled | failed
+    event: threading.Event = dataclasses.field(default_factory=threading.Event)
+
+
+class _StagingPool:
+    """Small pool of reusable host staging buffers for spill copy-outs.
+
+    ``release`` refuses read-only buffers: ``host_payload`` marks a buffer
+    read-only the moment it escapes to a client (collects may serve it
+    zero-copy), so an escaped buffer can never be handed to a later spill's
+    ``gather`` and corrupted under the client.
+    """
+
+    def __init__(self, max_buffers: int = 4):
+        self._free: List[np.ndarray] = []
+        self._lock = threading.Lock()
+        self.max_buffers = max_buffers
+        self.reuses = 0
+
+    def acquire(self, shape, dtype) -> np.ndarray:
+        with self._lock:
+            for i, buf in enumerate(self._free):
+                if buf.shape == tuple(shape) and buf.dtype == dtype:
+                    self.reuses += 1
+                    return self._free.pop(i)
+        return np.empty(tuple(shape), dtype)
+
+    def release(self, buf) -> None:
+        if not isinstance(buf, np.ndarray) or not buf.flags.writeable:
+            return  # escaped to a client, or a foreign (store-owned) payload
+        with self._lock:
+            if len(self._free) < self.max_buffers and all(b is not buf for b in self._free):
+                self._free.append(buf)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._free.clear()
+
+
+def _aliases_host(arr: jax.Array, host: np.ndarray) -> bool:
+    """True if any device shard of ``arr`` shares memory with ``host``. On CPU
+    backends a sharded/donated ``device_put`` of a numpy array is zero-copy —
+    the placed array's backing store IS the host buffer — so a staging buffer
+    aliased by a live device array must never return to the pool: a later
+    spill's gather would write the victim's bytes straight through the alias
+    into the resident matrix."""
+    try:
+        base = host.ctypes.data
+        end = base + host.nbytes
+        for shard in arr.addressable_shards:
+            ptr = shard.data.unsafe_buffer_pointer()
+            if base <= ptr < end:
+                return True
+        return False
+    except Exception:  # pragma: no cover - exotic runtimes: assume aliased
+        return True
 
 
 def _validate_budget(budget: Optional[int]) -> Optional[int]:
@@ -74,7 +164,12 @@ def _validate_budget(budget: Optional[int]) -> Optional[int]:
 class MemoryGovernor:
     """Engine-wide HBM budget: charge, spill, refill (DESIGN.md §7/§8)."""
 
-    def __init__(self, budget: Optional[int] = None, name: str = "memgov"):
+    def __init__(
+        self,
+        budget: Optional[int] = None,
+        name: str = "memgov",
+        async_spill: bool = True,
+    ):
         self._base_budget = _validate_budget(budget)
         self.name = name
         self._sessions: Dict[int, "Session"] = {}
@@ -96,6 +191,14 @@ class MemoryGovernor:
         #: engine-wide maximum of simultaneously charged bytes — the number
         #: the multi-tenant acceptance gate bounds against the shared budget.
         self.high_water = 0
+        # Asynchronous data plane (DESIGN.md §10): pending copy-outs by
+        # handle id, the device bytes they still retain, the transfer ring
+        # (built lazily on first async spill), and the host staging pool.
+        self.async_spill = bool(async_spill)
+        self._in_flight: Dict[int, _SpillJob] = {}
+        self._in_flight_bytes = 0
+        self._transfer: Optional[TransferExecutor] = None
+        self._staging = _StagingPool()
 
     # -- session membership ---------------------------------------------------
     def attach_session(
@@ -221,12 +324,17 @@ class MemoryGovernor:
         nbytes = max(int(nbytes), 0)
         spills = 0
         excluded = set(exclude)
+        deferred: List[_SpillJob] = []
         # The pick-spill window runs under the lock: a concurrent refill on
         # another thread (itself an admission) must not spill our chosen
         # victim between the pick and the spill. The budget is snapshotted
         # under the same lock — a scoped override expiring mid-admission
         # (offloaded() exit flips it back) must not yank the loop's
-        # comparison out from under it.
+        # comparison out from under it. Victim copy-outs land on the transfer
+        # ring; when the ring is full they are deferred and copied
+        # synchronously *after* the lock is released below (the satellite fix
+        # for the old device_get-under-lock stall), so concurrent sessions'
+        # reads never queue behind a bulk copy.
         with self._lock:
             budget = self.budget
             if budget is not None:
@@ -234,10 +342,12 @@ class MemoryGovernor:
                     victim = self._pick_victim(excluded)
                     if victim is None:
                         break
-                    self.spill(victim)
+                    self.spill(victim, _deferred=deferred)
                     spills += 1
             self._used += nbytes
             self.high_water = max(self.high_water, self._used)
+        for job in deferred:
+            self._copy_out(job, on_ring=False)
         return spills
 
     def settle(self, nbytes: int) -> None:
@@ -288,11 +398,21 @@ class MemoryGovernor:
             self._record_high_water(h)
 
     def discard(self, h: AlMatrix) -> None:
-        """The handle was freed: drop its charge and any host-store bytes."""
+        """The handle was freed: drop its charge, any host-store bytes, and
+        cancel a copy-out still in flight (its device reference just drops)."""
         with self._lock:
             self._handles.pop(h.id, None)
             self._used -= self._charged.pop(h.id, 0)
-            self._host_store.pop(h.id, None)
+            popped = self._host_store.pop(h.id, None)
+            if popped is not None:
+                self._staging.release(popped)
+            job = self._in_flight.pop(h.id, None)
+            if job is not None:
+                if job.array is not None:
+                    job.array = None
+                    self._in_flight_bytes -= job.nbytes
+                job.state = "cancelled"
+                job.event.set()
             self._touch.pop(h.id, None)
             self._pin_counts.pop(h.id, None)
             self._idle.discard(h.id)
@@ -333,24 +453,31 @@ class MemoryGovernor:
                         self._pin_counts.pop(hid, None)
 
     # -- spill / refill ------------------------------------------------------
-    def spill(self, h: AlMatrix) -> None:
+    def spill(self, h: AlMatrix, *, _deferred: Optional[List[_SpillJob]] = None) -> None:
         """Move a resident matrix's bytes off the worker group.
 
         Store-backed placements (a live ``_host_fallback``) spill for free:
         the engine already holds their logical payload host-side, so only the
-        device array is dropped. Everything else is ``jax.device_get`` into
-        the pinned host store. The whole transition runs under the governor
-        lock: a concurrent ``data()`` on another thread (handles hold the
-        same lock across its check-refill-slice sequence) sees the handle
-        either fully resident or fully spilled, never ``_data is None``
-        mid-flight.
+        device array is dropped. Everything else becomes a :class:`_SpillJob`
+        copy-out into the pinned host store. Only the *state transition* runs
+        under the governor lock — a concurrent ``data()`` on another thread
+        (handles hold the same lock across its check-refill-slice sequence)
+        sees the handle either fully resident or fully spilled, never
+        ``_data is None`` mid-flight — while the bytes stream on the transfer
+        ring (or synchronously outside the lock when the ring is full or
+        ``async_spill`` is off). The job retains the device reference until
+        the copy lands, so a prompt refill joins it instead of re-reading the
+        device; ``in_flight_spill_bytes`` ledgers exactly those bytes.
         """
+        job: Optional[_SpillJob] = None
         with self._lock:
             if h.state != handles_mod.MATERIALIZED or h._data is None:
                 raise HandleError(f"cannot spill AlMatrix {h.id} in state {h.state!r}")
             nbytes = self._charged.get(h.id, h.physical_nbytes())
             if h._host_fallback is None:
-                self._host_store[h.id] = np.asarray(jax.device_get(h._data))
+                job = _SpillJob(handle=h, array=h._data, nbytes=nbytes)
+                self._in_flight[h.id] = job
+                self._in_flight_bytes += nbytes
             self._used -= nbytes
             self._charged[h.id] = 0
             h._data = None
@@ -358,67 +485,225 @@ class MemoryGovernor:
         stats = self._stats_for(h)
         if stats is not None:
             stats.record_spill(nbytes)
+        if job is None:
+            return
+        if self.async_spill and self._executor().try_submit(
+            lambda: self._copy_out(job, on_ring=True)
+        ):
+            if stats is not None:
+                stats.record_transfer_depth(self._transfer.depth())
+            return
+        # Ring full (double-buffer bound) or async disabled: copy on the
+        # caller — after the admit loop's lock release when reached via
+        # admission (_deferred), immediately otherwise.
+        if _deferred is not None:
+            _deferred.append(job)
+        else:
+            self._copy_out(job, on_ring=False)
+
+    def _executor(self) -> TransferExecutor:
+        with self._lock:
+            if self._transfer is None or self._transfer._closed:
+                self._transfer = TransferExecutor(name=f"{self.name}-transfer")
+            return self._transfer
+
+    def _gather_host(self, arr: jax.Array) -> np.ndarray:
+        """Device→host copy into a pooled staging buffer (per-shard, one host
+        write each); falls back to a plain ``device_get`` for arrays whose
+        shards aren't addressable."""
+        buf = self._staging.acquire(tuple(arr.shape), np.dtype(arr.dtype))
+        try:
+            for shard in arr.addressable_shards:
+                buf[shard.index] = np.asarray(shard.data)
+            return buf
+        except Exception:  # pragma: no cover - non-addressable topologies
+            self._staging.release(buf)
+            return np.asarray(jax.device_get(arr))
+
+    def _copy_out(self, job: _SpillJob, *, on_ring: bool) -> None:
+        """Stream one spill victim's bytes to the host store.
+
+        Runs on the transfer thread (``on_ring=True``) or the spilling caller
+        (sync fallback). Claims the job under the lock, copies outside it,
+        then installs under the lock again — a refill that joined (cancelled)
+        the job meanwhile wins, and the gathered buffer goes back to the
+        staging pool. Overlap accounting (ring copies only): the slice of the
+        copy's wall time during which the owning session's queue worker was
+        busy is compute the copy hid behind.
+        """
+        with self._lock:
+            if job.state != "queued" or job.array is None:
+                job.event.set()  # joined or cancelled before the copy began
+                return
+            job.state = "copying"
+            arr = job.array
+            sess = self._sessions.get(job.handle.session_id)
+        tasks = sess.tasks if sess is not None else None
+        busy0 = tasks.busy_ns() if tasks is not None else 0
+        t0 = time.perf_counter_ns()
+        try:
+            host = self._gather_host(arr)
+        except BaseException:  # pragma: no cover - device_get failure
+            # The device reference is still good: restore residency rather
+            # than lose the only copy of the bytes.
+            with self._lock:
+                if job.array is not None and self._in_flight.get(job.handle.id) is job:
+                    job.array = None
+                    self._in_flight_bytes -= job.nbytes
+                    self._in_flight.pop(job.handle.id, None)
+                    h = job.handle
+                    if h.state == handles_mod.SPILLED and h.id in self._handles:
+                        h._data = arr
+                        h._state = handles_mod.MATERIALIZED
+                        self._charged[h.id] = job.nbytes
+                        self._used += job.nbytes
+                job.state = "failed"
+            job.event.set()
+            return
+        wall_ns = time.perf_counter_ns() - t0
+        busy1 = tasks.busy_ns() if tasks is not None else 0
+        installed = False
+        with self._lock:
+            if job.array is not None and self._in_flight.get(job.handle.id) is job:
+                job.array = None
+                self._in_flight_bytes -= job.nbytes
+                self._in_flight.pop(job.handle.id, None)
+                job.state = "done"
+                if job.handle.state == handles_mod.SPILLED and job.handle.id in self._handles:
+                    self._host_store[job.handle.id] = host
+                    installed = True
+        if not installed:
+            self._staging.release(host)  # a join/free won the race
+        job.event.set()
+        if on_ring and sess is not None:
+            sess.stats.record_spill_copy(wall_ns, min(max(busy1 - busy0, 0), wall_ns))
 
     def refill(self, h: AlMatrix) -> None:
         """Re-place a spilled matrix on its session's worker group. Runs on
-        the first consumption after the spill (``AlMatrix.data()``); uses the
-        session's cached relayout plan for the ``device_put`` and may itself
-        spill other matrices to make room. Atomic under the governor lock,
-        like spill."""
+        the first consumption after the spill (``AlMatrix.data()``); may
+        itself spill other matrices to make room. Atomic under the governor
+        lock, like spill's transition.
+
+        Two paths:
+
+        - **join**: the victim's copy-out is still in flight, so its bytes
+          never left the device — cancel the job and restore the retained
+          device reference. Zero copies, and crucially zero *waiting*: refill
+          runs with the governor lock held (``data()``), and blocking here on
+          the transfer thread (which needs the lock to finish) would deadlock.
+        - **replay**: ``device_put`` the host payload back through the
+          session's cached relayout plan. The staging buffer is passed to the
+          plan directly (no intermediate ``jnp.asarray`` device bounce) with
+          the final put marked donatable, and a pool-owned buffer is donated
+          back to the staging pool afterwards — one host copy saved per
+          spill/refill cycle. Exception: on CPU backends the sharded/donated
+          put is *zero-copy* (the placed array's backing store IS the host
+          buffer), so a buffer the new device array aliases is dropped from
+          the pool instead — recycling it would let a later spill's gather
+          write a victim's bytes through the alias into this live matrix.
+        """
         with self._lock:
             sess = self._sessions.get(h.session_id)
-            host = self._host_store.get(h.id)
-            if host is None:
-                host = h._host_fallback
-            if host is None or sess is None:
-                raise HandleError(
-                    f"AlMatrix {h.id} ({h.name!r}) has no spilled payload to refill"
+            job = self._in_flight.get(h.id)
+            if job is not None and job.array is not None:
+                # Join the pending copy: take back the device reference.
+                arr = job.array
+                job.array = None
+                self._in_flight_bytes -= job.nbytes
+                self._in_flight.pop(h.id, None)
+                job.state = "cancelled"
+                job.event.set()
+                self.admit(job.nbytes, exclude={h.id})
+                h._data = arr
+                h._state = handles_mod.MATERIALIZED
+                self.settle(job.nbytes)  # claim -> charge, atomic: lock held
+                self.charge(h)
+                nbytes_refilled = job.nbytes
+                fused = False
+            else:
+                host = self._host_store.get(h.id)
+                if host is None:
+                    host = h._host_fallback
+                if host is None or sess is None:
+                    raise HandleError(
+                        f"AlMatrix {h.id} ({h.name!r}) has no spilled payload to refill"
+                    )
+                # Claim exactly what charge(h) will land: the *physical*
+                # extent (a logical store payload gains divisibility pads at
+                # placement) priced at the handle's declared dtype. Claiming
+                # host.nbytes would under-admit by the pad bytes and silently
+                # overshoot the budget at the charge.
+                pr, pc = pad_amounts(tuple(host.shape), h.layout, sess.mesh)
+                claim = (
+                    (host.shape[0] + pr)
+                    * (host.shape[1] + pc)
+                    * jnp.dtype(h.dtype).itemsize
                 )
-            # Claim exactly what charge(h) will land: the *physical* extent
-            # (a logical store payload gains divisibility pads at placement)
-            # priced at the handle's declared dtype. Claiming host.nbytes
-            # would under-admit by the pad bytes and silently overshoot the
-            # budget at the charge.
-            pr, pc = pad_amounts(tuple(host.shape), h.layout, sess.mesh)
-            claim = (
-                (host.shape[0] + pr)
-                * (host.shape[1] + pc)
-                * jnp.dtype(h.dtype).itemsize
-            )
-            self.admit(claim, exclude={h.id})
-            # Host-store payloads are the *physical* (already padded, already
-            # permuted) form and store fallbacks the logical one; either way
-            # src == dst, so the cached plan is a pure placement — no
-            # permutation, and pads exactly when the payload needs them for
-            # the device_put.
-            x = jnp.asarray(host)
-            plan, _hit = sess.relayout_cache.plan(
-                tuple(x.shape), x.dtype, h.layout, h.layout, sess.mesh
-            )
-            arr = plan.apply(x)
-            h._data = arr
-            h.pads = (arr.shape[0] - h.shape[0], arr.shape[1] - h.shape[1])
-            h._state = handles_mod.MATERIALIZED
-            self._host_store.pop(h.id, None)
-            self.settle(claim)  # claim -> charge, atomic: lock is held
-            self.charge(h)
+                self.admit(claim, exclude={h.id})
+                # Host-store payloads are the *physical* (already padded,
+                # already permuted) form and store fallbacks the logical one;
+                # either way src == dst, so the cached plan is a pure
+                # placement — no permutation, and pads exactly when the
+                # payload needs them for the device_put. The put consumes the
+                # host buffer directly; only a dtype the device would
+                # canonicalize anyway (f64 without x64 mode) is converted
+                # host-side first, so the plan key matches the placed array.
+                canon = jax.dtypes.canonicalize_dtype(host.dtype)
+                x = host if canon == host.dtype else np.asarray(host, dtype=canon)
+                plan, _hit = sess.relayout_cache.plan(
+                    tuple(x.shape), canon, h.layout, h.layout, sess.mesh
+                )
+                arr = plan.apply(x, donate=True)
+                fused = plan.fused_path in FUSED_PATHS
+                h._data = arr
+                h.pads = (arr.shape[0] - h.shape[0], arr.shape[1] - h.shape[1])
+                h._state = handles_mod.MATERIALIZED
+                popped = self._host_store.pop(h.id, None)
+                if popped is not None and not _aliases_host(arr, popped):
+                    self._staging.release(popped)  # refused if client-escaped
+                self.settle(claim)  # claim -> charge, atomic: lock is held
+                self.charge(h)
+                nbytes_refilled = int(host.nbytes)
         stats = self._stats_for(h)
         if stats is not None:
-            stats.record_refill(int(host.nbytes))
+            stats.record_refill(nbytes_refilled)
+            if fused:
+                stats.record_fused_relayout()
 
-    def host_payload(self, h: AlMatrix) -> Optional[np.ndarray]:
+    def host_payload(self, h: AlMatrix, timeout: float = 120.0) -> Optional[np.ndarray]:
         """The spilled payload (physical from the host store, or the store
         entry's logical fallback), or None if ``h`` is not spilled. Lets the
         collect path serve client-bound bytes straight from host memory — no
         refill, no admission cascade — while the handle stays spilled for any
-        later engine-side consumption."""
-        with self._lock:
-            if h.state != handles_mod.SPILLED:
-                return None
-            host = self._host_store.get(h.id)
-            if host is None:
-                host = h._host_fallback
-            return host
+        later engine-side consumption.
+
+        If the spill's copy-out is still in flight, joins it by waiting on
+        the job's event *outside* the governor lock (the transfer thread
+        needs the lock to install the payload). A pool-owned buffer is marked
+        read-only before it escapes: collects may serve it zero-copy to the
+        client, so it must never be recycled for a later spill's gather.
+        """
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._lock:
+                if h.state != handles_mod.SPILLED:
+                    return None
+                host = self._host_store.get(h.id)
+                if host is not None:
+                    if host.flags.writeable:
+                        host.flags.writeable = False  # escaped: never recycle
+                    return host
+                if h._host_fallback is not None:
+                    return h._host_fallback
+                job = self._in_flight.get(h.id)
+                if job is None:
+                    return None
+            remaining = deadline - time.monotonic()
+            if remaining <= 0 or not job.event.wait(remaining):
+                raise HandleError(
+                    f"AlMatrix {h.id} ({h.name!r}) spill copy-out did not land "
+                    f"within {timeout}s"
+                )
 
     # -- introspection -------------------------------------------------------
     def spilled_handles(self) -> List[AlMatrix]:
@@ -444,19 +729,35 @@ class MemoryGovernor:
                     if h.state == handles_mod.SPILLED
                 ),
                 "host_store_bytes": sum(a.nbytes for a in self._host_store.values()),
+                "in_flight_spill_bytes": self._in_flight_bytes,
+                "staging_reuses": self._staging.reuses,
             }
 
     def clear(self) -> None:
-        """Engine teardown: drop every charge and host-store payload."""
+        """Engine teardown: drop every charge and host-store payload, cancel
+        in-flight copy-outs, and stop the transfer ring (it is rebuilt lazily
+        if the governor spills again)."""
         with self._lock:
+            for job in self._in_flight.values():
+                if job.array is not None:
+                    job.array = None
+                    self._in_flight_bytes -= job.nbytes
+                job.state = "cancelled"
+                job.event.set()
+            self._in_flight.clear()
+            self._in_flight_bytes = 0
+            transfer, self._transfer = self._transfer, None
             self._handles.clear()
             self._charged.clear()
             self._host_store.clear()
             self._touch.clear()
             self._pin_counts.clear()
             self._idle.clear()
+            self._staging.clear()
             self._used = 0
             self._reserved = 0
+        if transfer is not None:
+            transfer.close(wait=True, timeout=10.0)
 
     def _stats_for(self, h: AlMatrix):
         sess = self._sessions.get(h.session_id)

@@ -35,6 +35,20 @@ from jax.sharding import Mesh, NamedSharding
 from repro.core.errors import LayoutError
 from repro.core.layouts import LayoutSpec, cyclic_permutation, inverse_permutation
 
+#: ops.pad_to / ops.strip_to path names that mean "the fused Pallas kernel
+#: actually ran" (vs the jnp reference fallback). Consumers — the plan cache,
+#: SessionStats.fused_relayouts, the governor's refill — test membership here
+#: rather than string-matching, so adding a backend stays a one-line change.
+FUSED_PATHS = ("pallas", "pallas-interpret")
+
+
+def _kernel_ops():
+    """Lazy kernels.ops import: relayout is imported by modules that must not
+    pay the Pallas import (and kernels.ops probes the backend at import)."""
+    from repro.kernels import ops as kops
+
+    return kops
+
 
 # ---------------------------------------------------------------------------
 # Shard-interval geometry
@@ -221,12 +235,21 @@ def pad_amounts(shape: Tuple[int, int], dst: LayoutSpec, mesh: Mesh) -> Tuple[in
     return pads
 
 
-def pad_for(x: jax.Array, dst: LayoutSpec, mesh: Mesh) -> Tuple[jax.Array, Tuple[int, int]]:
-    """Zero-pad ``x`` so ``device_put`` into ``dst`` is legal; returns the pads."""
+def pad_for(
+    x: jax.Array, dst: LayoutSpec, mesh: Mesh
+) -> Tuple[jax.Array, Tuple[int, int], str]:
+    """Zero-pad ``x`` so ``device_put`` into ``dst`` is legal.
+
+    Returns ``(padded, pads, path)`` where ``path`` names the kernel backend
+    that performed the pad ("pallas"/"pallas-interpret"/"ref", see
+    :data:`FUSED_PATHS`) or "none" when no padding was needed.
+    """
     pads = pad_amounts(tuple(x.shape), dst, mesh)
+    path = "none"
     if pads != (0, 0):
-        x = jnp.pad(x, ((0, pads[0]), (0, pads[1])))
-    return x, pads
+        m, n = int(x.shape[0]), int(x.shape[1])
+        x, path = _kernel_ops().pad_to(x, (m + pads[0], n + pads[1]))
+    return x, pads, path
 
 
 # ---------------------------------------------------------------------------
@@ -261,10 +284,10 @@ def relayout(
             arr = jnp.take(arr, jnp.asarray(perm), axis=0)
         else:
             arr = jnp.take(arr, jnp.asarray(inverse_permutation(perm)), axis=0)
-    arr, pads = pad_for(arr, dst, mesh)
-    out = jax.device_put(arr, dst.sharding(mesh))
+    arr, pads, _ = pad_for(arr, dst, mesh)
+    out = jax.device_put(arr, dst.sharding(mesh), donate=donate)
     if pads != (0, 0):
-        out = out[: x.shape[0], : x.shape[1]]
+        out, _ = _kernel_ops().strip_to(out, (x.shape[0], x.shape[1]))
     return out
 
 
@@ -309,30 +332,41 @@ class RelayoutPlan:
     permutation: Optional[jnp.ndarray]  # pre-relayout row permutation, if any
     pads: Tuple[int, int] = (0, 0)  # zero rows/cols appended for divisibility
     uses: int = 0
+    #: Kernel backend that ran this plan's last pad or strip — a member of
+    #: :data:`FUSED_PATHS` when the fused Pallas kernel compiled, "ref" for
+    #: the jnp fallback, None for unpadded plans. Last-write-wins across
+    #: threads is fine: the plan's geometry is fixed, so every apply of the
+    #: same plan takes the same path (the backend probe is module-static).
+    fused_path: Optional[str] = None
 
     @property
     def physical_shape(self) -> Tuple[int, int]:
         return (self.shape[0] + self.pads[0], self.shape[1] + self.pads[1])
 
-    def apply(self, x: jax.Array) -> jax.Array:
+    def apply(self, x: jax.Array, *, donate: bool = False) -> jax.Array:
         """Execute the planned relayout on ``x`` (async-dispatched).
 
         Returns the *physical* (possibly padded) array; use :meth:`strip` to
         recover the logical matrix, or keep it padded for residency and strip
-        on read (the handle layer's choice).
+        on read (the handle layer's choice). With ``donate=True`` the input
+        buffer is donated to the ``device_put`` (the governor's refill path:
+        its host staging copy is dead after the put).
         """
         arr = x
         if self.permutation is not None:
             arr = jnp.take(arr, self.permutation, axis=0)
         if self.pads != (0, 0):
-            arr = jnp.pad(arr, ((0, self.pads[0]), (0, self.pads[1])))
-        return jax.device_put(arr, self.dst_sharding)
+            arr, self.fused_path = _kernel_ops().pad_to(arr, self.physical_shape)
+            # the pad kernel's output is ours alone — always safe to donate
+            donate = True
+        return jax.device_put(arr, self.dst_sharding, donate=donate)
 
     def strip(self, y: jax.Array) -> jax.Array:
         """Slice the divisibility padding back off a planned-relayout result."""
         if self.pads == (0, 0):
             return y
-        return y[: self.shape[0], : self.shape[1]]
+        out, self.fused_path = _kernel_ops().strip_to(y, self.shape)
+        return out
 
 
 class RelayoutPlanCache:
@@ -405,7 +439,14 @@ class RelayoutPlanCache:
         )
 
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses, "plans": len(self._plans)}
+        with self._lock:
+            fused = sum(1 for p in self._plans.values() if p.fused_path in FUSED_PATHS)
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "plans": len(self._plans),
+                "fused_plans": fused,
+            }
 
 
 @dataclasses.dataclass
@@ -421,6 +462,9 @@ class TransferRecord:
     #: served from the governor's host store) — they must not count toward
     #: the cache hit/miss rate.
     planned: bool = True
+    #: Did the fused Pallas pad/strip kernel run for this transfer (vs the
+    #: jnp reference or no padding at all)? Feeds SessionStats.fused_relayouts.
+    fused: bool = False
 
 
 def timed_relayout(
@@ -451,6 +495,7 @@ def timed_relayout(
     """
     hit = False
     pads = (0, 0)
+    fused = False
     if cache is not None:
         plan, hit = cache.plan(tuple(x.shape), x.dtype, src, dst, mesh)
         cost = plan.cost
@@ -460,6 +505,7 @@ def timed_relayout(
         if strip:
             out = plan.strip(out)
             pads = (0, 0)
+        fused = plan.fused_path in FUSED_PATHS
     else:
         cost = transfer_cost(tuple(x.shape), x.dtype, src, dst, mesh)
         t0 = time.perf_counter()
@@ -468,5 +514,5 @@ def timed_relayout(
         out.block_until_ready()
     dt = time.perf_counter() - t0
     return out, TransferRecord(
-        direction=direction, cost=cost, seconds=dt, cache_hit=hit, pads=pads
+        direction=direction, cost=cost, seconds=dt, cache_hit=hit, pads=pads, fused=fused
     )

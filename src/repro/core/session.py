@@ -79,6 +79,11 @@ class SessionStats:
     spilled_bytes: int = 0  # cumulative bytes spilled to host
     refilled_bytes: int = 0  # cumulative bytes refilled to device
     hbm_high_water: int = 0  # max engine-wide charged bytes seen at a charge
+    # Asynchronous data-plane counters (DESIGN.md §10).
+    spill_copy_ns: int = 0  # wall ns of async (ring) spill copy-outs
+    spill_overlap_ns: int = 0  # of those, ns the queue worker was computing
+    transfer_queue_depth: int = 0  # max transfer-ring depth observed at submit
+    fused_relayouts: int = 0  # pad/strip ops served by the fused Pallas kernel
     transfers: List[TransferRecord] = dataclasses.field(default_factory=list)
 
     def record_transfer(self, rec: TransferRecord) -> None:
@@ -88,6 +93,8 @@ class SessionStats:
                 self.relayout_cache_hits += 1
             else:
                 self.relayout_cache_misses += 1
+        if rec.fused:
+            self.fused_relayouts += 1
         if rec.direction == "send":
             self.send_bytes += rec.cost.bytes_total
             self.send_seconds += rec.seconds
@@ -127,6 +134,18 @@ class SessionStats:
     def record_hbm_usage(self, used_bytes: int) -> None:
         self.hbm_high_water = max(self.hbm_high_water, int(used_bytes))
 
+    def record_spill_copy(self, wall_ns: int, overlap_ns: int) -> None:
+        """One async copy-out finished: ``wall_ns`` of D2H, of which
+        ``overlap_ns`` were hidden behind the queue worker's compute."""
+        self.spill_copy_ns += int(wall_ns)
+        self.spill_overlap_ns += int(overlap_ns)
+
+    def record_transfer_depth(self, depth: int) -> None:
+        self.transfer_queue_depth = max(self.transfer_queue_depth, int(depth))
+
+    def record_fused_relayout(self, n: int = 1) -> None:
+        self.fused_relayouts += n
+
     def summary(self) -> Dict[str, Any]:
         return {
             "send_bytes": self.send_bytes,
@@ -149,6 +168,10 @@ class SessionStats:
             "spilled_bytes": self.spilled_bytes,
             "refilled_bytes": self.refilled_bytes,
             "hbm_high_water": self.hbm_high_water,
+            "spill_copy_ns": self.spill_copy_ns,
+            "spill_overlap_ns": self.spill_overlap_ns,
+            "transfer_queue_depth": self.transfer_queue_depth,
+            "fused_relayouts": self.fused_relayouts,
         }
 
 

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Callable, Optional
 
 from repro.core.errors import TaskError
@@ -43,6 +44,12 @@ class TaskQueue:
         # worker the client ran. The memory governor's reservations track the
         # bytes side of the same pipelining (DESIGN.md §7).
         self.max_backlog = 0
+        # Cumulative ns the worker spent executing tasks, plus the start of
+        # the currently-running task (None while idle). The data plane's
+        # overlap accounting (DESIGN.md §10) diffs busy_ns() across an async
+        # spill copy-out to measure how much compute the copy hid behind.
+        self._busy_total_ns = 0
+        self._busy_since: Optional[int] = None
 
     # -- submission ----------------------------------------------------------
     def submit(self, fn: Callable[[], Any], *, label: str = "") -> AlFuture:
@@ -100,12 +107,18 @@ class TaskQueue:
                 if item is _SHUTDOWN:
                     return
                 fn, future = item
+                self._busy_since = time.perf_counter_ns()
                 try:
                     future._set_result(fn())
                     self.tasks_completed += 1
                 except BaseException as exc:  # noqa: BLE001 — propagate via future
                     self.tasks_failed += 1
                     future._set_exception(exc)
+                finally:
+                    start = self._busy_since
+                    self._busy_since = None
+                    if start is not None:
+                        self._busy_total_ns += time.perf_counter_ns() - start
             finally:
                 self._q.task_done()
 
@@ -117,6 +130,16 @@ class TaskQueue:
     def pending(self) -> int:
         """Approximate number of tasks not yet picked up by the worker."""
         return self._q.qsize()
+
+    def busy_ns(self) -> int:
+        """Cumulative ns the worker has spent executing tasks, including the
+        one currently running. Monotone; racy reads are fine (the single
+        writer is the worker thread, and the overlap accounting that diffs
+        this only needs a lower bound on busy time)."""
+        total, since = self._busy_total_ns, self._busy_since
+        if since is not None:
+            total += max(time.perf_counter_ns() - since, 0)
+        return total
 
     def close(self, wait: bool = True, timeout: Optional[float] = None) -> None:
         """Stop accepting tasks; optionally drain what's already queued.
@@ -151,4 +174,103 @@ class TaskQueue:
             f"TaskQueue({self.name!r}, submitted={self.tasks_submitted}, "
             f"completed={self.tasks_completed}, failed={self.tasks_failed}, "
             f"closed={self._closed})"
+        )
+
+
+class TransferExecutor:
+    """Dedicated copy worker behind the asynchronous data plane (DESIGN.md §10).
+
+    One daemon thread drains D2H copy-out jobs so a session's queue worker can
+    dispatch the next task while the previous spill victim's bytes stream to
+    host. The ring is a bounded double buffer: at most ``ring`` jobs may be
+    queued or copying at once, so device memory overshoot from not-yet-copied
+    victims is capped at two matrices. :meth:`try_submit` is strictly
+    non-blocking — the memory governor calls it under its lock, and the worker
+    needs that same lock to complete a job, so a blocking submit would
+    deadlock; a full ring returns None and the caller copies synchronously.
+    """
+
+    def __init__(self, name: str = "transfer", ring: int = 2):
+        self.name = name
+        self.ring = ring
+        self._q: "queue.Queue" = queue.Queue()
+        self._slots = threading.Semaphore(ring)
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self._closed = False
+        self._in_flight = 0
+        self.submitted = 0
+        self.rejected = 0  # ring full: the caller fell back to a sync copy
+        self.max_depth = 0
+
+    def try_submit(self, fn: Callable[[], None]) -> bool:
+        """Enqueue ``fn`` if a ring slot is free; False means ring full."""
+        if not self._slots.acquire(blocking=False):
+            self.rejected += 1
+            return False
+        with self._lock:
+            if self._closed:
+                self._slots.release()
+                self.rejected += 1
+                return False
+            self.submitted += 1
+            self._in_flight += 1
+            self.max_depth = max(self.max_depth, self._in_flight)
+            self._q.put(fn)
+            self._ensure_worker()
+        return True
+
+    def depth(self) -> int:
+        """Jobs queued or copying right now (0..ring)."""
+        return self._in_flight
+
+    def _ensure_worker(self) -> None:
+        # caller holds self._lock
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._drain, name=f"{self.name}-worker", daemon=True
+            )
+            self._thread.start()
+
+    def _drain(self) -> None:
+        while True:
+            fn = self._q.get()
+            try:
+                if fn is _SHUTDOWN:
+                    return
+                try:
+                    fn()
+                except BaseException:  # noqa: BLE001 — a copy job must never
+                    pass  # kill the ring; the job owner observes via its event
+                finally:
+                    with self._lock:
+                        self._in_flight -= 1
+                    self._slots.release()
+            finally:
+                self._q.task_done()
+
+    def close(self, wait: bool = True, timeout: Optional[float] = None) -> None:
+        """Stop accepting jobs; optionally wait for queued copies to finish."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            thread = self._thread
+            if thread is not None:
+                self._q.put(_SHUTDOWN)
+        if wait and thread is not None:
+            thread.join(timeout)
+
+    def stats(self) -> dict:
+        return {
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "max_depth": self.max_depth,
+            "ring": self.ring,
+        }
+
+    def __repr__(self) -> str:
+        return (
+            f"TransferExecutor({self.name!r}, ring={self.ring}, "
+            f"submitted={self.submitted}, rejected={self.rejected})"
         )

@@ -19,6 +19,7 @@ import jax
 from repro.kernels import flash_attention as _flash
 from repro.kernels import matmul as _matmul
 from repro.kernels import ref as _ref
+from repro.kernels import relayout_pad as _relayout_pad
 from repro.kernels import ssd_scan as _ssd
 
 _FORCE = os.environ.get("REPRO_FORCE_PALLAS", "").lower()
@@ -122,6 +123,49 @@ def ssd_scan(
         # chunked oracle: same math as the kernel, parallel-friendly HLO
         return _ref.ssd_chunked(x, dt, a, b_mat, c_mat, chunk=chunk, init_state=init_state)
     return _ref.ssd_scan(x, dt, a, b_mat, c_mat, init_state=init_state)
+
+
+def _fusable(x) -> bool:
+    """Pallas pad/strip take one device's buffer: numpy hosts and
+    single-device jax arrays qualify; sharded arrays fall back to ref."""
+    if isinstance(x, jax.Array):
+        try:
+            return len(x.sharding.device_set) == 1
+        except Exception:  # pragma: no cover - exotic array types
+            return False
+    return True  # numpy / python buffers: pallas_call will device_put them
+
+
+def pad_to(x, physical_shape: Tuple[int, int]):
+    """Pad ``x`` up to the layout's physical shape.
+
+    Returns ``(padded, path)`` where ``path`` is the backend that actually
+    ran: "pallas" / "pallas-interpret" (fused kernel) or "ref" (jnp.pad).
+    The plan cache records the path so benchmarks can attribute fusion.
+    """
+    if use_pallas() and _fusable(x):
+        try:
+            return _relayout_pad.pad_to(x, tuple(physical_shape), interpret=_interp()), _BACKEND
+        except ValueError:
+            raise
+        except Exception:  # lowering/compile failure: fall back to the oracle
+            pass
+    return _ref.pad_to(x, tuple(physical_shape)), "ref"
+
+
+def strip_to(x, logical_shape: Tuple[int, int]):
+    """Strip divisibility padding down to the logical shape.
+
+    Returns ``(stripped, path)`` — same contract as :func:`pad_to`.
+    """
+    if use_pallas() and _fusable(x):
+        try:
+            return _relayout_pad.strip_to(x, tuple(logical_shape), interpret=_interp()), _BACKEND
+        except ValueError:
+            raise
+        except Exception:
+            pass
+    return _ref.strip_to(x, tuple(logical_shape)), "ref"
 
 
 def ssd_step(

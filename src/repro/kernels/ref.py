@@ -27,6 +27,32 @@ def matmul(a: jax.Array, b: jax.Array, *, out_dtype=None) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Relayout pad/strip oracles (bridge divisibility padding, DESIGN.md §7/§10)
+# ---------------------------------------------------------------------------
+
+def pad_to(x: jax.Array, physical_shape: Tuple[int, int]) -> jax.Array:
+    """Zero-pad ``x`` [m, n] up to ``physical_shape`` [mp, np]."""
+    m, n = x.shape
+    mp, np_ = int(physical_shape[0]), int(physical_shape[1])
+    if (mp, np_) == (m, n):
+        return x
+    if mp < m or np_ < n:
+        raise ValueError(f"cannot pad {x.shape} down to {physical_shape}")
+    return jnp.pad(x, ((0, mp - m), (0, np_ - n)))
+
+
+def strip_to(x: jax.Array, logical_shape: Tuple[int, int]) -> jax.Array:
+    """Slice the divisibility padding off ``x`` [mp, np] down to [m, n]."""
+    mp, np_ = x.shape
+    m, n = int(logical_shape[0]), int(logical_shape[1])
+    if (m, n) == (mp, np_):
+        return x
+    if m > mp or n > np_:
+        raise ValueError(f"cannot strip {x.shape} up to {logical_shape}")
+    return x[:m, :n]
+
+
+# ---------------------------------------------------------------------------
 # Flash attention oracle (full / causal / sliding-window)
 # ---------------------------------------------------------------------------
 

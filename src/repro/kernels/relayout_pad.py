@@ -1,0 +1,111 @@
+"""Fused pad/strip relayout kernels — the bridge's divisibility padding on device.
+
+The bridge pads uneven matrices up to the destination layout's shard-count
+multiples before ``device_put`` and slices the padding off on collect/refill
+(DESIGN.md §7). As host-side ``jnp.pad`` + slice passes those cost an extra
+materialization each way; these kernels fuse the mask/copy into a single
+tiled device pass (DESIGN.md §10), following the grid idiom of
+:mod:`repro.kernels.matmul`.
+
+- :func:`pad_to` grids over the *physical* (padded) output. Each input block
+  shares the output block's index map, so edge tiles read out of bounds; a
+  ``broadcasted_iota`` mask against the logical extent selects real values
+  and writes zeros elsewhere — OOB reads never reach the output.
+- :func:`strip_to` grids over the *logical* output with a block that divides
+  the physical input dims, so every input read is in bounds; partial edge
+  output tiles are write-masked by Pallas automatically and the body is a
+  straight block copy.
+
+Bit-exactness against :mod:`repro.kernels.ref` is property-tested in
+tests/test_padded_roundtrip.py; ``ops.py`` dispatches here on TPU (or under
+``REPRO_FORCE_PALLAS=interpret``) and to the jnp references on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+
+def _pick_block(dim: int, cap: int = DEFAULT_BLOCK) -> int:
+    """Largest divisor of ``dim`` not exceeding ``cap`` — blocks that divide
+    the physical extent keep strip_to's reads in bounds and pad_to's grid
+    exact."""
+    dim = max(int(dim), 1)
+    for cand in range(min(cap, dim), 0, -1):
+        if dim % cand == 0:
+            return cand
+    return 1  # pragma: no cover - range always yields 1
+
+
+def _pad_kernel(x_ref, o_ref, *, m: int, n: int, bm: int, bn: int):
+    i, j = pl.program_id(0), pl.program_id(1)
+    rows = i * bm + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0)
+    cols = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+    mask = (rows < m) & (cols < n)
+    o_ref[...] = jnp.where(mask, x_ref[...], jnp.zeros((), o_ref.dtype))
+
+
+def _strip_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("physical_shape", "block", "interpret"))
+def pad_to(
+    x: jax.Array,
+    physical_shape: Tuple[int, int],
+    *,
+    block: Optional[Tuple[int, int]] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Zero-pad ``x`` [m, n] up to ``physical_shape`` [mp, np] in one pass."""
+    m, n = x.shape
+    mp, np_ = int(physical_shape[0]), int(physical_shape[1])
+    if (mp, np_) == (m, n):
+        return x
+    if mp < m or np_ < n:
+        raise ValueError(f"cannot pad {x.shape} down to {physical_shape}")
+    bm, bn = block or (_pick_block(mp), _pick_block(np_))
+    kern = functools.partial(_pad_kernel, m=m, n=n, bm=bm, bn=bn)
+    return pl.pallas_call(
+        kern,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=interpret,
+        name="repro_relayout_pad",
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("logical_shape", "block", "interpret"))
+def strip_to(
+    x: jax.Array,
+    logical_shape: Tuple[int, int],
+    *,
+    block: Optional[Tuple[int, int]] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Slice the divisibility padding off ``x`` [mp, np] down to [m, n]."""
+    mp, np_ = x.shape
+    m, n = int(logical_shape[0]), int(logical_shape[1])
+    if (m, n) == (mp, np_):
+        return x
+    if m > mp or n > np_:
+        raise ValueError(f"cannot strip {x.shape} up to {logical_shape}")
+    bm, bn = block or (_pick_block(mp), _pick_block(np_))
+    return pl.pallas_call(
+        _strip_kernel,
+        grid=(pl.cdiv(m, bm), pl.cdiv(n, bn)),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+        name="repro_relayout_strip",
+    )(x)

@@ -85,5 +85,25 @@ except Exception as exc:  # jax raises ValueError at the staging device_put
 ac.stop()
 assert engine.available_workers == 8
 
+# Fused pad/strip (DESIGN.md §10), deterministic interpret-mode case: force
+# the Pallas kernel dispatch (interpret mode runs the same kernel body the
+# TPU path compiles) and round-trip an uneven matrix through a real 4-worker
+# session — bit-exact, and the session must count the fused relayouts.
+from repro.kernels import ops as kops  # noqa: E402
+
+_saved_backend = kops._BACKEND
+kops._BACKEND = "pallas-interpret"
+try:
+    ac = repro.AlchemistContext(engine, num_workers=4, name="fused")
+    xf = (np.random.default_rng(7).standard_normal((6, 7)) * 8).astype(np.float32)
+    hf = ac.send(xf)  # 6 % 4 != 0: the ROW staging pad runs through the kernel
+    np.testing.assert_array_equal(np.asarray(ac.collect(hf)), xf)
+    fused_count = ac.stats.summary()["fused_relayouts"]
+    assert fused_count >= 1, f"expected fused relayouts, got {fused_count}"
+    ac.stop()
+finally:
+    kops._BACKEND = _saved_backend
+assert engine.available_workers == 8
+
 print(f"checked {checked} shapes via {'hypothesis' if HAVE_HYPOTHESIS else 'deterministic'}")
 print("MULTIDEVICE_PADDING_OK")

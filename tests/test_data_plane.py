@@ -1,0 +1,400 @@
+"""Asynchronous data plane tests (DESIGN.md §10): the transfer executor's
+double-buffer ring, busy-time accounting, the spill copy-out lifecycle
+(install / refill-join / host_payload-wait), the staging pool's reuse and
+escape rules, and the fused pad/strip dispatch paths.
+
+Single-device like test_memgov.py: every matrix is 32x32 float32 = 4096
+bytes, so budgets read as whole matrix counts. The overlap *ratio* itself is
+measured on the 8-emulated-device runner by benchmarks/overlap_spill.py.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.handles import MATERIALIZED, SPILLED
+from repro.core.memgov import _StagingPool
+from repro.core.taskqueue import TaskQueue, TransferExecutor
+
+MAT = 32 * 32 * 4
+
+
+@pytest.fixture()
+def engine():
+    return repro.AlchemistEngine()
+
+
+def _ctx(engine, budget):
+    return repro.AlchemistContext(engine, num_workers=1, name="dp", hbm_budget=budget)
+
+
+def _mats(n, rng):
+    return [rng.standard_normal((32, 32)).astype(np.float32) for _ in range(n)]
+
+
+class _CapturingRing:
+    """Transfer-ring stand-in that accepts jobs without running them, so a
+    test controls exactly when (or whether) each copy-out lands."""
+
+    _closed = False
+
+    def __init__(self):
+        self.jobs = []
+
+    def try_submit(self, fn):
+        self.jobs.append(fn)
+        return True
+
+    def depth(self):
+        return len(self.jobs)
+
+    def close(self, wait=True, timeout=None):
+        self._closed = True
+
+
+# ---------------------------------------------------------------------------
+# TransferExecutor: the bounded double-buffer ring
+# ---------------------------------------------------------------------------
+
+
+class TestTransferExecutor:
+    def test_ring_bounds_in_flight_jobs(self):
+        ex = TransferExecutor(ring=2)
+        gate = threading.Event()
+        started = threading.Event()
+
+        def blocker():
+            started.set()
+            gate.wait(10)
+
+        try:
+            assert ex.try_submit(blocker)
+            assert started.wait(5)
+            assert ex.try_submit(lambda: gate.wait(10))
+            # both slots taken: the third submit must refuse, not block — the
+            # governor calls this under its lock.
+            assert not ex.try_submit(lambda: None)
+            assert ex.rejected == 1 and ex.depth() == 2
+        finally:
+            gate.set()
+            ex.close(wait=True, timeout=10)
+        assert ex.stats() == {"submitted": 2, "rejected": 1, "max_depth": 2, "ring": 2}
+
+    def test_job_exception_does_not_kill_the_ring(self):
+        ex = TransferExecutor(ring=2)
+        done = threading.Event()
+        try:
+            assert ex.try_submit(lambda: 1 / 0)
+            assert ex.try_submit(done.set)
+            assert done.wait(5)  # the worker survived the failing job
+        finally:
+            ex.close(wait=True, timeout=10)
+
+    def test_closed_ring_refuses_jobs(self):
+        ex = TransferExecutor(ring=2)
+        ex.close(wait=True, timeout=10)
+        assert not ex.try_submit(lambda: None)
+        assert ex.rejected == 1
+
+
+class TestBusyNs:
+    def test_busy_time_accumulates_and_includes_live_task(self):
+        q = TaskQueue(name="busy")
+        try:
+            assert q.busy_ns() == 0
+            entered = threading.Event()
+            gate = threading.Event()
+
+            def task():
+                entered.set()
+                gate.wait(10)
+
+            fut = q.submit(task)
+            assert entered.wait(5)
+            time.sleep(0.01)
+            live = q.busy_ns()
+            assert live > 0  # the running task counts
+            gate.set()
+            fut.result(5)
+            settled = q.busy_ns()
+            assert settled >= live >= 5_000_000
+            assert q.busy_ns() >= settled  # monotone
+        finally:
+            q.close(wait=True, timeout=10)
+
+
+# ---------------------------------------------------------------------------
+# Staging pool: reuse + the read-only escape rule
+# ---------------------------------------------------------------------------
+
+
+class TestStagingPool:
+    def test_reuses_shape_and_dtype_matches(self):
+        pool = _StagingPool(max_buffers=2)
+        a = pool.acquire((4, 4), np.float32)
+        pool.release(a)
+        b = pool.acquire((4, 4), np.float32)
+        assert b is a and pool.reuses == 1
+        # a mismatched request allocates fresh
+        c = pool.acquire((8, 4), np.float32)
+        assert c.shape == (8, 4) and pool.reuses == 1
+
+    def test_escaped_read_only_buffers_are_never_recycled(self):
+        pool = _StagingPool(max_buffers=2)
+        a = pool.acquire((4, 4), np.float32)
+        a.flags.writeable = False  # host_payload marked it: a client may hold it
+        pool.release(a)
+        b = pool.acquire((4, 4), np.float32)
+        assert b is not a and pool.reuses == 0
+
+    def test_pool_is_bounded(self):
+        pool = _StagingPool(max_buffers=1)
+        a = pool.acquire((2, 2), np.float32)
+        b = pool.acquire((2, 2), np.float32)
+        pool.release(a)
+        pool.release(b)  # over capacity: dropped
+        assert pool.acquire((2, 2), np.float32) is a
+        assert pool.acquire((2, 2), np.float32) is not b
+
+
+# ---------------------------------------------------------------------------
+# Async spill lifecycle through a real engine
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncSpill:
+    def test_async_and_sync_spill_agree_bit_exactly(self, rng):
+        mats = _mats(4, rng)
+        outs = {}
+        for mode in (True, False):
+            eng = repro.AlchemistEngine(async_spill=mode, share_residents=False)
+            ac = _ctx(eng, 2 * MAT)
+            hs = [ac.send(m) for m in mats]
+            ac.wait()
+            outs[mode] = [np.asarray(ac.collect(h)) for h in hs]
+            # Drain the ring before reading counters: record_spill_copy lands
+            # after the job's event fires, so a collect can return first.
+            ring = ac.session.memgov._transfer
+            if ring is not None:
+                ring.close(wait=True, timeout=10)
+            s = ac.stats.summary()
+            assert s["spills"] >= 2
+            if mode:
+                assert s["spill_copy_ns"] > 0
+                assert s["spill_copy_ns"] >= s["spill_overlap_ns"] >= 0
+                assert s["transfer_queue_depth"] >= 1
+            else:
+                # only ring copies record: the sync baseline is structurally 0
+                assert s["spill_copy_ns"] == 0 and s["spill_overlap_ns"] == 0
+                assert s["transfer_queue_depth"] == 0
+            ac.stop()
+        for a, b in zip(outs[True], outs[False]):
+            np.testing.assert_array_equal(a, b)
+
+    def test_in_flight_ledger_drains_to_zero(self, engine, rng):
+        ac = _ctx(engine, 2 * MAT)
+        hs = [ac.send(m) for m in _mats(4, rng)]
+        ac.wait()
+        for h in hs:  # a collect of an in-flight victim waits on its event
+            ac.collect(h)
+        snap = ac.session.memgov.snapshot()
+        assert snap["in_flight_spill_bytes"] == 0
+        ac.stop()
+
+    def test_refill_joins_a_still_in_flight_copy(self, engine, rng):
+        """A refill of a victim whose copy-out never ran must restore the
+        retained device reference — zero copies, no host store entry."""
+        ac = _ctx(engine, 2 * MAT)
+        gov = ac.session.memgov
+        stuck = _CapturingRing()
+        gov._transfer = stuck
+
+        mats = _mats(3, rng)
+        hs = [ac.send(m) for m in mats]
+        ac.wait()
+        spilled = [h for h in hs if ac.session.resolve(h).state == SPILLED]
+        assert spilled and stuck.jobs  # pressure produced in-flight copy-outs
+        assert gov.snapshot()["in_flight_spill_bytes"] > 0
+
+        victim = spilled[0]
+        live = ac.session.resolve(victim)
+        got = np.asarray(live.data())  # first consumption: refill joins
+        np.testing.assert_array_equal(got, mats[hs.index(victim)])
+        assert live.state == MATERIALIZED
+        # the joined victim's bytes never reached the host store
+        assert gov._host_store.get(victim.id) is None
+
+        # Run the captured copy-outs: the joined (cancelled) job must no-op;
+        # any job the join's own admission re-captured lands normally.
+        for fn in stuck.jobs:
+            fn()
+        assert gov.snapshot()["in_flight_spill_bytes"] == 0
+        assert gov._host_store.get(victim.id) is None
+        ac.stop()
+
+    def test_host_payload_waits_for_the_copy_to_land(self, engine, rng):
+        ac = _ctx(engine, 2 * MAT)
+        gov = ac.session.memgov
+        ring = _CapturingRing()
+        gov._transfer = ring
+
+        mats = _mats(3, rng)
+        hs = [ac.send(m) for m in mats]
+        ac.wait()
+        victim = next(h for h in hs if ac.session.resolve(h).state == SPILLED)
+        live = ac.session.resolve(victim)
+
+        t = threading.Timer(0.05, lambda: [fn() for fn in ring.jobs])
+        t.start()
+        try:
+            host = gov.host_payload(live, timeout=10.0)
+        finally:
+            t.join()
+        assert host is not None
+        np.testing.assert_array_equal(
+            host[: live.shape[0], : live.shape[1]], mats[hs.index(victim)]
+        )
+        # escaped to a caller: marked read-only so it is never recycled
+        assert not host.flags.writeable
+        ac.stop()
+
+    def test_refilled_matrix_never_aliases_a_pool_buffer(self, engine, rng):
+        """On CPU the refill's sharded/donated device_put is zero-copy: the
+        placed array's backing store IS the staging buffer. That buffer must
+        not re-enter the pool, or a later spill's gather would write a
+        victim's bytes through the alias into the live matrix."""
+        ac = _ctx(engine, None)
+        gov = ac.session.memgov
+        x = rng.standard_normal((32, 32)).astype(np.float32)
+        h = ac.send(x)
+        ac.wait()
+        live = ac.session.resolve(h)
+        gov.spill(live)
+        job = gov._in_flight.get(live.id)
+        if job is not None:
+            assert job.event.wait(10)
+        arr = live.data()  # refill replay
+        for buf in gov._staging._free:
+            base, end = buf.ctypes.data, buf.ctypes.data + buf.nbytes
+            for shard in arr.addressable_shards:
+                assert not base <= shard.data.unsafe_buffer_pointer() < end
+        np.testing.assert_array_equal(np.asarray(arr), x)
+        ac.stop()
+
+    def test_refill_survives_later_spill_gathers(self, engine, rng):
+        """End-to-end regression for the alias bug: refill a victim, then
+        pile on pressure so later gathers recycle pool buffers — the
+        refilled matrix must stay bit-exact."""
+        ac = _ctx(engine, 2 * MAT)
+        mats = _mats(5, rng)
+        hs = [ac.send(m) for m in mats[:3]]
+        ac.wait()
+        victim = next(h for h in hs if ac.session.resolve(h).state == SPILLED)
+        ac.session.resolve(victim).data()  # refill (possibly zero-copy)
+        for m in mats[3:]:  # more pressure: spill gathers run
+            ac.send(m)
+        ac.wait()
+        np.testing.assert_array_equal(
+            np.asarray(ac.collect(victim)), mats[hs.index(victim)]
+        )
+        ac.stop()
+
+    def test_governor_clear_shuts_the_ring_down(self, engine, rng):
+        ac = _ctx(engine, MAT)
+        for m in _mats(2, rng):
+            ac.send(m)
+        ac.wait()
+        gov = ac.session.memgov
+        gov.clear()
+        assert gov._transfer is None
+        assert gov.snapshot()["in_flight_spill_bytes"] == 0
+        ac.stop()
+
+
+# ---------------------------------------------------------------------------
+# Fused pad/strip dispatch (ops.py)
+# ---------------------------------------------------------------------------
+
+
+class TestFusedDispatch:
+    def test_interpret_path_matches_ref(self, monkeypatch):
+        from repro.kernels import ops as kops
+
+        x = np.arange(15, dtype=np.float32).reshape(3, 5)
+        monkeypatch.setattr(kops, "_BACKEND", "pallas-interpret")
+        fused, fpath = kops.pad_to(x, (4, 8))
+        assert fpath == "pallas-interpret"
+        back, spath = kops.strip_to(fused, (3, 5))
+        assert spath == "pallas-interpret"
+        monkeypatch.setattr(kops, "_BACKEND", "ref")
+        ref, rpath = kops.pad_to(x, (4, 8))
+        assert rpath == "ref"
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
+        np.testing.assert_array_equal(np.asarray(back), x)
+
+    def test_single_device_arrays_are_fusable(self):
+        import jax
+
+        from repro.kernels import ops as kops
+
+        assert kops._fusable(np.ones((4, 4), np.float32))
+        assert kops._fusable(jax.device_put(np.ones((4, 4), np.float32)))
+
+    def test_impossible_direction_raises(self):
+        from repro.kernels import ops as kops
+
+        x = np.ones((4, 4), np.float32)
+        with pytest.raises(ValueError):
+            kops.pad_to(x, (2, 4))  # pad may never shrink
+        with pytest.raises(ValueError):
+            kops.strip_to(x, (8, 4))  # strip may never grow
+
+    def test_spill_refill_replays_through_the_plan(self, engine, rng):
+        """An explicit spill + data() replays the host payload through the
+        session's cached relayout plan with the put donated."""
+        ac = _ctx(engine, None)
+        x = rng.standard_normal((6, 7)).astype(np.float32)
+        h = ac.send(x)
+        ac.wait()
+        live = ac.session.resolve(h)
+        gov = ac.session.memgov
+        gov.spill(live)
+        job = gov._in_flight.get(live.id)
+        if job is not None:  # wait for the async copy-out to land
+            assert job.event.wait(10)
+        assert live.state == SPILLED
+        np.testing.assert_array_equal(np.asarray(live.data())[:6, :7], x)
+        assert live.state == MATERIALIZED
+        assert gov._host_store.get(h.id) is None  # buffer donated back
+        ac.stop()
+
+
+# ---------------------------------------------------------------------------
+# Stats plumbing
+# ---------------------------------------------------------------------------
+
+
+class TestStats:
+    def test_summary_has_data_plane_keys(self, engine, rng):
+        ac = _ctx(engine, None)
+        ac.send(_mats(1, rng)[0])
+        ac.wait()
+        s = ac.stats.summary()
+        for key in (
+            "spill_copy_ns",
+            "spill_overlap_ns",
+            "transfer_queue_depth",
+            "fused_relayouts",
+        ):
+            assert isinstance(s[key], int)
+        ac.stop()
+
+    def test_plan_cache_stats_report_fused_plans(self):
+        from repro.core.relayout import RelayoutPlanCache
+
+        stats = RelayoutPlanCache().stats()
+        assert stats["fused_plans"] == 0
+        assert set(stats) == {"hits", "misses", "plans", "fused_plans"}

@@ -430,6 +430,14 @@ class TestEngineStats:
             (sess,) = snap["sessions"].values()
             assert sess["name"] == "obs"
             assert sess["num_sends"] == 1
+            # data-plane counters (DESIGN.md §10) ride along in every summary
+            for key in (
+                "spill_copy_ns",
+                "spill_overlap_ns",
+                "transfer_queue_depth",
+                "fused_relayouts",
+            ):
+                assert isinstance(sess[key], int)
             assert snap["memgov"]["pressure"] == snap["memgov"]["used"]
             assert snap["memgov"]["high_water"] > 0
             assert snap["residents"]["entries"] >= 1
