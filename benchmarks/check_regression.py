@@ -41,6 +41,11 @@ GATES = [
     # 1.0; 0.55 − 10% tolerance ≈ the 0.5 acceptance floor), so a pass means
     # "copy-outs still overlap compute", not "the runner was fast today".
     ("overlap_spill", "overlap_ratio", "higher"),
+    # Wire transport (DESIGN.md §11): framing tax over raw matrix bytes is
+    # analytic (shapes + CHUNK_BYTES), and the socket must never change the
+    # engine-side bridge counters — parity is a 1-or-fail boolean.
+    ("wire", "framing_overhead", "lower"),
+    ("wire", "bridge_parity_ok", "higher"),
 ]
 
 

@@ -20,6 +20,9 @@
                      compute, measured as an overlap ratio and compared
                      bit-exactly against the synchronous baseline
                      (DESIGN.md §10)
+  wire_overhead      beyond-paper: TCP transport vs loopback — framing
+                     overhead over the raw matrix bytes and engine-side
+                     bridge-counter parity (DESIGN.md §11)
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--only`` takes a
 comma-separated subset; ``--json PATH`` additionally writes the structured
@@ -44,7 +47,10 @@ import sys
 import time
 from typing import Dict, List
 
-SUITE_NAMES = ["gemm", "svd", "transfer", "overlap", "offload", "spill", "cross", "overlap_spill"]
+SUITE_NAMES = [
+    "gemm", "svd", "transfer", "overlap", "offload", "spill", "cross",
+    "overlap_spill", "wire",
+]
 
 
 def main() -> None:
@@ -84,6 +90,7 @@ def main() -> None:
         spill_pressure,
         svd_fig34,
         transfer_tables23,
+        wire_overhead,
     )
     from repro.launch import runtime
 
@@ -96,6 +103,7 @@ def main() -> None:
         "spill": spill_pressure.run,
         "cross": cross_session.run,
         "overlap_spill": overlap_spill.run,
+        "wire": wire_overhead.run,
     }
 
     if args.only:

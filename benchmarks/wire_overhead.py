@@ -1,0 +1,83 @@
+"""Wire framing overhead vs loopback (DESIGN.md §11).
+
+The TCP transport must not change *what* crosses the bridge — only wrap it
+in frames. This suite runs one fixed workload (a handful of sends, a gemm,
+a collect) under both transports and reports:
+
+- ``framing_overhead`` — (framed bytes − payload bytes) / payload bytes for
+  the loopback array framing: pure protocol tax (ALWF headers + chunk
+  length prefixes) over the matrix bytes themselves. Analytic: derived from
+  matrix shapes and CHUNK_BYTES, identical on every host — gated in CI
+  (check_regression.py), where a jump means the framing genuinely got
+  fatter, never a noisy runner.
+- ``tcp_overhead`` — the same ratio for the full TCP exchange, control
+  frames included (CONNECT/RUN/FETCH/... metadata on top of the arrays).
+- ``bridge_parity_ok`` — 1 if the engine-side session byte counters
+  (send/recv bytes and counts) are identical under both transports: the
+  socket adds framing, never bridge traffic.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import csv_row, timeit
+
+M, K, N = 256, 192, 128
+PAYLOADS = 3  # two sends + one collected product
+
+
+def _workload(transport):
+    import repro
+
+    rng = np.random.default_rng(17)
+    a = rng.standard_normal((M, K)).astype(np.float32)
+    b = rng.standard_normal((K, N)).astype(np.float32)
+    engine = repro.AlchemistEngine()
+    s = repro.connect(engine, transport=transport)
+    s.register_library("elemental", "repro.linalg.library:ElementalLib")
+    out = s.collect(s.run("elemental", "gemm", s.send(a), s.send(b)))
+    np.asarray(out)
+    bridge = {
+        k: v
+        for k, v in s.stats.summary().items()
+        if k in ("send_bytes", "recv_bytes", "num_sends", "num_receives")
+    }
+    ws = s.transport.wire_stats()
+    s.close()
+    return bridge, ws
+
+
+def run(report: List[str], metrics: Dict[str, Dict]) -> None:
+    payload_bytes = (M * K + K * N + M * N) * 4  # the 3 f32 arrays that cross
+
+    loop_bridge, loop_ws = _workload("loopback")
+    framed = loop_ws["bytes_sent"]
+    framing_overhead = (framed - payload_bytes) / payload_bytes
+
+    tcp_bridge, tcp_ws = _workload("tcp")
+    tcp_total = tcp_ws["bytes_sent"] + tcp_ws["bytes_received"]
+    tcp_overhead = (tcp_total - payload_bytes) / payload_bytes
+
+    parity_ok = int(loop_bridge == tcp_bridge)
+
+    us = timeit(lambda: _workload("tcp"), repeats=3, warmup=1) * 1e6
+
+    report.append(
+        csv_row(
+            "wire_tcp_workload",
+            us,
+            f"framing_overhead={framing_overhead:.4f} "
+            f"tcp_overhead={tcp_overhead:.4f} parity={parity_ok}",
+        )
+    )
+    metrics["wire"] = {
+        "payload_bytes": payload_bytes,
+        "loopback_framed_bytes": framed,
+        "framing_overhead": round(framing_overhead, 6),
+        "tcp_wire_bytes": tcp_total,
+        "tcp_overhead": round(tcp_overhead, 6),
+        "bridge_parity_ok": parity_ok,
+    }

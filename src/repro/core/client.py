@@ -72,6 +72,7 @@ from repro.core.relayout import (
     transfer_cost,
 )
 from repro.core.resident import ResidentEntry, ResidentStore
+from repro.core.transport import Transport, resolve_transport
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
     from repro.core.engine import AlchemistEngine
@@ -109,21 +110,45 @@ class ClientCore:
         datasets: Sequence[Any] = (),
         queue: bool = False,
         timeout: Optional[float] = None,
+        transport: Union[Transport, str, None] = None,
     ):
         self.engine = engine
-        self.session = engine.connect(
-            name=name,
-            num_workers=num_workers,
-            grid=grid,
-            hbm_budget=hbm_budget,
-            datasets=datasets,
-            queue=queue,
-            timeout=timeout,
-        )
         self.client_layout = client_layout
         self.engine_layout = engine_layout
         self._planner = None
         self._stopped = False
+        # The wire seam (DESIGN.md §11): every verb below reaches the engine
+        # through this transport. Default comes from REPRO_TRANSPORT, so an
+        # unmodified test suite can run over a localhost socket.
+        self.transport = resolve_transport(transport)
+        self.session = self.transport.open_session(
+            self,
+            dict(
+                name=name,
+                num_workers=num_workers,
+                grid=grid,
+                hbm_budget=hbm_budget,
+                datasets=datasets,
+                queue=queue,
+                timeout=timeout,
+            ),
+        )
+
+    @classmethod
+    def _over_session(cls, engine: "AlchemistEngine", session, client_layout, engine_layout):
+        """Engine-side twin of a remote client (serve.wire): a core bound to
+        an existing session, executing the ``_local_*`` verbs in-process.
+        Never opens a transport and never owns admission — the server that
+        built it releases the session on disconnect/CLOSE."""
+        core = object.__new__(cls)
+        core.engine = engine
+        core.client_layout = client_layout
+        core.engine_layout = engine_layout
+        core._planner = None
+        core._stopped = False
+        core.transport = None
+        core.session = session
+        return core
 
     # -- libraries -----------------------------------------------------------
     def register_library(self, name: str, spec: LibrarySpec) -> Library:
@@ -131,9 +156,17 @@ class ClientCore:
 
         ``spec`` may be a Library instance/class or an import-path string
         ``"repro.linalg.library:ElementalLib"`` — resolved only now, the
-        runtime-dynamic-linking analogue.
+        runtime-dynamic-linking analogue. Import-path strings route through
+        the transport (they are the wire-expressible form — the paper's
+        "dlopen by name" request); live instances/classes are an in-process
+        convenience and register directly.
         """
         self._check()
+        if isinstance(spec, str):
+            return self.transport.register_library(self, name, spec)
+        return self._local_register_library(name, spec)
+
+    def _local_register_library(self, name: str, spec: LibrarySpec) -> Library:
         lib = load_library(spec)
         if name != lib.name:
             # allow aliasing but keep it explicit in the session table
@@ -173,19 +206,37 @@ class ClientCore:
     ) -> AlFuture:
         """``key``/``payload`` (internal, DESIGN.md §8): the payload's content
         key and a private host snapshot of its logical bytes, when the caller
-        (the offload planner) already computed them. With the engine's
-        resident store enabled they are derived here for plain sends too, so
-        every non-cyclic transfer publishes into the content index — and a
-        send whose bytes another session already placed on the engine becomes
-        an attach instead of a bridge crossing."""
+        (the offload planner) already computed them. Validates client-side
+        (fail fast), then hands the payload to the transport — which frames
+        its bytes (loopback encodes/decodes in place; TCP ships them) before
+        the engine-side :meth:`_local_submit_send` runs."""
         self._check()
-        sess = self.session
         # Validate + capture metadata in the caller thread (fail fast, and
         # pending handles need shape/dtype before the transfer runs).
         if not isinstance(array, jax.Array):
             array = np.asarray(array)
         if array.ndim != 2:
             raise SessionError(f"send() expects a 2D matrix, got shape {tuple(array.shape)}")
+        return self.transport.submit_send(
+            self, array, name=name, block=block, key=key, payload=payload
+        )
+
+    def _local_submit_send(
+        self,
+        array: Union[jax.Array, np.ndarray],
+        *,
+        name: str,
+        block: bool,
+        key: Optional[Tuple] = None,
+        payload: Optional[np.ndarray] = None,
+    ) -> AlFuture:
+        """Engine-side send: content-store attach decision, pending handle,
+        governor reservation, task submission. With the engine's resident
+        store enabled a content key is derived here for plain sends too, so
+        every non-cyclic transfer publishes into the content index — and a
+        send whose bytes another session already placed on the engine becomes
+        an attach instead of a bridge crossing."""
+        sess = self.session
         store = self._content_store()
         if store is not None:
             if key is None:
@@ -383,6 +434,9 @@ class ClientCore:
 
     def _submit_collect(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
         self._check()
+        return self.transport.submit_collect(self, h)
+
+    def _local_submit_collect(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
         sess = self.session
 
         def task() -> jax.Array:
@@ -429,6 +483,9 @@ class ClientCore:
 
     def free_async(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
         self._check()
+        return self.transport.free(self, h)
+
+    def _local_free_async(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
         sess = self.session
         return sess.tasks.submit(
             lambda: sess.free_handle(self._resolve_handle(h)), label="free"
@@ -454,9 +511,15 @@ class ClientCore:
         pr, pc = pad_amounts(phys, self.engine_layout, mesh)
         return (phys[0] + pr, phys[1] + pc)
 
-    @staticmethod
-    def _resolve_handle(h: Union[AlMatrix, AlFuture]) -> AlMatrix:
+    def _resolve_handle(self, h: Union[AlMatrix, AlFuture]) -> AlMatrix:
         resolved = futures_mod.resolve(h)
+        if isinstance(resolved, params_codec.HandleRef):
+            # Wire decay: over a real transport an AlMatrix crosses as a
+            # HandleRef; resolve it against the session table here, at task
+            # time, so unknown/freed/foreign ids fail with the same
+            # HandleError surface the in-process path has (resolve is
+            # duck-typed over .id/.session_id).
+            resolved = self.session.resolve(resolved)
         if not isinstance(resolved, AlMatrix):
             raise SessionError(
                 f"expected an AlMatrix (or a future of one), got {type(resolved).__name__}"
@@ -515,8 +578,35 @@ class ClientCore:
         out_dtype: Any = None,
     ) -> AlFuture:
         self._check()
+        # Fail-fast validation stays caller-side in every transport: library
+        # and routine existence (the session's library table is shared with
+        # the engine-side core), then dispatch through the wire seam.
         lib = self.library(library)
-        r = lib.routine(routine)  # unknown-routine errors fail fast, caller-side
+        lib.routine(routine)  # unknown-routine errors fail fast, caller-side
+        return self.transport.submit_run(
+            self,
+            library,
+            routine,
+            args,
+            params,
+            block=block,
+            out_shapes=out_shapes,
+            out_dtype=out_dtype,
+        )
+
+    def _local_submit_run(
+        self,
+        library: str,
+        routine: str,
+        args: Tuple[Any, ...],
+        params: Dict[str, Any],
+        *,
+        block: bool,
+        out_shapes: Optional[Sequence] = None,
+        out_dtype: Any = None,
+    ) -> AlFuture:
+        lib = self.library(library)
+        r = lib.routine(routine)
         sess = self.session
         label = f"{library}.{routine}"
         # Caller-side shape inference (per-routine rules, DESIGN.md §7): a
@@ -652,7 +742,7 @@ class ClientCore:
         """Barrier: block until every task this session has queued so far
         (sends, runs, collects, frees) has executed."""
         self._check()
-        self.session.drain(timeout)
+        self.transport.barrier(self, timeout)
 
     @property
     def stats(self):
@@ -670,7 +760,7 @@ class ClientCore:
         waking any ``connect()`` queued for admission.
         """
         if not self._stopped:
-            self.engine.release(self.session)
+            self.transport.close_session(self)
             self._stopped = True
 
     def __enter__(self):
@@ -789,6 +879,7 @@ class Session(ClientCore):
         timeout: Optional[float] = None,
         client_layout: LayoutSpec = ROW,
         engine_layout: LayoutSpec = GRID,
+        transport: Union[Transport, str, None] = None,
     ):
         self._policy = as_policy(policy)
         super().__init__(
@@ -802,6 +893,7 @@ class Session(ClientCore):
             datasets=datasets,
             queue=queue,
             timeout=timeout,
+            transport=transport,
         )
 
     # -- policy ---------------------------------------------------------------
@@ -884,6 +976,7 @@ def connect(
     timeout: Optional[float] = None,
     client_layout: LayoutSpec = ROW,
     engine_layout: LayoutSpec = GRID,
+    transport: Union[Transport, str, None] = None,
 ) -> Session:
     """Connect an application to an :class:`AlchemistEngine` (DESIGN.md §9).
 
@@ -900,6 +993,11 @@ def connect(
       resident-store entries those keys can reuse, so warm content attaches
       instead of re-crossing the bridge.
     - ``hbm_budget`` folds into the engine-wide governor ceiling (§7).
+    - ``transport`` selects the wire (DESIGN.md §11): ``"loopback"``
+      (default; in-process, frames still encoded/decoded) or ``"tcp"``
+      (a localhost socket to a threaded :class:`~repro.serve.wire.
+      EngineServer` wrapping the engine). ``REPRO_TRANSPORT`` sets the
+      process-wide default.
     """
     return Session(
         engine,
@@ -913,6 +1011,7 @@ def connect(
         timeout=timeout,
         client_layout=client_layout,
         engine_layout=engine_layout,
+        transport=transport,
     )
 
 
@@ -938,6 +1037,7 @@ class AlchemistContext(ClientCore):
         client_layout: LayoutSpec = ROW,
         engine_layout: LayoutSpec = GRID,
         hbm_budget: Optional[int] = None,
+        transport: Union[Transport, str, None] = None,
     ):
         warnings.warn(
             "AlchemistContext is deprecated; connect with "
@@ -955,6 +1055,7 @@ class AlchemistContext(ClientCore):
             client_layout=client_layout,
             engine_layout=engine_layout,
             hbm_budget=hbm_budget,
+            transport=transport,
         )
 
     # The v1 spellings: eager send/run under the classic names.

@@ -180,14 +180,22 @@ class AlchemistEngine:
         deadline = None if timeout is None else time.monotonic() + timeout
         queued = False
         with self._admission:
+            # Pin the request size once, at request time. ``num_workers=None``
+            # means "all free devices" *as seen now* — on a drained pool it
+            # means the whole engine. Re-deriving n at each queue wakeup would
+            # degrade a queued all-free request to "the first freed device"
+            # (whoever releases one worker ends the wait with n=1).
+            if grid is not None:
+                r, c = grid
+                n = r * c
+            elif num_workers is not None:
+                n = num_workers
+                r, c = _near_square_grid(n)
+            else:
+                n = len(self._free) if self._free else len(self.devices)
+                r, c = _near_square_grid(n)
             try:
                 while True:
-                    if grid is not None:
-                        r, c = grid
-                        n = r * c
-                    else:
-                        n = num_workers if num_workers is not None else len(self._free)
-                        r, c = _near_square_grid(n) if n > 0 else (0, 0)
                     if n > len(self.devices):
                         # Never placeable: fail fast even when queueing.
                         raise WorkerAllocationError(

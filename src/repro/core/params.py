@@ -10,15 +10,18 @@ Here the pack format is a compact, versioned binary frame (struct-packed),
 and "pointers to distributed matrices" serialize as handle ids — exactly the
 paper's split: metadata crosses as bytes, matrix payloads never do.
 
-This layer is also what a real multi-controller deployment would put on the
-wire between the client process and the engine controller, so it is
-implemented and tested as a genuine codec, not a dict passthrough.
+Since DESIGN.md §11 this codec sits on a real socket (``serve.wire``), so
+:func:`unpack` is hardened against hostile input: every read is
+bounds-checked, and any malformed frame — truncated, corrupt, trailing
+garbage — raises :class:`~repro.core.errors.ParameterError`, never a raw
+``struct.error`` or ``UnicodeDecodeError``. A garbage read off the wire must
+surface as a protocol error the server loop can map, not an undeclared crash.
 """
 
 from __future__ import annotations
 
 import struct
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Tuple, Union
 
 import numpy as np
 
@@ -26,7 +29,11 @@ from repro.core.errors import ParameterError
 from repro.core.handles import AlMatrix
 
 _MAGIC = b"ALPK"
-_VERSION = 2
+# v3: empty lists get their own tag (v2 packed every empty list as
+# _T_INT_LIST, silently changing a float list's element type across the
+# wire). Readers accept every version <= theirs; v2 frames contain no
+# _T_EMPTY_LIST so they decode unchanged.
+_VERSION = 3
 
 # type tags
 _T_INT = 0x01
@@ -37,6 +44,7 @@ _T_MATRIX_HANDLE = 0x05
 _T_INT_LIST = 0x06
 _T_FLOAT_LIST = 0x07
 _T_NONE = 0x08
+_T_EMPTY_LIST = 0x09
 
 
 def _pack_str(s: str) -> bytes:
@@ -44,14 +52,52 @@ def _pack_str(s: str) -> bytes:
     return struct.pack("<I", len(b)) + b
 
 
-def _unpack_str(buf: memoryview, off: int) -> Tuple[str, int]:
-    (n,) = struct.unpack_from("<I", buf, off)
-    off += 4
-    return bytes(buf[off : off + n]).decode("utf-8"), off + n
+class _FrameReader:
+    """Bounds-checked cursor over a parameter frame. Every decode error —
+    overrun, bad struct data, invalid utf-8 — comes out as ParameterError
+    with the offset, so a socket feeding garbage produces a mappable
+    protocol error instead of crashing the server loop."""
+
+    __slots__ = ("mv", "off")
+
+    def __init__(self, buf: Union[bytes, memoryview]):
+        self.mv = memoryview(buf)
+        self.off = 0
+
+    def need(self, n: int, what: str) -> None:
+        if self.off + n > len(self.mv):
+            raise ParameterError(
+                f"truncated ALPK frame: need {n} byte(s) for {what} at offset "
+                f"{self.off}, have {len(self.mv) - self.off}"
+            )
+
+    def take(self, fmt: str, what: str) -> Tuple:
+        self.need(struct.calcsize(fmt), what)
+        try:
+            vals = struct.unpack_from(fmt, self.mv, self.off)
+        except struct.error as exc:  # pragma: no cover - need() guards sizes
+            raise ParameterError(f"corrupt ALPK frame at {what}: {exc}") from None
+        self.off += struct.calcsize(fmt)
+        return vals
+
+    def take_str(self, what: str) -> str:
+        (n,) = self.take("<I", f"{what} length")
+        self.need(n, what)
+        raw = bytes(self.mv[self.off : self.off + n])
+        self.off += n
+        try:
+            return raw.decode("utf-8")
+        except UnicodeDecodeError as exc:
+            raise ParameterError(f"corrupt ALPK frame: {what} is not utf-8 ({exc})") from None
 
 
 def pack(params: Dict[str, Any]) -> bytes:
-    """Serialize a flat dict of scalars / small lists / AlMatrix handles."""
+    """Serialize a flat dict of scalars / small lists / AlMatrix handles.
+
+    :class:`HandleRef` packs identically to the AlMatrix it stands in for,
+    so a decoded frame can be re-encoded — the engine side of the wire
+    (DESIGN.md §11) forwards matrix references without resolving them first.
+    """
     out = [_MAGIC, struct.pack("<HI", _VERSION, len(params))]
     for key, val in params.items():
         out.append(_pack_str(key))
@@ -65,7 +111,8 @@ def pack(params: Dict[str, Any]) -> bytes:
             out.append(struct.pack("<Bd", _T_FLOAT, float(val)))
         elif isinstance(val, str):
             out.append(struct.pack("<B", _T_STR) + _pack_str(val))
-        elif isinstance(val, AlMatrix):
+        elif isinstance(val, (AlMatrix, HandleRef)):
+            layout = val.layout
             out.append(
                 struct.pack(
                     "<Bqqqq",
@@ -76,8 +123,14 @@ def pack(params: Dict[str, Any]) -> bytes:
                     val.shape[1],
                 )
                 + _pack_str(np.dtype(val.dtype).name)
-                + _pack_str(val.layout.name)
+                + _pack_str(layout if isinstance(layout, str) else layout.name)
             )
+        elif isinstance(val, (list, tuple)) and len(val) == 0:
+            # A dedicated tag: the element-typed list tags below are
+            # vacuously satisfied by [], and which one an empty list landed
+            # on must not depend on branch order (a wire peer decodes the
+            # tag, not the sender's intent).
+            out.append(struct.pack("<B", _T_EMPTY_LIST))
         elif isinstance(val, (list, tuple)) and all(
             isinstance(v, (int, np.integer)) and not isinstance(v, bool) for v in val
         ):
@@ -88,6 +141,13 @@ def pack(params: Dict[str, Any]) -> bytes:
         ):
             vals = [float(v) for v in val]
             out.append(struct.pack(f"<BI{len(val)}d", _T_FLOAT_LIST, len(val), *vals))
+        elif isinstance(val, (list, tuple)):
+            kinds = sorted({type(v).__name__ for v in val})
+            raise ParameterError(
+                f"cannot pack parameter {key!r}: list elements must be all-int "
+                f"or all-float, got mixed/unsupported element types {kinds} "
+                "(cast to one numeric type first; bools are not list elements)"
+            )
         else:
             raise ParameterError(
                 f"cannot pack parameter {key!r} of type {type(val).__name__}; "
@@ -116,52 +176,57 @@ class HandleRef:
         return f"HandleRef(id={self.id}, session={self.session_id}, shape={self.shape})"
 
 
-def unpack(buf: bytes) -> Dict[str, Any]:
-    """Inverse of :func:`pack`. AlMatrix entries come back as HandleRef."""
-    mv = memoryview(buf)
-    if bytes(mv[:4]) != _MAGIC:
+def unpack(buf: Union[bytes, memoryview]) -> Dict[str, Any]:
+    """Inverse of :func:`pack`. AlMatrix entries come back as HandleRef.
+
+    Raises :class:`ParameterError` — and only ParameterError — on any
+    malformed input: bad magic, unsupported version, truncation at any
+    offset, corrupt strings, unknown tags, or trailing bytes after the
+    declared item count (a frame is exact, not a prefix of one).
+    """
+    r = _FrameReader(buf)
+    r.need(4, "magic")
+    if bytes(r.mv[:4]) != _MAGIC:
         raise ParameterError("bad magic — not an ALPK parameter frame")
-    version, count = struct.unpack_from("<HI", mv, 4)
+    r.off = 4
+    version, count = r.take("<HI", "header")
     if version > _VERSION:
         raise ParameterError(f"frame version {version} newer than supported {_VERSION}")
-    off = 10
     out: Dict[str, Any] = {}
     for _ in range(count):
-        key, off = _unpack_str(mv, off)
-        (tag,) = struct.unpack_from("<B", mv, off)
-        off += 1
+        key = r.take_str("key")
+        (tag,) = r.take("<B", f"tag for key {key!r}")
         if tag == _T_NONE:
             out[key] = None
         elif tag == _T_BOOL:
-            (v,) = struct.unpack_from("<B", mv, off)
-            off += 1
+            (v,) = r.take("<B", f"bool {key!r}")
             out[key] = bool(v)
         elif tag == _T_INT:
-            (v,) = struct.unpack_from("<q", mv, off)
-            off += 8
+            (v,) = r.take("<q", f"int {key!r}")
             out[key] = v
         elif tag == _T_FLOAT:
-            (v,) = struct.unpack_from("<d", mv, off)
-            off += 8
+            (v,) = r.take("<d", f"float {key!r}")
             out[key] = v
         elif tag == _T_STR:
-            out[key], off = _unpack_str(mv, off)
+            out[key] = r.take_str(f"str {key!r}")
         elif tag == _T_MATRIX_HANDLE:
-            hid, sid, r, c = struct.unpack_from("<qqqq", mv, off)
-            off += 32
-            dtype, off = _unpack_str(mv, off)
-            layout, off = _unpack_str(mv, off)
-            out[key] = HandleRef(hid, sid, (r, c), dtype, layout)
+            hid, sid, rows, cols = r.take("<qqqq", f"handle {key!r}")
+            dtype = r.take_str(f"handle dtype {key!r}")
+            layout = r.take_str(f"handle layout {key!r}")
+            out[key] = HandleRef(hid, sid, (rows, cols), dtype, layout)
+        elif tag == _T_EMPTY_LIST:
+            out[key] = []
         elif tag == _T_INT_LIST:
-            (n,) = struct.unpack_from("<I", mv, off)
-            off += 4
-            out[key] = list(struct.unpack_from(f"<{n}q", mv, off))
-            off += 8 * n
+            (n,) = r.take("<I", f"list length {key!r}")
+            out[key] = list(r.take(f"<{n}q", f"int list {key!r}"))
         elif tag == _T_FLOAT_LIST:
-            (n,) = struct.unpack_from("<I", mv, off)
-            off += 4
-            out[key] = list(struct.unpack_from(f"<{n}d", mv, off))
-            off += 8 * n
+            (n,) = r.take("<I", f"list length {key!r}")
+            out[key] = list(r.take(f"<{n}d", f"float list {key!r}"))
         else:
             raise ParameterError(f"unknown type tag 0x{tag:02x} for key {key!r}")
+    if r.off != len(r.mv):
+        raise ParameterError(
+            f"{len(r.mv) - r.off} trailing byte(s) after {count} declared "
+            "item(s) — not a well-formed ALPK frame"
+        )
     return out

@@ -1,0 +1,467 @@
+"""Wire framing + the Transport seam (DESIGN.md §11).
+
+The paper's deployment is a client/server split: Spark executors talk to an
+Alchemist server process over sockets, with scalar metadata in serialized
+``Parameters`` frames and matrix payloads in chunked worker-to-worker
+transfers (§3.3/§3.5). This module is that boundary for the reproduction:
+
+- **ALWF control frames** — ``b"ALWF" + type(u8) + length(u64)`` followed by
+  a hardened ALPK parameter frame (:mod:`repro.core.params`). Every verb of
+  the protocol (CONNECT/SEND/RUN/COLLECT/...) is one control frame; replies
+  are OK/ERR/ARRAY frames. Malformed bytes surface as
+  :class:`~repro.core.errors.ParameterError`, which the server maps to an
+  ERR reply instead of crashing its loop.
+- **Array framing** — an ARRAY control frame carrying dtype/shape/pad
+  metadata, followed by ``__chunks`` length-prefixed raw-byte chunks. The
+  encoder hands out ``memoryview`` chunks over the source buffer (zero-copy
+  on the send side); the decoder reassembles into one contiguous buffer.
+- **The Transport protocol** — extracted from ``ClientCore``'s
+  ``_submit_send/_submit_run/_submit_collect/free/barrier`` call sites.
+  :class:`LoopbackTransport` routes the in-process path through the same
+  array encode/decode, so every existing test doubles as a wire test;
+  ``repro.serve.wire.TcpTransport`` speaks the same frames over a localhost
+  socket to an :class:`~repro.serve.wire.EngineServer`.
+
+Transport selection: ``connect(transport=...)`` / ``ClientCore(transport=
+...)`` take an instance or a name; the ``REPRO_TRANSPORT`` environment
+variable (``loopback`` | ``tcp``) sets the default for an entire run, which
+is how CI executes the whole tier-1 suite over a real socket.
+"""
+
+from __future__ import annotations
+
+import os
+import socket
+import struct
+from typing import TYPE_CHECKING, Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import params as params_codec
+from repro.core.errors import ParameterError, SessionError, TaskError
+from repro.core.futures import AlFuture
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.client import ClientCore
+    from repro.core.session import Session
+
+WIRE_MAGIC = b"ALWF"
+_HEADER = struct.Struct("<4sBQ")
+
+# Control-frame types (requests).
+T_HELLO = 0x01
+T_CONNECT = 0x02
+T_SEND = 0x03
+T_RUN = 0x04
+T_COLLECT = 0x05
+T_FETCH = 0x06
+T_FREE = 0x07
+T_BARRIER = 0x08
+T_REGISTER = 0x09
+T_CLOSE = 0x0A
+# Replies.
+T_OK = 0x20
+T_ERR = 0x21
+T_ARRAY = 0x22
+
+FRAME_NAMES = {
+    T_HELLO: "HELLO", T_CONNECT: "CONNECT", T_SEND: "SEND", T_RUN: "RUN",
+    T_COLLECT: "COLLECT", T_FETCH: "FETCH", T_FREE: "FREE",
+    T_BARRIER: "BARRIER", T_REGISTER: "REGISTER", T_CLOSE: "CLOSE",
+    T_OK: "OK", T_ERR: "ERR", T_ARRAY: "ARRAY",
+}
+
+# Array payloads cross in bounded chunks so neither side ever materializes
+# a second full copy for framing (and a reader can account progress).
+CHUNK_BYTES = 1 << 20
+
+MAX_FRAME_BYTES = 1 << 24  # control frames are metadata; 16 MiB is hostile
+
+
+# -- control frames ----------------------------------------------------------
+def pack_frame(ftype: int, payload: Dict[str, Any]) -> bytes:
+    body = params_codec.pack(payload)
+    return _HEADER.pack(WIRE_MAGIC, ftype, len(body)) + body
+
+
+def unpack_frame(buf: bytes) -> Tuple[int, Dict[str, Any]]:
+    if len(buf) < _HEADER.size:
+        raise ParameterError(f"truncated ALWF frame header ({len(buf)} bytes)")
+    magic, ftype, n = _HEADER.unpack_from(buf, 0)
+    if magic != WIRE_MAGIC:
+        raise ParameterError("bad magic — not an ALWF wire frame")
+    body = buf[_HEADER.size :]
+    if len(body) != n:
+        raise ParameterError(f"ALWF frame declares {n} payload bytes, has {len(body)}")
+    return ftype, params_codec.unpack(body)
+
+
+# -- socket helpers ----------------------------------------------------------
+def recv_exact(sock: socket.socket, n: int) -> memoryview:
+    """Read exactly ``n`` bytes or raise ConnectionError on EOF."""
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        r = sock.recv_into(view[got:], n - got)
+        if r == 0:
+            raise ConnectionError(f"peer closed mid-frame ({got}/{n} bytes)")
+        got += r
+    return memoryview(buf)
+
+
+def send_frame(sock: socket.socket, ftype: int, payload: Dict[str, Any]) -> int:
+    data = pack_frame(ftype, payload)
+    sock.sendall(data)
+    return len(data)
+
+
+def recv_frame(sock: socket.socket) -> Tuple[int, Dict[str, Any], int]:
+    """Read one control frame; returns (type, payload, framed bytes)."""
+    head = recv_exact(sock, _HEADER.size)
+    magic, ftype, n = _HEADER.unpack_from(head, 0)
+    if magic != WIRE_MAGIC:
+        raise ParameterError("bad magic — not an ALWF wire frame")
+    if n > MAX_FRAME_BYTES:
+        raise ParameterError(f"ALWF control frame declares {n} bytes (cap {MAX_FRAME_BYTES})")
+    body = recv_exact(sock, n) if n else memoryview(b"")
+    return ftype, params_codec.unpack(body), _HEADER.size + n
+
+
+# -- array framing -----------------------------------------------------------
+def array_header(arr: np.ndarray, pads: Tuple[int, int] = (0, 0)) -> Dict[str, Any]:
+    """Metadata frame for a 2D payload: dtype/shape describe the physical
+    bytes on the wire; ``pads`` lets a sender ship a padded physical block
+    whose receiver strips back to logical shape (DESIGN.md §7 padded sends)."""
+    nchunks = max(1, -(-arr.nbytes // CHUNK_BYTES)) if arr.nbytes else 0
+    return {
+        "__rows": int(arr.shape[0]),
+        "__cols": int(arr.shape[1]),
+        "__dtype": np.dtype(arr.dtype).name,
+        "__nbytes": int(arr.nbytes),
+        "__pad_r": int(pads[0]),
+        "__pad_c": int(pads[1]),
+        "__chunks": nchunks,
+    }
+
+
+def array_chunks(arr: np.ndarray) -> List[memoryview]:
+    """Zero-copy chunk views over the array's contiguous bytes."""
+    data = memoryview(np.ascontiguousarray(arr)).cast("B")
+    return [data[i : i + CHUNK_BYTES] for i in range(0, len(data), CHUNK_BYTES)] or []
+
+
+def encode_array(arr: np.ndarray, pads: Tuple[int, int] = (0, 0)) -> Tuple[bytes, List[memoryview], int]:
+    """(header frame, chunk views, total framed bytes) for one payload."""
+    header = pack_frame(T_ARRAY, array_header(arr, pads))
+    chunks = array_chunks(arr)
+    framed = len(header) + sum(8 + len(c) for c in chunks)
+    return header, chunks, framed
+
+
+def decode_array(meta: Dict[str, Any], data: bytes) -> np.ndarray:
+    """Inverse of :func:`encode_array` given the reassembled chunk bytes."""
+    try:
+        dtype = np.dtype(meta["__dtype"])
+    except (TypeError, KeyError) as exc:
+        raise ParameterError(f"bad array frame dtype: {exc}") from None
+    rows, cols = int(meta["__rows"]), int(meta["__cols"])
+    if rows * cols * dtype.itemsize != len(data):
+        raise ParameterError(
+            f"array frame declares {rows}x{cols} {dtype.name} "
+            f"({rows * cols * dtype.itemsize} bytes), got {len(data)} payload bytes"
+        )
+    arr = np.frombuffer(data, dtype=dtype).reshape(rows, cols)
+    pr, pc = int(meta.get("__pad_r") or 0), int(meta.get("__pad_c") or 0)
+    if pr or pc:
+        arr = arr[: rows - pr, : cols - pc]
+    return arr
+
+
+def send_array(sock: socket.socket, arr: np.ndarray, pads: Tuple[int, int] = (0, 0)) -> int:
+    header, chunks, framed = encode_array(np.asarray(arr), pads)
+    sock.sendall(header)
+    for c in chunks:
+        sock.sendall(struct.pack("<Q", len(c)))
+        sock.sendall(c)
+    return framed
+
+
+def recv_array_body(sock: socket.socket, meta: Dict[str, Any]) -> Tuple[np.ndarray, int]:
+    """Chunks following an already-read ARRAY frame → (array, bytes read)."""
+    nbytes = int(meta["__nbytes"])
+    buf = bytearray(nbytes)
+    view = memoryview(buf)
+    got = 0
+    read = 0
+    for _ in range(int(meta["__chunks"])):
+        (n,) = struct.unpack("<Q", recv_exact(sock, 8))
+        if got + n > nbytes:
+            raise ParameterError(
+                f"array chunks overflow declared size ({got + n} > {nbytes})"
+            )
+        view[got : got + n] = recv_exact(sock, n)
+        got += n
+        read += 8 + n
+    if got != nbytes:
+        raise ParameterError(f"array frame short: {got} of {nbytes} payload bytes")
+    return decode_array(meta, bytes(buf)), read
+
+
+def recv_array(sock: socket.socket) -> Tuple[np.ndarray, int]:
+    ftype, meta, n0 = recv_frame(sock)
+    if ftype != T_ARRAY:
+        raise ParameterError(f"expected ARRAY frame, got {FRAME_NAMES.get(ftype, ftype)}")
+    arr, n1 = recv_array_body(sock, meta)
+    return arr, n0 + n1
+
+
+# -- error mapping -----------------------------------------------------------
+def error_payload(exc: BaseException) -> Dict[str, Any]:
+    return {"__etype": type(exc).__name__, "__emsg": str(exc)}
+
+
+def exception_from_payload(payload: Dict[str, Any]) -> BaseException:
+    """Reconstruct a wire error client-side: Alchemist errors by class name
+    (their constructors are message-only by design), builtins likewise, and
+    anything else degrades to TaskError carrying the original type name."""
+    import builtins
+
+    from repro.core import errors as errors_mod
+
+    etype = str(payload.get("__etype") or "TaskError")
+    msg = str(payload.get("__emsg") or "")
+    cls = getattr(errors_mod, etype, None)
+    if isinstance(cls, type) and issubclass(cls, errors_mod.AlchemistError):
+        return cls(msg)
+    bcls = getattr(builtins, etype, None)
+    if isinstance(bcls, type) and issubclass(bcls, Exception):
+        try:
+            return bcls(msg)
+        except TypeError:  # exotic constructor signature
+            pass
+    return TaskError(f"{etype}: {msg}")
+
+
+# -- run-request framing -----------------------------------------------------
+# A RUN request puts every argument through the codec: scalars/strings as
+# themselves, matrix handles as HandleRefs, and in-flight futures as integer
+# tickets the receiving side maps back through its ticket table.
+def encode_run_request(
+    library: str,
+    routine: str,
+    args: Tuple[Any, ...],
+    params: Dict[str, Any],
+    *,
+    block: bool,
+    out_shapes: Optional[Sequence] = None,
+    out_dtype: Any = None,
+    ticket_of=None,
+) -> Dict[str, Any]:
+    payload: Dict[str, Any] = {
+        "__lib": library,
+        "__routine": routine,
+        "__block": block,
+        "__n_args": len(args),
+        "__out_dtype": None if out_dtype is None else np.dtype(out_dtype).name,
+        "__n_shapes": -1 if out_shapes is None else len(out_shapes),
+    }
+    if out_shapes is not None:
+        for i, s in enumerate(out_shapes):
+            payload[f"__shape_{i}"] = None if s is None else [int(d) for d in s]
+    for i, a in enumerate(args):
+        if isinstance(a, AlFuture):
+            if ticket_of is None:
+                raise ParameterError(
+                    f"run argument {i} is an in-flight future; this transport "
+                    "cannot reference it"
+                )
+            payload[f"__t{i}"] = int(ticket_of(a))
+        else:
+            payload[f"__a{i}"] = a
+    for k, v in params.items():
+        if isinstance(v, AlFuture):
+            if ticket_of is None:
+                raise ParameterError(
+                    f"run parameter {k!r} is an in-flight future; this "
+                    "transport cannot reference it"
+                )
+            payload[f"__kt_{k}"] = int(ticket_of(v))
+        else:
+            payload[f"__kw_{k}"] = v
+    return payload
+
+
+def decode_run_request(
+    payload: Dict[str, Any],
+    *,
+    future_of=None,
+    handle_of=None,
+) -> Dict[str, Any]:
+    """Inverse of :func:`encode_run_request`. ``future_of(ticket)`` maps
+    tickets back to futures; ``handle_of(ref)`` may eagerly resolve a
+    HandleRef to its live AlMatrix (falling back to the ref itself keeps the
+    classic lazy failure-at-execution semantics for unknown handles)."""
+    n_args = int(payload["__n_args"])
+    args: List[Any] = []
+    for i in range(n_args):
+        if f"__t{i}" in payload:
+            args.append(future_of(int(payload[f"__t{i}"])))
+        else:
+            args.append(_maybe_handle(payload[f"__a{i}"], handle_of))
+    params: Dict[str, Any] = {}
+    for k, v in payload.items():
+        if k.startswith("__kw_"):
+            params[k[len("__kw_") :]] = _maybe_handle(v, handle_of)
+        elif k.startswith("__kt_"):
+            params[k[len("__kt_") :]] = future_of(int(v))
+    n_shapes = int(payload["__n_shapes"])
+    out_shapes = None
+    if n_shapes >= 0:
+        out_shapes = [
+            None if payload[f"__shape_{i}"] is None else tuple(payload[f"__shape_{i}"])
+            for i in range(n_shapes)
+        ]
+    out_dtype = payload["__out_dtype"]
+    return {
+        "library": payload["__lib"],
+        "routine": payload["__routine"],
+        "args": tuple(args),
+        "params": params,
+        "block": bool(payload["__block"]),
+        "out_shapes": out_shapes,
+        "out_dtype": None if out_dtype is None else np.dtype(out_dtype),
+    }
+
+
+def _maybe_handle(v: Any, handle_of) -> Any:
+    if handle_of is not None and isinstance(v, params_codec.HandleRef):
+        return handle_of(v)
+    return v
+
+
+# -- the Transport seam ------------------------------------------------------
+class Transport:
+    """Protocol extracted from ClientCore's submission call sites.
+
+    A transport owns *how* the five verbs reach the engine; the engine-side
+    semantics live in ``ClientCore._local_*``. Implementations must keep the
+    verbs' error surfaces: fail-fast errors (unknown library, bad shapes)
+    raise at the call site, execution errors fail the returned future.
+    """
+
+    name = "base"
+
+    def open_session(self, core: "ClientCore", kwargs: Dict[str, Any]) -> "Session":
+        raise NotImplementedError
+
+    def submit_send(self, core, array, *, name, block, key=None, payload=None) -> AlFuture:
+        raise NotImplementedError
+
+    def submit_run(
+        self, core, library, routine, args, params, *, block, out_shapes, out_dtype
+    ) -> AlFuture:
+        raise NotImplementedError
+
+    def submit_collect(self, core, h) -> AlFuture:
+        raise NotImplementedError
+
+    def free(self, core, h) -> AlFuture:
+        raise NotImplementedError
+
+    def barrier(self, core, timeout: Optional[float]) -> None:
+        raise NotImplementedError
+
+    def register_library(self, core, name: str, spec: str):
+        raise NotImplementedError
+
+    def close_session(self, core) -> None:
+        raise NotImplementedError
+
+    def wire_stats(self) -> Dict[str, int]:
+        """Bytes/frames this transport moved (framing included)."""
+        return {"bytes_sent": 0, "bytes_received": 0, "frames": 0}
+
+
+class LoopbackTransport(Transport):
+    """The in-process path, routed through the wire's array framing.
+
+    Send and collect payloads are encoded to frame bytes and decoded back
+    before touching the engine — a genuine serialization boundary with zero
+    sockets — so every tier-1 test exercises the codec a TCP deployment
+    uses, and the recorded frame bytes give the wire benchmark its loopback
+    baseline. Control verbs dispatch directly: their codec coverage lives in
+    the run task's ALPK round trip (client.py) and in the TCP transport.
+    """
+
+    name = "loopback"
+
+    def __init__(self):
+        self.bytes_framed = 0
+        self.frames = 0
+
+    def _roundtrip(self, arr: np.ndarray) -> np.ndarray:
+        header, chunks, framed = encode_array(arr)
+        self.bytes_framed += framed
+        self.frames += 1
+        ftype, meta = unpack_frame(header)
+        assert ftype == T_ARRAY
+        return decode_array(meta, b"".join(chunks))
+
+    def open_session(self, core, kwargs):
+        return core.engine.connect(**kwargs)
+
+    def submit_send(self, core, array, *, name, block, key=None, payload=None):
+        arr = self._roundtrip(np.asarray(array))
+        return core._local_submit_send(arr, name=name, block=block, key=key, payload=payload)
+
+    def submit_run(self, core, library, routine, args, params, *, block, out_shapes, out_dtype):
+        # Direct dispatch: the run task itself drives every scalar through
+        # the ALPK codec (see ClientCore._local_submit_run), preserving the
+        # classic failure timing — unserializable args fail the future, not
+        # the call site.
+        return core._local_submit_run(
+            library, routine, args, params,
+            block=block, out_shapes=out_shapes, out_dtype=out_dtype,
+        )
+
+    def submit_collect(self, core, h):
+        fut = core._local_submit_collect(h)
+        return fut.then(lambda out: self._roundtrip(np.asarray(out)), label="collect:wire")
+
+    def free(self, core, h):
+        return core._local_free_async(h)
+
+    def barrier(self, core, timeout):
+        core.session.drain(timeout)
+
+    def register_library(self, core, name, spec):
+        return core._local_register_library(name, spec)
+
+    def close_session(self, core):
+        core.engine.release(core.session)
+
+    def wire_stats(self):
+        return {
+            "bytes_sent": self.bytes_framed,
+            "bytes_received": 0,
+            "frames": self.frames,
+        }
+
+
+def resolve_transport(spec: Any, default_env: str = "REPRO_TRANSPORT") -> Transport:
+    """``None`` → the ``REPRO_TRANSPORT`` env default (``loopback``);
+    a name → a fresh instance; a Transport instance → itself."""
+    if spec is None:
+        spec = os.environ.get(default_env, "loopback") or "loopback"
+    if isinstance(spec, Transport):
+        return spec
+    if spec == "loopback":
+        return LoopbackTransport()
+    if spec == "tcp":
+        from repro.serve.wire import TcpTransport
+
+        return TcpTransport()
+    raise SessionError(
+        f"unknown transport {spec!r}; expected 'loopback', 'tcp', or a Transport instance"
+    )

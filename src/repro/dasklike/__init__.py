@@ -1,0 +1,28 @@
+"""dasklike — a Dask-array-flavored frontend over the Alchemist session.
+
+The Spark counterpart (``sparklike``) reproduces the paper's baseline
+mechanics; this package demonstrates the other direction §6 gestures at: a
+task-graph frontend whose lazy collections are *already* the v2 session
+surface. ``from_array`` / ``compute`` / ``persist`` / ``svd`` are the
+dask.array spellings; the DAG, the execution policy, and the bridge
+accounting are the offload planner's. Works unchanged over any transport
+(loopback or ``REPRO_TRANSPORT=tcp``).
+"""
+
+from repro.dasklike.array import (
+    DaskLikeArray,
+    compute,
+    from_array,
+    matmul,
+    persist,
+    svd,
+)
+
+__all__ = [
+    "DaskLikeArray",
+    "from_array",
+    "compute",
+    "persist",
+    "matmul",
+    "svd",
+]

@@ -1,0 +1,148 @@
+"""Dask-flavored collections over an Alchemist session.
+
+The paper frames Alchemist as an interface any task-graph frontend can sit
+on (Spark is the worked example; §6 names Dask as the obvious sibling).
+``sparklike`` plays the RDD story faithfully — this module is the Dask
+counterpart, deliberately thin: a :class:`DaskLikeArray` is a Dask-style
+lazy collection whose "graph" is the offload planner's expression DAG and
+whose ``compute()`` is the one bridge crossing. Nothing here re-implements
+scheduling; the point is that the v2 session surface already *is* the
+delayed-collection contract (build lazily, ``compute``/``persist``
+explicitly), so a Dask-shaped frontend is a naming layer.
+
+The module is transport-agnostic by construction — it only speaks the
+session API, so ``REPRO_TRANSPORT=tcp`` (or ``connect(transport=...)``)
+puts every ``compute()`` on a real socket without touching this file.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.client import AlArray, Session, connect as _connect
+
+_ELEMENTAL = ("elemental", "repro.linalg.library:ElementalLib")
+
+
+def _ensure_session(target: Any, **kwargs) -> Session:
+    """A Session from a Session (as-is) or an engine (fresh connect)."""
+    if isinstance(target, Session):
+        sess = target
+    else:
+        sess = _connect(target, **kwargs)
+    if _ELEMENTAL[0] not in sess.session.libraries:
+        sess.register_library(*_ELEMENTAL)
+    return sess
+
+
+class DaskLikeArray:
+    """A lazy 2D collection backed by an engine-resident :class:`AlArray`.
+
+    Dask-array spellings (``compute``/``persist``/``@``/``.T``) over the
+    planner's DAG. Chaining never executes; ``compute()`` forces the graph
+    and returns a host ``np.ndarray``; ``persist()`` forces it but keeps the
+    result engine-resident (Dask's distinction, mapped onto the bridge)."""
+
+    __array_ufunc__ = None
+    __array_priority__ = 1001  # above AlArray: ndarray @ us reaches __rmatmul__
+
+    def __init__(self, al: AlArray, session: Session):
+        self._al = al
+        self._session = session
+
+    # -- dask-style metadata -------------------------------------------------
+    @property
+    def shape(self) -> Optional[Tuple[int, int]]:
+        return self._al.shape
+
+    @property
+    def dtype(self):
+        return self._al.dtype
+
+    @property
+    def ndim(self) -> int:
+        return 2
+
+    # -- graph building ------------------------------------------------------
+    def _wrap(self, al: AlArray) -> "DaskLikeArray":
+        return DaskLikeArray(al, self._session)
+
+    def _operand(self, other: Any) -> Any:
+        return other._al if isinstance(other, DaskLikeArray) else other
+
+    def __matmul__(self, other: Any) -> "DaskLikeArray":
+        return self._wrap(self._al @ self._operand(other))
+
+    def __rmatmul__(self, other: Any) -> "DaskLikeArray":
+        return self._wrap(self._operand(other) @ self._al)
+
+    def dot(self, other: Any) -> "DaskLikeArray":
+        return self @ other
+
+    @property
+    def T(self) -> "DaskLikeArray":
+        # No engine-side transpose routine: ship the flip through gemm with
+        # an identity would be dishonest pricing, so transpose is a
+        # client-side re-send of the (computed) value — explicit, like
+        # dask's rechunk-to-transpose being a real data movement.
+        host = np.asarray(self.compute()).T
+        return from_array(self._session, np.ascontiguousarray(host))
+
+    # -- execution -----------------------------------------------------------
+    def compute(self) -> np.ndarray:
+        """Force the DAG and pull the value client-side (the bridge
+        crossing). Dask's ``.compute()`` contract: returns concrete data."""
+        return np.asarray(self._al.data())
+
+    def persist(self) -> "DaskLikeArray":
+        """Force the DAG but keep the value engine-resident; returns self
+        (now backed by materialized data), like ``dask.persist``."""
+        self._al.materialize()
+        return self
+
+    def free(self) -> None:
+        self._al.free()
+
+    @property
+    def state(self) -> str:
+        return self._al.state
+
+    def __repr__(self) -> str:
+        return f"dasklike.Array(shape={self.shape}, dtype={self.dtype}, state={self.state!r})"
+
+
+# -- module-level API (the dask.array spellings) ------------------------------
+def from_array(target: Union[Session, Any], x: Any, name: str = "") -> DaskLikeArray:
+    """Wrap a host array as a lazy engine-backed collection.
+
+    ``target`` is a connected :class:`Session` or an engine (a session is
+    opened over the default transport). The elemental library registers on
+    first use. Equal payloads dedup through the session's content store."""
+    sess = _ensure_session(target)
+    return DaskLikeArray(sess.send(np.asarray(x), name=name), sess)
+
+
+def compute(*collections: DaskLikeArray):
+    """Force one or more collections; one argument returns its value,
+    several return a tuple (the ``dask.compute`` shape)."""
+    out = tuple(c.compute() for c in collections)
+    return out[0] if len(out) == 1 else out
+
+
+def persist(*collections: DaskLikeArray):
+    out = tuple(c.persist() for c in collections)
+    return out[0] if len(out) == 1 else out
+
+
+def matmul(a: DaskLikeArray, b: Union[DaskLikeArray, Any]) -> DaskLikeArray:
+    return a @ b
+
+
+def svd(a: DaskLikeArray, k: int = 10, **params) -> Tuple[DaskLikeArray, ...]:
+    """Truncated SVD on the engine (elemental ``truncated_svd``); returns
+    lazy ``(u, s, v)`` — factors stay engine-resident until computed."""
+    sess = a._session
+    u, s, v = sess.run("elemental", "truncated_svd", a._al, n_outputs=3, k=k, **params)
+    return a._wrap(u), a._wrap(s), a._wrap(v)

@@ -1,0 +1,677 @@
+"""EngineServer + TcpTransport — the engine behind a real socket.
+
+DESIGN.md §11. The paper's deployment is two processes bridged by a network:
+Spark's driver speaks to the Alchemist driver over a socket, matrix payloads
+cross between worker sets, and a dropped connection must return the client's
+worker group to the pool. This module is that server for the reproduction:
+
+- :class:`EngineServer` — a threaded TCP server wrapping one
+  :class:`~repro.core.engine.AlchemistEngine`. Each accepted connection binds
+  at most one session (CONNECT allocates it; HELLO with a session token
+  re-binds an existing one after a drop). Requests are length-prefixed ALWF
+  control frames (:mod:`repro.core.transport`) executed against an
+  engine-side :class:`~repro.core.client.ClientCore` twin; replies are
+  OK/ERR/ARRAY frames. A disconnect releases the bound session — its worker
+  group returns to the pool — unless ``linger > 0`` grants a reconnect
+  window for the token to re-bind within.
+- :class:`TcpTransport` — the client half of the seam: the same five verbs
+  as loopback, spoken over a localhost socket. Submission verbs return after
+  the server *enqueues* (an integer ticket names the engine-side future);
+  collect results are pulled with FETCH, which streams the array back in
+  chunks.
+
+Loopback-parity deployment: the server thread lives in the engine's process
+(``ensure_server``), so handles and futures the RPCs name can be resolved to
+the live in-process objects (``session_object``/``take_future``) while every
+control frame and payload byte genuinely crosses the socket. The bridge-byte
+accounting (``SessionStats``) runs engine-side in both transports, which is
+what makes the loopback and TCP counters comparable — the wire benchmark's
+parity check and CI's ``REPRO_TRANSPORT=tcp`` tier-1 run both lean on this.
+A fully remote client would add a client-side handle cache; the protocol
+already carries everything it needs (handles cross as HandleRefs, futures as
+tickets, arrays as framed bytes).
+"""
+
+from __future__ import annotations
+
+import itertools
+import socket
+import threading
+import uuid
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import transport as wire
+from repro.core.errors import AlchemistError, SessionError, TaskError
+from repro.core.futures import AlFuture
+from repro.core.layouts import by_name as layout_by_name
+from repro.core.params import HandleRef
+from repro.core.transport import Transport
+
+_SERVERS: Dict[int, "EngineServer"] = {}
+_SERVERS_LOCK = threading.Lock()
+
+
+def ensure_server(engine, **kwargs) -> "EngineServer":
+    """The engine's singleton wire server, started on first use."""
+    with _SERVERS_LOCK:
+        srv = _SERVERS.get(id(engine))
+        if srv is None or srv.closed:
+            srv = EngineServer(engine, **kwargs)
+            _SERVERS[id(engine)] = srv
+        return srv
+
+
+class _Bound:
+    """One session's server-side state: the engine core twin, the ticket
+    table naming its in-flight futures, and the reconnect bookkeeping."""
+
+    def __init__(self, token: str, session, core):
+        self.token = token
+        self.session = session
+        self.core = core
+        self.futures: Dict[int, AlFuture] = {}
+        self._tickets = itertools.count(1)
+        self.lock = threading.Lock()
+        self.released = False
+        self.linger_timer: Optional[threading.Timer] = None
+
+    def ticket(self, fut: AlFuture) -> int:
+        with self.lock:
+            t = next(self._tickets)
+            self.futures[t] = fut
+        return t
+
+    def future(self, t: int) -> AlFuture:
+        with self.lock:
+            try:
+                return self.futures[t]
+            except KeyError:
+                raise SessionError(f"unknown ticket {t} for session {self.session.id}") from None
+
+
+class EngineServer:
+    """Threaded TCP server wrapping an AlchemistEngine (DESIGN.md §11)."""
+
+    def __init__(self, engine, host: str = "127.0.0.1", port: int = 0, linger: float = 0.0):
+        self.engine = engine
+        self.linger = linger
+        self.closed = False
+        self._sock = socket.create_server((host, port))
+        self.address: Tuple[str, int] = self._sock.getsockname()[:2]
+        self._lock = threading.Lock()
+        self._bound: Dict[str, _Bound] = {}
+        self.stats = {
+            "connections": 0,
+            "disconnect_releases": 0,  # sessions torn down by a dropped socket
+            "reconnects": 0,  # HELLO re-binds within the linger window
+            "frames": 0,
+            "bytes_in": 0,
+            "bytes_out": 0,
+        }
+        self._accept = threading.Thread(
+            target=self._accept_loop, name=f"wire-{self.address[1]}", daemon=True
+        )
+        self._accept.start()
+
+    # -- in-process parity lookups (see module docstring) --------------------
+    def session_object(self, token: str):
+        return self._require(token).session
+
+    def take_future(self, token: str, ticket: int) -> AlFuture:
+        return self._require(token).future(ticket)
+
+    def register_future(self, token: str, fut: AlFuture) -> int:
+        """Admit an engine-side future the server did not itself mint into
+        the session's ticket table (derived futures: `.then` projections the
+        planner builds over RUN outputs). In-process parity only — a fully
+        remote client would await the projection and reference the handle."""
+        return self._require(token).ticket(fut)
+
+    def _require(self, token: str) -> _Bound:
+        with self._lock:
+            try:
+                return self._bound[token]
+            except KeyError:
+                raise SessionError(f"unknown or expired session token {token!r}") from None
+
+    def has_session(self, token: str) -> bool:
+        with self._lock:
+            return token in self._bound
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Stop accepting, release every still-bound session."""
+        self.closed = True
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        with self._lock:
+            bound = list(self._bound.values())
+            self._bound.clear()
+        for b in bound:
+            self._release(b, why="server close")
+
+    def _release(self, b: _Bound, why: str) -> None:
+        with self._lock:
+            if b.released:
+                return
+            b.released = True
+            self._bound.pop(b.token, None)
+            if b.linger_timer is not None:
+                b.linger_timer.cancel()
+        # engine.release drains the session queue and returns the worker
+        # group to the pool in canonical order, waking queued connects.
+        self.engine.release(b.session)
+
+    # -- server loop ---------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self.closed:
+            try:
+                conn, _addr = self._sock.accept()
+            except OSError:
+                return  # listener closed
+            self.stats["connections"] += 1
+            threading.Thread(
+                target=self._serve_connection,
+                args=(conn,),
+                daemon=True,
+                name=f"wire-conn-{self.stats['connections']}",
+            ).start()
+
+    def _serve_connection(self, conn: socket.socket) -> None:
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        bound: Optional[_Bound] = None
+        explicit_close = False
+        try:
+            while True:
+                try:
+                    ftype, req, nread = wire.recv_frame(conn)
+                except ConnectionError:
+                    break  # peer vanished: disconnect semantics below
+                self.stats["frames"] += 1
+                self.stats["bytes_in"] += nread
+                try:
+                    bound, closed = self._dispatch(conn, ftype, req, bound)
+                    if closed:
+                        explicit_close = True
+                        break
+                except AlchemistError as exc:
+                    self._reply(conn, wire.T_ERR, wire.error_payload(exc))
+                except Exception as exc:  # noqa: BLE001 — map, never crash the loop
+                    self._reply(conn, wire.T_ERR, wire.error_payload(exc))
+        except (ConnectionError, OSError):
+            pass  # reply write failed: same as a disconnect
+        finally:
+            try:
+                conn.close()
+            except OSError:
+                pass
+            if bound is not None and not explicit_close and not bound.released:
+                if self.linger > 0:
+                    # Reconnect window: keep the session bound; release only
+                    # if no HELLO re-binds the token in time.
+                    self._schedule_linger(bound)
+                else:
+                    self.stats["disconnect_releases"] += 1
+                    self._release(bound, why="disconnect")
+
+    def _schedule_linger(self, b: _Bound) -> None:
+        def expire() -> None:
+            with self._lock:
+                if b.released or b.token not in self._bound:
+                    return
+            self.stats["disconnect_releases"] += 1
+            self._release(b, why="linger expired")
+
+        t = threading.Timer(self.linger, expire)
+        t.daemon = True
+        b.linger_timer = t
+        t.start()
+
+    def _reply(self, conn: socket.socket, ftype: int, payload: Dict[str, Any]) -> None:
+        self.stats["bytes_out"] += wire.send_frame(conn, ftype, payload)
+
+    # -- verb dispatch -------------------------------------------------------
+    def _dispatch(
+        self, conn: socket.socket, ftype: int, req: Dict[str, Any], bound: Optional[_Bound]
+    ) -> Tuple[Optional[_Bound], bool]:
+        if ftype == wire.T_HELLO:
+            token = req.get("__token")
+            if token:
+                bound = self._require(str(token))
+                if bound.linger_timer is not None:
+                    bound.linger_timer.cancel()
+                    bound.linger_timer = None
+                self.stats["reconnects"] += 1
+                self._reply(conn, wire.T_OK, {"__sid": bound.session.id})
+            else:
+                self._reply(conn, wire.T_OK, {})
+            return bound, False
+
+        if ftype == wire.T_CONNECT:
+            if bound is not None:
+                raise SessionError("connection already has a bound session")
+            bound = self._connect(req)
+            self._reply(conn, wire.T_OK, {"__token": bound.token, "__sid": bound.session.id})
+            return bound, False
+
+        if bound is None:
+            raise SessionError(
+                f"frame {wire.FRAME_NAMES.get(ftype, ftype)} before CONNECT/HELLO bound a session"
+            )
+        core = bound.core
+
+        if ftype == wire.T_SEND:
+            arr, nread = wire.recv_array(conn)
+            self.stats["bytes_in"] += nread
+            payload = arr if bool(req.get("__has_payload")) else None
+            fut = core._local_submit_send(
+                arr,
+                name=str(req.get("__name") or ""),
+                block=bool(req.get("__block")),
+                key=None,
+                payload=payload,
+            )
+            self._reply(conn, wire.T_OK, {"__ticket": bound.ticket(fut)})
+
+        elif ftype == wire.T_RUN:
+            dec = wire.decode_run_request(
+                req, future_of=bound.future, handle_of=self._lenient_handle(bound)
+            )
+            fut = core._local_submit_run(
+                dec["library"],
+                dec["routine"],
+                dec["args"],
+                dec["params"],
+                block=dec["block"],
+                out_shapes=dec["out_shapes"],
+                out_dtype=dec["out_dtype"],
+            )
+            self._reply(conn, wire.T_OK, {"__ticket": bound.ticket(fut)})
+
+        elif ftype == wire.T_COLLECT:
+            target = self._target(bound, req)
+            fut = core._local_submit_collect(target)
+            self._reply(conn, wire.T_OK, {"__ticket": bound.ticket(fut)})
+
+        elif ftype == wire.T_FETCH:
+            fut = bound.future(int(req["__ticket"]))
+            timeout = req.get("__timeout")
+            try:
+                val = fut.result(None if timeout is None else float(timeout))
+            except BaseException as exc:  # noqa: BLE001 — crosses as an ERR frame
+                self._reply(conn, wire.T_ERR, wire.error_payload(exc))
+                return bound, False
+            out = np.asarray(val)
+            header, chunks, _framed = wire.encode_array(out)
+            conn.sendall(header)
+            sent = len(header)
+            for c in chunks:
+                conn.sendall(len(c).to_bytes(8, "little"))
+                conn.sendall(c)
+                sent += 8 + len(c)
+            self.stats["bytes_out"] += sent
+
+        elif ftype == wire.T_FREE:
+            target = self._target(bound, req)
+            fut = core._local_free_async(target)
+            self._reply(conn, wire.T_OK, {"__ticket": bound.ticket(fut)})
+
+        elif ftype == wire.T_BARRIER:
+            timeout = req.get("__timeout")
+            bound.session.drain(None if timeout is None else float(timeout))
+            self._reply(conn, wire.T_OK, {})
+
+        elif ftype == wire.T_REGISTER:
+            core._local_register_library(str(req["__name"]), str(req["__spec"]))
+            self._reply(conn, wire.T_OK, {})
+
+        elif ftype == wire.T_CLOSE:
+            self._release(bound, why="client close")
+            self._reply(conn, wire.T_OK, {})
+            return bound, True
+
+        else:
+            raise SessionError(f"unknown wire frame type 0x{ftype:02x}")
+        return bound, False
+
+    def _connect(self, req: Dict[str, Any]) -> _Bound:
+        from repro.core.client import ClientCore
+
+        n_keys = int(req.get("__n_keys") or 0)
+        datasets = [
+            (
+                tuple(req[f"__k{i}_shape"]),
+                str(req[f"__k{i}_dtype"]),
+                str(req[f"__k{i}_sha"]),
+            )
+            for i in range(n_keys)
+        ]
+        grid = req.get("__grid")
+        timeout = req.get("__timeout")
+        session = self.engine.connect(
+            name=str(req.get("__name") or "app"),
+            num_workers=req.get("__workers"),
+            grid=None if grid is None else tuple(grid),
+            hbm_budget=req.get("__hbm_budget"),
+            datasets=datasets,
+            queue=bool(req.get("__queue")),
+            timeout=None if timeout is None else float(timeout),
+        )
+        core = ClientCore._over_session(
+            self.engine,
+            session,
+            layout_by_name(str(req.get("__clayout") or "row")),
+            layout_by_name(str(req.get("__elayout") or "grid")),
+        )
+        b = _Bound(uuid.uuid4().hex, session, core)
+        with self._lock:
+            self._bound[b.token] = b
+        return b
+
+    def _target(self, bound: _Bound, req: Dict[str, Any]):
+        """COLLECT/FREE target: a ticket naming an in-flight future, or a
+        HandleRef resolved against the session table — leniently, so an
+        unknown/foreign handle fails inside the task (the classic surface),
+        not at the RPC."""
+        if "__ticket" in req:
+            return bound.future(int(req["__ticket"]))
+        return self._lenient_handle(bound)(req["__h"])
+
+    def _lenient_handle(self, bound: _Bound):
+        def resolve(ref: HandleRef):
+            live = bound.session.handles.get(ref.id)
+            return live if live is not None else ref
+        return resolve
+
+
+class _TcpCollectFuture(AlFuture):
+    """Client half of a wire collect: COLLECT enqueued engine-side (ticket),
+    bytes pulled through FETCH on first ``result()``. ``done()``/callbacks
+    observe the engine-side future (in-process parity, see module doc);
+    the payload itself always crosses the socket exactly once."""
+
+    def __init__(self, transport: "TcpTransport", ticket: int, engine_fut: AlFuture):
+        super().__init__(label=f"collect:tcp:{ticket}")
+        self._transport = transport
+        self._ticket = ticket
+        self._engine_fut = engine_fut
+        self._fetch_lock = threading.Lock()
+
+    def done(self) -> bool:
+        return self._event.is_set() or self._engine_fut.done()
+
+    def add_done_callback(self, fn) -> None:
+        if self._event.is_set():
+            fn(self)
+            return
+        self._engine_fut.add_done_callback(lambda _parent: fn(self))
+
+    def _ensure_fetched(self, timeout: Optional[float]) -> None:
+        """Pull the payload once. Task failures memoize into this future;
+        a wait timeout (server-side ``result(timeout)`` expiring) raises
+        without memoizing, so a later call can still succeed."""
+        with self._fetch_lock:
+            if self._event.is_set():
+                return
+            try:
+                arr = self._transport._fetch(self._ticket, timeout)
+            except TaskError as exc:
+                if "not resolved within" in str(exc):
+                    raise  # transient wait timeout crossing as TaskError
+                self._set_exception(exc)
+            except BaseException as exc:  # noqa: BLE001 — future API contract
+                self._set_exception(exc)
+            else:
+                self._set_result(arr)
+
+    def exception(self, timeout: Optional[float] = None) -> Optional[BaseException]:
+        self._ensure_fetched(timeout)
+        return super().exception(timeout)
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        self._ensure_fetched(timeout)
+        return super().result(timeout)
+
+
+class TcpTransport(Transport):
+    """Client-side wire: the five verbs over one localhost TCP connection.
+
+    One connection per client core (sessions stay independently socketed, so
+    cross-session overlap survives the wire); a lock serializes RPCs on it.
+    On a broken socket, a transport holding a session token transparently
+    reconnects (HELLO + token) and retries the RPC once — the server side of
+    the story is ``EngineServer`` linger.
+    """
+
+    name = "tcp"
+
+    def __init__(self, server: Optional[EngineServer] = None):
+        self._server = server
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.RLock()
+        self.token: Optional[str] = None
+        self.bytes_sent = 0
+        self.bytes_received = 0
+        self.frames = 0
+
+    # -- connection management ----------------------------------------------
+    @property
+    def server(self) -> EngineServer:
+        if self._server is None:
+            raise SessionError("TcpTransport has no server; open_session first")
+        return self._server
+
+    def _dial(self) -> None:
+        self._sock = socket.create_connection(self.server.address)
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+    def open_session(self, core, kwargs):
+        if self._server is None:
+            self._server = ensure_server(core.engine)
+        self._dial()
+        try:
+            self._rpc(wire.T_HELLO, {"__token": None})
+            reply = self._rpc(wire.T_CONNECT, self._connect_payload(core, kwargs))
+        except BaseException:
+            self._close_sock()
+            raise
+        self.token = str(reply["__token"])
+        return self.server.session_object(self.token)
+
+    def _connect_payload(self, core, kwargs) -> Dict[str, Any]:
+        from repro.core.engine import _dataset_keys
+
+        # Hash declared datasets only when placement affinity can use them —
+        # same gate the engine applies (content_key reads every byte).
+        datasets = kwargs.get("datasets") or ()
+        keys = _dataset_keys(datasets) if datasets and core.engine.residents.enabled else []
+        payload: Dict[str, Any] = {
+            "__name": kwargs.get("name") or "app",
+            "__workers": kwargs.get("num_workers"),
+            "__grid": None if kwargs.get("grid") is None else [int(d) for d in kwargs["grid"]],
+            "__hbm_budget": kwargs.get("hbm_budget"),
+            "__queue": bool(kwargs.get("queue")),
+            "__timeout": kwargs.get("timeout"),
+            "__clayout": core.client_layout.name,
+            "__elayout": core.engine_layout.name,
+            "__n_keys": len(keys),
+        }
+        for i, (shape, dtype, sha) in enumerate(keys):
+            payload[f"__k{i}_shape"] = [int(d) for d in shape]
+            payload[f"__k{i}_dtype"] = str(dtype)
+            payload[f"__k{i}_sha"] = str(sha)
+        return payload
+
+    def reconnect(self) -> None:
+        """Re-dial and re-bind the session token (requires server linger or
+        a still-open server binding)."""
+        if self.token is None:
+            raise SessionError("no session token to reconnect with")
+        self._close_sock()
+        self._dial()
+        n = wire.send_frame(self._sock, wire.T_HELLO, {"__token": self.token})
+        ftype, reply, nread = wire.recv_frame(self._sock)
+        self.bytes_sent += n
+        self.bytes_received += nread
+        self.frames += 1
+        if ftype == wire.T_ERR:
+            raise wire.exception_from_payload(reply)
+
+    def _close_sock(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    # -- RPC core ------------------------------------------------------------
+    def _rpc(
+        self,
+        ftype: int,
+        payload: Dict[str, Any],
+        array: Optional[np.ndarray] = None,
+        expect_array: bool = False,
+    ):
+        with self._lock:
+            try:
+                return self._rpc_once(ftype, payload, array, expect_array)
+            except (ConnectionError, OSError):
+                # Broken pipe / reset / EOF mid-RPC. With a token and a
+                # server that still knows it (linger window, or the drop hit
+                # us before the server noticed), re-bind and retry once.
+                if self.token is None or not self.server.has_session(self.token):
+                    raise SessionError(
+                        "wire connection lost and session no longer bound "
+                        "(server released it on disconnect)"
+                    ) from None
+                self.reconnect()
+                return self._rpc_once(ftype, payload, array, expect_array)
+
+    def _rpc_once(self, ftype, payload, array, expect_array):
+        sock = self._sock
+        if sock is None:
+            raise ConnectionError("transport socket is closed")
+        self.frames += 1
+        self.bytes_sent += wire.send_frame(sock, ftype, payload)
+        if array is not None:
+            self.bytes_sent += wire.send_array(sock, array)
+        rtype, reply, nread = wire.recv_frame(sock)
+        self.bytes_received += nread
+        if rtype == wire.T_ERR:
+            raise wire.exception_from_payload(reply)
+        if rtype == wire.T_ARRAY:
+            if not expect_array:
+                raise SessionError("unexpected ARRAY reply")
+            arr, nbody = wire.recv_array_body(sock, reply)
+            self.bytes_received += nbody
+            return arr
+        if expect_array:
+            raise SessionError(f"expected ARRAY reply, got {wire.FRAME_NAMES.get(rtype, rtype)}")
+        return reply
+
+    def _fetch(self, ticket: int, timeout: Optional[float]):
+        return self._rpc(
+            wire.T_FETCH,
+            {"__ticket": ticket, "__timeout": timeout},
+            expect_array=True,
+        )
+
+    def _take(self, reply: Dict[str, Any]) -> AlFuture:
+        ticket = int(reply["__ticket"])
+        fut = self.server.take_future(self.token, ticket)
+        fut._wire_ticket = ticket
+        return fut
+
+    @staticmethod
+    def _wire_ref(obj: Any) -> Optional[int]:
+        return getattr(obj, "_wire_ticket", None)
+
+    def _ticket_for(self, fut: AlFuture) -> int:
+        """The wire name for a future: the ticket the server minted for it,
+        or a fresh registration for derived futures (`.then` projections)
+        that never crossed as an RPC reply."""
+        t = self._wire_ref(fut)
+        if t is None:
+            t = self.server.register_future(self.token, fut)
+            fut._wire_ticket = t
+        return t
+
+    # -- the verbs -----------------------------------------------------------
+    def submit_send(self, core, array, *, name, block, key=None, payload=None):
+        # The payload doubles as the attach fallback server-side, so the
+        # bytes always cross (socket bytes are not bridge bytes: the session
+        # counters that the parity check compares are engine-side).
+        host = np.asarray(array)
+        reply = self._rpc(
+            wire.T_SEND,
+            {"__name": name, "__block": block, "__has_payload": payload is not None},
+            array=host,
+        )
+        return self._take(reply)
+
+    def submit_run(self, core, library, routine, args, params, *, block, out_shapes, out_dtype):
+        try:
+            payload = wire.encode_run_request(
+                library,
+                routine,
+                args,
+                params,
+                block=block,
+                out_shapes=out_shapes,
+                out_dtype=out_dtype,
+                ticket_of=self._ticket_for,
+            )
+            wire.pack_frame(wire.T_RUN, payload)  # prove the args frame
+        except Exception as exc:  # noqa: BLE001 — unserializable args fail the
+            # future, not the call site (loopback parity: the in-process path
+            # hits the same codec inside the task).
+            fut = AlFuture(label=f"run:{library}.{routine}:reject")
+            fut._set_exception(exc)
+            return fut
+        return self._take(self._rpc(wire.T_RUN, payload))
+
+    def submit_collect(self, core, h):
+        req = self._collect_target(h)
+        reply = self._rpc(wire.T_COLLECT, req)
+        ticket = int(reply["__ticket"])
+        return _TcpCollectFuture(self, ticket, self.server.take_future(self.token, ticket))
+
+    def free(self, core, h):
+        return self._take(self._rpc(wire.T_FREE, self._collect_target(h)))
+
+    def _collect_target(self, h) -> Dict[str, Any]:
+        if isinstance(h, _TcpCollectFuture):
+            return {"__ticket": h._ticket}
+        if isinstance(h, AlFuture):
+            return {"__ticket": self._ticket_for(h)}
+        return {"__h": h}  # AlMatrix/HandleRef: the codec frames it
+
+    def barrier(self, core, timeout):
+        self._rpc(wire.T_BARRIER, {"__timeout": timeout})
+
+    def register_library(self, core, name, spec):
+        self._rpc(wire.T_REGISTER, {"__name": name, "__spec": spec})
+        return core.session.libraries[name]
+
+    def close_session(self, core):
+        try:
+            self._rpc(wire.T_CLOSE, {})
+        except (SessionError, ConnectionError, OSError):
+            # Socket already dead: the server's disconnect path (or linger
+            # expiry) owns the release; make it deterministic here.
+            if self.token is not None and self.server.has_session(self.token):
+                self.server._release(self.server._require(self.token), why="client stop")
+        finally:
+            self._close_sock()
+
+    def wire_stats(self):
+        return {
+            "bytes_sent": self.bytes_sent,
+            "bytes_received": self.bytes_received,
+            "frames": self.frames,
+        }

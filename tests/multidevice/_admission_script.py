@@ -1,0 +1,50 @@
+"""Queued admission pins the request size at request time.
+
+``connect(workers=None, queue=True)`` on a drained pool means "all of the
+engine's devices". The request size must be pinned when the wait begins:
+re-deriving it at each wakeup would degrade the request to "whatever the
+first release freed" — here, a 4-device group instead of the full engine.
+"""
+
+import threading
+import time
+
+import repro
+
+engine = repro.AlchemistEngine()
+assert engine.num_workers == 8, engine.num_workers
+
+# Drain the pool with two 4-device holders.
+s1 = repro.connect(engine, workers=4)
+s2 = repro.connect(engine, workers=4)
+assert engine.available_workers == 0
+
+got = {}
+
+
+def queued_all_free():
+    s = repro.connect(engine, workers=None, queue=True, timeout=60)
+    got["n"] = s.session.num_workers
+    s.close()
+
+
+t = threading.Thread(target=queued_all_free)
+t.start()
+while engine.queued_connects == 0:
+    time.sleep(0.01)
+
+# Free one 4-device group: the pinned all-free request (8 devices) must keep
+# waiting rather than settling for the partial pool.
+s1.close()
+time.sleep(0.5)
+assert "n" not in got, f"queued all-free request degraded to {got['n']} workers"
+assert engine.queued_connects == 1
+
+# Free the second group: now the full engine is available.
+s2.close()
+t.join(60)
+assert got.get("n") == 8, f"expected all 8 workers, got {got.get('n')}"
+assert engine.available_workers == 8
+assert engine.admissions["queued"] == 1
+
+print("MULTIDEVICE_ADMISSION_OK")

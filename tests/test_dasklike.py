@@ -1,0 +1,101 @@
+"""The Dask-flavored frontend: lazy collections over the v2 session, with
+compute/persist semantics and transport-agnostic execution (one test pins
+the TCP wire explicitly; the rest follow REPRO_TRANSPORT like all tier-1)."""
+
+import numpy as np
+import pytest
+
+import repro
+from repro import dasklike
+
+
+@pytest.fixture()
+def engine():
+    return repro.AlchemistEngine()
+
+
+@pytest.fixture()
+def data():
+    rng = np.random.default_rng(11)
+    a = rng.standard_normal((40, 24)).astype(np.float32)
+    b = rng.standard_normal((24, 16)).astype(np.float32)
+    return a, b
+
+
+def test_from_array_is_lazy_and_compute_matches(engine, data):
+    a, b = data
+    s = repro.connect(engine)
+    da = dasklike.from_array(s, a)
+    assert da.shape == a.shape
+    assert da.ndim == 2
+    c = da @ dasklike.from_array(s, b)
+    out = c.compute()
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+    s.close()
+
+
+def test_from_engine_opens_session_and_registers_elemental(engine, data):
+    a, b = data
+    da = dasklike.from_array(engine, a)
+    db = dasklike.from_array(da._session, b)  # same session, no new allocation
+    assert engine.stats()["engine"]["live_sessions"] == 1
+    np.testing.assert_allclose(
+        dasklike.compute(da @ db), a @ b, rtol=1e-4, atol=1e-4
+    )
+    da._session.close()
+
+
+def test_compute_variadic_returns_tuple(engine, data):
+    a, b = data
+    s = repro.connect(engine)
+    da, db = dasklike.from_array(s, a), dasklike.from_array(s, b)
+    ra, rb = dasklike.compute(da, db)
+    np.testing.assert_allclose(ra, a, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(rb, b, rtol=1e-6, atol=1e-6)
+    s.close()
+
+
+def test_persist_keeps_value_engine_resident(engine, data):
+    a, b = data
+    s = repro.connect(engine)
+    c = dasklike.from_array(s, a) @ dasklike.from_array(s, b)
+    assert c.state == "deferred"
+    dasklike.persist(c)
+    assert c.state in ("materialized", "pending")
+    np.testing.assert_allclose(c.compute(), a @ b, rtol=1e-4, atol=1e-4)
+    s.close()
+
+
+def test_matmul_with_host_operand_and_rmatmul(engine, data):
+    a, b = data
+    s = repro.connect(engine)
+    da = dasklike.from_array(s, a)
+    np.testing.assert_allclose((da @ b).compute(), a @ b, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        (a.T @ da).compute(), a.T @ a, rtol=1e-3, atol=1e-3
+    )
+    s.close()
+
+
+def test_svd_factors_reconstruct(engine):
+    rng = np.random.default_rng(3)
+    a = (rng.standard_normal((48, 8)) @ rng.standard_normal((8, 32))).astype(
+        np.float32
+    )
+    da = dasklike.from_array(repro.connect(engine), a)
+    u, sv, v = dasklike.svd(da, k=8)
+    uu, ss, vv = dasklike.compute(u, sv, v)
+    recon = np.asarray(uu) @ np.diag(np.asarray(ss)) @ np.asarray(vv).T
+    np.testing.assert_allclose(recon, a, rtol=1e-2, atol=1e-2)
+    da._session.close()
+
+
+def test_frontend_runs_over_tcp_transport(engine, data):
+    a, b = data
+    s = repro.connect(engine, transport="tcp")
+    da = dasklike.from_array(s, a)
+    out = (da @ b).compute()
+    np.testing.assert_allclose(out, a @ b, rtol=1e-4, atol=1e-4)
+    assert s.transport.wire_stats()["frames"] > 0  # bytes really crossed
+    s.close()
+    assert engine.stats()["engine"]["available_workers"] == 1

@@ -38,3 +38,7 @@ def test_padded_sends_roundtrip_arbitrary_shapes():
 
 def test_sharded_models_match_single_device():
     _run("_model_script.py", "MULTIDEVICE_MODEL_OK")
+
+
+def test_queued_all_free_request_size_is_pinned():
+    _run("_admission_script.py", "MULTIDEVICE_ADMISSION_OK")

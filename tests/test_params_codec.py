@@ -45,6 +45,95 @@ def test_unpackable_type_rejected():
         codec.pack({"x": object()})
 
 
+class TestListTags:
+    def test_empty_list_gets_stable_tag(self):
+        # [] must not pack as an int list (the element-typed guards are
+        # vacuously true on it): a float-list parameter that happens to be
+        # empty must not change type across the wire.
+        frame = codec.pack({"xs": []})
+        assert frame.count(bytes([codec._T_EMPTY_LIST])) >= 1
+        assert codec.unpack(frame)["xs"] == []
+
+    def test_empty_tuple_roundtrips_as_list(self):
+        assert codec.unpack(codec.pack({"xs": ()}))["xs"] == []
+
+    def test_mixed_numeric_list_error_is_descriptive(self):
+        with pytest.raises(ParameterError, match="all-int or all-float"):
+            codec.pack({"xs": [1, 2.5]})
+        with pytest.raises(ParameterError, match="bools are not list elements"):
+            codec.pack({"flags": [True, False]})
+
+    def test_v2_frames_still_decode(self):
+        # Readers accept older versions: a v2 frame (no _T_EMPTY_LIST) is a
+        # byte-identical subset of v3 apart from the header version field.
+        frame = bytearray(codec.pack({"k": 7, "s": "x"}))
+        frame[4:6] = (2).to_bytes(2, "little")
+        assert codec.unpack(bytes(frame)) == {"k": 7, "s": "x"}
+
+    def test_newer_version_rejected(self):
+        frame = bytearray(codec.pack({"k": 7}))
+        frame[4:6] = (codec._VERSION + 1).to_bytes(2, "little")
+        with pytest.raises(ParameterError, match="newer than supported"):
+            codec.unpack(bytes(frame))
+
+
+class TestHardenedUnpack:
+    """Satellite: a garbage socket read must surface as ParameterError —
+    never a raw struct.error/UnicodeDecodeError escaping the codec."""
+
+    FRAME = None  # built once below
+
+    @classmethod
+    def frame(cls):
+        if cls.FRAME is None:
+            h = AlMatrix(shape=(8, 4), dtype=np.float32, layout=GRID, session_id=1)
+            cls.FRAME = codec.pack(
+                {"k": 20, "tol": 1e-6, "mode": "lanczos", "dims": [3, 4], "h": h}
+            )
+        return cls.FRAME
+
+    def test_every_truncation_offset_raises_parameter_error(self):
+        buf = self.frame()
+        for k in range(len(buf)):
+            with pytest.raises(ParameterError):
+                codec.unpack(buf[:k])
+
+    def test_trailing_garbage_rejected(self):
+        with pytest.raises(ParameterError, match="trailing"):
+            codec.unpack(self.frame() + b"\x00")
+
+    def test_non_utf8_key_wrapped(self):
+        # key "k" sits right after the 10-byte header + 4-byte length.
+        buf = bytearray(codec.pack({"k": 1}))
+        buf[14] = 0xFF
+        with pytest.raises(ParameterError, match="utf-8"):
+            codec.unpack(bytes(buf))
+
+    def test_huge_declared_string_length_rejected(self):
+        # A corrupt length prefix must bounds-check, not allocate or crash.
+        buf = bytearray(codec.pack({"k": 1}))
+        buf[10:14] = (2**31).to_bytes(4, "little")
+        with pytest.raises(ParameterError, match="truncated"):
+            codec.unpack(bytes(buf))
+
+    def test_huge_declared_list_length_rejected(self):
+        frame = codec.pack({"xs": [1, 2, 3]})
+        buf = bytearray(frame)
+        off = frame.index(bytes([codec._T_INT_LIST])) + 1
+        buf[off : off + 4] = (2**30).to_bytes(4, "little")
+        with pytest.raises(ParameterError, match="truncated"):
+            codec.unpack(bytes(buf))
+
+
+def test_handleref_repacks_identically():
+    # The engine side of the wire re-encodes decoded frames without
+    # resolving matrix refs first: HandleRef packs like its AlMatrix.
+    h = AlMatrix(shape=(16, 8), dtype=np.float64, layout=GRID, session_id=3)
+    frame = codec.pack({"a": h, "k": 2})
+    ref = codec.unpack(frame)["a"]
+    assert codec.pack({"a": ref, "k": 2}) == frame
+
+
 scalar = st.one_of(
     st.booleans(),
     st.integers(min_value=-(2**62), max_value=2**62),
@@ -75,6 +164,31 @@ handle = st.builds(
     session_id=st.integers(0, 2**31),
     name=st.text(max_size=16),
 )
+
+
+@given(st.dictionaries(st.text(min_size=1, max_size=32), scalar, max_size=8), st.data())
+@settings(max_examples=200, deadline=None)
+def test_truncation_property(d, data):
+    """Every proper prefix of a frame is rejected as ParameterError —
+    the exception a wire server declares — never struct/unicode errors."""
+    buf = codec.pack(d)
+    k = data.draw(st.integers(min_value=0, max_value=len(buf) - 1))
+    with pytest.raises(ParameterError):
+        codec.unpack(buf[:k])
+
+
+@given(st.dictionaries(st.text(min_size=1, max_size=16), scalar, min_size=1, max_size=8), st.data())
+@settings(max_examples=200, deadline=None)
+def test_corruption_property(d, data):
+    """Flipping any byte either still decodes (a value changed) or raises
+    ParameterError — hostile bytes can never escape the codec's error type."""
+    buf = bytearray(codec.pack(d))
+    i = data.draw(st.integers(min_value=0, max_value=len(buf) - 1))
+    buf[i] ^= data.draw(st.integers(min_value=1, max_value=255))
+    try:
+        codec.unpack(bytes(buf))
+    except ParameterError:
+        pass
 
 
 @given(st.dictionaries(st.text(min_size=1, max_size=32), scalar | handle, max_size=16))

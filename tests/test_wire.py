@@ -1,0 +1,355 @@
+"""The wire (DESIGN.md §11): ALWF frame round trips over real socket pairs,
+loopback/TCP parity for every verb, bridge-byte accounting equivalence, and
+the failure modes a socket adds — mid-collect disconnect returning the
+worker group to the pool, and reconnect-with-token inside a linger window."""
+
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from _hypothesis_compat import given, settings, st
+from repro.core import transport as wire
+from repro.core.errors import (
+    LibraryError,
+    ParameterError,
+    SessionError,
+    ShapeError,
+    TaskError,
+)
+from repro.core.transport import LoopbackTransport, resolve_transport
+from repro.serve.wire import EngineServer, TcpTransport, ensure_server
+
+ELEMENTAL = "repro.linalg.library:ElementalLib"
+
+
+@pytest.fixture()
+def engine():
+    return repro.AlchemistEngine()
+
+
+def _session(engine, **kw):
+    s = repro.connect(engine, **kw)
+    s.register_library("elemental", ELEMENTAL)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# frames over a real socket pair
+# ---------------------------------------------------------------------------
+
+
+class TestFramesOverSocketpair:
+    def test_control_frame_roundtrip(self):
+        a, b = socket.socketpair()
+        try:
+            payload = {"name": "svd", "k": 8, "tol": 1e-6, "block": True, "note": None}
+            sent = wire.send_frame(a, wire.T_RUN, payload)
+            ftype, got, nread = wire.recv_frame(b)
+            assert (ftype, got) == (wire.T_RUN, payload)
+            assert sent == nread
+        finally:
+            a.close()
+            b.close()
+
+    def test_array_roundtrip_multi_chunk(self):
+        a, b = socket.socketpair()
+        try:
+            arr = np.arange(300_000, dtype=np.float64).reshape(600, 500)
+            assert arr.nbytes > wire.CHUNK_BYTES  # really exercises chunking
+            done = {}
+
+            def reader():
+                done["arr"], done["n"] = wire.recv_array(b)
+
+            t = threading.Thread(target=reader)
+            t.start()
+            sent = wire.send_array(a, arr)
+            t.join(30)
+            np.testing.assert_array_equal(done["arr"], arr)
+            assert sent == done["n"]
+        finally:
+            a.close()
+            b.close()
+
+    def test_array_pads_stripped_on_receive(self):
+        a, b = socket.socketpair()
+        try:
+            padded = np.arange(20.0).reshape(4, 5)
+            t = threading.Thread(target=lambda: wire.send_array(a, padded, pads=(1, 2)))
+            t.start()
+            got, _ = wire.recv_array(b)
+            t.join(30)
+            np.testing.assert_array_equal(got, padded[:3, :3])
+        finally:
+            a.close()
+            b.close()
+
+    def test_peer_death_mid_frame_is_connection_error(self):
+        a, b = socket.socketpair()
+        frame = wire.pack_frame(wire.T_SEND, {"name": "x"})
+        a.sendall(frame[: len(frame) - 3])  # truncated mid-payload
+        a.close()
+        with pytest.raises(ConnectionError):
+            wire.recv_frame(b)
+        b.close()
+
+    def test_bad_magic_rejected(self):
+        a, b = socket.socketpair()
+        try:
+            a.sendall(b"NOPE" + bytes(9))
+            with pytest.raises(ParameterError, match="magic"):
+                wire.recv_frame(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_hostile_frame_length_capped(self):
+        a, b = socket.socketpair()
+        try:
+            import struct
+
+            a.sendall(struct.pack("<4sBQ", b"ALWF", wire.T_RUN, 1 << 40))
+            with pytest.raises(ParameterError, match="cap"):
+                wire.recv_frame(b)
+        finally:
+            a.close()
+            b.close()
+
+    def test_array_chunk_overflow_rejected(self):
+        a, b = socket.socketpair()
+        try:
+            import struct
+
+            arr = np.ones((2, 2))
+            header = wire.pack_frame(wire.T_ARRAY, wire.array_header(arr))
+            a.sendall(header)
+            a.sendall(struct.pack("<Q", 64) + bytes(64))  # 64 > declared 32
+            ftype, meta, _ = wire.recv_frame(b)
+            with pytest.raises(ParameterError, match="overflow"):
+                wire.recv_array_body(b, meta)
+        finally:
+            a.close()
+            b.close()
+
+    @given(
+        st.dictionaries(
+            st.text(min_size=1, max_size=16),
+            st.integers(-(2**40), 2**40)
+            | st.floats(allow_nan=False, allow_infinity=False)
+            | st.text(max_size=32)
+            | st.booleans()
+            | st.none(),
+            max_size=8,
+        )
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_frame_roundtrip_property(self, payload):
+        a, b = socket.socketpair()
+        try:
+            wire.send_frame(a, wire.T_OK, payload)
+            ftype, got, _ = wire.recv_frame(b)
+            assert (ftype, got) == (wire.T_OK, payload)
+        finally:
+            a.close()
+            b.close()
+
+
+# ---------------------------------------------------------------------------
+# the TCP transport: every verb, loopback parity
+# ---------------------------------------------------------------------------
+
+
+class TestTcpParity:
+    def test_verbs_roundtrip(self, engine):
+        rng = np.random.default_rng(0)
+        a = rng.standard_normal((32, 24)).astype(np.float32)
+        b = rng.standard_normal((24, 16)).astype(np.float32)
+        s = _session(engine, transport="tcp")
+        la, lb = s.send(a), s.send(b)
+        out = s.collect(s.run("elemental", "gemm", la, lb))
+        np.testing.assert_allclose(np.asarray(out), a @ b, rtol=1e-4, atol=1e-4)
+        s.free(la)
+        s.wait(30)
+        s.close()
+        assert engine.stats()["engine"]["available_workers"] == 1
+
+    def test_fail_fast_errors_stay_at_call_site(self, engine):
+        s = _session(engine, transport="tcp")
+        with pytest.raises(LibraryError):
+            s.run_async("nope", "gemm", np.ones((2, 2)), np.ones((2, 2)))
+        with pytest.raises(ShapeError):
+            s.run("elemental", "gemm", np.ones((2, 3)), np.ones((5, 2)))
+        s.close()
+
+    def test_unserializable_run_arg_fails_the_future_not_the_call(self, engine):
+        from repro.core.client import AlchemistContext
+
+        with pytest.warns(DeprecationWarning):
+            ac = AlchemistContext(engine, transport="tcp")
+        ac.register_library("elemental", ELEMENTAL)
+        h = ac.send(np.ones((4, 4)))
+        fut = ac.run_async("elemental", "gemm", h, object())  # must not raise
+        with pytest.raises(ParameterError):
+            fut.result(30)
+        ac.stop()
+
+    def test_engine_errors_cross_the_wire_typed(self, engine):
+        s = _session(engine, transport="tcp")
+        with pytest.raises(SessionError):
+            s.transport._rpc(wire.T_FETCH, {"__ticket": 10**6})
+        s.close()
+
+    def test_bridge_byte_counters_match_loopback(self):
+        """The acceptance parity check: session-level bridge accounting is
+        engine-side in both transports, so an identical workload reports
+        identical send/recv byte totals whether or not a socket is in the
+        path. Fresh engine per run — on a shared one the second run's sends
+        would dedup into attaches via the content store (zero bridge bytes),
+        which is the resident-store feature, not a parity property."""
+        rng = np.random.default_rng(1)
+        a = rng.standard_normal((48, 32)).astype(np.float32)
+        b = rng.standard_normal((32, 24)).astype(np.float32)
+
+        def workload(transport):
+            s = _session(repro.AlchemistEngine(), transport=transport)
+            out = s.collect(s.run("elemental", "gemm", s.send(a), s.send(b)))
+            summary = s.stats.summary()
+            s.close()
+            return np.asarray(out), summary
+
+        out_loop, stats_loop = workload("loopback")
+        out_tcp, stats_tcp = workload("tcp")
+        np.testing.assert_allclose(out_tcp, out_loop, rtol=1e-6, atol=1e-6)
+        for key in ("send_bytes", "recv_bytes", "num_sends", "num_receives"):
+            assert stats_tcp[key] == stats_loop[key], key
+
+    def test_wire_stats_count_real_traffic(self, engine):
+        s = _session(engine, transport="tcp")
+        s.collect(s.send(np.ones((16, 16), dtype=np.float32)))
+        ws = s.transport.wire_stats()
+        # at least the 16x16 f32 payload, twice (send + collect), plus frames
+        assert ws["bytes_sent"] > 1024
+        assert ws["bytes_received"] > 1024
+        assert ws["frames"] >= 4
+        s.close()
+
+
+# ---------------------------------------------------------------------------
+# disconnect semantics
+# ---------------------------------------------------------------------------
+
+
+class TestDisconnect:
+    def _wait_for_free(self, engine, n, timeout=10.0):
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            if engine.stats()["engine"]["available_workers"] == n:
+                return
+            time.sleep(0.02)
+        raise AssertionError(
+            f"pool never returned to {n} free workers: {engine.stats()['engine']}"
+        )
+
+    def test_killed_socket_returns_worker_group_to_pool(self, engine):
+        srv = ensure_server(engine)
+        before = srv.stats["disconnect_releases"]
+        s = _session(engine, transport="tcp")
+        assert engine.stats()["engine"]["available_workers"] == 0
+        s.transport._sock.close()  # client process dies mid-session
+        self._wait_for_free(engine, 1)
+        assert engine.stats()["engine"]["live_sessions"] == 0
+        assert srv.stats["disconnect_releases"] == before + 1
+
+    def test_mid_collect_disconnect_releases_and_queued_connect_proceeds(self, engine):
+        s = _session(engine, transport="tcp")
+        la = s.send(np.ones((64, 64), dtype=np.float32))
+        fut = s.collect_async(la.materialize())
+        fut.result(30)  # engine-side value ready; payload not yet fetched
+        # A second connect queues behind the only worker...
+        got = {}
+
+        def queued_connect():
+            s2 = repro.connect(engine, queue=True, timeout=30)
+            got["n"] = s2.session.num_workers
+            s2.close()
+
+        t = threading.Thread(target=queued_connect)
+        t.start()
+        time.sleep(0.2)
+        # ...then the first client dies mid-collect: its group must free and
+        # the queued admission must complete.
+        s.transport._sock.close()
+        t.join(30)
+        assert got.get("n") == 1
+        self._wait_for_free(engine, 1)
+
+    def test_explicit_close_is_not_a_disconnect(self, engine):
+        srv = ensure_server(engine)
+        before = srv.stats["disconnect_releases"]
+        s = _session(engine, transport="tcp")
+        s.close()
+        assert engine.stats()["engine"]["available_workers"] == 1
+        assert srv.stats["disconnect_releases"] == before
+
+    def test_reconnect_with_token_inside_linger_window(self, engine):
+        srv = EngineServer(engine, linger=10.0)
+        transport = TcpTransport(srv)
+        s = repro.connect(engine, transport=transport)
+        s.register_library("elemental", ELEMENTAL)
+        a = np.arange(12.0, dtype=np.float32).reshape(3, 4)
+        la = s.send(a)
+        transport._sock.close()  # drop; session lingers server-side
+        time.sleep(0.1)
+        assert srv.has_session(transport.token)
+        # next RPC transparently re-dials with the session token
+        out = s.collect(s.run("elemental", "gemm", la, s.send(a.T.copy())))
+        np.testing.assert_allclose(np.asarray(out), a @ a.T, rtol=1e-5, atol=1e-5)
+        assert srv.stats["reconnects"] == 1
+        s.close()
+        assert engine.stats()["engine"]["available_workers"] == 1
+        srv.close()
+
+    def test_linger_expiry_releases_session(self, engine):
+        srv = EngineServer(engine, linger=0.2)
+        transport = TcpTransport(srv)
+        s = repro.connect(engine, transport=transport)
+        transport._sock.close()
+        self._wait_for_free(engine, 1)
+        assert srv.stats["disconnect_releases"] == 1
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# transport selection
+# ---------------------------------------------------------------------------
+
+
+class TestResolution:
+    def test_default_is_loopback(self, monkeypatch):
+        monkeypatch.delenv("REPRO_TRANSPORT", raising=False)
+        assert isinstance(resolve_transport(None), LoopbackTransport)
+
+    def test_env_selects_tcp(self, monkeypatch):
+        monkeypatch.setenv("REPRO_TRANSPORT", "tcp")
+        assert isinstance(resolve_transport(None), TcpTransport)
+
+    def test_unknown_name_rejected(self):
+        with pytest.raises(SessionError, match="unknown transport"):
+            resolve_transport("carrier-pigeon")
+
+    def test_instance_passes_through(self):
+        t = LoopbackTransport()
+        assert resolve_transport(t) is t
+
+    def test_loopback_frames_payload_bytes(self, engine):
+        s = _session(engine, transport="loopback")
+        a = np.ones((32, 32), dtype=np.float32)
+        s.collect(s.send(a))
+        ws = s.transport.wire_stats()
+        assert ws["bytes_sent"] >= 2 * a.nbytes  # send + collect both framed
+        assert ws["frames"] >= 2
+        s.close()
