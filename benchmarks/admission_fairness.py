@@ -1,0 +1,175 @@
+"""Admission fairness + shared worker groups (DESIGN.md §12).
+
+The unified placement scheduler makes two quantitative promises beyond the
+paper's first-free-block allocator:
+
+1. **Bounded starvation.** Under a storm of small connects competing with one
+   engine-sized request, the large ticket is passed by at most ``aging_bound``
+   later-arriving smaller requests before the aging barrier holds the queue
+   for it. ``max_passed_by`` is read off the resolved ticket, so the gate is
+   exact: any scheduler change that lets smalls leapfrog past the bound flips
+   ``fairness_ok`` to 0. Ticket waits (p50/p95) are reported for context but
+   not gated — they are wall clocks.
+
+2. **Zero-byte shared-group attach.** A session declaring affinity for
+   content that is live on another session's worker group *joins* that group:
+   no devices are consumed and every send resolves to a device-buffer view,
+   so the reader's engine-side placement bytes are exactly zero. The byte
+   counters are analytic (shapes + attach decisions), hence deterministic
+   across hosts and emulated-device counts.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import repro
+from benchmarks.common import csv_row
+
+AGING_BOUND = 4
+N_SHARED_MATS = 3
+M, N = 256, 128
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    ordered = sorted(xs)
+    i = min(len(ordered) - 1, int(round(q * (len(ordered) - 1))))
+    return ordered[i]
+
+
+def _fairness_storm() -> Dict:
+    """One large (whole-engine) ticket vs a storm of small connects."""
+    engine = repro.AlchemistEngine(aging_bound=AGING_BOUND)
+    total = engine.num_workers
+    holders = [engine.connect(name=f"hold{i}", num_workers=1) for i in range(total)]
+
+    tickets: Dict[str, object] = {}
+    errors: Dict[str, BaseException] = {}
+
+    def run_large() -> None:
+        try:
+            s = repro.connect(
+                engine,
+                name="large",
+                placement=repro.PlacementRequest(workers=total, deadline=120),
+            )
+            tickets["large"] = s.placement
+            s.close()
+        except BaseException as e:
+            errors["large"] = e
+
+    def run_small(i: int) -> None:
+        try:
+            s = repro.connect(
+                engine,
+                name=f"small{i}",
+                placement=repro.PlacementRequest(workers=1, deadline=120),
+            )
+            tickets[f"small{i}"] = s.placement
+            time.sleep(0.02)  # trivial work, then leave
+            s.close()
+        except BaseException as e:
+            errors[f"small{i}"] = e
+
+    large = threading.Thread(target=run_large)
+    large.start()
+    time.sleep(0.05)  # large is queued first
+    smalls = [
+        threading.Thread(target=run_small, args=(i,)) for i in range(AGING_BOUND + 2)
+    ]
+    for t in smalls:
+        t.start()
+    time.sleep(0.05)
+    # Drain the pool one device at a time: each release lets at most one
+    # small leapfrog the blocked large ticket until the aging barrier trips.
+    for h in holders:
+        engine.release(h)
+        time.sleep(0.03)
+    large.join(timeout=120)
+    for t in smalls:
+        t.join(timeout=120)
+    if errors:
+        raise RuntimeError(f"admission storm failed: {errors}")
+
+    big = tickets["large"]
+    waits_ms = [t.wait_ns / 1e6 for t in tickets.values()]
+    sched = engine.stats()["scheduler"]
+    return {
+        "aging_bound": AGING_BOUND,
+        "max_passed_by": int(big.passed_by),
+        "fairness_ok": int(big.state == "placed" and big.passed_by <= AGING_BOUND),
+        "storm_tickets": len(tickets),
+        "wait_ms_p50": _percentile(waits_ms, 0.50),
+        "wait_ms_p95": _percentile(waits_ms, 0.95),
+        "aged_tickets": sched["aged"],
+        "placed": sched["placed"],
+    }
+
+
+def _shared_group() -> Dict:
+    """A content-affine reader joins the writer's group with zero bytes."""
+    engine = repro.AlchemistEngine()
+    rng = np.random.default_rng(11)
+    mats = [rng.standard_normal((M, N)).astype(np.float32) for _ in range(N_SHARED_MATS)]
+
+    writer = repro.connect(engine, name="writer")
+    refs = [np.asarray(writer.send(m, name=f"m{i}").data()) for i, m in enumerate(mats)]
+
+    reader = repro.connect(
+        engine,
+        name="reader",
+        placement=repro.PlacementRequest(affinity=tuple(mats), deadline=30),
+    )
+    assert reader.placement.shared, "reader must join the writer's worker group"
+    outs = [np.asarray(reader.send(m, name=f"m{i}").data()) for i, m in enumerate(mats)]
+    for ref, out in zip(refs, outs):
+        np.testing.assert_array_equal(ref, out)
+
+    stats = reader.session.stats.summary()
+    sched = engine.stats()["scheduler"]
+    attach_bytes = int(stats["placement_bytes"]) + int(stats["send_bytes"])
+    reader.close()
+    writer.close()
+    return {
+        "shared_group_attach_bytes": attach_bytes,
+        "shared_views": int(stats["shared_views"]),
+        "shared_joins": sched["shared_joins"],
+        "payload_bytes": sum(m.nbytes for m in mats),
+    }
+
+
+def run(report: List[str], metrics: Dict[str, Dict]) -> None:
+    t0 = time.perf_counter()
+    storm = _fairness_storm()
+    storm_us = (time.perf_counter() - t0) * 1e6
+
+    t0 = time.perf_counter()
+    shared = _shared_group()
+    shared_us = (time.perf_counter() - t0) * 1e6
+
+    report.append(
+        csv_row(
+            "admission_fairness_storm",
+            storm_us,
+            f"max_passed_by={storm['max_passed_by']} "
+            f"bound={storm['aging_bound']} "
+            f"wait_p50={storm['wait_ms_p50']:.1f}ms "
+            f"wait_p95={storm['wait_ms_p95']:.1f}ms",
+        )
+    )
+    report.append(
+        csv_row(
+            "admission_shared_group",
+            shared_us,
+            f"attach_bytes={shared['shared_group_attach_bytes']} "
+            f"shared_views={shared['shared_views']} "
+            f"payload_bytes={shared['payload_bytes']}",
+        )
+    )
+    metrics["admission"] = {**storm, **shared}

@@ -46,6 +46,14 @@ GATES = [
     # engine-side bridge counters — parity is a 1-or-fail boolean.
     ("wire", "framing_overhead", "lower"),
     ("wire", "bridge_parity_ok", "higher"),
+    # Placement scheduler (DESIGN.md §12): the aging bound is an exact
+    # invariant (fairness_ok is 1-or-fail; max_passed_by may only shrink),
+    # and a shared-group reader must keep attaching with zero engine-side
+    # bytes (baseline 0 makes the limit 0) across all of its declared views.
+    ("admission", "fairness_ok", "higher"),
+    ("admission", "max_passed_by", "lower"),
+    ("admission", "shared_group_attach_bytes", "lower"),
+    ("admission", "shared_views", "higher"),
 ]
 
 

@@ -71,7 +71,11 @@ def _workload(ac, mats: List[np.ndarray]) -> Tuple[List[np.ndarray], List[float]
 
 
 def _connect(engine, name: str, workers: Optional[int] = None, timeout: Optional[float] = None):
-    ac = repro.connect(engine, workers=workers, name=name, timeout=timeout)
+    ac = repro.connect(
+        engine,
+        name=name,
+        placement=repro.PlacementRequest(workers=workers, deadline=timeout),
+    )
     ac.register_library("elemental", "repro.linalg.library:ElementalLib")
     return ac
 

@@ -23,6 +23,12 @@
   wire_overhead      beyond-paper: TCP transport vs loopback — framing
                      overhead over the raw matrix bytes and engine-side
                      bridge-counter parity (DESIGN.md §11)
+  admission_fairness beyond-paper: unified placement scheduler — a large
+                     ticket under a small-connect storm is passed at most
+                     ``aging_bound`` times (p50/p95 ticket waits reported),
+                     and a content-affine reader joins the writer's shared
+                     worker group with zero engine-side attach bytes
+                     (DESIGN.md §12)
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--only`` takes a
 comma-separated subset; ``--json PATH`` additionally writes the structured
@@ -49,7 +55,7 @@ from typing import Dict, List
 
 SUITE_NAMES = [
     "gemm", "svd", "transfer", "overlap", "offload", "spill", "cross",
-    "overlap_spill", "wire",
+    "overlap_spill", "wire", "admission",
 ]
 
 
@@ -82,6 +88,7 @@ def main() -> None:
         runtime.ensure_tuned()
 
     from benchmarks import (
+        admission_fairness,
         cross_session,
         gemm_table1,
         offload_plan,
@@ -104,6 +111,7 @@ def main() -> None:
         "cross": cross_session.run,
         "overlap_spill": overlap_spill.run,
         "wire": wire_overhead.run,
+        "admission": admission_fairness.run,
     }
 
     if args.only:

@@ -28,11 +28,12 @@ from repro.core.futures import AlFuture
 from repro.core.handles import AlMatrix
 from repro.core.layouts import GRID, REPLICATED, ROW, LayoutSpec
 from repro.core.policy import Eager, ExecutionPolicy, Pipelined, Planned
+from repro.core.scheduler import PlacementRequest
 
 __version__ = "2.0.0"
 
 __all__ = [
-    # v2 surface (DESIGN.md §9)
+    # v2 surface (DESIGN.md §9, §12)
     "connect",
     "Session",
     "AlArray",
@@ -40,6 +41,7 @@ __all__ = [
     "Eager",
     "Pipelined",
     "Planned",
+    "PlacementRequest",
     # engine + building blocks
     "AlchemistEngine",
     "AlFuture",

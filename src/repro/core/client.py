@@ -49,6 +49,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import futures as futures_mod
+from repro.core import handles as handles_mod
 from repro.core import params as params_codec
 from repro.core.errors import LibraryError, SessionError
 from repro.core.expr import (
@@ -72,10 +73,61 @@ from repro.core.relayout import (
     transfer_cost,
 )
 from repro.core.resident import ResidentEntry, ResidentStore
+from repro.core.scheduler import PlacementRequest, PlacementTicket
 from repro.core.transport import Transport, resolve_transport
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
     from repro.core.engine import AlchemistEngine
+
+# Sentinel distinguishing "kwarg not passed" from an explicit None/() on the
+# deprecated v1 admission kwargs (DESIGN.md §12 migration table).
+_UNSET = object()
+
+
+def _coerce_placement(
+    placement: Optional[PlacementRequest],
+    *,
+    workers: Optional[int] = None,
+    grid: Optional[Tuple[int, int]] = None,
+    datasets: Any = _UNSET,
+    queue: Any = _UNSET,
+    timeout: Any = _UNSET,
+    default_queue: bool,
+) -> PlacementRequest:
+    """Fold the v1 admission kwargs into a :class:`PlacementRequest`.
+
+    ``workers``/``grid`` stay first-class sugar (no warning); the v1
+    admission trio (``datasets``/``queue``/``timeout``) warns and maps onto
+    ``affinity``/``deadline``: ``queue=False`` → ``deadline=0`` (fail fast),
+    ``queue=True, timeout=t`` → ``deadline=t`` (None waits indefinitely).
+    """
+    legacy = [
+        kw
+        for kw, value in (("datasets", datasets), ("queue", queue), ("timeout", timeout))
+        if value is not _UNSET
+    ]
+    if legacy:
+        warnings.warn(
+            f"{', '.join(legacy)} kwarg(s) are deprecated; pass "
+            "placement=PlacementRequest(affinity=..., deadline=...) instead "
+            "(DESIGN.md §12 migration table)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    if placement is not None:
+        if workers is not None or grid is not None or legacy:
+            raise SessionError(
+                "pass either placement=PlacementRequest(...) or the legacy "
+                "workers/grid/datasets/queue/timeout kwargs, not both"
+            )
+        return placement
+    queue = default_queue if queue is _UNSET else bool(queue)
+    timeout = None if timeout is _UNSET else timeout
+    datasets = () if datasets is _UNSET else datasets
+    deadline = (None if timeout is None else float(timeout)) if queue else 0.0
+    return PlacementRequest(
+        workers=workers, grid=grid, affinity=tuple(datasets), deadline=deadline
+    )
 
 
 class ClientCore:
@@ -92,9 +144,10 @@ class ClientCore:
     shared ceiling: sends and routine outputs are admitted against it,
     spilling least-recently/last-used matrices to a pinned host store and
     refilling them transparently on next use (DESIGN.md §7). Default:
-    unlimited. ``datasets``/``queue``/``timeout`` are the admission-aware
-    connect parameters (DESIGN.md §9), forwarded to
-    :meth:`AlchemistEngine.allocate`.
+    unlimited. Admission is declarative (DESIGN.md §12): pass
+    ``placement=PlacementRequest(...)`` (workers, priority, content
+    affinity, deadline, shareability); the v1 ``datasets``/``queue``/
+    ``timeout`` kwargs keep working through a deprecation shim.
     """
 
     def __init__(
@@ -107,9 +160,10 @@ class ClientCore:
         client_layout: LayoutSpec = ROW,
         engine_layout: LayoutSpec = GRID,
         hbm_budget: Optional[int] = None,
-        datasets: Sequence[Any] = (),
-        queue: bool = False,
-        timeout: Optional[float] = None,
+        placement: Optional[PlacementRequest] = None,
+        datasets: Any = _UNSET,
+        queue: Any = _UNSET,
+        timeout: Any = _UNSET,
         transport: Union[Transport, str, None] = None,
     ):
         self.engine = engine
@@ -117,6 +171,15 @@ class ClientCore:
         self.engine_layout = engine_layout
         self._planner = None
         self._stopped = False
+        placement = _coerce_placement(
+            placement,
+            workers=num_workers,
+            grid=grid,
+            datasets=datasets,
+            queue=queue,
+            timeout=timeout,
+            default_queue=False,  # the v1 core failed fast by default
+        )
         # The wire seam (DESIGN.md §11): every verb below reaches the engine
         # through this transport. Default comes from REPRO_TRANSPORT, so an
         # unmodified test suite can run over a localhost socket.
@@ -125,12 +188,8 @@ class ClientCore:
             self,
             dict(
                 name=name,
-                num_workers=num_workers,
-                grid=grid,
                 hbm_budget=hbm_budget,
-                datasets=datasets,
-                queue=queue,
-                timeout=timeout,
+                placement=placement,
             ),
         )
 
@@ -345,6 +404,13 @@ class ClientCore:
         (producer freed, orphan evicted by the retention cap), the placement
         falls back to it and is accounted as a genuine bridge send — never a
         spurious failure, never a wait on a handle that cannot materialize.
+
+        Shared worker groups (DESIGN.md §12): when this session sits on the
+        *same* worker group (same devices, same mesh geometry) as a live
+        materialized placement of the content, the attach becomes a zero-byte
+        **view** over that placement's device array — no ``device_put``, no
+        governor charge (the source is pinned instead) — which is what makes
+        the scheduler's shared-group join zero-byte engine-side.
         """
         sess = self.session
         store = self.engine.residents
@@ -360,6 +426,27 @@ class ClientCore:
         def task() -> AlMatrix:
             admitted = 0
             try:
+                # Zero-byte path first: a live placement of these bytes on
+                # this exact worker group can be shared in place. Checked and
+                # committed under the governor lock so the source cannot be
+                # spilled between the check and the pin.
+                src = self._shared_view_source(entry)
+                if src is not None:
+                    with sess.memgov.lock:
+                        if src.state == handles_mod.MATERIALIZED and src._data is not None:
+                            h._host_fallback = src._host_fallback
+                            h.materialize(
+                                src._data,
+                                pads=(
+                                    src._data.shape[0] - h.shape[0],
+                                    src._data.shape[1] - h.shape[1],
+                                ),
+                            )
+                            sess.memgov.register_view(h, src)
+                            sess.stats.record_shared_view()
+                            sess.stats.record_cross_session_reuse()
+                            store.record_attach()
+                            return h
                 # May block on the producing session's in-flight transfer —
                 # a cross-session wait on a send task that depends on no one,
                 # so it cannot deadlock the FIFOs (pending attach placements
@@ -385,6 +472,9 @@ class ClientCore:
                 out = plan.apply(x)
                 if plan.fused_path in FUSED_PATHS:
                     sess.stats.record_fused_relayout()
+                # Engine-side bytes this placement moved (a shared-group view
+                # records none — that is the zero-byte acceptance criterion).
+                sess.stats.record_placement_bytes(int(out.nbytes))
                 if block:
                     out.block_until_ready()
                 h._host_fallback = payload
@@ -421,6 +511,32 @@ class ClientCore:
                 sess.memgov.unreserve(reserve_bytes)
 
         return sess.tasks.submit(task, label=f"attach:{name or h.id}")
+
+    def _shared_view_source(self, entry: ResidentEntry) -> Optional[AlMatrix]:
+        """A live materialized placement of ``entry`` sharable in place.
+
+        The source must belong to another session on the *same* worker group
+        with the same mesh geometry and engine layout — then its device
+        array is directly valid for this session's handles and the attach
+        needs no engine-side bytes (DESIGN.md §12 shared worker groups).
+        """
+        sess = self.session
+        my_ids = [d.id for d in sess.worker_devices]
+        for src in entry.live_handles():
+            if src.session_id == sess.id:
+                continue
+            if src.layout != self.engine_layout:
+                continue
+            src_sess = self.engine.sessions.get(src.session_id)
+            if src_sess is None:
+                continue
+            if [d.id for d in src_sess.worker_devices] != my_ids:
+                continue
+            if src_sess.mesh.devices.shape != sess.mesh.devices.shape:
+                continue
+            if src.state == handles_mod.MATERIALIZED and src._data is not None:
+                return src
+        return None
 
     def collect_async(self, h: Union[AlMatrix, AlFuture]) -> AlFuture:
         """Future of the client-side array for ``h`` (which may itself be a
@@ -874,27 +990,42 @@ class Session(ClientCore):
         grid: Optional[Tuple[int, int]] = None,
         hbm_budget: Optional[int] = None,
         policy: PolicyLike = None,
-        datasets: Sequence[Any] = (),
-        queue: bool = True,
-        timeout: Optional[float] = None,
+        placement: Optional[PlacementRequest] = None,
+        datasets: Any = _UNSET,
+        queue: Any = _UNSET,
+        timeout: Any = _UNSET,
         client_layout: LayoutSpec = ROW,
         engine_layout: LayoutSpec = GRID,
         transport: Union[Transport, str, None] = None,
     ):
         self._policy = as_policy(policy)
-        super().__init__(
-            engine,
-            workers,
-            name=name,
+        # Coerce here (not in the core) so the v2 default applies: a Session
+        # queues indefinitely unless the request says otherwise.
+        placement = _coerce_placement(
+            placement,
+            workers=workers,
             grid=grid,
-            client_layout=client_layout,
-            engine_layout=engine_layout,
-            hbm_budget=hbm_budget,
             datasets=datasets,
             queue=queue,
             timeout=timeout,
+            default_queue=True,
+        )
+        super().__init__(
+            engine,
+            name=name,
+            client_layout=client_layout,
+            engine_layout=engine_layout,
+            hbm_budget=hbm_budget,
+            placement=placement,
             transport=transport,
         )
+
+    # -- placement ------------------------------------------------------------
+    @property
+    def placement(self) -> PlacementTicket:
+        """The resolved placement ticket (DESIGN.md §12): devices, shared or
+        private, queue wait in ns, and the scheduler's scoring breakdown."""
+        return self.session.placement
 
     # -- policy ---------------------------------------------------------------
     @property
@@ -971,27 +1102,28 @@ def connect(
     grid: Optional[Tuple[int, int]] = None,
     hbm_budget: Optional[int] = None,
     policy: PolicyLike = None,
-    datasets: Sequence[Any] = (),
-    queue: bool = True,
-    timeout: Optional[float] = None,
+    placement: Optional[PlacementRequest] = None,
+    datasets: Any = _UNSET,
+    queue: Any = _UNSET,
+    timeout: Any = _UNSET,
     client_layout: LayoutSpec = ROW,
     engine_layout: LayoutSpec = GRID,
     transport: Union[Transport, str, None] = None,
 ) -> Session:
     """Connect an application to an :class:`AlchemistEngine` (DESIGN.md §9).
 
-    - ``workers`` / ``grid`` size the dedicated worker group (default: every
-      currently free device).
+    - ``placement`` is the declarative admission request (DESIGN.md §12): a
+      :class:`~repro.core.scheduler.PlacementRequest` naming the group size,
+      priority, content affinity, admission deadline, and whether a shared
+      worker group may serve it. The resolved ticket is exposed as
+      ``session.placement``.
+    - ``workers`` / ``grid`` remain sugar for a request with just a size
+      (default: every currently free device, queueing indefinitely).
     - ``policy`` selects execution: ``"planned"`` (default), ``"pipelined"``,
       ``"eager"`` — an :class:`ExecutionPolicy` name, class, or instance.
-    - ``queue=True`` makes admission wait (bounded by ``timeout`` seconds)
-      when the engine cannot place the group *now*, instead of failing;
-      :class:`~repro.core.errors.AdmissionTimeout` is raised if the wait
-      expires — before any worker group or governor registration exists.
-    - ``datasets`` declares content the session will send (arrays, content
-      keys, or AlArrays): placement prefers the free device block whose
-      resident-store entries those keys can reuse, so warm content attaches
-      instead of re-crossing the bridge.
+    - ``datasets`` / ``queue`` / ``timeout`` are the deprecated v1 admission
+      kwargs; they keep working through a shim that folds them into the
+      request (``affinity`` / ``deadline`` — see the §12 migration table).
     - ``hbm_budget`` folds into the engine-wide governor ceiling (§7).
     - ``transport`` selects the wire (DESIGN.md §11): ``"loopback"``
       (default; in-process, frames still encoded/decoded) or ``"tcp"``
@@ -999,6 +1131,13 @@ def connect(
       EngineServer` wrapping the engine). ``REPRO_TRANSPORT`` sets the
       process-wide default.
     """
+    legacy: Dict[str, Any] = {}
+    if datasets is not _UNSET:
+        legacy["datasets"] = datasets
+    if queue is not _UNSET:
+        legacy["queue"] = queue
+    if timeout is not _UNSET:
+        legacy["timeout"] = timeout
     return Session(
         engine,
         name=name,
@@ -1006,12 +1145,11 @@ def connect(
         grid=grid,
         hbm_budget=hbm_budget,
         policy=policy,
-        datasets=datasets,
-        queue=queue,
-        timeout=timeout,
+        placement=placement,
         client_layout=client_layout,
         engine_layout=engine_layout,
         transport=transport,
+        **legacy,
     )
 
 

@@ -11,43 +11,44 @@ The client side lives in :mod:`repro.core.client` (DESIGN.md §9): the v2
 with the v1 :class:`~repro.core.client.AlchemistContext` kept as a
 deprecation shim over the same transport core.
 
-Since PR 5 allocation is **admission-aware** (DESIGN.md §9): the paper's
-"assuming a sufficient number of workers is available" failure mode (§2.4)
-becomes a bounded *queue* — ``allocate(queue=True, timeout=...)`` waits for a
-worker group to free up instead of failing, raising
-:class:`~repro.core.errors.AdmissionTimeout` only when the wait expires — and
-placement is **content-affine**: a session that declares the datasets it will
-send is placed on the free device block whose resident-store entries
-(DESIGN.md §8) those content keys can reuse, with ``memgov.pressure()``
-recorded at each admission decision for the :meth:`AlchemistEngine.stats`
-snapshot.
+Since PR 8 all admission flows through the unified placement scheduler
+(DESIGN.md §12): callers describe what they need with a declarative
+:class:`~repro.core.scheduler.PlacementRequest` (workers, priority, content
+affinity, deadline, shareability) and the engine-owned
+:class:`~repro.core.scheduler.PlacementScheduler` turns it into a
+:class:`~repro.core.scheduler.PlacementTicket` — a FIFO queue entry with
+smallest-fit + content-affinity scoring, anti-starvation aging, pressure
+watermarks over ``memgov.pressure()``, and refcounted shared worker groups.
+The v1 kwargs (``queue=``, ``timeout=``, ``datasets=``) keep working through
+a deprecation shim that folds them into a request.
 """
 
 from __future__ import annotations
 
-import threading
-import time
+import dataclasses
+import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core.errors import AdmissionTimeout, WorkerAllocationError
+from repro.core.errors import WorkerAllocationError
 from repro.core.expr import content_key
 from repro.core.layouts import AXIS_DATA, AXIS_MODEL
 from repro.core.memgov import MemoryGovernor
 from repro.core.resident import ResidentStore
+from repro.core.scheduler import (
+    PlacementRequest,
+    PlacementScheduler,
+    PlacementTicket,
+    near_square_grid as _near_square_grid,  # noqa: F401  (legacy import site)
+)
 from repro.core.session import Session
 
-
-def _near_square_grid(n: int) -> Tuple[int, int]:
-    """Largest divisor pair (r, c), r <= sqrt(n) <= c — Elemental's default
-    process-grid heuristic."""
-    r = int(np.floor(np.sqrt(n)))
-    while n % r:
-        r -= 1
-    return r, n // r
+# Sentinel distinguishing "kwarg not passed" from an explicit None/() on the
+# deprecated v1 admission kwargs.
+_UNSET = object()
 
 
 def _dataset_keys(datasets: Sequence[Any]) -> List[Tuple]:
@@ -82,19 +83,73 @@ def _dataset_keys(datasets: Sequence[Any]) -> List[Tuple]:
     return keys
 
 
+def _coerce_request(
+    placement: Optional[PlacementRequest],
+    num_workers: Optional[int] = None,
+    grid: Optional[Tuple[int, int]] = None,
+    datasets: Any = _UNSET,
+    queue: Any = _UNSET,
+    timeout: Any = _UNSET,
+) -> PlacementRequest:
+    """Fold v1 admission kwargs into a :class:`PlacementRequest`.
+
+    ``workers``/``grid`` remain first-class sugar (no warning); the v1
+    admission trio (``datasets``/``queue``/``timeout``) warns and maps onto
+    ``affinity``/``deadline`` per the DESIGN.md §12 migration table.
+    """
+    legacy = [
+        name
+        for name, value in (("datasets", datasets), ("queue", queue), ("timeout", timeout))
+        if value is not _UNSET
+    ]
+    if legacy:
+        warnings.warn(
+            f"{', '.join(legacy)} kwarg(s) are deprecated; pass "
+            "placement=PlacementRequest(affinity=..., deadline=...) instead "
+            "(DESIGN.md §12 migration table)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    if placement is not None:
+        if num_workers is not None or grid is not None or legacy:
+            raise WorkerAllocationError(
+                "pass either placement=PlacementRequest(...) or the legacy "
+                "workers/grid/datasets/queue/timeout kwargs, not both"
+            )
+        return placement
+    queue = False if queue is _UNSET else bool(queue)
+    timeout = None if timeout is _UNSET else timeout
+    datasets = () if datasets is _UNSET else datasets
+    # v1 deadline semantics: queue=False fails fast regardless of timeout;
+    # queue=True waits for `timeout` seconds (None = indefinitely).
+    deadline = (None if timeout is None else float(timeout)) if queue else 0.0
+    return PlacementRequest(
+        workers=num_workers,
+        grid=grid,
+        affinity=tuple(datasets),
+        deadline=deadline,
+    )
+
+
 class AlchemistEngine:
     """The Alchemist server: owns the worker (device) pool, hands out
-    sessions with dedicated worker-group mesh slices, and holds the two
-    engine-scoped services every session shares (DESIGN.md §7/§8):
+    sessions with dedicated worker-group mesh slices, and holds the
+    engine-scoped services every session shares (DESIGN.md §7/§8/§12):
 
     - ``memgov`` — the engine-wide memory governor. ``hbm_budget`` caps the
       *combined* resident footprint of all sessions (each session may lower
       the shared ceiling further via a per-session ``hbm_budget``);
+      ``pressure_watermarks=(high, low)`` — fractions of the effective
+      budget — additionally gate new private placements on governor
+      pressure, with hysteresis (block above high, resume below low);
     - ``residents`` — the content-addressed resident store that dedups
       byte-identical sends across sessions and migrates uniquely-referenced
       content host-side when its session stops. ``share_residents=False``
       restores the session-scoped baseline (every session ships its own
-      copy); ``host_retention_bytes`` bounds migrated-content host memory.
+      copy); ``host_retention_bytes`` bounds migrated-content host memory;
+    - ``scheduler`` — the unified placement scheduler: FIFO ticket queue
+      with smallest-fit + content-affinity scoring, an ``aging_bound``
+      anti-starvation barrier, and refcounted shared worker groups.
     """
 
     def __init__(
@@ -105,31 +160,29 @@ class AlchemistEngine:
         share_residents: bool = True,
         host_retention_bytes: Optional[int] = None,
         async_spill: bool = True,
+        aging_bound: int = 4,
+        pressure_watermarks: Optional[Tuple[float, float]] = None,
     ):
         self.name = name
         self.devices: List[jax.Device] = list(devices if devices is not None else jax.devices())
         if not self.devices:
             raise WorkerAllocationError("engine started with an empty device pool")
-        self._free: List[jax.Device] = list(self.devices)
-        self._lock = threading.Lock()
-        # Admission queue (DESIGN.md §9): allocations that cannot be placed
-        # now wait on this condition; release()/failed-connect cleanup notify.
-        self._admission = threading.Condition(self._lock)
-        self._queued = 0  # allocations currently waiting for a worker group
-        self.admissions: Dict[str, Any] = {
-            "immediate": 0,  # placed without waiting
-            "queued": 0,  # placed after waiting in the admission queue
-            "timeouts": 0,  # gave up waiting (AdmissionTimeout)
-            "affinity_hits": 0,  # placements steered by declared-dataset reuse
-            "last_queued_pressure": None,  # memgov.pressure() when a wait began
-        }
         self.sessions: Dict[int, Session] = {}
         # async_spill=False restores the synchronous copy-out baseline —
         # benchmarks/overlap_spill.py uses it as the numerics control.
         self.memgov = MemoryGovernor(
             budget=hbm_budget, name=f"{name}-memgov", async_spill=async_spill
         )
+        if pressure_watermarks is not None:
+            high, low = pressure_watermarks
+            self.memgov.set_watermarks(high, low)
         self.residents = ResidentStore(enabled=share_residents, retain_bytes=host_retention_bytes)
+        self.scheduler = PlacementScheduler(
+            self.devices,
+            memgov=self.memgov,
+            residents=self.residents,
+            aging_bound=aging_bound,
+        )
 
     # -- worker allocation ---------------------------------------------------
     @property
@@ -138,140 +191,82 @@ class AlchemistEngine:
 
     @property
     def available_workers(self) -> int:
-        return len(self._free)
+        return len(self.scheduler.free_devices)
 
     @property
     def queued_connects(self) -> int:
-        """Allocation requests currently waiting for admission."""
-        return self._queued
+        """Admission tickets currently waiting in the scheduler queue."""
+        return self.scheduler.queued
+
+    @property
+    def admissions(self) -> Dict[str, Any]:
+        """The scheduler's externally-visible admission counters."""
+        return self.scheduler.admissions
+
+    @property
+    def _free(self) -> List[jax.Device]:
+        """Free pool in canonical order (kept readable for legacy probes)."""
+        return self.scheduler.free_devices
+
+    def _submit(self, request: PlacementRequest) -> PlacementTicket:
+        """Resolve affinity to content keys and queue the request."""
+        affinity = request.affinity or ()
+        # Hash declared datasets only when affinity can actually apply — the
+        # signal is discarded with the store disabled, and content_key reads
+        # every byte of every declared array.
+        keys = _dataset_keys(affinity) if affinity and self.residents.enabled else []
+        return self.scheduler.submit(request, keys=keys)
+
+    def _mesh_for(self, ticket: PlacementTicket) -> Mesh:
+        rows, cols = ticket.grid
+        return Mesh(
+            np.asarray(ticket.devices, dtype=object).reshape(rows, cols),
+            (AXIS_DATA, AXIS_MODEL),
+        )
 
     def allocate(
         self,
         num_workers: Optional[int] = None,
         grid: Optional[Tuple[int, int]] = None,
         *,
-        datasets: Sequence[Any] = (),
-        queue: bool = False,
-        timeout: Optional[float] = None,
+        datasets: Any = _UNSET,
+        queue: Any = _UNSET,
+        timeout: Any = _UNSET,
+        placement: Optional[PlacementRequest] = None,
     ) -> Tuple[Mesh, List[jax.Device]]:
         """Carve a worker group out of the free pool.
 
-        With ``queue=False`` (the v1 default) an unplaceable request raises
-        :class:`WorkerAllocationError` immediately. With ``queue=True`` it
-        waits — bounded by ``timeout`` seconds — until ``release`` returns
-        enough devices, raising :class:`AdmissionTimeout` if the wait
-        expires; a request larger than the whole engine still fails fast
-        (it can never be placed). ``datasets`` steers placement: among the
-        contiguous free blocks that fit, the one whose devices last held the
-        declared content keys (DESIGN.md §8) is preferred, so warm
-        resident-store entries are reused in place.
+        v2 callers pass ``placement=PlacementRequest(...)``; the positional
+        ``num_workers``/``grid`` remain sugar for a fail-fast private request
+        and the v1 ``datasets``/``queue``/``timeout`` kwargs warn and fold
+        into the request. Raw allocations are always *private* (no shared
+        group can outlive an unbound device list) and the caller owns
+        returning the devices. Prefer :meth:`connect`, which binds the
+        placement to a session for refcounted release.
         """
-        # An explicitly non-positive request can never be placed — fail fast
-        # even when queueing (only ``num_workers=None`` on a momentarily
-        # empty pool legitimately waits: it means "all free devices").
-        if grid is not None and grid[0] * grid[1] <= 0:
-            raise WorkerAllocationError(f"requested a {grid[0]}x{grid[1]} grid")
-        if num_workers is not None and num_workers <= 0:
-            raise WorkerAllocationError(f"requested {num_workers} workers")
-        # Hash declared datasets only when affinity can actually apply — the
-        # signal is discarded with the store disabled, and content_key reads
-        # every byte of every declared array.
-        keys = _dataset_keys(datasets) if datasets and self.residents.enabled else []
-        deadline = None if timeout is None else time.monotonic() + timeout
-        queued = False
-        with self._admission:
-            # Pin the request size once, at request time. ``num_workers=None``
-            # means "all free devices" *as seen now* — on a drained pool it
-            # means the whole engine. Re-deriving n at each queue wakeup would
-            # degrade a queued all-free request to "the first freed device"
-            # (whoever releases one worker ends the wait with n=1).
-            if grid is not None:
-                r, c = grid
-                n = r * c
-            elif num_workers is not None:
-                n = num_workers
-                r, c = _near_square_grid(n)
-            else:
-                n = len(self._free) if self._free else len(self.devices)
-                r, c = _near_square_grid(n)
-            try:
-                while True:
-                    if n > len(self.devices):
-                        # Never placeable: fail fast even when queueing.
-                        raise WorkerAllocationError(
-                            f"requested {n} workers but the engine only has "
-                            f"{self.num_workers}"
-                        )
-                    if 0 < n <= len(self._free):
-                        devs = self._pick_block(n, keys)
-                        self._free = [d for d in self._free if d not in devs]
-                        self.admissions["queued" if queued else "immediate"] += 1
-                        break
-                    if not queue:
-                        raise WorkerAllocationError(
-                            f"requested {n} workers but only {len(self._free)} of "
-                            f"{self.num_workers} are available"
-                        )
-                    if not queued:
-                        queued = True
-                        self._queued += 1
-                        # Forecast at queue time — surfaced via stats() so an
-                        # operator can see what load queued admissions faced.
-                        self.admissions["last_queued_pressure"] = self.memgov.pressure()
-                    remaining = None if deadline is None else deadline - time.monotonic()
-                    if remaining is not None and remaining <= 0:
-                        self.admissions["timeouts"] += 1
-                        raise AdmissionTimeout(
-                            f"connect queued for {timeout}s waiting for "
-                            f"{n} worker(s); {len(self._free)} of "
-                            f"{self.num_workers} free"
-                        )
-                    self._admission.wait(remaining)
-            finally:
-                if queued:
-                    self._queued -= 1
-        mesh = Mesh(np.asarray(devs, dtype=object).reshape(r, c), (AXIS_DATA, AXIS_MODEL))
-        return mesh, devs
+        request = _coerce_request(placement, num_workers, grid, datasets, queue, timeout)
+        if request.allow_shared:
+            request = dataclasses.replace(request, allow_shared=False)
+        ticket = self._submit(request)
+        self.scheduler.orphan(ticket)
+        return self._mesh_for(ticket), list(ticket.devices)
 
     def _pick_block(self, n: int, keys: Sequence[Tuple]) -> List[jax.Device]:
-        """Choose ``n`` devices from the free pool (caller holds the lock).
-
-        Default: the first free block, in canonical device order (contiguous
-        worker groups, §2.4). With declared dataset keys and a non-empty
-        resident store, contiguous candidate windows are scored by overlap
-        with the devices that last held each key's content — the session
-        lands where its data is warm (DESIGN.md §9 store-aware placement).
-        """
-        if keys and self.residents.enabled:
-            affinity = self.residents.device_affinity(keys)
-            if affinity:
-                best_i, best_score = 0, 0
-                for i in range(len(self._free) - n + 1):
-                    ids = {d.id for d in self._free[i : i + n]}
-                    score = sum(len(ids & devs) for devs in affinity)
-                    if score > best_score:
-                        best_i, best_score = i, score
-                if best_score > 0:
-                    self.admissions["affinity_hits"] += 1
-                return list(self._free[best_i : best_i + n])
-        return list(self._free[:n])
+        """Legacy scoring probe: choose ``n`` free devices without consuming
+        them (DESIGN.md §12 smallest-fit + content-affinity scoring)."""
+        usable_keys = list(keys) if (keys and self.residents.enabled) else []
+        return self.scheduler.pick_block(n, usable_keys)
 
     def release(self, session: Session) -> None:
-        with self._admission:
-            owned = self.sessions.pop(session.id, None) is not None
+        owned = self.sessions.pop(session.id, None) is not None
         # Drain the session's task queue BEFORE the devices go back in the
         # pool: a concurrent connect() must never be handed devices whose old
         # session still has tasks dispatching (disjoint worker groups, §2.4).
         session.close()
         if owned:
-            with self._admission:
-                # Restore the pool in canonical device order: naive appending
-                # fragments the pool across connect/stop cycles, and a later
-                # allocate would hand out a scrambled, non-contiguous mesh
-                # slice (worker groups should be contiguous blocks).
-                free = set(self._free) | set(session.worker_devices)
-                self._free = [d for d in self.devices if d in free]
-                self._admission.notify_all()  # wake queued connects
+            # The scheduler drops a group refcount; the pool is restored in
+            # canonical device order only when the last reader leaves.
+            self.scheduler.release_session(session.id, session.worker_devices)
 
     def connect(
         self,
@@ -280,53 +275,61 @@ class AlchemistEngine:
         grid: Optional[Tuple[int, int]] = None,
         hbm_budget: Optional[int] = None,
         *,
-        datasets: Sequence[Any] = (),
-        queue: bool = False,
-        timeout: Optional[float] = None,
+        placement: Optional[PlacementRequest] = None,
+        datasets: Any = _UNSET,
+        queue: Any = _UNSET,
+        timeout: Any = _UNSET,
     ) -> Session:
-        mesh, devs = self.allocate(
-            num_workers, grid, datasets=datasets, queue=queue, timeout=timeout
-        )
+        request = _coerce_request(placement, num_workers, grid, datasets, queue, timeout)
+        ticket = self._submit(request)
         try:
             session = Session(
                 name=name,
-                mesh=mesh,
-                worker_devices=devs,
+                mesh=self._mesh_for(ticket),
+                worker_devices=list(ticket.devices),
                 hbm_budget=hbm_budget,
                 memgov=self.memgov,
                 residents=self.residents,
             )
         except BaseException:
             # A rejected session (e.g. an invalid budget) must hand its
-            # worker group straight back — in canonical order, like release.
-            with self._admission:
-                free = set(self._free) | set(devs)
-                self._free = [d for d in self.devices if d in free]
-                self._admission.notify_all()
+            # placement straight back — refcounted, so a shared join merely
+            # drops the reader count.
+            self.scheduler.abort(ticket)
             raise
+        session.placement = ticket
+        self.scheduler.bind(ticket, session.id)
         self.sessions[session.id] = session
         return session
 
     # -- observability -------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
-        """One merged engine snapshot (DESIGN.md §9): the worker pool and
-        admission queue, every live session's ``SessionStats``, the
-        engine-wide governor (``pressure()``, budget, high water), and the
-        resident store. This is what ``benchmarks/run.py --json`` embeds."""
-        with self._admission:
-            pool = {
-                "workers": self.num_workers,
-                "available_workers": len(self._free),
-                "queued_connects": self._queued,
-                "live_sessions": len(self.sessions),
-                "admissions": dict(self.admissions),
-            }
-            sessions = dict(self.sessions)
+        """One merged engine snapshot (DESIGN.md §9/§12): the worker pool and
+        admission queue, every live session's ``SessionStats`` (plus its
+        resolved placement ticket), the engine-wide governor (``pressure()``,
+        budget, high water), the resident store, and the scheduler section
+        (queue depth, ticket lifecycle counters, shared groups, scoring
+        hits). This is what ``benchmarks/run.py --json`` embeds."""
+        pool = {
+            "workers": self.num_workers,
+            "available_workers": self.available_workers,
+            "queued_connects": self.queued_connects,
+            "live_sessions": len(self.sessions),
+            "admissions": dict(self.admissions),
+        }
+        sessions = dict(self.sessions)
         mg = self.memgov
         return {
             "engine": pool,
             "sessions": {
-                str(sid): {"name": s.name, "workers": s.num_workers, **s.stats.summary()}
+                str(sid): {
+                    "name": s.name,
+                    "workers": s.num_workers,
+                    "placement": (
+                        s.placement.summary() if s.placement is not None else None
+                    ),
+                    **s.stats.summary(),
+                }
                 for sid, s in sessions.items()
             },
             "memgov": {
@@ -337,6 +340,7 @@ class AlchemistEngine:
                 "budget": mg.budget,
             },
             "residents": self.residents.stats(),
+            "scheduler": self.scheduler.stats(),
         }
 
     def shutdown(self) -> None:

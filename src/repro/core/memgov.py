@@ -65,7 +65,7 @@ import dataclasses
 import itertools
 import threading
 import time
-from typing import TYPE_CHECKING, Dict, Iterable, List, Optional, Set
+from typing import TYPE_CHECKING, Dict, Iterable, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -199,6 +199,16 @@ class MemoryGovernor:
         self._in_flight_bytes = 0
         self._transfer: Optional[TransferExecutor] = None
         self._staging = _StagingPool()
+        # Pressure watermarks (DESIGN.md §12): fractions of the effective
+        # budget gating new *private* placements in the scheduler, with
+        # hysteresis — block above high, resume only below low.
+        self._watermarks: Optional[Tuple[float, float]] = None
+        self._gated = False
+        # Shared-group views (DESIGN.md §12): view handle id -> source handle
+        # id. A view is never charged (its bytes belong to the source
+        # placement); instead the source is pinned so it cannot be spilled
+        # out from under a reader in another session.
+        self._view_sources: Dict[int, int] = {}
 
     # -- session membership ---------------------------------------------------
     def attach_session(
@@ -304,6 +314,61 @@ class MemoryGovernor:
         failed); drop it from the forecast."""
         with self._lock:
             self._reserved = max(self._reserved - max(int(nbytes), 0), 0)
+
+    # -- pressure watermarks (DESIGN.md §12) ---------------------------------
+    def set_watermarks(self, high: float, low: float) -> None:
+        """Enable (or retune) the admission pressure gate.
+
+        ``high``/``low`` are fractions of the *effective* budget. When
+        ``pressure()`` rises above ``high * budget`` new private placements
+        stop admitting; they resume only once pressure falls below
+        ``low * budget`` (hysteresis, so admission does not flap at the
+        boundary). Pass via ``AlchemistEngine(pressure_watermarks=(h, l))``.
+        """
+        if not (0.0 < low <= high):
+            raise ValueError(
+                f"watermarks must satisfy 0 < low <= high, got high={high}, low={low}"
+            )
+        with self._lock:
+            self._watermarks = (float(high), float(low))
+            self._gated = False
+
+    def clear_watermarks(self) -> None:
+        """Disable the pressure gate (the free-pool count gates alone)."""
+        with self._lock:
+            self._watermarks = None
+            self._gated = False
+
+    @property
+    def watermarks(self) -> Optional[Tuple[float, float]]:
+        with self._lock:
+            return self._watermarks
+
+    @property
+    def has_watermarks(self) -> bool:
+        return self._watermarks is not None
+
+    def admission_gate(self) -> bool:
+        """True while governor pressure should block new private placements.
+
+        With no watermarks (or no effective budget) the gate is always open.
+        The hysteresis state flips closed when pressure exceeds the high
+        watermark and reopens only below the low one.
+        """
+        with self._lock:
+            if self._watermarks is None:
+                return False
+            budget = self.budget
+            if budget is None:
+                return False
+            high, low = self._watermarks
+            pressure = self._used + self._reserved
+            if self._gated:
+                if pressure < low * budget:
+                    self._gated = False
+            elif pressure > high * budget:
+                self._gated = True
+            return self._gated
 
     # -- admission -----------------------------------------------------------
     def admit(self, nbytes: int, exclude: Iterable[int] = ()) -> int:
@@ -416,6 +481,16 @@ class MemoryGovernor:
             self._touch.pop(h.id, None)
             self._pin_counts.pop(h.id, None)
             self._idle.discard(h.id)
+            # Shared-group view teardown: the reader is gone, release its
+            # pin on the source placement (which may itself already be gone
+            # — the get() default absorbs that race).
+            src_id = self._view_sources.pop(h.id, None)
+            if src_id is not None:
+                left = self._pin_counts.get(src_id, 0) - 1
+                if left > 0:
+                    self._pin_counts[src_id] = left
+                else:
+                    self._pin_counts.pop(src_id, None)
 
     def touch(self, h: AlMatrix) -> None:
         """Record a consumption: resets LRU age and clears any idle hint."""
@@ -451,6 +526,20 @@ class MemoryGovernor:
                         self._pin_counts[hid] = left
                     else:
                         self._pin_counts.pop(hid, None)
+
+    def register_view(self, view: AlMatrix, source: AlMatrix) -> None:
+        """Register a shared-group read view over another session's handle.
+
+        The view shares the source's device array, so it is **not** charged
+        (charging would double-count the same bytes); instead the source is
+        pinned for the view's lifetime so no admission in any session can
+        spill the bytes out from under the reader. The pin drops in
+        :meth:`discard` when the view handle is freed.
+        """
+        with self._lock:
+            view._governor = self
+            self._view_sources[view.id] = source.id
+            self._pin_counts[source.id] = self._pin_counts.get(source.id, 0) + 1
 
     # -- spill / refill ------------------------------------------------------
     def spill(self, h: AlMatrix, *, _deferred: Optional[List[_SpillJob]] = None) -> None:
@@ -731,6 +820,7 @@ class MemoryGovernor:
                 "host_store_bytes": sum(a.nbytes for a in self._host_store.values()),
                 "in_flight_spill_bytes": self._in_flight_bytes,
                 "staging_reuses": self._staging.reuses,
+                "shared_views": len(self._view_sources),
             }
 
     def clear(self) -> None:
@@ -753,6 +843,8 @@ class MemoryGovernor:
             self._touch.clear()
             self._pin_counts.clear()
             self._idle.clear()
+            self._view_sources.clear()
+            self._gated = False
             self._staging.clear()
             self._used = 0
             self._reserved = 0

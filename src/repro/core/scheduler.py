@@ -1,0 +1,648 @@
+"""Unified placement scheduler: tickets, scoring, watermarks, shared groups.
+
+This module replaces the condition-variable scramble that used to live in
+``AlchemistEngine.allocate()`` with a single ``PlacementScheduler`` owning the
+free-device pool. Alchemist's allocation story (arXiv:1806.01270) — and the
+deployment study that followed it (arXiv:1910.01354) — both land on the same
+observation: once an MPI-side resource pool is shared by many Spark-side
+clients, *placement policy* dominates multi-tenant behaviour. The scheduler
+gives that policy one surface:
+
+- **Declarative admission.** Callers describe what they need with a
+  :class:`PlacementRequest` (workers, priority, content affinity, deadline,
+  shareability) instead of a sprawl of ``queue=``/``timeout=``/``datasets=``
+  kwargs. The engine converts legacy kwargs into a request via a deprecation
+  shim, so policy decisions live in exactly one data structure.
+
+- **Ticketed FIFO with anti-starvation aging.** Each admission attempt is a
+  :class:`PlacementTicket` moving through ``queued -> scored -> placed |
+  timed-out | cancelled``. Tickets are serviced in priority-then-arrival
+  order, but a small request may overtake a blocked larger one at most
+  ``aging_bound`` times: once a ticket has been passed by that many
+  later-arriving requests, it becomes a barrier and nothing younger places
+  until it does. (Preemption is out of scope, but the state machine leaves
+  room for a future ``preempted`` edge out of ``placed``.)
+
+- **Smallest-fit + content-affinity scoring.** Free devices are kept in
+  canonical engine order; candidate windows are scored first by overlap with
+  the devices already holding the request's declared datasets (via
+  ``ResidentStore.device_affinity``), then by tightest contiguous fit, so
+  small requests stop fragmenting large contiguous runs.
+
+- **Pressure watermarks.** Admission consults ``memgov.pressure()`` in
+  addition to the free-device count: above the high watermark new private
+  placements stop, and they resume only once pressure falls below the low
+  watermark (hysteresis, so admission does not flap at the boundary).
+
+- **Shared worker groups.** Every placement is a refcounted
+  :class:`WorkerGroup`. A request whose affinity keys all resolve to content
+  live on one existing group *joins* that group instead of placing anew —
+  one physical placement, many reader sessions — which is what makes
+  content-affine attach zero-byte on the engine side.
+
+The scheduler deliberately knows nothing about JAX: it trades in opaque
+device objects (anything with an ``.id``), so unit tests drive it with fakes
+and the engine keeps mesh construction to itself.
+"""
+
+from __future__ import annotations
+
+import itertools
+import math
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.core.errors import AdmissionTimeout, WorkerAllocationError
+
+__all__ = [
+    "PlacementRequest",
+    "PlacementTicket",
+    "WorkerGroup",
+    "PlacementScheduler",
+    "QUEUED",
+    "SCORED",
+    "PLACED",
+    "TIMED_OUT",
+    "CANCELLED",
+]
+
+# Ticket lifecycle states. Terminal states are PLACED / TIMED_OUT / CANCELLED;
+# a future preemption edge would re-queue a PLACED ticket, which is why the
+# state strings live here rather than inline.
+QUEUED = "queued"
+SCORED = "scored"
+PLACED = "placed"
+TIMED_OUT = "timed-out"
+CANCELLED = "cancelled"
+
+# Poll interval while a ticket waits on state the scheduler is not directly
+# notified about (governor pressure decaying below the low watermark, or a
+# dataset landing that would enable a shared-group join).
+_POLL_S = 0.05
+
+
+def near_square_grid(n: int) -> Tuple[int, int]:
+    """Pick the most-square (rows, cols) grid for ``n`` workers."""
+    best = (1, n)
+    for r in range(1, int(math.sqrt(n)) + 1):
+        if n % r == 0:
+            best = (r, n // r)
+    return best
+
+
+@dataclass(frozen=True)
+class PlacementRequest:
+    """Declarative admission request — the v2 replacement for kwarg sprawl.
+
+    Attributes
+    ----------
+    workers:
+        Worker-group size. ``None`` means "all currently free devices"
+        (or the whole engine when the pool is drained), pinned at submit
+        time like v1 ``num_workers=None``.
+    grid:
+        Explicit ``(rows, cols)`` worker grid; overrides ``workers``.
+    priority:
+        Higher priorities are serviced first; ties break by arrival order.
+    affinity:
+        Datasets (arrays, ``AlArray`` handles, or content-key tuples) this
+        session intends to read. Steers placement toward devices already
+        holding that content, and — when every key resolves to one live
+        worker group — lets the session *join* that group (see
+        ``allow_shared``).
+    deadline:
+        Admission deadline in seconds. ``None`` waits indefinitely, ``0``
+        fails fast when no placement is possible right now (v1
+        ``queue=False``), positive values raise ``AdmissionTimeout`` on
+        expiry (v1 ``queue=True, timeout=...``).
+    allow_shared:
+        Permit joining an existing worker group when affinity content is
+        live there. Shared placements add no engine-side bytes; set False
+        to force a private placement.
+    """
+
+    workers: Optional[int] = None
+    grid: Optional[Tuple[int, int]] = None
+    priority: int = 0
+    affinity: Tuple[Any, ...] = ()
+    deadline: Optional[float] = None
+    allow_shared: bool = True
+
+    def __post_init__(self) -> None:
+        # Accept lists/generators for ergonomics; store a tuple so the
+        # dataclass stays hashable-in-spirit (payload arrays are not
+        # hashable, but the container is immutable).
+        if not isinstance(self.affinity, tuple):
+            object.__setattr__(self, "affinity", tuple(self.affinity))
+        if self.grid is not None and not isinstance(self.grid, tuple):
+            object.__setattr__(self, "grid", tuple(self.grid))
+
+
+@dataclass
+class WorkerGroup:
+    """A physical placement: a device block plus the sessions reading it."""
+
+    id: int
+    devices: List[Any]
+    grid: Tuple[int, int]
+    refcount: int = 1
+    session_ids: set = field(default_factory=set)
+
+    @property
+    def device_ids(self) -> FrozenSet[int]:
+        return frozenset(d.id for d in self.devices)
+
+
+@dataclass
+class PlacementTicket:
+    """One admission attempt moving through the scheduler state machine."""
+
+    id: int
+    seq: int
+    n: int
+    grid: Tuple[int, int]
+    priority: int = 0
+    keys: Tuple[Tuple[Any, ...], ...] = ()
+    allow_shared: bool = True
+    flexible: bool = False  # workers=None and grid=None: may adopt a group's size
+    state: str = QUEUED
+    passed_by: int = 0
+    aged: bool = False
+    shared: bool = False
+    devices: Optional[List[Any]] = None
+    group: Optional[WorkerGroup] = None
+    score: Dict[str, int] = field(default_factory=dict)
+    pressure_at_queue: int = 0
+    pressure_at_placement: Optional[int] = None
+    queued_ns: int = 0
+    wait_ns: int = 0
+
+    def summary(self) -> Dict[str, Any]:
+        """JSON-serializable view of the resolved ticket."""
+        return {
+            "id": self.id,
+            "state": self.state,
+            "workers": self.n,
+            "grid": list(self.grid),
+            "priority": self.priority,
+            "shared": self.shared,
+            "devices": [getattr(d, "id", None) for d in (self.devices or [])],
+            "wait_ns": int(self.wait_ns),
+            "passed_by": self.passed_by,
+            "score": dict(self.score),
+            "pressure_at_queue": int(self.pressure_at_queue),
+            "pressure_at_placement": (
+                None if self.pressure_at_placement is None else int(self.pressure_at_placement)
+            ),
+        }
+
+
+class PlacementScheduler:
+    """FIFO ticket queue owning the engine's free-device pool.
+
+    The scheduler holds the only mutable view of which devices are free. All
+    admission flows through :meth:`submit`; all release flows through
+    :meth:`release_session` / :meth:`abort`. Lock ordering: the scheduler's
+    condition lock may be held while calling into the memory governor or the
+    resident store (both take their own locks); neither ever calls back into
+    the scheduler, so the ordering is acyclic.
+    """
+
+    def __init__(
+        self,
+        devices: Sequence[Any],
+        *,
+        memgov: Any,
+        residents: Any,
+        aging_bound: int = 4,
+    ) -> None:
+        if aging_bound < 1:
+            raise ValueError(f"aging_bound must be >= 1, got {aging_bound}")
+        self.devices: List[Any] = list(devices)
+        self.memgov = memgov
+        self.residents = residents
+        self.aging_bound = int(aging_bound)
+
+        self._free: List[Any] = list(self.devices)
+        self._cond = threading.Condition(threading.Lock())
+        self._queue: List[PlacementTicket] = []
+        self._groups: Dict[int, WorkerGroup] = {}
+        self._by_session: Dict[int, WorkerGroup] = {}
+        self._ticket_ids = itertools.count(1)
+        self._group_ids = itertools.count(1)
+        self._seq = itertools.count(1)
+        self._waiting = 0
+
+        # Externally-visible admission counters. The first five keys predate
+        # the scheduler and are asserted by tests/benchmarks; keep them.
+        self.admissions: Dict[str, Any] = {
+            "immediate": 0,
+            "queued": 0,
+            "timeouts": 0,
+            "affinity_hits": 0,
+            "last_queued_pressure": None,
+            "pressure_at_placement": None,
+            "smallest_fit_hits": 0,
+        }
+        # Scheduler-lifecycle counters surfaced via stats().
+        self._placed = 0
+        self._timed_out = 0
+        self._cancelled = 0
+        self._aged = 0
+        self._shared_joins = 0
+        self._pressure_blocked = 0
+
+    # ------------------------------------------------------------------ #
+    # Introspection                                                      #
+    # ------------------------------------------------------------------ #
+
+    @property
+    def free_devices(self) -> List[Any]:
+        """The free pool in canonical engine order (read-only snapshot)."""
+        with self._cond:
+            return list(self._free)
+
+    @property
+    def queued(self) -> int:
+        """Number of tickets currently blocked in the queue."""
+        with self._cond:
+            return self._waiting
+
+    def stats(self) -> Dict[str, Any]:
+        """JSON-serializable scheduler section for ``engine.stats()``."""
+        with self._cond:
+            shared_groups = sum(1 for g in self._groups.values() if g.refcount > 1)
+            wm = getattr(self.memgov, "watermarks", None)
+            return {
+                "queue_depth": len(self._queue),
+                "free_workers": len(self._free),
+                "placed": self._placed,
+                "timed_out": self._timed_out,
+                "cancelled": self._cancelled,
+                "aged": self._aged,
+                "groups": len(self._groups),
+                "shared_groups": shared_groups,
+                "shared_joins": self._shared_joins,
+                "affinity_hits": self.admissions["affinity_hits"],
+                "smallest_fit_hits": self.admissions["smallest_fit_hits"],
+                "pressure_blocked": self._pressure_blocked,
+                "aging_bound": self.aging_bound,
+                "watermarks": None if wm is None else list(wm),
+            }
+
+    # ------------------------------------------------------------------ #
+    # Admission                                                          #
+    # ------------------------------------------------------------------ #
+
+    def submit(
+        self,
+        request: PlacementRequest,
+        *,
+        keys: Sequence[Tuple[Any, ...]] = (),
+    ) -> PlacementTicket:
+        """Queue a request and block until it places or its deadline expires.
+
+        ``keys`` are the resolved content keys for ``request.affinity`` (the
+        engine normalizes arrays/handles to keys so the scheduler never
+        touches payload bytes). Returns the PLACED ticket; raises
+        ``WorkerAllocationError`` for impossible or fail-fast requests and
+        ``AdmissionTimeout`` when a positive deadline expires.
+        """
+        if request.grid is not None:
+            rows, cols = request.grid
+            if rows <= 0 or cols <= 0:
+                raise WorkerAllocationError(
+                    f"requested a {rows}x{cols} grid; both dimensions must be positive"
+                )
+        elif request.workers is not None and request.workers <= 0:
+            raise WorkerAllocationError(
+                f"requested {request.workers} workers; need at least 1"
+            )
+
+        with self._cond:
+            # Pin the request size now (v1 semantics): a flexible request on
+            # a drained pool asks for the whole engine and waits for it.
+            if request.grid is not None:
+                rows, cols = request.grid
+                n = rows * cols
+                grid = (rows, cols)
+            elif request.workers is not None:
+                n = int(request.workers)
+                grid = near_square_grid(n)
+            else:
+                n = len(self._free) if self._free else len(self.devices)
+                grid = near_square_grid(n)
+
+            if n > len(self.devices):
+                raise WorkerAllocationError(
+                    f"requested {n} workers but the engine only has {len(self.devices)}"
+                )
+
+            ticket = PlacementTicket(
+                id=next(self._ticket_ids),
+                seq=next(self._seq),
+                n=n,
+                grid=grid,
+                priority=int(request.priority),
+                keys=tuple(keys),
+                allow_shared=bool(request.allow_shared),
+                flexible=request.workers is None and request.grid is None,
+                pressure_at_queue=int(self.memgov.pressure()),
+                queued_ns=time.monotonic_ns(),
+            )
+            self._queue.append(ticket)
+            deadline = None if request.deadline is None else time.monotonic() + request.deadline
+            waited = False
+            try:
+                while True:
+                    self._pass_locked()
+                    if ticket.state == PLACED:
+                        self.admissions["queued" if waited else "immediate"] += 1
+                        return ticket
+                    if request.deadline is not None and request.deadline <= 0:
+                        ticket.state = CANCELLED
+                        self._cancelled += 1
+                        raise WorkerAllocationError(
+                            f"requested {n} workers but only {len(self._free)} of "
+                            f"{len(self.devices)} are available"
+                        )
+                    remaining = None if deadline is None else deadline - time.monotonic()
+                    if remaining is not None and remaining <= 0:
+                        ticket.state = TIMED_OUT
+                        self._timed_out += 1
+                        self.admissions["timeouts"] += 1
+                        raise AdmissionTimeout(
+                            f"connect queued for {request.deadline}s waiting for {n} "
+                            f"worker(s); {len(self._free)} of {len(self.devices)} free"
+                        )
+                    if not waited:
+                        waited = True
+                        self._waiting += 1
+                    # Device releases notify the condition directly; pressure
+                    # decay and dataset arrival do not, so poll when either
+                    # could unblock this ticket.
+                    poll = (
+                        _POLL_S
+                        if (ticket.keys or getattr(self.memgov, "has_watermarks", False))
+                        else None
+                    )
+                    if remaining is None:
+                        self._cond.wait(poll)
+                    else:
+                        self._cond.wait(remaining if poll is None else min(remaining, poll))
+            finally:
+                if waited:
+                    self._waiting -= 1
+                if ticket.state != PLACED and ticket in self._queue:
+                    self._queue.remove(ticket)
+
+    def _pass_locked(self) -> None:
+        """One scheduling pass: place every ticket that can place right now.
+
+        Service order is priority-then-arrival. An *aged* ticket (passed by
+        ``aging_bound`` later arrivals) becomes a barrier: no ticket that
+        arrived after the oldest aged ticket may place until it does.
+        """
+        if self._queue:
+            # Satellite fix: sample governor pressure on *every* pass with a
+            # non-empty queue, not only when a wait begins.
+            self.admissions["last_queued_pressure"] = int(self.memgov.pressure())
+        while True:
+            waiting = [t for t in self._queue if t.state in (QUEUED, SCORED)]
+            if not waiting:
+                return
+            barrier = min(
+                (t.seq for t in waiting if t.passed_by >= self.aging_bound),
+                default=None,
+            )
+            placed = None
+            for ticket in sorted(waiting, key=lambda t: (-t.priority, t.seq)):
+                if barrier is not None and ticket.seq > barrier:
+                    continue
+                if self._try_place_locked(ticket):
+                    placed = ticket
+                    break
+            if placed is None:
+                return
+            for other in self._queue:
+                if other.seq < placed.seq and other.state in (QUEUED, SCORED):
+                    other.passed_by += 1
+                    if other.passed_by >= self.aging_bound and not other.aged:
+                        other.aged = True
+                        self._aged += 1
+            self._cond.notify_all()
+
+    def _try_place_locked(self, ticket: PlacementTicket) -> bool:
+        ticket.state = SCORED
+        # 1. Shared worker group: all affinity keys live on one existing
+        #    group -> join it. No devices consumed, no pressure gate (the
+        #    bytes are already placed; a reader adds none).
+        if ticket.allow_shared and ticket.keys:
+            group = self._shared_match_locked(ticket)
+            if group is not None:
+                group.refcount += 1
+                ticket.devices = list(group.devices)
+                ticket.grid = group.grid
+                ticket.n = len(group.devices)
+                ticket.shared = True
+                ticket.group = group
+                ticket.score = {"affinity": ticket.n, "fit": 0}
+                self._shared_joins += 1
+                self._finish_placement_locked(ticket)
+                return True
+        # 2. Pressure watermarks gate *private* placements only.
+        if getattr(self.memgov, "has_watermarks", False) and self.memgov.admission_gate():
+            self._pressure_blocked += 1
+            return False
+        # 3. Private placement from the free pool.
+        if 0 < ticket.n <= len(self._free):
+            devices, score = self._score_block_locked(ticket.n, ticket.keys)
+            chosen = {d.id for d in devices}
+            self._free = [d for d in self._free if d.id not in chosen]
+            group = WorkerGroup(
+                id=next(self._group_ids),
+                devices=list(devices),
+                grid=ticket.grid,
+                refcount=1,
+            )
+            self._groups[group.id] = group
+            ticket.devices = list(devices)
+            ticket.group = group
+            ticket.score = score
+            self._finish_placement_locked(ticket)
+            return True
+        return False
+
+    def _finish_placement_locked(self, ticket: PlacementTicket) -> None:
+        ticket.state = PLACED
+        pressure = int(self.memgov.pressure())
+        ticket.pressure_at_placement = pressure
+        self.admissions["pressure_at_placement"] = pressure
+        ticket.wait_ns = time.monotonic_ns() - ticket.queued_ns
+        self._placed += 1
+        if ticket in self._queue:
+            self._queue.remove(ticket)
+
+    def _shared_match_locked(self, ticket: PlacementTicket) -> Optional[WorkerGroup]:
+        """Find the live group holding *all* of the ticket's affinity keys."""
+        affinity = self.residents.device_affinity(ticket.keys)
+        if not affinity:
+            return None
+        id_sets = set(affinity)
+        if len(id_sets) != 1:
+            return None  # content is split across placements; no single group
+        ids = next(iter(id_sets))
+        for group in self._groups.values():
+            if group.refcount > 0 and group.device_ids == ids:
+                if ticket.flexible or ticket.n == len(group.devices):
+                    return group
+        return None
+
+    # ------------------------------------------------------------------ #
+    # Scoring                                                            #
+    # ------------------------------------------------------------------ #
+
+    def pick_block(self, n: int, keys: Sequence[Tuple[Any, ...]]) -> List[Any]:
+        """Score-and-pick ``n`` free devices without consuming them.
+
+        Kept public for the engine's legacy ``_pick_block`` delegate and for
+        tests that probe scoring in isolation; placement itself removes the
+        chosen window from the pool under the same lock hold.
+        """
+        with self._cond:
+            if n > len(self._free):
+                # Legacy preview semantics: a drained pool yields a short (or
+                # empty) block rather than raising — placement proper never
+                # takes this path because submit() checks capacity first.
+                return list(self._free[:n])
+            devices, _ = self._score_block_locked(n, tuple(keys))
+            return devices
+
+    def _score_block_locked(
+        self, n: int, keys: Tuple[Tuple[Any, ...], ...]
+    ) -> Tuple[List[Any], Dict[str, int]]:
+        """Choose the best n-device window: max affinity, then tightest fit.
+
+        The free list is kept in canonical engine order, so contiguous runs
+        of it correspond to contiguous device blocks. Windows inside runs are
+        scored ``(affinity_overlap, -run_length, -start)`` and the max wins:
+        prefer content-warm devices, then the smallest run that fits
+        (smallest-fit keeps large contiguous runs intact for large tickets),
+        then the earliest window for determinism.
+        """
+        free = self._free
+        # Keyed by device id (not the object): fake devices in unit tests
+        # need not be hashable, and ids are unique within an engine.
+        canon = {d.id: i for i, d in enumerate(self.devices)}
+        runs: List[Tuple[int, int]] = []  # (start index in free list, length)
+        start = 0
+        for i in range(1, len(free) + 1):
+            if i == len(free) or canon[free[i].id] != canon[free[i - 1].id] + 1:
+                runs.append((start, i - start))
+                start = i
+        affinity = self.residents.device_affinity(keys) if keys else []
+
+        def windows():
+            fitting = [r for r in runs if r[1] >= n]
+            if fitting:
+                for run_start, run_len in fitting:
+                    for i in range(run_start, run_start + run_len - n + 1):
+                        yield i, run_len
+            else:
+                # No single run fits: span runs (legacy v1 behaviour, which
+                # always took the first n free devices).
+                for i in range(len(free) - n + 1):
+                    yield i, len(free)
+
+        best = None
+        max_run = 0
+        for i, run_len in windows():
+            max_run = max(max_run, run_len)
+            aff = 0
+            if affinity:
+                ids = {d.id for d in free[i : i + n]}
+                aff = sum(len(ids & devs) for devs in affinity)
+            cand = (aff, -run_len, -i)
+            if best is None or cand > best:
+                best = cand
+        if best is None:
+            raise WorkerAllocationError(
+                f"requested {n} workers but only {len(free)} of {len(self.devices)} are available"
+            )
+        aff, neg_run, neg_i = best
+        if aff > 0:
+            self.admissions["affinity_hits"] += 1
+        if -neg_run < max_run:
+            self.admissions["smallest_fit_hits"] += 1
+        i = -neg_i
+        return list(free[i : i + n]), {"affinity": aff, "fit": -neg_run}
+
+    # ------------------------------------------------------------------ #
+    # Binding and release                                                #
+    # ------------------------------------------------------------------ #
+
+    def bind(self, ticket: PlacementTicket, session_id: int) -> None:
+        """Associate a placed ticket's group with a session for release."""
+        with self._cond:
+            if ticket.group is not None:
+                ticket.group.session_ids.add(session_id)
+                self._by_session[session_id] = ticket.group
+
+    def orphan(self, ticket: PlacementTicket) -> None:
+        """Detach a placed ticket from group tracking (legacy ``allocate``).
+
+        The devices stay out of the pool; the caller is responsible for
+        returning them via :meth:`release_devices`.
+        """
+        with self._cond:
+            if ticket.group is not None and not ticket.shared:
+                self._groups.pop(ticket.group.id, None)
+                ticket.group = None
+
+    def abort(self, ticket: PlacementTicket) -> None:
+        """Undo a placement whose session construction failed."""
+        with self._cond:
+            group = ticket.group
+            if group is None:
+                return
+            ticket.group = None
+            group.refcount -= 1
+            if group.refcount <= 0:
+                self._groups.pop(group.id, None)
+                self._return_locked(group.devices)
+            self._cond.notify_all()
+
+    def release_session(self, session_id: int, devices: Sequence[Any]) -> None:
+        """Return a session's placement to the pool (or drop a group ref)."""
+        with self._cond:
+            group = self._by_session.pop(session_id, None)
+            if group is not None:
+                group.session_ids.discard(session_id)
+                group.refcount -= 1
+                if group.refcount <= 0:
+                    self._groups.pop(group.id, None)
+                    self._return_locked(group.devices)
+            else:
+                # Session was never bound (legacy allocate path): trust the
+                # caller's device list.
+                self._return_locked(devices)
+            self._cond.notify_all()
+
+    def release_devices(self, devices: Sequence[Any]) -> None:
+        """Return raw devices to the pool (legacy ``allocate`` callers)."""
+        with self._cond:
+            self._return_locked(devices)
+            self._cond.notify_all()
+
+    def _return_locked(self, devices: Sequence[Any]) -> None:
+        returned = {d.id for d in devices} | {d.id for d in self._free}
+        # Canonical order restore: freed devices slot back into engine order
+        # so contiguous-run scoring stays meaningful.
+        self._free = [d for d in self.devices if d.id in returned]
+
+    def kick(self) -> None:
+        """Wake waiters to re-evaluate (e.g. after external state changes)."""
+        with self._cond:
+            self._cond.notify_all()

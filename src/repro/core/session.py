@@ -73,6 +73,11 @@ class SessionStats:
     # content another session (or a closed one) already placed on the engine
     # — an attach-only placement, zero bytes over the client bridge.
     cross_session_reuses: int = 0
+    # Placement-scheduler counters (DESIGN.md §12): engine-side bytes moved
+    # to place this session's attaches, and attaches served as zero-byte
+    # views over a shared worker group's existing placement.
+    placement_bytes: int = 0
+    shared_views: int = 0
     # Memory-governor counters (DESIGN.md §7): budgeted residency.
     spills: int = 0  # resident matrices moved to the pinned host store
     refills: int = 0  # spilled matrices transparently re-placed on device
@@ -116,6 +121,14 @@ class SessionStats:
 
     def record_cross_session_reuse(self, n: int = 1) -> None:
         self.cross_session_reuses += n
+
+    def record_placement_bytes(self, nbytes: int) -> None:
+        """Engine-side device_put bytes spent placing an attach."""
+        self.placement_bytes += int(nbytes)
+
+    def record_shared_view(self, n: int = 1) -> None:
+        """An attach served as a zero-byte view over a shared group."""
+        self.shared_views += n
 
     def record_cse_hit(self, n: int = 1) -> None:
         self.cse_hits += n
@@ -161,6 +174,8 @@ class SessionStats:
             "elided_crossings": self.elided_crossings,
             "resident_reuses": self.resident_reuses,
             "cross_session_reuses": self.cross_session_reuses,
+            "placement_bytes": self.placement_bytes,
+            "shared_views": self.shared_views,
             "cse_hits": self.cse_hits,
             "planned_ops": self.planned_ops,
             "spills": self.spills,
@@ -191,6 +206,10 @@ class Session:
         self.name = name
         self.mesh = mesh
         self.worker_devices = worker_devices
+        # The resolved PlacementTicket (DESIGN.md §12), set by
+        # AlchemistEngine.connect; None for sessions built without a
+        # scheduler (unit tests, standalone).
+        self.placement = None
         self.handles: Dict[int, AlMatrix] = {}
         self.libraries: Dict[str, Library] = {}
         self.stats = SessionStats()

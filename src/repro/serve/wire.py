@@ -350,16 +350,37 @@ class EngineServer:
             )
             for i in range(n_keys)
         ]
+        from repro.core.scheduler import PlacementRequest
+
         grid = req.get("__grid")
-        timeout = req.get("__timeout")
+        workers = req.get("__workers")
+        if "__deadline" in req or "__priority" in req:
+            deadline = req.get("__deadline")
+            placement = PlacementRequest(
+                workers=None if workers is None else int(workers),
+                grid=None if grid is None else tuple(int(d) for d in grid),
+                priority=int(req.get("__priority") or 0),
+                affinity=tuple(datasets),
+                deadline=None if deadline is None else float(deadline),
+                allow_shared=bool(req.get("__allow_shared", True)),
+            )
+        else:
+            # v1 client (pre-scheduler wire): __queue/__timeout semantics.
+            timeout = req.get("__timeout")
+            placement = PlacementRequest(
+                workers=None if workers is None else int(workers),
+                grid=None if grid is None else tuple(int(d) for d in grid),
+                affinity=tuple(datasets),
+                deadline=(
+                    (None if timeout is None else float(timeout))
+                    if bool(req.get("__queue"))
+                    else 0.0
+                ),
+            )
         session = self.engine.connect(
             name=str(req.get("__name") or "app"),
-            num_workers=req.get("__workers"),
-            grid=None if grid is None else tuple(grid),
             hbm_budget=req.get("__hbm_budget"),
-            datasets=datasets,
-            queue=bool(req.get("__queue")),
-            timeout=None if timeout is None else float(timeout),
+            placement=placement,
         )
         core = ClientCore._over_session(
             self.engine,
@@ -484,18 +505,23 @@ class TcpTransport(Transport):
 
     def _connect_payload(self, core, kwargs) -> Dict[str, Any]:
         from repro.core.engine import _dataset_keys
+        from repro.core.scheduler import PlacementRequest
 
-        # Hash declared datasets only when placement affinity can use them —
-        # same gate the engine applies (content_key reads every byte).
-        datasets = kwargs.get("datasets") or ()
-        keys = _dataset_keys(datasets) if datasets and core.engine.residents.enabled else []
+        # CONNECT carries the declarative PlacementRequest (DESIGN.md §12).
+        # Affinity payloads are hashed to content keys client-side — same
+        # gate the engine applies (content_key reads every byte) — so the
+        # wire never ships dataset bytes at connect time.
+        request: PlacementRequest = kwargs.get("placement") or PlacementRequest(deadline=0.0)
+        affinity = request.affinity or ()
+        keys = _dataset_keys(affinity) if affinity and core.engine.residents.enabled else []
         payload: Dict[str, Any] = {
             "__name": kwargs.get("name") or "app",
-            "__workers": kwargs.get("num_workers"),
-            "__grid": None if kwargs.get("grid") is None else [int(d) for d in kwargs["grid"]],
+            "__workers": request.workers,
+            "__grid": None if request.grid is None else [int(d) for d in request.grid],
             "__hbm_budget": kwargs.get("hbm_budget"),
-            "__queue": bool(kwargs.get("queue")),
-            "__timeout": kwargs.get("timeout"),
+            "__priority": int(request.priority),
+            "__deadline": None if request.deadline is None else float(request.deadline),
+            "__allow_shared": bool(request.allow_shared),
             "__clayout": core.client_layout.name,
             "__elayout": core.engine_layout.name,
             "__n_keys": len(keys),

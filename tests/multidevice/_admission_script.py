@@ -1,6 +1,6 @@
 """Queued admission pins the request size at request time.
 
-``connect(workers=None, queue=True)`` on a drained pool means "all of the
+``connect(placement=PlacementRequest())`` on a drained pool means "all of the
 engine's devices". The request size must be pinned when the wait begins:
 re-deriving it at each wakeup would degrade the request to "whatever the
 first release freed" — here, a 4-device group instead of the full engine.
@@ -23,7 +23,7 @@ got = {}
 
 
 def queued_all_free():
-    s = repro.connect(engine, workers=None, queue=True, timeout=60)
+    s = repro.connect(engine, placement=repro.PlacementRequest(deadline=60))
     got["n"] = s.session.num_workers
     s.close()
 

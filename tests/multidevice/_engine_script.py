@@ -118,7 +118,11 @@ s_b.send(x_payload, name="X").materialize()  # placed (and published) on 4-7
 s_a.close()
 s_b.close()  # uniquely-referenced content migrates host-side, keyed by X
 assert aff_engine.available_workers == 8
-s_c = repro.connect(aff_engine, workers=4, name="aff_c", datasets=[x_payload])
+s_c = repro.connect(
+    aff_engine,
+    name="aff_c",
+    placement=repro.PlacementRequest(workers=4, affinity=(x_payload,)),
+)
 assert {d.id for d in s_c.session.worker_devices} == {4, 5, 6, 7}, (
     "content affinity should pick the reuse-bearing group"
 )
@@ -131,7 +135,9 @@ assert summ["cross_session_reuses"] == 1 and summ["send_bytes"] == 0, summ
 # Queued admission under real contention: a connect for the whole pool waits
 # for the running session instead of failing, then is placed.
 threading.Timer(0.3, s_c.close).start()
-s_d = repro.connect(aff_engine, workers=8, name="aff_d", timeout=60)
+s_d = repro.connect(
+    aff_engine, name="aff_d", placement=repro.PlacementRequest(workers=8, deadline=60)
+)
 assert aff_engine.admissions["queued"] == 1
 assert len(s_d.session.worker_devices) == 8
 s_d.close()

@@ -20,6 +20,7 @@ PUBLIC_API = [
     "GRID",
     "LayoutSpec",
     "Pipelined",
+    "PlacementRequest",
     "Planned",
     "REPLICATED",
     "ROW",

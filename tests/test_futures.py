@@ -338,9 +338,11 @@ class TestPoolOrdering:
 
     def _take(self, eng, k):
         """Allocation bookkeeping only (no Mesh — fake devices)."""
-        devs = eng._free[:k]
-        eng._free = eng._free[k:]
-        s = _FakeSession(devs)
+        from repro.core.scheduler import PlacementRequest
+
+        ticket = eng.scheduler.submit(PlacementRequest(workers=k, deadline=0))
+        s = _FakeSession(ticket.devices)
+        eng.scheduler.bind(ticket, s.id)
         eng.sessions[s.id] = s
         return s
 

@@ -1,0 +1,546 @@
+"""PlacementScheduler unit tests (DESIGN.md §12): ticket lifecycle, scoring,
+watermarks, aging, shared worker groups.
+
+Tier-1 drives the scheduler with fake (unhashable-on-purpose) devices so the
+policy is tested in isolation from JAX; the tier2 tests at the bottom run the
+same contention patterns through a real engine and assert end-to-end
+guarantees (aging bound under a small-request storm, bit-identical reads
+through a shared worker group with zero engine-side attach bytes).
+"""
+
+import json
+import threading
+import time
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.errors import AdmissionTimeout, WorkerAllocationError
+from repro.core.memgov import MemoryGovernor
+from repro.core.scheduler import (
+    PLACED,
+    PlacementRequest,
+    PlacementScheduler,
+    near_square_grid,
+)
+
+
+class FakeGov:
+    """Governor stub: controllable pressure, optional hard admission gate."""
+
+    def __init__(self, pressure=0, gate=False, watermarks=None):
+        self._pressure = pressure
+        self.gate = gate
+        self.watermarks = watermarks
+
+    def pressure(self):
+        return self._pressure
+
+    @property
+    def has_watermarks(self):
+        return self.watermarks is not None
+
+    def admission_gate(self):
+        return self.gate
+
+
+class FakeResidents:
+    """Resident-store stub: keys -> device-id frozensets."""
+
+    enabled = True
+
+    def __init__(self, placements=None):
+        self.placements = placements or {}
+
+    def device_affinity(self, keys):
+        return [self.placements[k] for k in keys if k in self.placements]
+
+
+def fake_devices(n=8):
+    # SimpleNamespace is unhashable by design here: the scheduler must key
+    # its bookkeeping on device ids, never on device objects.
+    return [SimpleNamespace(id=i, platform="fake", __hash__=None) for i in range(n)]
+
+
+def make_sched(n=8, *, memgov=None, residents=None, aging_bound=4):
+    return PlacementScheduler(
+        fake_devices(n),
+        memgov=memgov or FakeGov(),
+        residents=residents or FakeResidents(),
+        aging_bound=aging_bound,
+    )
+
+
+def ids(devs):
+    return [d.id for d in devs]
+
+
+# ---------------------------------------------------------------------------
+# request surface + basic placement
+# ---------------------------------------------------------------------------
+
+
+class TestPlacementRequest:
+    def test_affinity_and_grid_coerced_to_tuples(self):
+        req = PlacementRequest(affinity=[1, 2], grid=[2, 3])
+        assert req.affinity == (1, 2)
+        assert req.grid == (2, 3)
+
+    def test_defaults(self):
+        req = PlacementRequest()
+        assert req.workers is None and req.grid is None
+        assert req.priority == 0 and req.deadline is None and req.allow_shared
+
+    def test_near_square_grid(self):
+        assert near_square_grid(6) == (2, 3)
+        assert near_square_grid(7) == (1, 7)
+        assert near_square_grid(16) == (4, 4)
+
+
+class TestBasicPlacement:
+    def test_immediate_placement_and_ticket_summary(self):
+        sched = make_sched(8)
+        t = sched.submit(PlacementRequest(workers=4, deadline=0))
+        assert t.state == PLACED
+        assert ids(t.devices) == [0, 1, 2, 3]
+        assert t.grid == (2, 2)
+        assert not t.shared
+        summary = t.summary()
+        json.dumps(summary)  # must be wire-safe
+        assert summary["workers"] == 4 and summary["devices"] == [0, 1, 2, 3]
+        assert sched.admissions["immediate"] == 1
+
+    def test_flexible_request_takes_all_free(self):
+        sched = make_sched(8)
+        a = sched.submit(PlacementRequest(workers=2, deadline=0))
+        b = sched.submit(PlacementRequest(deadline=0))
+        assert b.n == 6 and b.flexible
+        sched.abort(a)
+        sched.abort(b)
+        assert ids(sched.free_devices) == list(range(8))
+
+    def test_explicit_grid_overrides_workers(self):
+        sched = make_sched(8)
+        t = sched.submit(PlacementRequest(grid=(1, 6), deadline=0))
+        assert t.n == 6 and t.grid == (1, 6)
+
+    def test_impossible_size_fails_fast_even_with_deadline(self):
+        sched = make_sched(4)
+        with pytest.raises(WorkerAllocationError, match="the engine only has 4"):
+            sched.submit(PlacementRequest(workers=5, deadline=30))
+
+    def test_nonpositive_sizes_rejected(self):
+        sched = make_sched(4)
+        with pytest.raises(WorkerAllocationError, match="need at least 1"):
+            sched.submit(PlacementRequest(workers=0, deadline=0))
+        with pytest.raises(WorkerAllocationError, match="must be positive"):
+            sched.submit(PlacementRequest(grid=(0, 2), deadline=0))
+
+    def test_fail_fast_when_pool_drained(self):
+        sched = make_sched(4)
+        hold = sched.submit(PlacementRequest(workers=3, deadline=0))
+        with pytest.raises(WorkerAllocationError, match="only 1 of 4 are available"):
+            sched.submit(PlacementRequest(workers=2, deadline=0))
+        sched.abort(hold)
+
+    def test_deadline_expiry_raises_admission_timeout(self):
+        sched = make_sched(2)
+        hold = sched.submit(PlacementRequest(workers=2, deadline=0))
+        t0 = time.monotonic()
+        with pytest.raises(AdmissionTimeout, match="2 worker"):
+            sched.submit(PlacementRequest(workers=2, deadline=0.2))
+        assert time.monotonic() - t0 >= 0.2
+        assert sched.admissions["timeouts"] == 1
+        assert sched.stats()["timed_out"] == 1
+        sched.abort(hold)
+
+    def test_queued_ticket_places_on_release(self):
+        sched = make_sched(4)
+        hold = sched.submit(PlacementRequest(workers=4, deadline=0))
+        out = {}
+
+        def waiter():
+            out["t"] = sched.submit(PlacementRequest(workers=2, deadline=10))
+
+        th = threading.Thread(target=waiter)
+        th.start()
+        time.sleep(0.05)
+        assert sched.queued == 1
+        sched.abort(hold)
+        th.join(timeout=5)
+        assert out["t"].state == PLACED
+        assert sched.admissions["queued"] == 1
+
+
+# ---------------------------------------------------------------------------
+# scoring: smallest fit + content affinity
+# ---------------------------------------------------------------------------
+
+
+class TestScoring:
+    def _fragmented(self):
+        """Free pool [0,1] + [4..7]: a 2-run and a 4-run."""
+        sched = make_sched(8)
+        hold = sched.submit(PlacementRequest(grid=(1, 2), deadline=0))
+        big = sched.submit(PlacementRequest(workers=6, deadline=0))
+        sched.abort(big)
+        # re-place [2,3] so the pool is fragmented around it
+        mid = sched.submit(PlacementRequest(workers=2, deadline=0))
+        sched.abort(hold)
+        assert ids(sched.free_devices) == [0, 1, 4, 5, 6, 7]
+        return sched, mid
+
+    def test_smallest_fit_prefers_exact_run(self):
+        sched, _ = self._fragmented()
+        assert ids(sched.pick_block(2, ())) == [0, 1]
+        assert sched.admissions["smallest_fit_hits"] == 1
+
+    def test_large_request_takes_large_run(self):
+        sched, _ = self._fragmented()
+        assert ids(sched.pick_block(4, ())) == [4, 5, 6, 7]
+
+    def test_spanning_runs_when_no_single_run_fits(self):
+        sched, _ = self._fragmented()
+        assert ids(sched.pick_block(5, ())) == [0, 1, 4, 5, 6]
+
+    def test_affinity_beats_smallest_fit(self):
+        residents = FakeResidents({("k",): frozenset({4, 5})})
+        sched = PlacementScheduler(
+            fake_devices(8), memgov=FakeGov(), residents=residents, aging_bound=4
+        )
+        hold = sched.submit(PlacementRequest(workers=2, deadline=0))  # [0,1] gone
+        # Without keys smallest-fit would pick the front of the big run; the
+        # declared dataset pulls placement onto the warm devices instead.
+        assert ids(sched.pick_block(2, [("k",)])) == [4, 5]
+        assert sched.admissions["affinity_hits"] == 1
+        sched.abort(hold)
+
+    def test_unknown_keys_do_not_steer(self):
+        sched = make_sched(8)
+        assert ids(sched.pick_block(2, [("nope",)])) == [0, 1]
+        assert sched.admissions["affinity_hits"] == 0
+
+
+# ---------------------------------------------------------------------------
+# priority + anti-starvation aging
+# ---------------------------------------------------------------------------
+
+
+class TestPriorityAndAging:
+    def test_higher_priority_places_first(self):
+        sched = make_sched(2)
+        hold = sched.submit(PlacementRequest(workers=2, deadline=0))
+        order = []
+
+        def waiter(tag, prio):
+            t = sched.submit(PlacementRequest(workers=2, priority=prio, deadline=10))
+            order.append(tag)
+            time.sleep(0.02)
+            sched.abort(t)
+
+        lo = threading.Thread(target=waiter, args=("lo", 0))
+        lo.start()
+        time.sleep(0.05)
+        hi = threading.Thread(target=waiter, args=("hi", 5))
+        hi.start()
+        time.sleep(0.05)
+        sched.abort(hold)
+        lo.join(timeout=5)
+        hi.join(timeout=5)
+        assert order == ["hi", "lo"]
+
+    def test_aging_bound_caps_leapfrogging(self):
+        """A blocked large ticket is passed by at most aging_bound smalls."""
+        bound = 2
+        sched = make_sched(8, aging_bound=bound)
+        holders = [sched.submit(PlacementRequest(workers=1, deadline=0)) for _ in range(8)]
+        results, errors = {}, {}
+
+        def run(tag, req, hold_s=None):
+            try:
+                t = sched.submit(req)
+                results[tag] = t
+                if hold_s is not None:
+                    time.sleep(hold_s)
+                    sched.abort(t)
+            except Exception as e:  # pragma: no cover - failure diagnostics
+                errors[tag] = e
+
+        large = threading.Thread(
+            target=run, args=("L", PlacementRequest(workers=8, deadline=30))
+        )
+        large.start()
+        time.sleep(0.05)
+        smalls = [
+            threading.Thread(
+                target=run, args=(f"s{i}", PlacementRequest(workers=1, deadline=30), 0.02)
+            )
+            for i in range(4)
+        ]
+        for th in smalls:
+            th.start()
+        time.sleep(0.05)
+        for h in holders:  # drain the pool one device at a time
+            sched.abort(h)
+            time.sleep(0.03)
+        large.join(timeout=15)
+        assert not errors, errors
+        big = results["L"]
+        assert big.state == PLACED
+        assert big.passed_by <= bound
+        assert big.aged
+        assert sched.stats()["aged"] == 1
+        sched.abort(big)
+        for th in smalls:
+            th.join(timeout=15)
+        assert not errors, errors
+        deadline = time.monotonic() + 5
+        while len(sched.free_devices) < 8 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert ids(sched.free_devices) == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# pressure watermarks
+# ---------------------------------------------------------------------------
+
+
+class TestWatermarks:
+    def test_gate_blocks_private_placement(self):
+        gov = FakeGov(pressure=900, gate=True, watermarks=(0.9, 0.5))
+        sched = make_sched(4, memgov=gov)
+        with pytest.raises(WorkerAllocationError):
+            sched.submit(PlacementRequest(workers=2, deadline=0))
+        assert sched.stats()["pressure_blocked"] == 1
+        gov.gate = False
+        t = sched.submit(PlacementRequest(workers=2, deadline=0))
+        assert t.state == PLACED
+
+    def test_governor_hysteresis(self):
+        gov = MemoryGovernor(budget=1000)
+        gov.set_watermarks(0.9, 0.5)
+        assert gov.watermarks == (0.9, 0.5) and gov.has_watermarks
+        assert not gov.admission_gate()
+        gov.reserve(950)
+        assert gov.admission_gate()  # above high: gate closes
+        gov.unreserve(350)
+        assert gov.admission_gate()  # 600 > low*1000: hysteresis holds
+        gov.unreserve(350)
+        assert not gov.admission_gate()  # 250 < 500: gate reopens
+        gov.reserve(400)
+        assert not gov.admission_gate()  # 650 < high: still open on the way up
+
+    def test_watermark_validation(self):
+        gov = MemoryGovernor(budget=1000)
+        with pytest.raises(ValueError):
+            gov.set_watermarks(0.5, 0.9)
+        with pytest.raises(ValueError):
+            gov.set_watermarks(0.0, 0.0)
+        gov.set_watermarks(0.8, 0.4)
+        gov.clear_watermarks()
+        assert not gov.has_watermarks
+
+    def test_no_watermarks_means_no_gate(self):
+        gov = MemoryGovernor(budget=100)
+        gov.reserve(100)
+        assert not gov.admission_gate()
+
+    def test_pressure_sampling(self):
+        gov = FakeGov(pressure=123)
+        sched = make_sched(4, memgov=gov)
+        t = sched.submit(PlacementRequest(workers=2, deadline=0))
+        assert t.pressure_at_queue == 123
+        assert t.pressure_at_placement == 123
+        assert sched.admissions["pressure_at_placement"] == 123
+        # last_queued_pressure samples on every pass with a non-empty queue
+        assert sched.admissions["last_queued_pressure"] == 123
+        gov._pressure = 456
+        sched.submit(PlacementRequest(workers=2, deadline=0))
+        assert sched.admissions["last_queued_pressure"] == 456
+
+
+# ---------------------------------------------------------------------------
+# shared worker groups
+# ---------------------------------------------------------------------------
+
+
+class TestSharedGroups:
+    def _sched_with_content(self):
+        residents = FakeResidents()
+        sched = PlacementScheduler(
+            fake_devices(8), memgov=FakeGov(), residents=residents, aging_bound=4
+        )
+        owner = sched.submit(PlacementRequest(workers=4, deadline=0))
+        sched.bind(owner, session_id=1)
+        residents.placements[("x",)] = owner.group.device_ids
+        return sched, owner
+
+    def test_affine_ticket_joins_group(self):
+        sched, owner = self._sched_with_content()
+        reader = sched.submit(PlacementRequest(affinity=("x",), deadline=0), keys=[("x",)])
+        assert reader.shared
+        assert reader.group is owner.group
+        assert ids(reader.devices) == ids(owner.devices)
+        assert reader.grid == owner.grid  # flexible ticket adopts the group grid
+        assert reader.n == 4
+        assert sched.stats()["shared_joins"] == 1
+        assert sched.stats()["shared_groups"] == 1
+        # the join consumed no devices
+        assert len(sched.free_devices) == 4
+
+    def test_join_bypasses_pressure_gate(self):
+        sched, owner = self._sched_with_content()
+        sched.memgov.gate = True
+        sched.memgov.watermarks = (0.9, 0.5)
+        reader = sched.submit(PlacementRequest(affinity=("x",), deadline=0), keys=[("x",)])
+        assert reader.shared
+
+    def test_allow_shared_false_forces_private(self):
+        sched, owner = self._sched_with_content()
+        t = sched.submit(
+            PlacementRequest(workers=4, affinity=("x",), deadline=0, allow_shared=False),
+            keys=[("x",)],
+        )
+        assert not t.shared
+        assert t.group is not owner.group
+
+    def test_size_mismatch_forces_private(self):
+        sched, owner = self._sched_with_content()
+        t = sched.submit(PlacementRequest(workers=2, affinity=("x",), deadline=0), keys=[("x",)])
+        assert not t.shared
+
+    def test_refcounted_release(self):
+        sched, owner = self._sched_with_content()
+        reader = sched.submit(PlacementRequest(affinity=("x",), deadline=0), keys=[("x",)])
+        sched.bind(reader, session_id=2)
+        assert owner.group.refcount == 2
+        sched.release_session(2, reader.devices)
+        assert owner.group.refcount == 1
+        assert len(sched.free_devices) == 4  # owner still holds the block
+        sched.release_session(1, owner.devices)
+        assert ids(sched.free_devices) == list(range(8))
+
+
+# ---------------------------------------------------------------------------
+# stats
+# ---------------------------------------------------------------------------
+
+
+class TestStats:
+    def test_stats_shape_and_serializable(self):
+        sched = make_sched(8)
+        sched.submit(PlacementRequest(workers=2, deadline=0))
+        snap = sched.stats()
+        json.dumps(snap)
+        for key in (
+            "queue_depth",
+            "free_workers",
+            "placed",
+            "timed_out",
+            "cancelled",
+            "aged",
+            "groups",
+            "shared_groups",
+            "shared_joins",
+            "affinity_hits",
+            "smallest_fit_hits",
+            "pressure_blocked",
+            "aging_bound",
+            "watermarks",
+        ):
+            assert key in snap
+        assert snap["placed"] == 1 and snap["free_workers"] == 6
+
+    def test_aging_bound_validation(self):
+        with pytest.raises(ValueError):
+            make_sched(4, aging_bound=0)
+
+
+# ---------------------------------------------------------------------------
+# tier2: end-to-end guarantees through a real engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.tier2
+class TestAdmissionFairnessE2E:
+    def test_storm_respects_aging_bound(self):
+        """Under a storm of small connects, a large ticket is passed at most
+        aging_bound times and still places."""
+        bound = 2
+        engine = repro.AlchemistEngine(aging_bound=bound)
+        total = engine.num_workers
+        holders = [engine.connect(name=f"h{i}", num_workers=1) for i in range(total)]
+        results, errors = {}, {}
+
+        def run_large():
+            try:
+                s = repro.connect(
+                    engine,
+                    name="large",
+                    placement=repro.PlacementRequest(workers=total, deadline=60),
+                )
+                results["L"] = s.placement
+                s.close()
+            except Exception as e:  # pragma: no cover - failure diagnostics
+                errors["L"] = e
+
+        def run_small(i):
+            try:
+                s = repro.connect(
+                    engine,
+                    name=f"s{i}",
+                    placement=repro.PlacementRequest(workers=1, deadline=60),
+                )
+                results[f"s{i}"] = s.placement
+                time.sleep(0.02)
+                s.close()
+            except Exception as e:  # pragma: no cover - failure diagnostics
+                errors[f"s{i}"] = e
+
+        large = threading.Thread(target=run_large)
+        large.start()
+        time.sleep(0.05)
+        smalls = [threading.Thread(target=run_small, args=(i,)) for i in range(bound + 2)]
+        for th in smalls:
+            th.start()
+        time.sleep(0.05)
+        for h in holders:
+            engine.release(h)
+            time.sleep(0.03)
+        large.join(timeout=60)
+        for th in smalls:
+            th.join(timeout=60)
+        assert not errors, errors
+        ticket = results["L"]
+        assert ticket.state == "placed"
+        assert ticket.passed_by <= bound
+        assert engine.stats()["scheduler"]["placed"] >= total + 1
+
+    def test_shared_group_reads_are_bit_identical(self):
+        """A content-affine reader joins the writer's worker group and sees
+        bit-identical data with zero engine-side attach bytes."""
+        engine = repro.AlchemistEngine()
+        rng = np.random.default_rng(12)
+        x = rng.standard_normal((96, 64)).astype(np.float32)
+        with repro.connect(engine, name="writer") as s1:
+            h1 = s1.send(x)
+            ref = h1.data()
+            with repro.connect(
+                engine,
+                name="reader",
+                placement=repro.PlacementRequest(affinity=(x,), deadline=10),
+            ) as s2:
+                assert s2.placement.shared
+                assert s2.placement.summary()["devices"] == s1.placement.summary()["devices"]
+                h2 = s2.send(x)
+                got = h2.data()
+                np.testing.assert_array_equal(ref, got)
+                assert got.dtype == ref.dtype
+                stats = s2.session.stats.summary()
+                assert stats["placement_bytes"] == 0
+                assert stats["shared_views"] == 1
+                assert stats["send_bytes"] == 0
+            sched = engine.stats()["scheduler"]
+            assert sched["shared_joins"] == 1

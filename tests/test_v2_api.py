@@ -281,7 +281,9 @@ class TestAdmission:
         t = threading.Thread(target=release_later)
         t.start()
         t0 = time.perf_counter()
-        s = _session(engine, workers=1, timeout=30, name="queued")
+        s = _session(
+            engine, placement=repro.PlacementRequest(workers=1, deadline=30), name="queued"
+        )
         waited = time.perf_counter() - t0
         t.join()
         assert waited >= 0.2, waited  # genuinely queued, not failed
@@ -294,7 +296,11 @@ class TestAdmission:
         gov_sessions = set(engine.memgov._sessions)
         t0 = time.perf_counter()
         with pytest.raises(AdmissionTimeout):
-            repro.connect(engine, workers=1, timeout=0.2, hbm_budget=1 << 20)
+            repro.connect(
+                engine,
+                placement=repro.PlacementRequest(workers=1, deadline=0.2),
+                hbm_budget=1 << 20,
+            )
         assert time.perf_counter() - t0 < 5
         # nothing leaked: no worker group, no governor registration, no
         # session table entry, no waiter left behind
@@ -314,13 +320,16 @@ class TestAdmission:
     def test_impossible_request_fails_fast_even_queued(self, engine):
         t0 = time.perf_counter()
         with pytest.raises(WorkerAllocationError, match="only has"):
-            repro.connect(engine, workers=engine.num_workers + 1, timeout=30)
+            repro.connect(
+                engine,
+                placement=repro.PlacementRequest(workers=engine.num_workers + 1, deadline=30),
+            )
         assert time.perf_counter() - t0 < 5  # did not sit in the queue
 
-    def test_queue_false_preserves_v1_fail_fast(self, engine):
+    def test_deadline_zero_preserves_v1_fail_fast(self, engine):
         hog = repro.connect(engine, workers=engine.num_workers)
         with pytest.raises(WorkerAllocationError):
-            repro.connect(engine, workers=1, queue=False)
+            repro.connect(engine, placement=repro.PlacementRequest(workers=1, deadline=0))
         hog.close()
 
     def test_nonpositive_request_fails_fast_even_queued(self, engine):
@@ -339,7 +348,10 @@ class TestAdmission:
         with _session(engine) as s:
             derived = s.send(a) @ s.send(b)  # RunExpr: no content key
             with pytest.raises(WorkerAllocationError, match="derived expression"):
-                repro.connect(engine, workers=1, datasets=[derived], queue=False)
+                repro.connect(
+                    engine,
+                    placement=repro.PlacementRequest(workers=1, affinity=(derived,), deadline=0),
+                )
             # a send node's key, by contrast, is declared for free
             engine._pick_block(1, [])  # engine still consistent
             assert repro.core.engine._dataset_keys([s.send(a)]) == [content_key(a)]
@@ -351,8 +363,71 @@ class TestAdmission:
             raise AssertionError("content_key must not run with the store disabled")
 
         monkeypatch.setattr(repro.core.engine, "content_key", boom)
-        s = repro.connect(engine, workers=1, datasets=[np.ones((256, 256))])
+        s = repro.connect(
+            engine,
+            placement=repro.PlacementRequest(workers=1, affinity=(np.ones((256, 256)),)),
+        )
         s.close()
+
+
+class TestPlacementSurface:
+    """The declarative admission API (DESIGN.md §12): PlacementRequest in,
+    resolved PlacementTicket out via ``Session.placement``."""
+
+    def test_session_exposes_resolved_ticket(self, engine):
+        with repro.connect(
+            engine, placement=repro.PlacementRequest(workers=1, priority=3, deadline=5)
+        ) as s:
+            ticket = s.placement
+            assert ticket is not None
+            assert ticket.state == "placed"
+            assert ticket.n == 1
+            assert ticket.priority == 3
+            assert not ticket.shared
+            summary = ticket.summary()
+            assert summary["workers"] == 1 and summary["state"] == "placed"
+            # the resolved ticket also rides along in engine.stats()
+            (sess,) = engine.stats()["sessions"].values()
+            assert sess["placement"] == summary
+
+    def test_placement_mixed_with_legacy_kwargs_rejected(self, engine):
+        with pytest.raises(SessionError, match="placement"):
+            repro.connect(engine, workers=1, placement=repro.PlacementRequest(workers=1))
+
+    def test_pressure_is_sampled_at_queue_and_placement(self, engine):
+        with repro.connect(engine, placement=repro.PlacementRequest(workers=1)) as s:
+            ticket = s.placement
+            assert ticket.pressure_at_placement is not None
+            assert engine.admissions["pressure_at_placement"] == ticket.pressure_at_placement
+
+    def test_affine_connect_joins_shared_worker_group(self, engine, data):
+        a, _ = data
+        with _session(engine, name="writer") as s1:
+            ref = s1.send(a).data()
+            with repro.connect(
+                engine,
+                name="reader",
+                placement=repro.PlacementRequest(affinity=(a,), deadline=10),
+            ) as s2:
+                assert s2.placement.shared
+                got = s2.send(a).data()
+                np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+                stats = s2.session.stats.summary()
+                assert stats["placement_bytes"] == 0
+                assert stats["shared_views"] == 1
+            assert engine.stats()["scheduler"]["shared_joins"] == 1
+
+    def test_scheduler_stats_section(self, engine):
+        import json
+
+        with repro.connect(engine, workers=1):
+            snap = engine.stats()["scheduler"]
+            json.dumps(snap)
+            assert snap["free_workers"] == engine.num_workers - 1
+            assert snap["groups"] == 1
+            assert snap["placed"] == 1
+            assert snap["aging_bound"] == 4
+            assert snap["watermarks"] is None
 
 
 class _FakeDev(SimpleNamespace):
@@ -421,7 +496,7 @@ class TestEngineStats:
         with _session(engine, name="obs") as s:
             s.send(a).data()
             snap = engine.stats()
-            assert set(snap) == {"engine", "sessions", "memgov", "residents"}
+            assert set(snap) == {"engine", "sessions", "memgov", "residents", "scheduler"}
             eng = snap["engine"]
             assert eng["workers"] == engine.num_workers
             assert eng["live_sessions"] == 1
@@ -479,6 +554,32 @@ class TestV1Shim:
         # the v1 verbs are literally the core's eager methods
         assert repro.AlchemistContext.send is ClientCore.send_eager
         assert repro.AlchemistContext.run is ClientCore.run_eager
+
+    def test_legacy_queue_kwarg_warns(self, engine):
+        with pytest.warns(DeprecationWarning, match="queue"):
+            s = repro.connect(engine, workers=1, queue=False)
+        s.close()
+
+    def test_legacy_timeout_kwarg_warns(self, engine):
+        with pytest.warns(DeprecationWarning, match="timeout"):
+            s = repro.connect(engine, workers=1, timeout=30)
+        s.close()
+
+    def test_legacy_datasets_kwarg_warns(self, engine):
+        with pytest.warns(DeprecationWarning, match="datasets"):
+            s = repro.connect(engine, workers=1, datasets=[np.ones((8, 8))])
+        s.close()
+
+    def test_legacy_kwargs_map_to_v1_semantics(self, engine):
+        # queue=False -> fail fast, exactly the v1 behaviour
+        hog = repro.connect(engine, workers=engine.num_workers)
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(WorkerAllocationError):
+                repro.connect(engine, workers=1, queue=False)
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(AdmissionTimeout):
+                repro.connect(engine, workers=1, queue=True, timeout=0.2)
+        hog.close()
 
     def test_v2_session_emits_no_deprecation_warning(self, engine, data):
         import warnings

@@ -273,7 +273,7 @@ class TestDisconnect:
         got = {}
 
         def queued_connect():
-            s2 = repro.connect(engine, queue=True, timeout=30)
+            s2 = repro.connect(engine, placement=repro.PlacementRequest(deadline=30))
             got["n"] = s2.session.num_workers
             s2.close()
 
