@@ -46,6 +46,17 @@ GATES = [
     # engine-side bridge counters — parity is a 1-or-fail boolean.
     ("wire", "framing_overhead", "lower"),
     ("wire", "bridge_parity_ok", "higher"),
+    # Streaming wire data plane (DESIGN.md §13): round trips must stay
+    # bit-exact (1-or-fail), shard-aligned sends must never fall back to a
+    # full-array reassembly buffer (baseline 0 makes the limit 0), and the
+    # receive-side device_put/socket overlap must hold its floor — like
+    # overlap_spill, the baseline is a conservative floor, not the measured
+    # ratio, so a pass means "puts still overlap the socket reads".
+    ("wire_throughput", "bit_identical", "higher"),
+    ("wire_throughput", "reassembly_receives", "lower"),
+    ("wire_throughput", "shard_direct_receives", "higher"),
+    ("wire_throughput", "overlap_ratio", "higher"),
+    ("wire_throughput", "max_inflight", "higher"),
     # Placement scheduler (DESIGN.md §12): the aging bound is an exact
     # invariant (fairness_ok is 1-or-fail; max_passed_by may only shrink),
     # and a shared-group reader must keep attaching with zero engine-side

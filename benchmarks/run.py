@@ -23,6 +23,11 @@
   wire_overhead      beyond-paper: TCP transport vs loopback — framing
                      overhead over the raw matrix bytes and engine-side
                      bridge-counter parity (DESIGN.md §11)
+  wire_throughput    beyond-paper: v2 streaming wire data plane — bit-exact
+                     multi-shard TCP round trips with zero full-array
+                     reassembly on receive, device_put/socket overlap ratio,
+                     multi-in-flight depth, vectored-write counts
+                     (DESIGN.md §13)
   admission_fairness beyond-paper: unified placement scheduler — a large
                      ticket under a small-connect storm is passed at most
                      ``aging_bound`` times (p50/p95 ticket waits reported),
@@ -55,7 +60,7 @@ from typing import Dict, List
 
 SUITE_NAMES = [
     "gemm", "svd", "transfer", "overlap", "offload", "spill", "cross",
-    "overlap_spill", "wire", "admission",
+    "overlap_spill", "wire", "wire_throughput", "admission",
 ]
 
 
@@ -98,6 +103,7 @@ def main() -> None:
         svd_fig34,
         transfer_tables23,
         wire_overhead,
+        wire_throughput,
     )
     from repro.launch import runtime
 
@@ -111,6 +117,7 @@ def main() -> None:
         "cross": cross_session.run,
         "overlap_spill": overlap_spill.run,
         "wire": wire_overhead.run,
+        "wire_throughput": wire_throughput.run,
         "admission": admission_fairness.run,
     }
 

@@ -1,0 +1,118 @@
+"""Streaming wire data plane: shard-direct receive + overlapped I/O
+(DESIGN.md §13).
+
+PR 9's contract for the v2 wire: the socket is a *streaming* path, not a
+stop-and-wait one. This suite drives large multi-shard arrays through the
+real TCP transport and checks the three acceptance criteria:
+
+- ``bit_identical`` — 1 if every TCP round trip (send → collect → fetch)
+  returns exactly the bytes that went in. The streaming decode and the
+  slab-streamed fetch must never change payload bytes.
+- ``reassembly_receives`` — must stay 0 for shard-aligned sends: every
+  SEND decodes chunk-by-chunk into per-shard staging slabs (the
+  ``shard_direct_receives`` counter), never into a full-array reassembly
+  buffer. Deterministic: the counter is a code-path count, not a clock.
+- ``overlap_ratio`` — Σ(per-shard ``device_put`` time inside the socket
+  receive window) / Σ(``device_put`` time) across shard-direct receives.
+  With N shards, the first N−1 puts can run while later chunks are still
+  arriving; the gate floor (BENCH_baseline − tolerance) is deliberately
+  conservative, the one wall-clock-derived number here.
+
+Plus the pipelining counters: ``max_inflight ≥ 2`` (two concurrent FETCHes
+genuinely interleave on one socket — the multi-in-flight ticket protocol),
+``vectored_writes > 0`` (replies coalesce header+length+payload into
+``sendmsg`` batches), and ``streamed_fetches ≥ 1`` (collect results leave
+the device slab-by-slab, the next ``device_get`` overlapping the current
+socket write). Throughput is reported for the curious but never gated.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import csv_row
+
+ROWS, COLS = 8192, 512  # 16 MiB f32: multiple chunks per shard on 8 devices
+SENDS = 2
+
+
+def run(report: List[str], metrics: Dict[str, Dict]) -> None:
+    import repro
+    from repro.serve.wire import ensure_server
+
+    rng = np.random.default_rng(23)
+    arrays = [
+        rng.standard_normal((ROWS, COLS)).astype(np.float32) for _ in range(SENDS)
+    ]
+
+    engine = repro.AlchemistEngine()
+    srv = ensure_server(engine)
+    s = repro.connect(engine, transport="tcp")
+
+    t0 = time.perf_counter()
+    handles = [s.send(a).materialize() for a in arrays]
+
+    # Concurrent collects: two FETCHes in flight on one socket, so the
+    # server's per-connection depth counter must observe ≥ 2.
+    outs: Dict[int, np.ndarray] = {}
+
+    def fetch(i: int) -> None:
+        outs[i] = np.asarray(s.collect(handles[i]))
+
+    threads = [threading.Thread(target=fetch, args=(i,)) for i in range(SENDS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+
+    bit_identical = int(
+        all(np.array_equal(outs[i], arrays[i]) for i in range(SENDS))
+    )
+
+    st = dict(srv.stats)
+    wire_snap = engine.stats()["wire"]
+    ws = s.transport.wire_stats()
+    s.close()
+
+    put_ns = st["put_ns"]
+    overlap_ratio = (st["overlap_ns"] / put_ns) if put_ns else 0.0
+    payload = sum(a.nbytes for a in arrays) * 2  # each array crosses twice
+    mb_s = payload / max(elapsed, 1e-9) / 2**20
+
+    # Acceptance criteria asserted in-process too — a broken data plane
+    # fails the benchmark run itself, not just the gate diff.
+    assert bit_identical == 1, "TCP round trip changed payload bytes"
+    assert st["shard_direct_receives"] >= SENDS, st
+    assert st["reassembly_receives"] == 0, st
+    assert st["streamed_fetches"] >= 1, st
+    assert st["vectored_writes"] > 0, st
+    assert st["max_inflight"] >= 2, st
+    assert wire_snap["shard_direct_receives"] == st["shard_direct_receives"]
+
+    report.append(
+        csv_row(
+            "wire_throughput_tcp",
+            elapsed * 1e6,
+            f"overlap={overlap_ratio:.3f} mb_s={mb_s:.1f} "
+            f"shard_direct={st['shard_direct_receives']} "
+            f"inflight_max={st['max_inflight']}",
+        )
+    )
+    metrics["wire_throughput"] = {
+        "payload_bytes": payload,
+        "throughput_mb_s": round(mb_s, 1),
+        "bit_identical": bit_identical,
+        "overlap_ratio": round(overlap_ratio, 4),
+        "shard_direct_receives": st["shard_direct_receives"],
+        "reassembly_receives": st["reassembly_receives"],
+        "streamed_fetches": st["streamed_fetches"],
+        "gathered_fetches": st["gathered_fetches"],
+        "vectored_writes": st["vectored_writes"],
+        "max_inflight": st["max_inflight"],
+        "client_vectored_writes": ws["vectored_writes"],
+    }

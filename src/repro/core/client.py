@@ -69,12 +69,13 @@ from repro.core.relayout import (
     TransferRecord,
     pad_amounts,
     pad_for,
+    staged_pad_path,
     timed_relayout,
     transfer_cost,
 )
 from repro.core.resident import ResidentEntry, ResidentStore
 from repro.core.scheduler import PlacementRequest, PlacementTicket
-from repro.core.transport import Transport, resolve_transport
+from repro.core.transport import StagedShards, Transport, resolve_transport
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, avoids an import cycle
     from repro.core.engine import AlchemistEngine
@@ -324,6 +325,7 @@ class ClientCore:
 
         def task() -> AlMatrix:
             admitted = 0
+            staged = array if isinstance(array, StagedShards) else None
             try:
                 mesh = sess.mesh
                 # Make room before any bytes land on the worker group: the
@@ -332,19 +334,35 @@ class ClientCore:
                 # so a concurrent session's admission cannot take it first.
                 sess.memgov.admit(reserve_bytes)
                 admitted = reserve_bytes
-                x = jnp.asarray(array)
-                # Stage on the client layout first (rows over all session
-                # workers) so the recorded transfer is the genuine ROW->GRID
-                # redistribution; uneven shapes are zero-padded to the next
-                # worker-count multiple so the device_put is legal. Cyclic
-                # layouts are never pre-padded — the emulation's permutation
-                # would interleave the zero rows (see pad_amounts) — so they
-                # keep the pre-padding behaviour: even shapes work, uneven
-                # ones fail loudly at the device_put.
-                stage_path = "none"
-                if not (self.client_layout.cyclic or self.engine_layout.cyclic):
-                    x, _stage_pads, stage_path = pad_for(x, self.client_layout, mesh)
-                x = jax.device_put(x, self.client_layout.sharding(mesh))
+                if (
+                    staged is not None
+                    and not self.engine_layout.cyclic  # padded slabs would
+                    # defeat cyclic's no-pre-pad rule; degrade below
+                    and staged.matches(self.client_layout, mesh)
+                ):
+                    # Shard-direct send (DESIGN.md §13): the wire already
+                    # decoded into per-shard slabs (pad slack zero-filled at
+                    # decode) and may have overlapped the device_puts with
+                    # the socket reads — assemble, never reassemble on host.
+                    x = staged.device_array(self.client_layout.sharding(mesh))
+                    stage_path = staged_pad_path(staged.geom.pads)
+                else:
+                    # A stale geometry (layout/mesh changed under the frame)
+                    # degrades to the classic materialize-and-pad path.
+                    x = jnp.asarray(np.asarray(array)) if staged is not None else jnp.asarray(array)
+                    # Stage on the client layout first (rows over all session
+                    # workers) so the recorded transfer is the genuine
+                    # ROW->GRID redistribution; uneven shapes are zero-padded
+                    # to the next worker-count multiple so the device_put is
+                    # legal. Cyclic layouts are never pre-padded — the
+                    # emulation's permutation would interleave the zero rows
+                    # (see pad_amounts) — so they keep the pre-padding
+                    # behaviour: even shapes work, uneven ones fail loudly at
+                    # the device_put.
+                    stage_path = "none"
+                    if not (self.client_layout.cyclic or self.engine_layout.cyclic):
+                        x, _stage_pads, stage_path = pad_for(x, self.client_layout, mesh)
+                    x = jax.device_put(x, self.client_layout.sharding(mesh))
                 out, rec = timed_relayout(
                     x,
                     self.engine_layout,
@@ -364,8 +382,14 @@ class ClientCore:
                         out, pads=(out.shape[0] - h.shape[0], out.shape[1] - h.shape[1])
                     )
                     sess.memgov.charge(h)
+                if staged is not None:
+                    # Slabs go back to the pool unless a zero-copy device_put
+                    # left a live array aliasing them (CPU backends).
+                    staged.dispose(x, out)
                 return h
             except BaseException as exc:
+                if staged is not None:
+                    staged.dispose()
                 h.fail(exc)
                 raise
             finally:

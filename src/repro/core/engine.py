@@ -341,6 +341,47 @@ class AlchemistEngine:
             },
             "residents": self.residents.stats(),
             "scheduler": self.scheduler.stats(),
+            "wire": self._wire_stats(),
+        }
+
+    def _wire_stats(self) -> Dict[str, Any]:
+        """The v2 data-plane section (DESIGN.md §13): the engine's wire
+        server counters when one is live, zeros otherwise — always the same
+        JSON-serializable shape so dashboards key on it unconditionally."""
+        from repro.serve.wire import server_for  # lazy: serve imports core
+
+        srv = server_for(self)
+        if srv is None:
+            return {
+                "server": False,
+                "inflight": 0,
+                "max_inflight": 0,
+                "vectored_writes": 0,
+                "shard_direct_receives": 0,
+                "reassembly_receives": 0,
+                "streamed_fetches": 0,
+                "gathered_fetches": 0,
+                "overlap_ns": 0,
+                "put_ns": 0,
+                "version_rejects": 0,
+                "bytes_in": 0,
+                "bytes_out": 0,
+            }
+        st = srv.stats
+        return {
+            "server": True,
+            "inflight": srv.inflight_depth(),
+            "max_inflight": int(st["max_inflight"]),
+            "vectored_writes": int(st["vectored_writes"]),
+            "shard_direct_receives": int(st["shard_direct_receives"]),
+            "reassembly_receives": int(st["reassembly_receives"]),
+            "streamed_fetches": int(st["streamed_fetches"]),
+            "gathered_fetches": int(st["gathered_fetches"]),
+            "overlap_ns": int(st["overlap_ns"]),
+            "put_ns": int(st["put_ns"]),
+            "version_rejects": int(st["version_rejects"]),
+            "bytes_in": int(st["bytes_in"]),
+            "bytes_out": int(st["bytes_out"]),
         }
 
     def shutdown(self) -> None:

@@ -272,6 +272,12 @@ def content_key(array: Any) -> Tuple:
     equal payloads resolve to one engine-resident matrix, regardless of
     whether the caller reused the ndarray object or rebuilt it.
     """
+    key_fn = getattr(array, "content_key", None)
+    if callable(key_fn):
+        # Shard-staged wire payloads (transport.StagedShards) hash their
+        # logical slabs in place — same (shape, dtype, sha1) triple, no
+        # reassembly copy.
+        return key_fn()
     arr = np.asarray(array)
     digest = hashlib.sha1(np.ascontiguousarray(arr).tobytes()).hexdigest()
     return (tuple(int(d) for d in arr.shape), str(arr.dtype), digest)

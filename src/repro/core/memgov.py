@@ -285,6 +285,27 @@ class MemoryGovernor:
         read can never observe a half-spilled handle from a queue worker."""
         return self._lock
 
+    @property
+    def staging(self) -> _StagingPool:
+        """The host staging-buffer pool — shared with the wire's shard-direct
+        receive path (DESIGN.md §13), so slabs recycle across receives and
+        spill copy-outs alike."""
+        return self._staging
+
+    def transfer_ring(self) -> TransferExecutor:
+        """The bounded double-buffer transfer executor (DESIGN.md §10) —
+        also the ring the shard-direct receiver rides for eager per-shard
+        ``device_put``s overlapping socket reads."""
+        return self._executor()
+
+    def unbudgeted(self) -> bool:
+        """True when no HBM budget constrains admission (engine-wide or
+        per-session). The shard-direct receiver only issues *eager* device
+        puts in this regime: under a budget, bytes may not land on device
+        before ``admit()`` has made room, so puts defer to the send task."""
+        with self._lock:
+            return self._base_budget is None and not self._session_budgets
+
     # -- accounting ----------------------------------------------------------
     @property
     def used(self) -> int:

@@ -67,6 +67,118 @@ def shard_intervals(n: int, n_shards: int) -> np.ndarray:
     return np.stack([starts, ends], axis=1)
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardGeometry:
+    """Row-slab decomposition a shard-direct wire transfer targets (§13).
+
+    Describes how a 2D matrix staged under a pure row layout decomposes into
+    per-device slabs: the wire can then align its chunk boundaries with the
+    slabs, and a receiver can decode each slab straight into its own staging
+    buffer and ``device_put`` it as the bytes land — no full-array reassembly.
+    The wire carries *logical* bytes only; the receiver zero-fills each slab's
+    divisibility-pad slack, which is where the pad "kernel" of the legacy path
+    goes in this path (fused into the decode).
+    """
+
+    shape: Tuple[int, int]  # logical (rows, cols)
+    physical_shape: Tuple[int, int]  # rows padded to a shard-count multiple
+    dtype: str
+    n_shards: int
+    shard_rows: int  # physical rows per slab (physical_shape[0] / n_shards)
+    #: logical (start, end) row interval each shard carries on the wire;
+    #: trailing shards of a short matrix may be empty.
+    intervals: Tuple[Tuple[int, int], ...]
+    layout_name: str
+    mesh_key: Tuple
+    #: shard index -> the jax.Device owning that slab under the layout.
+    devices: Tuple[Any, ...]
+
+    @property
+    def pads(self) -> Tuple[int, int]:
+        return (self.physical_shape[0] - self.shape[0], 0)
+
+    @property
+    def itemsize(self) -> int:
+        return int(np.dtype(self.dtype).itemsize)
+
+    def slab_shape(self) -> Tuple[int, int]:
+        return (self.shard_rows, self.shape[1])
+
+    def logical_bytes(self, shard: int) -> int:
+        s, e = self.intervals[shard]
+        return (e - s) * self.shape[1] * self.itemsize
+
+    def matches(self, layout: LayoutSpec, mesh: Mesh) -> bool:
+        return self.layout_name == layout.name and self.mesh_key == _mesh_cache_key(mesh)
+
+
+def shard_geometry(
+    shape: Tuple[int, int], dtype, layout: LayoutSpec, mesh: Mesh
+) -> Optional[ShardGeometry]:
+    """The :class:`ShardGeometry` for staging ``shape`` under ``layout``, or
+    None when the layout cannot take a shard-direct stream: cyclic layouts
+    (rows are stored permuted), column-sharded or replicated layouts (a slab
+    is not a contiguous byte range of the logical array), empty matrices, and
+    dtypes jax would silently canonicalize away (an f64 payload under default
+    x64-off must take the reassembly path, whose ``jnp.asarray`` converts)."""
+    if layout.cyclic:
+        return None
+    rows, cols = int(shape[0]), int(shape[1])
+    if rows <= 0 or cols <= 0:
+        return None
+    dt = np.dtype(dtype)
+    try:
+        if jax.dtypes.canonicalize_dtype(dt) != dt:
+            return None
+    except Exception:  # pragma: no cover - exotic dtypes: fall back
+        return None
+    n_r, n_c = layout.grid_shape(mesh)
+    n_dev = int(np.asarray(mesh.devices).size)
+    if n_c != 1 or n_r != n_dev:
+        return None  # column shards or replication: slabs are not row slabs
+    pr, _pc = pad_amounts((rows, cols), layout, mesh)
+    phys = (rows + pr, cols)
+    shard_rows = phys[0] // n_r
+    sharding = layout.sharding(mesh)
+    try:
+        imap = sharding.addressable_devices_indices_map(phys)
+    except Exception:  # pragma: no cover - non-addressable meshes
+        return None
+    by_start: Dict[int, Any] = {}
+    for dev, idx in imap.items():
+        r = idx[0]
+        by_start[0 if r.start is None else int(r.start)] = dev
+    devices = []
+    for j in range(n_r):
+        dev = by_start.get(j * shard_rows)
+        if dev is None:
+            return None
+        devices.append(dev)
+    return ShardGeometry(
+        shape=(rows, cols),
+        physical_shape=phys,
+        dtype=dt.name,
+        n_shards=n_r,
+        shard_rows=shard_rows,
+        intervals=tuple((int(s), int(e)) for s, e in shard_intervals(rows, n_r)),
+        layout_name=layout.name,
+        mesh_key=_mesh_cache_key(mesh),
+        devices=tuple(devices),
+    )
+
+
+def staged_pad_path(pads: Tuple[int, int]) -> str:
+    """Accounting parity for shard-direct receives: the divisibility pad is
+    fused into the staged decode itself (slack rows are memset in the slab,
+    no separate pad op ever runs), so report the path the kernel dispatch
+    *would* have taken — ``SessionStats.fused_relayouts`` keeps one meaning
+    across the legacy and staged send paths."""
+    if pads == (0, 0):
+        return "none"
+    kops = _kernel_ops()
+    return kops._BACKEND if kops.use_pallas() else "ref"
+
+
 def _device_shard_coords(layout: LayoutSpec, mesh: Mesh) -> Tuple[np.ndarray, np.ndarray, int, int]:
     """For each device (flat order of mesh.devices): its (row-shard, col-shard)
     index under ``layout``, plus the grid shape (n_row_shards, n_col_shards)."""

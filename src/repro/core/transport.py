@@ -48,6 +48,12 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 WIRE_MAGIC = b"ALWF"
 _HEADER = struct.Struct("<4sBQ")
 
+#: Frame-format version, carried in HELLO/CONNECT. v2 (PR 9) added
+#: rid-correlated multi-in-flight replies and shard-aligned array framing;
+#: a v1 client greeting a v2 server gets a typed ERR naming both versions
+#: (never garbage), because the server checks this before anything else.
+WIRE_VERSION = 2
+
 # Control-frame types (requests).
 T_HELLO = 0x01
 T_CONNECT = 0x02
@@ -116,6 +122,38 @@ def send_frame(sock: socket.socket, ftype: int, payload: Dict[str, Any]) -> int:
     return len(data)
 
 
+# sendmsg iovec arrays are capped (IOV_MAX, typically 1024); stay far under
+# it so one vectored write never has to be split by the kernel's limit.
+_IOV_GROUP = 64
+
+
+def sendmsg_all(sock: socket.socket, buffers: Sequence[Any], counters: Optional[Dict[str, int]] = None) -> int:
+    """Write ``buffers`` with as few syscalls as possible (writev-style).
+
+    Coalesces header + length prefixes + payload chunks into vectored
+    ``sendmsg`` calls, looping on partial sends; falls back to ``sendall``
+    per buffer where ``sendmsg`` is unavailable. ``counters`` (when given)
+    gets its ``"vectored_writes"`` key bumped once per syscall batch."""
+    views = [v for v in (memoryview(b).cast("B") for b in buffers) if v.nbytes]
+    total = sum(v.nbytes for v in views)
+    if not hasattr(sock, "sendmsg"):  # pragma: no cover - non-POSIX sockets
+        for v in views:
+            sock.sendall(v)
+        return total
+    for i in range(0, len(views), _IOV_GROUP):
+        group = views[i : i + _IOV_GROUP]
+        while group:
+            sent = sock.sendmsg(group)
+            if counters is not None:
+                counters["vectored_writes"] = counters.get("vectored_writes", 0) + 1
+            while group and sent >= group[0].nbytes:
+                sent -= group[0].nbytes
+                group = group[1:]
+            if group and sent:  # partial write landed inside a view
+                group[0] = group[0][sent:]
+    return total
+
+
 def recv_frame(sock: socket.socket) -> Tuple[int, Dict[str, Any], int]:
     """Read one control frame; returns (type, payload, framed bytes)."""
     head = recv_exact(sock, _HEADER.size)
@@ -129,47 +167,74 @@ def recv_frame(sock: socket.socket) -> Tuple[int, Dict[str, Any], int]:
 
 
 # -- array framing -----------------------------------------------------------
-def array_header(arr: np.ndarray, pads: Tuple[int, int] = (0, 0)) -> Dict[str, Any]:
+def array_header(arr, pads: Tuple[int, int] = (0, 0), geom=None) -> Dict[str, Any]:
     """Metadata frame for a 2D payload: dtype/shape describe the physical
     bytes on the wire; ``pads`` lets a sender ship a padded physical block
-    whose receiver strips back to logical shape (DESIGN.md §7 padded sends)."""
-    nchunks = max(1, -(-arr.nbytes // CHUNK_BYTES)) if arr.nbytes else 0
-    return {
+    whose receiver strips back to logical shape (DESIGN.md §7 padded sends).
+    With ``geom`` (a :class:`~repro.core.relayout.ShardGeometry`) the frame
+    declares shard-aligned chunking: ``__shards``/``__srows`` let the
+    receiver decode each chunk straight into a per-shard staging slab."""
+    meta = {
         "__rows": int(arr.shape[0]),
         "__cols": int(arr.shape[1]),
         "__dtype": np.dtype(arr.dtype).name,
         "__nbytes": int(arr.nbytes),
         "__pad_r": int(pads[0]),
         "__pad_c": int(pads[1]),
-        "__chunks": nchunks,
+        "__chunks": max(1, -(-arr.nbytes // CHUNK_BYTES)) if arr.nbytes else 0,
     }
+    if geom is not None:
+        meta["__shards"] = int(geom.n_shards)
+        meta["__srows"] = int(geom.shard_rows)
+        meta["__chunks"] = sum(
+            -(-geom.logical_bytes(j) // CHUNK_BYTES) for j in range(geom.n_shards)
+        )
+    return meta
 
 
-def array_chunks(arr: np.ndarray) -> List[memoryview]:
-    """Zero-copy chunk views over the array's contiguous bytes."""
+def array_chunks(arr: np.ndarray, geom=None) -> List[memoryview]:
+    """Zero-copy chunk views over the array's contiguous bytes. With ``geom``
+    the chunk boundaries additionally break at shard-slab boundaries, so no
+    chunk ever spans two destination shards (the stream is the same logical
+    bytes either way — slabs are contiguous in row-major order)."""
     data = memoryview(np.ascontiguousarray(arr)).cast("B")
-    return [data[i : i + CHUNK_BYTES] for i in range(0, len(data), CHUNK_BYTES)] or []
+    if geom is None:
+        return [data[i : i + CHUNK_BYTES] for i in range(0, len(data), CHUNK_BYTES)] or []
+    itemsize, cols = geom.itemsize, arr.shape[1]
+    chunks: List[memoryview] = []
+    for s, e in geom.intervals:
+        lo, hi = s * cols * itemsize, e * cols * itemsize
+        chunks.extend(data[i : min(i + CHUNK_BYTES, hi)] for i in range(lo, hi, CHUNK_BYTES))
+    return chunks
 
 
-def encode_array(arr: np.ndarray, pads: Tuple[int, int] = (0, 0)) -> Tuple[bytes, List[memoryview], int]:
+def encode_array(
+    arr: np.ndarray, pads: Tuple[int, int] = (0, 0), geom=None
+) -> Tuple[bytes, List[memoryview], int]:
     """(header frame, chunk views, total framed bytes) for one payload."""
-    header = pack_frame(T_ARRAY, array_header(arr, pads))
-    chunks = array_chunks(arr)
+    header = pack_frame(T_ARRAY, array_header(arr, pads, geom))
+    chunks = array_chunks(arr, geom)
     framed = len(header) + sum(8 + len(c) for c in chunks)
     return header, chunks, framed
 
 
-def decode_array(meta: Dict[str, Any], data: bytes) -> np.ndarray:
-    """Inverse of :func:`encode_array` given the reassembled chunk bytes."""
+def decode_array(meta: Dict[str, Any], data) -> np.ndarray:
+    """Inverse of :func:`encode_array` given the chunk bytes.
+
+    ``data`` may be ``bytes``, ``bytearray``, or a ``memoryview`` — bytearray
+    and memoryview input decode zero-copy (``np.frombuffer`` wraps the buffer
+    in place), which is what keeps the loopback path and the receive side
+    free of an extra contiguous copy for multi-chunk arrays."""
     try:
         dtype = np.dtype(meta["__dtype"])
     except (TypeError, KeyError) as exc:
         raise ParameterError(f"bad array frame dtype: {exc}") from None
     rows, cols = int(meta["__rows"]), int(meta["__cols"])
-    if rows * cols * dtype.itemsize != len(data):
+    nbytes = data.nbytes if isinstance(data, memoryview) else len(data)
+    if rows * cols * dtype.itemsize != nbytes:
         raise ParameterError(
             f"array frame declares {rows}x{cols} {dtype.name} "
-            f"({rows * cols * dtype.itemsize} bytes), got {len(data)} payload bytes"
+            f"({rows * cols * dtype.itemsize} bytes), got {nbytes} payload bytes"
         )
     arr = np.frombuffer(data, dtype=dtype).reshape(rows, cols)
     pr, pc = int(meta.get("__pad_r") or 0), int(meta.get("__pad_c") or 0)
@@ -178,17 +243,30 @@ def decode_array(meta: Dict[str, Any], data: bytes) -> np.ndarray:
     return arr
 
 
-def send_array(sock: socket.socket, arr: np.ndarray, pads: Tuple[int, int] = (0, 0)) -> int:
-    header, chunks, framed = encode_array(np.asarray(arr), pads)
-    sock.sendall(header)
+def send_array(
+    sock: socket.socket,
+    arr: np.ndarray,
+    pads: Tuple[int, int] = (0, 0),
+    geom=None,
+    counters: Optional[Dict[str, int]] = None,
+) -> int:
+    """Frame + stream one array: header, then length-prefixed chunks, all
+    coalesced into vectored writes (one syscall covers many chunks) instead
+    of the two ``sendall`` calls per chunk the v1 wire paid."""
+    header, chunks, framed = encode_array(np.asarray(arr), pads, geom)
+    bufs: List[Any] = [header]
     for c in chunks:
-        sock.sendall(struct.pack("<Q", len(c)))
-        sock.sendall(c)
+        bufs.append(struct.pack("<Q", len(c)))
+        bufs.append(c)
+    sendmsg_all(sock, bufs, counters)
     return framed
 
 
 def recv_array_body(sock: socket.socket, meta: Dict[str, Any]) -> Tuple[np.ndarray, int]:
-    """Chunks following an already-read ARRAY frame → (array, bytes read)."""
+    """Chunks following an already-read ARRAY frame → (array, bytes read).
+
+    Decodes in place over the receive buffer (no ``bytes()`` copy): this one
+    allocation is the caller's final array, not a reassembly staging copy."""
     nbytes = int(meta["__nbytes"])
     buf = bytearray(nbytes)
     view = memoryview(buf)
@@ -200,12 +278,23 @@ def recv_array_body(sock: socket.socket, meta: Dict[str, Any]) -> Tuple[np.ndarr
             raise ParameterError(
                 f"array chunks overflow declared size ({got + n} > {nbytes})"
             )
-        view[got : got + n] = recv_exact(sock, n)
+        recv_into(sock, view[got : got + n])
         got += n
         read += 8 + n
     if got != nbytes:
         raise ParameterError(f"array frame short: {got} of {nbytes} payload bytes")
-    return decode_array(meta, bytes(buf)), read
+    return decode_array(meta, view), read
+
+
+def recv_into(sock: socket.socket, view: memoryview) -> None:
+    """Fill ``view`` exactly from the socket, or raise ConnectionError."""
+    got = 0
+    n = view.nbytes
+    while got < n:
+        r = sock.recv_into(view[got:], n - got)
+        if r == 0:
+            raise ConnectionError(f"peer closed mid-frame ({got}/{n} bytes)")
+        got += r
 
 
 def recv_array(sock: socket.socket) -> Tuple[np.ndarray, int]:
@@ -214,6 +303,285 @@ def recv_array(sock: socket.socket) -> Tuple[np.ndarray, int]:
         raise ParameterError(f"expected ARRAY frame, got {FRAME_NAMES.get(ftype, ftype)}")
     arr, n1 = recv_array_body(sock, meta)
     return arr, n0 + n1
+
+
+# -- shard-direct staging (DESIGN.md §13) ------------------------------------
+class StagedShards:
+    """Receive-side result of a shard-direct stream: per-shard physical host
+    slabs (drawn from the governor's staging pool) plus the geometry, with
+    the host→device copies possibly already in flight on the transfer ring.
+
+    Quacks enough like the logical ndarray (``shape``/``dtype``/``ndim``/
+    ``__array__``) that validation, attach fallbacks, and the content store
+    keep working; the send task assembles the sharded device array with
+    ``jax.make_array_from_single_device_arrays`` — never a full-array
+    reassembly copy. ``content_key()`` streams sha1 over the logical slab
+    views for the same reason."""
+
+    ndim = 2
+
+    def __init__(self, geom, buffers: List[np.ndarray], pool=None):
+        self.geom = geom
+        self.buffers = buffers  # physical (shard_rows, cols) slabs
+        self._pool = pool
+        self._device: List[Optional[Any]] = [None] * geom.n_shards
+        self._events = [None] * geom.n_shards  # threading.Event per eager put
+        #: [(start, end)] wall-clock windows of completed device_put jobs and
+        #: the socket-read window — the overlap-ratio instrumentation.
+        self.put_windows: List[Tuple[float, float]] = []
+        self.socket_window: Optional[Tuple[float, float]] = None
+        #: Optional fn(staged) invoked once when device_array() completes —
+        #: transports hook this to fold overlap/put timings into wire stats.
+        self.on_assembled = None
+        self._assembled = False
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return self.geom.shape
+
+    @property
+    def dtype(self):
+        return np.dtype(self.geom.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        r, c = self.geom.shape
+        return r * c * self.geom.itemsize
+
+    def logical_slabs(self) -> List[np.ndarray]:
+        """Per-shard views of the logical rows (pad slack excluded)."""
+        out = []
+        for j, (s, e) in enumerate(self.geom.intervals):
+            out.append(self.buffers[j][: e - s])
+        return out
+
+    def __array__(self, dtype=None):
+        # Materialization fallback (attach payloads, non-staged consumers):
+        # the one deliberate full copy, never on the shard-direct hot path.
+        full = np.concatenate([s for s in self.logical_slabs() if s.size] or
+                              [np.empty((0, self.geom.shape[1]), self.dtype)], axis=0)
+        full = full.reshape(self.geom.shape)
+        return full.astype(dtype, copy=False) if dtype is not None else full
+
+    def content_key(self) -> Tuple:
+        """Streaming equivalent of :func:`repro.core.expr.content_key`: sha1
+        over the logical slab bytes in row order, no reassembly copy."""
+        import hashlib
+
+        h = hashlib.sha1()
+        for slab in self.logical_slabs():
+            h.update(np.ascontiguousarray(slab).data)
+        r, c = self.geom.shape
+        return ((int(r), int(c)), str(self.dtype), h.hexdigest())
+
+    def matches(self, layout, mesh) -> bool:
+        return self.geom.matches(layout, mesh)
+
+    # -- device assembly ------------------------------------------------------
+    def _put(self, j: int) -> None:
+        import time as _time
+
+        import jax
+
+        t0 = _time.perf_counter()
+        arr = jax.device_put(self.buffers[j], self.geom.devices[j])
+        arr.block_until_ready()
+        self._device[j] = arr
+        self.put_windows.append((t0, _time.perf_counter()))
+
+    def device_array(self, sharding=None):
+        """The staged client-layout device array: waits for in-flight ring
+        puts, issues any remaining ones inline, and assembles the shards —
+        no host-side reassembly. ``sharding`` is the client-layout sharding
+        (callers in ``ClientCore`` pass the real one); absent, an equivalent
+        row sharding is rebuilt from the geometry's device order."""
+        import jax
+
+        for j in range(self.geom.n_shards):
+            ev = self._events[j]
+            if ev is not None:
+                ev.wait()
+            if self._device[j] is None:
+                self._put(j)
+        if sharding is None:
+            import jax.sharding as jsh
+
+            mesh = jsh.Mesh(np.asarray(self.geom.devices), ("data",))
+            sharding = jsh.NamedSharding(mesh, jsh.PartitionSpec("data", None))
+        by_dev = {d: j for j, d in enumerate(self.geom.devices)}
+        arrays = [
+            self._device[by_dev[dev]]
+            for dev in sharding.addressable_devices_indices_map(self.geom.physical_shape)
+        ]
+        out = jax.make_array_from_single_device_arrays(
+            self.geom.physical_shape, sharding, arrays
+        )
+        if not self._assembled:
+            self._assembled = True
+            if self.on_assembled is not None:
+                self.on_assembled(self)
+        return out
+
+    def overlap_ratio(self) -> Optional[float]:
+        """Σ(put ∩ socket window) / Σ(put duration), None before finish()."""
+        if self.socket_window is None or not self.put_windows:
+            return None
+        t0, t1 = self.socket_window
+        put = sum(e - s for s, e in self.put_windows)
+        if put <= 0:
+            return None
+        overlap = sum(max(0.0, min(e, t1) - max(s, t0)) for s, e in self.put_windows)
+        return overlap / put
+
+    def dispose(self, *check_arrays) -> None:
+        """Return slabs to the staging pool — except any aliased by a live
+        device array (CPU ``device_put`` is zero-copy; see ``_aliases_host``)."""
+        if self._pool is None:
+            return
+        from repro.core.memgov import _aliases_host
+
+        live = [self._device[j] for j in range(len(self.buffers))]
+        live.extend(a for a in check_arrays if a is not None)
+        for j, buf in enumerate(self.buffers):
+            if buf is None:
+                continue
+            if any(a is not None and _aliases_host(a, buf) for a in live):
+                continue
+            self._pool.release(buf)
+            self.buffers[j] = buf  # kept readable for logical views
+        # slabs stay referenced for logical reads; the pool guards against
+        # double-acquire by identity, so a released-but-referenced slab is
+        # only rewritten after this object is dropped by its consumer.
+
+
+class ShardStreamReceiver:
+    """Decodes a shard-aligned ARRAY body chunk-by-chunk into per-shard
+    staging slabs, optionally firing a ``device_put`` per shard as its bytes
+    land (overlapping socket reads with host→device copies).
+
+    ``pool`` is the governor's staging pool (slab reuse across receives);
+    ``ring`` a :class:`~repro.core.taskqueue.TransferExecutor` for the eager
+    puts — when absent or full, puts run at assembly time instead."""
+
+    def __init__(self, meta: Dict[str, Any], geom, pool=None, ring=None, eager: bool = True):
+        import threading as _threading
+        import time as _time
+
+        self.geom = geom
+        self.meta = meta
+        self._ring = ring
+        self._eager = eager and geom.shape[0] > 0
+        self._threading = _threading
+        self._time = _time
+        slab = geom.slab_shape()
+        dtype = np.dtype(geom.dtype)
+        buffers = []
+        for j, (s, e) in enumerate(geom.intervals):
+            buf = pool.acquire(slab, dtype) if pool is not None else np.empty(slab, dtype)
+            filled = e - s
+            if filled < geom.shard_rows:
+                buf[filled:] = 0  # pad slack: the fused-into-decode zero fill
+            buffers.append(buf)
+        self.staged = StagedShards(geom, buffers, pool=pool)
+        self._shard = 0
+        self._offset = 0  # bytes filled into the current shard's logical slab
+        self._t0: Optional[float] = None
+        self.read = 0
+
+    def _advance_full_shards(self) -> None:
+        while self._shard < self.geom.n_shards:
+            want = self.geom.logical_bytes(self._shard)
+            if self._offset < want:
+                return
+            self._complete(self._shard)
+            self._shard += 1
+            self._offset = 0
+
+    def _complete(self, j: int) -> None:
+        if not self._eager:
+            return
+        ev = self._threading.Event()
+        self.staged._events[j] = ev
+
+        def job(jj=j, ee=ev):
+            try:
+                self.staged._put(jj)
+            finally:
+                ee.set()
+
+        if self._ring is None or not self._ring.try_submit(job):
+            job()  # ring full: copy on this thread (still inside the window)
+
+    def slab_view(self, n: int) -> memoryview:
+        """A writable view of the next ``n`` bytes of the current shard's
+        slab. Raises if the chunk would cross a shard boundary — the sender's
+        framing contract."""
+        while (
+            self._shard < self.geom.n_shards
+            and self.geom.logical_bytes(self._shard) == 0
+        ):
+            self._complete(self._shard)
+            self._shard += 1
+        if self._shard >= self.geom.n_shards:
+            raise ParameterError("array chunks overflow declared shard layout")
+        want = self.geom.logical_bytes(self._shard)
+        if self._offset + n > want:
+            raise ParameterError(
+                f"chunk crosses shard boundary ({self._offset + n} > {want})"
+            )
+        buf = memoryview(self.staged.buffers[self._shard]).cast("B")
+        return buf[self._offset : self._offset + n]
+
+    def feed(self, data) -> None:
+        """Decode one chunk (bytes/memoryview) into the staging slabs."""
+        view = memoryview(data).cast("B")
+        if self._t0 is None:
+            self._t0 = self._time.perf_counter()
+        self.slab_view(view.nbytes)[:] = view
+        self._offset += view.nbytes
+        self.read += view.nbytes
+        self._advance_full_shards()
+
+    def recv_body(self, sock: socket.socket) -> int:
+        """Read the full shard-aligned body from ``sock`` (length-prefixed
+        chunks, as framed by :func:`encode_array` with a geometry); returns
+        framed bytes read."""
+        if self._t0 is None:
+            self._t0 = self._time.perf_counter()
+        read = 0
+        for _ in range(int(self.meta["__chunks"])):
+            (n,) = struct.unpack("<Q", recv_exact(sock, 8))
+            target = self.slab_view(n)
+            recv_into(sock, target)
+            self._offset += n
+            read += 8 + n
+            self.read += n
+            self._advance_full_shards()
+        self.finish()
+        return read
+
+    def finish(self) -> StagedShards:
+        self._advance_full_shards()
+        if self._shard < self.geom.n_shards or self._offset:
+            self.abort()
+            raise ParameterError(
+                f"shard stream short: stopped in shard {self._shard} "
+                f"of {self.geom.n_shards}"
+            )
+        t0 = self._t0 if self._t0 is not None else self._time.perf_counter()
+        self.staged.socket_window = (t0, self._time.perf_counter())
+        return self.staged
+
+    def abort(self) -> None:
+        """Mid-stream failure: hand unconsumed slabs straight back to the
+        pool (shards already claimed by an eager put are left to the GC —
+        their device arrays may alias the slab)."""
+        pool = self.staged._pool
+        if pool is None:
+            return
+        for j, buf in enumerate(self.staged.buffers):
+            if self.staged._events[j] is None and self.staged._device[j] is None:
+                pool.release(buf)
 
 
 # -- error mapping -----------------------------------------------------------
@@ -379,8 +747,19 @@ class Transport:
         raise NotImplementedError
 
     def wire_stats(self) -> Dict[str, int]:
-        """Bytes/frames this transport moved (framing included)."""
-        return {"bytes_sent": 0, "bytes_received": 0, "frames": 0}
+        """Bytes/frames this transport moved (framing included), plus the
+        PR-9 data-plane counters: vectored write syscalls, shard-direct vs
+        full-reassembly receive paths, and in-flight request depth."""
+        return {
+            "bytes_sent": 0,
+            "bytes_received": 0,
+            "frames": 0,
+            "vectored_writes": 0,
+            "shard_direct_receives": 0,
+            "reassembly_receives": 0,
+            "inflight": 0,
+            "max_inflight": 0,
+        }
 
 
 class LoopbackTransport(Transport):
@@ -399,6 +778,12 @@ class LoopbackTransport(Transport):
     def __init__(self):
         self.bytes_framed = 0
         self.frames = 0
+        self.counters: Dict[str, int] = {
+            "shard_direct_receives": 0,
+            "reassembly_receives": 0,
+            "overlap_ns": 0,
+            "put_ns": 0,
+        }
 
     def _roundtrip(self, arr: np.ndarray) -> np.ndarray:
         header, chunks, framed = encode_array(arr)
@@ -406,13 +791,75 @@ class LoopbackTransport(Transport):
         self.frames += 1
         ftype, meta = unpack_frame(header)
         assert ftype == T_ARRAY
-        return decode_array(meta, b"".join(chunks))
+        # bytearray join keeps the decode zero-copy over this one buffer —
+        # it IS the client array, not a reassembly staging copy.
+        buf = bytearray()
+        for c in chunks:
+            buf += c
+        return decode_array(meta, buf)
 
     def open_session(self, core, kwargs):
         return core.engine.connect(**kwargs)
 
+    def _stage(self, core, arr: np.ndarray):
+        """Shard-direct framing for the in-process path (DESIGN.md §13):
+        encode with shard-aligned chunk boundaries and decode each chunk
+        straight into a per-shard staging slab from the governor's pool —
+        tier-1 exercises the same streaming decode TCP uses. Returns None
+        when the layout has no row-slab geometry (cyclic/col-sharded/...)."""
+        from repro.core.relayout import shard_geometry
+
+        sess = getattr(core, "session", None)
+        if sess is None:
+            return None
+        if core.engine_layout.cyclic:
+            # Cyclic residency forbids pre-padding (the permutation would
+            # interleave the zero rows) — staging slabs are padded, so keep
+            # cyclic pipelines on the classic path and its loud failures.
+            return None
+        geom = shard_geometry(arr.shape, arr.dtype, core.client_layout, sess.mesh)
+        if geom is None:
+            return None
+        # pads stay (0, 0): the stream is the *logical* bytes; the receive
+        # side materializes pad slack in the slabs (a fallback decoder that
+        # ignores __shards reassembles the logical array unchanged).
+        header, chunks, framed = encode_array(arr, geom=geom)
+        self.bytes_framed += framed
+        self.frames += 1
+        ftype, meta = unpack_frame(header)
+        assert ftype == T_ARRAY
+        mg = sess.memgov
+        recv = ShardStreamReceiver(
+            meta, geom, pool=mg.staging, ring=mg.transfer_ring(), eager=mg.unbudgeted()
+        )
+        try:
+            for c in chunks:
+                recv.feed(c)
+            staged = recv.finish()
+        except BaseException:
+            recv.abort()
+            raise
+        staged.on_assembled = self._record_overlap
+        return staged
+
+    def _record_overlap(self, staged) -> None:
+        ratio = staged.overlap_ratio()
+        if ratio is None:
+            return
+        put = sum(e - s for s, e in staged.put_windows)
+        self.counters["put_ns"] += int(put * 1e9)
+        self.counters["overlap_ns"] += int(ratio * put * 1e9)
+
     def submit_send(self, core, array, *, name, block, key=None, payload=None):
-        arr = self._roundtrip(np.asarray(array))
+        arr = np.asarray(array)
+        staged = self._stage(core, arr)
+        if staged is not None:
+            self.counters["shard_direct_receives"] += 1
+            return core._local_submit_send(
+                staged, name=name, block=block, key=key, payload=payload
+            )
+        self.counters["reassembly_receives"] += 1
+        arr = self._roundtrip(arr)
         return core._local_submit_send(arr, name=name, block=block, key=key, payload=payload)
 
     def submit_run(self, core, library, routine, args, params, *, block, out_shapes, out_dtype):
@@ -446,6 +893,10 @@ class LoopbackTransport(Transport):
             "bytes_sent": self.bytes_framed,
             "bytes_received": 0,
             "frames": self.frames,
+            "vectored_writes": 0,  # no socket: nothing to coalesce
+            "inflight": 0,
+            "max_inflight": 0,
+            **self.counters,
         }
 
 

@@ -496,7 +496,9 @@ class TestEngineStats:
         with _session(engine, name="obs") as s:
             s.send(a).data()
             snap = engine.stats()
-            assert set(snap) == {"engine", "sessions", "memgov", "residents", "scheduler"}
+            assert set(snap) == {
+                "engine", "sessions", "memgov", "residents", "scheduler", "wire",
+            }
             eng = snap["engine"]
             assert eng["workers"] == engine.num_workers
             assert eng["live_sessions"] == 1
@@ -516,6 +518,22 @@ class TestEngineStats:
             assert snap["memgov"]["pressure"] == snap["memgov"]["used"]
             assert snap["memgov"]["high_water"] > 0
             assert snap["residents"]["entries"] >= 1
+            # the wire section is always present — zeros when no server runs
+            w = snap["wire"]
+            for key in (
+                "inflight",
+                "max_inflight",
+                "vectored_writes",
+                "shard_direct_receives",
+                "reassembly_receives",
+                "streamed_fetches",
+                "gathered_fetches",
+                "overlap_ns",
+                "put_ns",
+                "version_rejects",
+            ):
+                assert isinstance(w[key], int), key
+            assert isinstance(w["server"], bool)
         after = engine.stats()
         assert after["engine"]["live_sessions"] == 0
         assert after["sessions"] == {}

@@ -324,6 +324,145 @@ class TestDisconnect:
 
 
 # ---------------------------------------------------------------------------
+# the v2 streaming data plane (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+class TestV2Protocol:
+    def test_version_mismatch_gets_typed_error(self, engine):
+        """A v1 client (or any mismatched version) must get a typed
+        SessionError naming both versions — never garbage frames."""
+        srv = ensure_server(engine)
+        for ftype in (wire.T_HELLO, wire.T_CONNECT):
+            sock = socket.create_connection(srv.address)
+            try:
+                wire.send_frame(
+                    sock, ftype, {"__version": 1, "__rid": 7, "__token": None}
+                )
+                rtype, reply, _ = wire.recv_frame(sock)
+                assert rtype == wire.T_ERR
+                assert reply.get("__rid") == 7  # correlated even for errors
+                exc = wire.exception_from_payload(reply)
+                assert isinstance(exc, SessionError)
+                msg = str(exc)
+                assert "version mismatch" in msg
+                assert "v1" in msg and f"v{wire.WIRE_VERSION}" in msg
+            finally:
+                sock.close()
+        assert srv.stats["version_rejects"] == 2
+
+    def test_shard_direct_send_roundtrips_bit_identical(self, engine):
+        """A multi-chunk send decodes straight into shard slabs (no
+        reassembly buffer) and still round-trips bit-exactly."""
+        srv = ensure_server(engine)
+        direct_before = srv.stats["shard_direct_receives"]
+        s = _session(engine, transport="tcp")
+        rng = np.random.default_rng(3)
+        a = rng.standard_normal((1024, 300)).astype(np.float32)
+        assert a.nbytes > wire.CHUNK_BYTES  # really streams multiple chunks
+        out = s.collect(s.send(a).materialize())
+        np.testing.assert_array_equal(np.asarray(out), a)
+        assert srv.stats["shard_direct_receives"] >= direct_before + 1
+        assert srv.stats["reassembly_receives"] == 0
+        assert srv.stats["streamed_fetches"] + srv.stats["gathered_fetches"] >= 1
+        s.close()
+
+    def test_mid_stream_death_leaves_no_leaks(self, engine):
+        """Peer death between shard chunks: no partially-admitted handle, no
+        stuck governor claims, the worker group returns to the pool."""
+        from repro.core.layouts import by_name
+        from repro.core.relayout import shard_geometry
+
+        srv = ensure_server(engine)
+        s = _session(engine, transport="tcp")
+        sess = s.session
+        arr = np.ones((1024, 300), dtype=np.float32)
+        geom = shard_geometry(arr.shape, arr.dtype, by_name("row"), sess.mesh)
+        assert geom is not None
+        header, chunks, _framed = wire.encode_array(arr, geom=geom)
+        assert len(chunks) >= 2
+        sock = s.transport._sock
+        wire.send_frame(
+            sock,
+            wire.T_SEND,
+            {"__name": "dead", "__block": False, "__has_payload": False, "__rid": 99},
+        )
+        sock.sendall(header)
+        c = chunks[0]  # first chunk only, then the client process "dies"
+        sock.sendall(len(c).to_bytes(8, "little"))
+        sock.sendall(bytes(c))
+        sock.close()
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:
+            if engine.stats()["engine"]["available_workers"] == 1:
+                break
+            time.sleep(0.02)
+        snap = engine.stats()
+        assert snap["engine"]["available_workers"] == 1, snap["engine"]
+        assert snap["engine"]["live_sessions"] == 0
+        assert snap["memgov"]["reserved"] == 0  # no stuck claims
+        # the aborted stream never counted as a completed receive
+        assert srv.stats["shard_direct_receives"] == 0
+        # and the engine is healthy: a fresh session sends fine
+        s2 = _session(engine, transport="tcp")
+        out = s2.collect(s2.send(arr).materialize())
+        np.testing.assert_array_equal(np.asarray(out), arr)
+        s2.close()
+
+    def test_multi_inflight_fetch_does_not_block_barrier(self, engine):
+        """The ticket-correlated protocol: a blocked FETCH must not hold the
+        connection — a concurrent BARRIER completes on the same socket, and
+        the server observes a pipeline depth ≥ 2."""
+        from repro.core.futures import AlFuture
+
+        srv = ensure_server(engine)
+        s = _session(engine, transport="tcp")
+        gate = AlFuture(label="gate")
+        ticket = srv.register_future(s.transport.token, gate)
+        got = {}
+
+        def fetch():
+            got["arr"] = s.transport._rpc(
+                wire.T_FETCH, {"__ticket": ticket, "__timeout": 30}, expect_array=True
+            )
+
+        t = threading.Thread(target=fetch)
+        t.start()
+        deadline = time.monotonic() + 5
+        while srv.inflight_depth() < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert srv.inflight_depth() >= 1
+        s.transport._rpc(wire.T_BARRIER, {"__timeout": 10})  # completes now
+        assert t.is_alive()  # the FETCH is still parked server-side
+        gate._set_result(np.eye(3, dtype=np.float32))
+        t.join(10)
+        assert not t.is_alive()
+        np.testing.assert_array_equal(got["arr"], np.eye(3, dtype=np.float32))
+        assert srv.stats["max_inflight"] >= 2
+        ws = s.transport.wire_stats()
+        assert ws["max_inflight"] >= 2
+        s.close()
+
+    def test_decode_array_zero_copy_multi_chunk(self):
+        """Satellite regression: decoding a multi-chunk body from a
+        bytearray/memoryview must view the buffer, not copy it."""
+        rng = np.random.default_rng(5)
+        arr = rng.standard_normal((600, 500)).astype(np.float32)
+        header, chunks, _ = wire.encode_array(arr)
+        assert len(chunks) >= 2
+        body = bytearray()
+        for c in chunks:
+            body += c
+        _ftype, meta = wire.unpack_frame(header)
+        out = wire.decode_array(meta, body)
+        np.testing.assert_array_equal(out, arr)
+        src = np.frombuffer(body, dtype=np.uint8)
+        assert np.shares_memory(out, src)  # no extra contiguous copy
+        out2 = wire.decode_array(meta, memoryview(body))
+        assert np.shares_memory(out2, src)
+
+
+# ---------------------------------------------------------------------------
 # transport selection
 # ---------------------------------------------------------------------------
 
