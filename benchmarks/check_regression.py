@@ -65,6 +65,18 @@ GATES = [
     ("admission", "max_passed_by", "lower"),
     ("admission", "shared_group_attach_bytes", "lower"),
     ("admission", "shared_views", "higher"),
+    # Fleet chaos gate (DESIGN.md §14): recovery after an engine kill must
+    # stay bit-identical (1-or-fail), refill residents by content key with
+    # zero re-sent bytes (baseline 0 makes the limit 0), keep the replay
+    # bounded by the analytically-priced lost DAG suffix (1-or-fail), and the
+    # drain+re-admit step must finish under a generous wall-clock ceiling —
+    # a boolean, so the gate catches hangs without being timing-sensitive.
+    ("fleet", "bit_identical", "higher"),
+    ("fleet", "refill_resend_bytes", "lower"),
+    ("fleet", "refill_attaches", "higher"),
+    ("fleet", "replayed_bytes_bounded", "higher"),
+    ("fleet", "recovery_within_ceiling", "higher"),
+    ("fleet", "recovered_sessions", "higher"),
 ]
 
 

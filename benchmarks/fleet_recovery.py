@@ -1,0 +1,153 @@
+"""Fleet chaos gate: kill an engine mid-pipeline, recover by lineage replay
+(DESIGN.md §14).
+
+The deployment study behind Alchemist (arXiv:1910.01354) runs long-lived
+server processes under real operational churn; this benchmark is the
+reproduction's chaos drill. A 2-engine :class:`repro.fleet.FleetSupervisor`
+admits one client on engine 1, materializes the prefix of a gemm pipeline
+there, then :meth:`kill`\\ s the engine under the client — the server is
+stopped mid-session exactly like a crashed process. The supervisor drains the
+dead engine and fails the client over to the survivor; finishing the pipeline
+then asserts the three acceptance properties:
+
+1. **Bit-identical.** The post-recovery result equals the result of the same
+   pipeline on an unkilled fleet, bit for bit — replay is lazy re-lowering of
+   the same expr DAG over the same content, not a numerical approximation.
+2. **Zero re-sends.** Residents refill on the survivor by content key: the
+   payloads the drain secured host-side are adopted into the survivor's
+   store, so every replayed send attaches (``cross_session_reuses``) with
+   ``send_bytes == 0`` on the recovered session.
+3. **Bounded replay.** ``replayed_bytes`` (re-lowered nodes priced from
+   static shapes) is bounded by the lost DAG suffix, computed analytically
+   from the lineage — recovery never recomputes more than the kill destroyed.
+
+A generous wall-clock ceiling on the drain+re-admit step rides along as a
+boolean (``recovery_within_ceiling``) so a hung drain fails loudly without
+making the gate timing-sensitive. All gated counters are analytic byte
+counts, deterministic across hosts and emulated-device counts.
+
+Both engines are given the *full* local device list (the supervisor
+partitions a duplicated list), so the control engine and the survivor see
+identical meshes — a requirement for the bit-identical comparison.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.fleet import FleetSupervisor, suffix_bytes
+
+ELEMENTAL = "repro.linalg.library:ElementalLib"
+M, K = 256, 128
+A_BYTES = M * K * 4
+B_BYTES = K * K * 4
+#: generous drain+re-admit ceiling — catches hangs, not slow runners
+RECOVERY_CEILING_S = 30.0
+
+
+def _dataset():
+    rng = np.random.default_rng(11)
+    a = rng.standard_normal((M, K)).astype(np.float32)
+    b = rng.standard_normal((K, K)).astype(np.float32)
+    return a, b
+
+
+def _pipeline(s, a: np.ndarray, b: np.ndarray):
+    """send(a), send(b), then a 3-deep gemm chain. Every send feeds the
+    first collect, so all content is resident (and therefore recoverable
+    host-side) before the kill."""
+    la, lb = s.send(a, name="A"), s.send(b, name="B")
+    lc = s.run("elemental", "gemm", la, lb)
+    ld = s.run("elemental", "gemm", lc, lb)
+    le = s.run("elemental", "gemm", ld, lb)
+    return [la, lb, lc, ld, le]
+
+
+def _control(a: np.ndarray, b: np.ndarray) -> List[np.ndarray]:
+    """The unkilled reference: same pipeline, one engine, same mesh."""
+    with FleetSupervisor(devices=list(jax.devices()), engines=1) as sup:
+        s = sup.connect(name="control")
+        s.register_library("elemental", ELEMENTAL)
+        roots = _pipeline(s, a, b)
+        outs = [np.asarray(s.collect(roots[2])), np.asarray(s.collect(roots[4]))]
+        s.close()
+    return outs
+
+
+def run(report: List[str], metrics: Optional[Dict] = None) -> None:
+    a, b = _dataset()
+    ref_prefix, ref_final = _control(a, b)  # also warms the gemm jit cache
+
+    devices = list(jax.devices()) * 2  # each engine gets the full local mesh
+    with FleetSupervisor(devices=devices, engines=2) as sup:
+        victim = list(sup.engines)[0]
+        s = sup.connect(name="app", engine=victim)
+        s.register_library("elemental", ELEMENTAL)
+        roots = _pipeline(s, a, b)
+        prefix = np.asarray(s.collect(roots[2]))  # materialize A, B, A@B
+
+        t0 = time.perf_counter()
+        recs = sup.kill(victim)  # chaos: server stopped under the client
+        t_recover = time.perf_counter() - t0
+        assert len(recs) == 1, recs
+        rec = recs[0]
+
+        t1 = time.perf_counter()
+        final = np.asarray(s.collect(roots[4]))  # forces the suffix replay
+        t_replay = time.perf_counter() - t1
+
+        sup.recovery.account_replay(rec, roots, s.planner)
+        lost_bytes = suffix_bytes(roots, rec.lost_ids)
+        post = s.stats.summary()
+        fleet_stats = sup.stats()
+        s.close()
+
+    # 1. bit-identical vs the unkilled fleet
+    np.testing.assert_array_equal(prefix, ref_prefix)
+    np.testing.assert_array_equal(final, ref_final)
+    # 2. refills attach by content key — zero bytes re-crossed the bridge
+    assert post["send_bytes"] == 0, post
+    assert post["cross_session_reuses"] == 2, post  # A and B re-attached
+    assert rec.adopted_keys == 2 and rec.adopted_bytes == A_BYTES + B_BYTES, rec
+    # 3. replay bounded by the lost suffix, both sides analytic
+    assert 0 < rec.replayed_bytes <= lost_bytes, (rec.replayed_bytes, lost_bytes)
+    within_ceiling = int(t_recover <= RECOVERY_CEILING_S)
+    assert within_ceiling, f"drain+re-admit took {t_recover:.1f}s"
+
+    derived = (
+        f"recovered_sessions={len(recs)};"
+        f"adopted_MB={rec.adopted_bytes / 1e6:.2f};"
+        f"replayed_MB={rec.replayed_bytes / 1e6:.2f};"
+        f"lost_suffix_MB={lost_bytes / 1e6:.2f};"
+        f"refill_resend_bytes={post['send_bytes']};"
+        f"recover_s={t_recover:.3f};replay_s={t_replay:.3f}"
+    )
+    report.append(csv_row("fleet_recovery", t_recover * 1e6, derived))
+    if metrics is not None:
+        metrics["fleet"] = {
+            # gated: replay correctness and economy are 1-or-fail booleans;
+            # the byte counters are analytic (shape-derived) so a baseline
+            # of 0 resend bytes makes any re-shipped byte a failure
+            "bit_identical": 1,
+            "refill_resend_bytes": post["send_bytes"],
+            "refill_attaches": post["cross_session_reuses"],
+            "replayed_bytes_bounded": int(0 < rec.replayed_bytes <= lost_bytes),
+            "recovery_within_ceiling": within_ceiling,
+            "recovered_sessions": len(recs),
+            "adopted_keys": rec.adopted_keys,
+            "adopted_bytes": rec.adopted_bytes,
+            "replayed_nodes": rec.replayed_nodes,
+            "replayed_bytes": rec.replayed_bytes,
+            "lost_suffix_bytes": lost_bytes,
+            "recovery_seconds": t_recover,
+            "replay_seconds": t_replay,
+            # the fleet-level observability block (per-engine health, drains,
+            # replays, autoscale actions) — DESIGN.md §14's sup.stats(),
+            # surfaced in the CI artifact next to engine_stats
+            "fleet_stats": fleet_stats,
+        }

@@ -34,6 +34,12 @@
                      and a content-affine reader joins the writer's shared
                      worker group with zero engine-side attach bytes
                      (DESIGN.md §12)
+  fleet_recovery     beyond-paper: fleet chaos gate — kill one engine of a
+                     2-engine supervised fleet mid-pipeline; the survivor
+                     replays the lost DAG suffix bit-identically, refills
+                     residents by content key with zero re-sent bytes, and
+                     the replay is bounded by the analytically-priced lost
+                     suffix (DESIGN.md §14)
 
 Prints ``name,us_per_call,derived`` CSV rows. ``--only`` takes a
 comma-separated subset; ``--json PATH`` additionally writes the structured
@@ -60,7 +66,7 @@ from typing import Dict, List
 
 SUITE_NAMES = [
     "gemm", "svd", "transfer", "overlap", "offload", "spill", "cross",
-    "overlap_spill", "wire", "wire_throughput", "admission",
+    "overlap_spill", "wire", "wire_throughput", "admission", "fleet",
 ]
 
 
@@ -95,6 +101,7 @@ def main() -> None:
     from benchmarks import (
         admission_fairness,
         cross_session,
+        fleet_recovery,
         gemm_table1,
         offload_plan,
         overlap_async,
@@ -119,6 +126,7 @@ def main() -> None:
         "wire": wire_overhead.run,
         "wire_throughput": wire_throughput.run,
         "admission": admission_fairness.run,
+        "fleet": fleet_recovery.run,
     }
 
     if args.only:

@@ -185,14 +185,10 @@ class ClientCore:
         # through this transport. Default comes from REPRO_TRANSPORT, so an
         # unmodified test suite can run over a localhost socket.
         self.transport = resolve_transport(transport)
-        self.session = self.transport.open_session(
-            self,
-            dict(
-                name=name,
-                hbm_budget=hbm_budget,
-                placement=placement,
-            ),
-        )
+        # Re-admission record (DESIGN.md §14): the kwargs a fleet recovery
+        # replays through a surviving engine's queued connect path.
+        self._admission = dict(name=name, hbm_budget=hbm_budget, placement=placement)
+        self.session = self.transport.open_session(self, dict(self._admission))
 
     @classmethod
     def _over_session(cls, engine: "AlchemistEngine", session, client_layout, engine_layout):
@@ -208,6 +204,7 @@ class ClientCore:
         core._stopped = False
         core.transport = None
         core.session = session
+        core._admission = {}
         return core
 
     # -- libraries -----------------------------------------------------------
@@ -232,6 +229,15 @@ class ClientCore:
             # allow aliasing but keep it explicit in the session table
             lib.name = name
         self.session.libraries[name] = lib
+        # Record the wire-expressible spec for the session's re-admission
+        # descriptor: import-path strings verbatim, instances/classes as
+        # their import path (best effort — a fleet recovery re-resolves it).
+        if isinstance(spec, str):
+            self.session.library_specs[name] = spec
+        else:
+            self.session.library_specs[name] = (
+                f"{type(lib).__module__}:{type(lib).__name__}"
+            )
         return lib
 
     def library(self, name: str) -> Library:
@@ -891,6 +897,39 @@ class ClientCore:
     @property
     def mesh(self) -> Mesh:
         return self.session.mesh
+
+    def rebind(
+        self,
+        engine: "AlchemistEngine",
+        *,
+        transport: Union[Transport, str, None] = None,
+        placement: Optional[PlacementRequest] = None,
+    ) -> "Session":
+        """Fail this core over to another engine (fleet recovery,
+        DESIGN.md §14).
+
+        Re-admits through ``engine``'s queued connect path using the
+        original admission kwargs (optionally overriding the placement),
+        swaps the transport and engine-side session **in place** — live
+        :class:`AlArray` handles keep working because they reference this
+        core, never the dead session — re-registers the old session's
+        wire-expressible libraries, and drops the planner's lowering memos
+        so the next materialization replays exactly the DAG suffix whose
+        engine-side outputs were lost. Returns the new engine-side session.
+        """
+        specs = dict(getattr(self.session, "library_specs", None) or {})
+        kwargs = dict(self._admission)
+        if placement is not None:
+            kwargs["placement"] = placement
+        self.engine = engine
+        self.transport = resolve_transport(transport)
+        self.session = self.transport.open_session(self, kwargs)
+        for lname, spec in specs.items():
+            self.transport.register_library(self, lname, spec)
+        if self._planner is not None:
+            self._planner.reset()
+        self._stopped = False
+        return self.session
 
     def stop(self) -> None:
         """Disconnect and release the worker group (paper's ``ac.stop()``).

@@ -26,6 +26,7 @@ a deprecation shim that folds them into a request.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -183,6 +184,12 @@ class AlchemistEngine:
             residents=self.residents,
             aging_bound=aging_bound,
         )
+        # Supervision anchors: wall-clock birth for operators, a monotonic
+        # origin for drift-free uptime, and a snapshot sequence number so a
+        # fleet scraper can reject stale or reordered stats replies.
+        self.started_at = time.time()
+        self._monotonic_start = time.monotonic()
+        self._snapshot_seq = 0
 
     # -- worker allocation ---------------------------------------------------
     @property
@@ -310,12 +317,16 @@ class AlchemistEngine:
         budget, high water), the resident store, and the scheduler section
         (queue depth, ticket lifecycle counters, shared groups, scoring
         hits). This is what ``benchmarks/run.py --json`` embeds."""
+        self._snapshot_seq += 1
         pool = {
             "workers": self.num_workers,
             "available_workers": self.available_workers,
             "queued_connects": self.queued_connects,
             "live_sessions": len(self.sessions),
             "admissions": dict(self.admissions),
+            "started_at": self.started_at,
+            "uptime_s": time.monotonic() - self._monotonic_start,
+            "snapshot_seq": self._snapshot_seq,
         }
         sessions = dict(self.sessions)
         mg = self.memgov

@@ -518,6 +518,16 @@ class OffloadPlanner:
         with self._lock:
             return self._lowered.get(node.id)
 
+    def lowered_ids(self) -> set:
+        """Ids of every expr node with a memoized lowering — the lineage
+        ledger for fleet recovery (DESIGN.md §14): snapshotted at failure
+        time it names the DAG prefix whose engine-side outputs were lost;
+        intersected with a post-replay snapshot it bounds what actually
+        re-ran (the planner only re-lowers what a materialization demands,
+        so replay ⊆ lost by construction — the benchmark asserts it)."""
+        with self._lock:
+            return set(self._lowered)
+
     # -- maintenance ---------------------------------------------------------
     def reset(self) -> None:
         """Drop the lowering memo and resident cache (e.g. after bulk frees).

@@ -75,6 +75,11 @@ class ResidentEntry:
         self.payload: Optional[np.ndarray] = None
         #: session id -> that session's placement handles (usually one).
         self.placements: Dict[int, List[AlMatrix]] = {}
+        #: ids of sessions whose placement was *migrated* out (session close
+        #: secured the payload host-side). Lets the fleet recovery enumerate
+        #: a drained session's content after the drain already ran — explicit
+        #: frees never land here (a user free means the content is done).
+        self.former_sessions: set = set()
         #: ids of the worker-group devices that most recently held a
         #: placement of this content — the admission-time affinity signal
         #: (DESIGN.md §9): a later ``connect(datasets=...)`` prefers the free
@@ -277,6 +282,8 @@ class ResidentStore:
                     if h.is_live:
                         h.free()  # drops the HBM charge + any spill bytes
                 entry.placements.pop(session.id, None)
+                if entry.payload is not None:
+                    entry.former_sessions.add(session.id)
                 if entry.refcount == 0 and entry.payload is None:
                     # nothing left to refill from: forget the key
                     self._entries.pop(entry.key, None)
@@ -290,6 +297,63 @@ class ResidentStore:
         sessions' close)."""
         with self._lock:
             self._entries.clear()
+
+    # -- lineage recovery (DESIGN.md §14) ------------------------------------
+    def recoverable_for(self, session_id: int) -> Dict[Tuple, ResidentEntry]:
+        """Content this session pinned whose host bytes can still be secured.
+
+        The fleet recovery planner's enumeration step: for each entry the
+        (dead) session holds a placement of, try ``ensure_payload`` — the
+        snapshot captured at publish time, a host fallback, or the governor's
+        spill store all survive an engine death because they live host-side.
+        Entries whose bytes are gone everywhere are simply omitted: their
+        content re-enters through lineage replay (the ``SendExpr`` that
+        produced them re-runs), not through the store.
+        """
+        if not self.enabled:
+            return {}
+        with self._lock:
+            mine = [
+                entry
+                for entry in self._entries.values()
+                if session_id in entry.placements
+                or session_id in entry.former_sessions
+            ]
+        out: Dict[Tuple, ResidentEntry] = {}
+        for entry in mine:
+            if self.ensure_payload(entry) is not None:
+                out[entry.key] = entry
+        return out
+
+    def adopt(self, entry: ResidentEntry) -> bool:
+        """Import another store's entry as an orphan: payload only, no
+        placements, no pins.
+
+        The recovery path seeds the *surviving* engine's store with the dead
+        engine's secured payloads, so the re-admitted session's re-lowered
+        sends take the attach path — content refills by key with zero bytes
+        re-crossing the client↔engine bridge, exactly like a
+        migration-on-close refill. Returns True when the payload was adopted
+        (new key, or backfilled a payload-less local entry).
+        """
+        if not self.enabled or entry.payload is None:
+            return False
+        with self._lock:
+            local = self._entries.get(entry.key)
+            if local is None:
+                local = ResidentEntry(entry.key, entry.shape, entry.dtype, entry.layout)
+                local.payload = entry.payload
+                self._entries[entry.key] = local
+                self.publishes += 1
+                adopted = True
+            elif local.payload is None:
+                local.payload = entry.payload
+                adopted = True
+            else:
+                adopted = False
+            local.last_use = next(_CLOCK)
+        self._enforce_retention()
+        return adopted
 
     # -- payload staging -----------------------------------------------------
     def ensure_payload(self, entry: ResidentEntry) -> Optional[np.ndarray]:

@@ -212,6 +212,10 @@ class Session:
         self.placement = None
         self.handles: Dict[int, AlMatrix] = {}
         self.libraries: Dict[str, Library] = {}
+        # name -> import-path spec ("pkg.mod:Class") for every library whose
+        # registration is wire-expressible — the re-admission record a fleet
+        # recovery needs to rebuild the library table on another engine.
+        self.library_specs: Dict[str, str] = {}
         self.stats = SessionStats()
         # The engine-wide governor (one shared budget across sessions); a
         # private one is built only for standalone/unit-test sessions.
@@ -338,6 +342,28 @@ class Session:
     @property
     def num_workers(self) -> int:
         return len(self.worker_devices)
+
+    def descriptor(self) -> Dict[str, Any]:
+        """JSON-serializable re-admission record (DESIGN.md §14).
+
+        Everything a fleet recovery needs to re-admit this session on
+        another engine through the queued ``connect(placement=...)`` path:
+        the placement shape actually granted (workers/grid/priority) and the
+        wire-expressible library specs. Data and computation are
+        deliberately absent — residents travel by content key through the
+        store, and lost outputs re-enter via lineage replay of the client's
+        expr DAG.
+        """
+        t = self.placement
+        return {
+            "session_id": int(self.id),
+            "name": self.name,
+            "workers": int(self.num_workers),
+            "grid": [int(d) for d in self.mesh.devices.shape],
+            "priority": int(t.priority) if t is not None else 0,
+            "allow_shared": bool(t.allow_shared) if t is not None else True,
+            "libraries": dict(self.library_specs),
+        }
 
     def __repr__(self) -> str:
         return (

@@ -65,6 +65,7 @@ T_FREE = 0x07
 T_BARRIER = 0x08
 T_REGISTER = 0x09
 T_CLOSE = 0x0A
+T_HEALTH = 0x0B
 # Replies.
 T_OK = 0x20
 T_ERR = 0x21
@@ -74,6 +75,7 @@ FRAME_NAMES = {
     T_HELLO: "HELLO", T_CONNECT: "CONNECT", T_SEND: "SEND", T_RUN: "RUN",
     T_COLLECT: "COLLECT", T_FETCH: "FETCH", T_FREE: "FREE",
     T_BARRIER: "BARRIER", T_REGISTER: "REGISTER", T_CLOSE: "CLOSE",
+    T_HEALTH: "HEALTH",
     T_OK: "OK", T_ERR: "ERR", T_ARRAY: "ARRAY",
 }
 

@@ -1,0 +1,31 @@
+"""repro.fleet — supervised engine fleet (DESIGN.md §14).
+
+A :class:`FleetSupervisor` owns N engines behind wire servers, heartbeats
+them over the control-plane HEALTH verb, classifies health, drains and
+recovers dead engines by lineage replay, and autoscales from a spare device
+pool. See supervisor.py / health.py / recovery.py.
+"""
+
+from repro.fleet.health import (
+    DEAD,
+    DEGRADED,
+    HEALTHY,
+    EngineHealth,
+    HealthPolicy,
+)
+from repro.fleet.recovery import RecoveryPlanner, SessionRecovery, suffix_bytes
+from repro.fleet.supervisor import AutoscalePolicy, EngineSlot, FleetSupervisor
+
+__all__ = [
+    "AutoscalePolicy",
+    "DEAD",
+    "DEGRADED",
+    "EngineHealth",
+    "EngineSlot",
+    "FleetSupervisor",
+    "HEALTHY",
+    "HealthPolicy",
+    "RecoveryPlanner",
+    "SessionRecovery",
+    "suffix_bytes",
+]

@@ -1,0 +1,163 @@
+"""Engine health classification for the fleet supervisor (DESIGN.md §14).
+
+The deployment study behind Alchemist (arXiv:1910.01354) is blunt about the
+operational half of the system: server processes must be launched, watched,
+and survive client churn. This module is the *watching* part — a small,
+deterministic state machine per engine, fed exclusively by heartbeat scrapes
+of ``engine.stats()``:
+
+- **healthy** — scrapes arrive, the snapshot sequence advances, pressure is
+  under the degraded watermark;
+- **degraded** — alive, but the memory governor's pressure fraction sits at
+  or above :attr:`HealthPolicy.degraded_pressure`. Degraded engines keep
+  their sessions (nothing is broken) but stop receiving new fleet
+  admissions and count toward the autoscaler's grow signal;
+- **dead** — :attr:`HealthPolicy.miss_threshold` *consecutive* scrapes
+  failed or came back stale/reordered. Dead is terminal for the slot's
+  sessions: the supervisor drains and recovers them (recovery.py); an
+  engine that later answers again re-enters only through an explicit
+  :meth:`EngineHealth.revive` (flapping engines must not silently re-adopt
+  sessions that were already replayed elsewhere).
+
+Staleness is decided from the two fields PR 10 added to
+``engine.stats()["engine"]``: ``snapshot_seq`` must strictly advance and
+``uptime_s`` must not run backwards (a restarted process answering with a
+fresh counter would otherwise masquerade as the engine we were monitoring).
+A stale scrape is *counted as a miss* — a monitoring channel replaying old
+snapshots is indistinguishable from a wedged engine.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+HEALTHY = "healthy"
+DEGRADED = "degraded"
+DEAD = "dead"
+
+#: transition log depth kept per engine (oldest dropped first)
+_MAX_TRANSITIONS = 16
+
+
+@dataclass(frozen=True)
+class HealthPolicy:
+    """Liveness + pressure thresholds for :class:`EngineHealth`.
+
+    ``miss_threshold`` consecutive failed/stale scrapes classify an engine
+    dead; a memory-governor pressure fraction at or above
+    ``degraded_pressure`` (used+reserved over budget) classifies it
+    degraded. Budgetless engines (``budget=None``) never degrade on
+    pressure — there is no ceiling to press against.
+    """
+
+    miss_threshold: int = 3
+    degraded_pressure: float = 0.85
+
+    def __post_init__(self) -> None:
+        if self.miss_threshold < 1:
+            raise ValueError("miss_threshold must be >= 1")
+        if not (0.0 < self.degraded_pressure <= 1.0):
+            raise ValueError("degraded_pressure must be in (0, 1]")
+
+
+class EngineHealth:
+    """One engine's health record, driven by heartbeat observations."""
+
+    def __init__(self, policy: Optional[HealthPolicy] = None):
+        self.policy = policy or HealthPolicy()
+        self.state = HEALTHY
+        self.consecutive_misses = 0
+        self.last_seq = 0
+        self.last_uptime = -1.0
+        self.heartbeats = 0  # accepted (fresh) scrapes
+        self.misses = 0  # failed scrapes, cumulative
+        self.stale = 0  # scrapes rejected as stale/reordered
+        self.pressure = 0.0  # last observed pressure fraction
+        self.last_snapshot: Optional[Dict[str, Any]] = None
+        self.transitions: List[Tuple[str, str, str]] = []
+
+    # -- observations --------------------------------------------------------
+    def observe(self, snapshot: Dict[str, Any]) -> str:
+        """Fold one scraped ``engine.stats()`` snapshot into the state.
+
+        Returns the (possibly updated) state. Snapshots whose sequence
+        number does not advance, or whose uptime runs backwards, are
+        rejected as stale and counted as a miss — they are not evidence of
+        life *now*.
+        """
+        eng = snapshot.get("engine", {})
+        seq = int(eng.get("snapshot_seq", 0))
+        uptime = float(eng.get("uptime_s", 0.0))
+        if seq <= self.last_seq or uptime < self.last_uptime:
+            self.stale += 1
+            return self.miss(f"stale scrape (seq {seq} <= {self.last_seq})")
+        self.last_seq = seq
+        self.last_uptime = uptime
+        self.last_snapshot = snapshot
+        self.heartbeats += 1
+        self.consecutive_misses = 0
+        mg = snapshot.get("memgov", {})
+        budget = mg.get("budget")
+        self.pressure = (
+            float(mg.get("pressure", 0)) / float(budget) if budget else 0.0
+        )
+        if self.state != DEAD:
+            if self.pressure >= self.policy.degraded_pressure:
+                self._move(DEGRADED, f"pressure {self.pressure:.2f}")
+            else:
+                self._move(HEALTHY, "scrape ok")
+        return self.state
+
+    def miss(self, why: str = "scrape failed") -> str:
+        """One failed (or stale) scrape; crosses into DEAD at the policy's
+        consecutive-miss threshold."""
+        self.misses += 1
+        self.consecutive_misses += 1
+        if self.consecutive_misses >= self.policy.miss_threshold:
+            self._move(DEAD, why)
+        return self.state
+
+    def force_dead(self, why: str = "killed") -> str:
+        """Administrative death (chaos kill, operator action): skip the miss
+        accounting and go straight to DEAD."""
+        self._move(DEAD, why)
+        return self.state
+
+    def revive(self, why: str = "revived") -> str:
+        """Explicit re-admission of a previously dead engine as *fresh*
+        capacity. Counters reset: its old sessions were recovered elsewhere
+        and must not be re-adopted."""
+        self.consecutive_misses = 0
+        self.last_seq = 0
+        self.last_uptime = -1.0
+        self._move(HEALTHY, why)
+        return self.state
+
+    # -- internals -----------------------------------------------------------
+    def _move(self, new: str, why: str) -> None:
+        if new == self.state:
+            return
+        self.transitions.append((self.state, new, why))
+        del self.transitions[:-_MAX_TRANSITIONS]
+        self.state = new
+
+    def summary(self) -> Dict[str, Any]:
+        """JSON-serializable per-engine health block for fleet stats."""
+        return {
+            "state": self.state,
+            "heartbeats": self.heartbeats,
+            "misses": self.misses,
+            "stale": self.stale,
+            "consecutive_misses": self.consecutive_misses,
+            "pressure": self.pressure,
+            "last_seq": self.last_seq,
+            "uptime_s": self.last_uptime if self.last_uptime >= 0 else None,
+            "transitions": [list(t) for t in self.transitions],
+        }
+
+    def __repr__(self) -> str:
+        return (
+            f"EngineHealth(state={self.state}, beats={self.heartbeats}, "
+            f"misses={self.misses}, pressure={self.pressure:.2f})"
+        )

@@ -1,0 +1,210 @@
+"""Session draining and lineage-replay recovery (DESIGN.md §14).
+
+The recovery contract the ROADMAP promised: everything a recovery needs is
+already persisted by the layers below —
+
+- the **expr DAG is the lineage**: every ``AlArray`` roots a deferred graph
+  whose nodes name exactly how each engine-side value was produced;
+- the **resident store holds content-keyed host payloads**: publishes
+  snapshot the bytes at send time, and ``Session.close`` migration secures
+  uniquely-held content host-side during the drain;
+- the **planner's lowering memo is the loss ledger**: the node ids lowered
+  at failure time name the DAG prefix whose engine-side outputs died with
+  the engine.
+
+Recovery is therefore three mechanical steps per affected client:
+
+1. **transplant** — enumerate the dead engine's recoverable content for the
+   session (:meth:`ResidentStore.recoverable_for`) and adopt the payloads
+   into the surviving engine's store (:meth:`ResidentStore.adopt`). The
+   re-admitted session's re-lowered sends then take the *attach* path:
+   residents refill by content key with zero bytes re-crossing the
+   client↔engine bridge;
+2. **re-admit** — :meth:`ClientCore.rebind`: a queued
+   ``connect(placement=...)`` on the survivor using the session's original
+   admission kwargs, libraries re-registered from the descriptor, planner
+   memos dropped;
+3. **replay** — nothing eager. The next materialization re-lowers only the
+   DAG suffix its value actually needs; the planner's memo discipline makes
+   ``replayed ⊆ lost`` by construction, and :func:`suffix_bytes` prices
+   both sides analytically so the chaos gate can assert the bound.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, Optional, Set
+
+import numpy as np
+
+from repro.core.expr import Expr, ProjExpr, RunExpr, SendExpr, iter_nodes
+from repro.core.planner import OffloadPlanner
+
+
+@dataclass
+class SessionRecovery:
+    """The per-session recovery record: what was drained, transplanted, and
+    (after the replayed pipeline materializes) actually re-run."""
+
+    session_id: int
+    name: str
+    target_engine: str
+    descriptor: Dict[str, Any]
+    adopted_keys: int = 0
+    adopted_bytes: int = 0
+    #: planner memo snapshot at failure: node ids whose outputs were lost
+    lost_ids: Set[int] = field(default_factory=set)
+    replayed_nodes: int = 0
+    replayed_bytes: int = 0
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "session_id": self.session_id,
+            "name": self.name,
+            "target_engine": self.target_engine,
+            "adopted_keys": self.adopted_keys,
+            "adopted_bytes": self.adopted_bytes,
+            "lost_nodes": len(self.lost_ids),
+            "replayed_nodes": self.replayed_nodes,
+            "replayed_bytes": self.replayed_bytes,
+        }
+
+
+def _node_bytes(node: Expr) -> int:
+    """Analytic output price of replaying one expr node.
+
+    Runs are priced from their :data:`~repro.core.expr.SHAPE_RULES`-inferred
+    output shapes at the best-known operand dtype (the same pricing the
+    governor admits outputs with); sends at their payload size (a re-send
+    only happens when the content was unrecoverable); projections are views
+    of their parent's outputs and price zero.
+    """
+    if isinstance(node, SendExpr):
+        n = 1
+        for d in node.shape:
+            n *= int(d)
+        return n * np.dtype(node.dtype).itemsize
+    if isinstance(node, RunExpr):
+        try:
+            shapes = node.output_shapes()
+        except Exception:  # noqa: BLE001 — unpriceable stays unpriced
+            return 0
+        if not shapes:
+            return 0
+        dtype = OffloadPlanner._arg_dtype(node) or "float32"
+        itemsize = np.dtype(dtype).itemsize
+        total = 0
+        for shp in shapes:
+            if shp is None:
+                continue
+            n = 1
+            for d in shp:
+                n *= int(d)
+            total += n * itemsize
+        return total
+    if isinstance(node, ProjExpr):
+        return 0
+    return 0
+
+
+def suffix_bytes(roots: Iterable[Any], ids: Set[int]) -> int:
+    """Σ analytic output bytes of the DAG nodes in ``ids``, walking the
+    graphs under ``roots`` (AlArrays/LazyMatrix or bare Expr). Each node is
+    priced once even when several roots share it."""
+    seen: Set[int] = set()
+    total = 0
+    for root in roots:
+        expr = getattr(root, "expr", root)
+        if not isinstance(expr, Expr):
+            continue
+        for node in iter_nodes(expr):
+            if node.id in ids and node.id not in seen:
+                seen.add(node.id)
+                total += _node_bytes(node)
+    return total
+
+
+class RecoveryPlanner:
+    """Drain + transplant + re-admit, with fleet-level accounting."""
+
+    def __init__(self):
+        self.drains = 0
+        self.drained_sessions = 0
+        self.recovered_sessions = 0
+        self.adopted_keys = 0
+        self.adopted_bytes = 0
+        self.replayed_nodes = 0
+        self.replayed_bytes = 0
+
+    # -- drain ---------------------------------------------------------------
+    def drain(self, engine, server=None) -> int:
+        """Drain a dead engine: stop its wire server (releases wire-bound
+        sessions, unblocks mid-FETCH workers), then release every remaining
+        session. ``Session.close`` migration secures each session's
+        uniquely-held resident payloads host-side — the store survives the
+        engine because it is host-metadata by design (DESIGN.md §8).
+        Returns the number of sessions drained."""
+        drained = 0
+        if server is not None:
+            server.stop()  # idempotent; releases its bound sessions
+        for sess in list(engine.sessions.values()):
+            engine.release(sess)
+            drained += 1
+        self.drains += 1
+        self.drained_sessions += drained
+        return drained
+
+    # -- recover -------------------------------------------------------------
+    def recover_client(
+        self,
+        core,
+        dead_engine,
+        target_engine,
+        *,
+        transport=None,
+        placement=None,
+    ) -> SessionRecovery:
+        """Fail one client core over from ``dead_engine`` to
+        ``target_engine``: transplant its recoverable content, snapshot the
+        loss ledger, re-admit via :meth:`ClientCore.rebind`."""
+        sess = core.session
+        rec = SessionRecovery(
+            session_id=int(sess.id),
+            name=sess.name,
+            target_engine=target_engine.name,
+            descriptor=sess.descriptor(),
+        )
+        for entry in dead_engine.residents.recoverable_for(sess.id).values():
+            if target_engine.residents.adopt(entry):
+                rec.adopted_keys += 1
+                rec.adopted_bytes += entry.nbytes()
+        if core._planner is not None:
+            rec.lost_ids = core._planner.lowered_ids()
+        core.rebind(target_engine, transport=transport, placement=placement)
+        self.recovered_sessions += 1
+        self.adopted_keys += rec.adopted_keys
+        self.adopted_bytes += rec.adopted_bytes
+        return rec
+
+    def account_replay(self, rec: SessionRecovery, roots: Iterable[Any], planner) -> int:
+        """After the replayed pipeline materialized: intersect the planner's
+        re-lowered node ids with the loss ledger and price the replayed
+        suffix. Returns the replayed bytes (also folded into ``rec`` and the
+        fleet counters)."""
+        replayed = planner.lowered_ids() & rec.lost_ids
+        rec.replayed_nodes = len(replayed)
+        rec.replayed_bytes = suffix_bytes(roots, replayed)
+        self.replayed_nodes += rec.replayed_nodes
+        self.replayed_bytes += rec.replayed_bytes
+        return rec.replayed_bytes
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "drains": self.drains,
+            "drained_sessions": self.drained_sessions,
+            "recovered_sessions": self.recovered_sessions,
+            "adopted_keys": self.adopted_keys,
+            "adopted_bytes": self.adopted_bytes,
+            "replayed_nodes": self.replayed_nodes,
+            "replayed_bytes": self.replayed_bytes,
+        }

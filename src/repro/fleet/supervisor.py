@@ -1,0 +1,481 @@
+"""FleetSupervisor — a heartbeat-monitored pool of AlchemistEngines
+(DESIGN.md §14).
+
+Alchemist's deployment story (arXiv:1910.01354) runs long-lived server
+processes that many drivers share; this module is the first multi-engine
+layer of the reproduction: one supervisor owning N engines (each behind its
+own :class:`~repro.serve.wire.EngineServer`), a heartbeat loop scraping each
+engine's merged ``engine.stats()`` snapshot over the wire's control-plane
+HEALTH verb, health classification via :mod:`repro.fleet.health`, drain +
+lineage-replay recovery via :mod:`repro.fleet.recovery`, and an autoscaling
+hook driven by admission-queue depth and governor pressure.
+
+Layout: the supervisor partitions its device pool into fixed-size engine
+slots; devices left over (or freed by a scale-down) form the **spare pool**
+the autoscaler grows new engines from. A dead engine's devices are treated
+as lost with it — in a real deployment they died with the host — so only
+clean scale-downs return capacity.
+
+Clients enter through :meth:`FleetSupervisor.connect`, which places them on
+the least-loaded live engine and registers the binding; on an engine death
+the supervisor drains it and fails every bound client over to a survivor
+(transplant + re-admit + lazy replay — see recovery.py). The chaos hook
+:meth:`kill` is the test/benchmark entry: it stops the engine's server
+under its clients exactly like a crashed process would.
+"""
+
+from __future__ import annotations
+
+import itertools
+import json
+import socket
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core import client as client_mod
+from repro.core import transport as wire
+from repro.core.engine import AlchemistEngine
+from repro.fleet.health import DEAD, DEGRADED, HEALTHY, EngineHealth, HealthPolicy
+from repro.fleet.recovery import RecoveryPlanner, SessionRecovery
+from repro.serve.wire import EngineServer, TcpTransport, ensure_server
+
+
+@dataclass(frozen=True)
+class AutoscalePolicy:
+    """Grow/shrink thresholds for the fleet (DESIGN.md §14).
+
+    Grow when fleet-wide queued connects reach ``queue_high`` or the mean
+    pressure fraction of live engines reaches ``pressure_high`` (and spare
+    devices allow). Shrink an engine that sat completely idle — no
+    sessions, no queued admissions — for ``idle_beats`` consecutive
+    heartbeats, never below ``min_engines``.
+    """
+
+    min_engines: int = 1
+    max_engines: int = 8
+    queue_high: int = 1
+    pressure_high: float = 0.85
+    idle_beats: int = 3
+
+
+class EngineSlot:
+    """One supervised engine: the engine, its wire server, its health."""
+
+    def __init__(self, name: str, engine: AlchemistEngine, server: EngineServer,
+                 health: EngineHealth):
+        self.name = name
+        self.engine = engine
+        self.server = server
+        self.health = health
+        self.idle_beats = 0
+        self.draining = False
+
+    @property
+    def state(self) -> str:
+        return self.health.state
+
+    def __repr__(self) -> str:
+        return f"EngineSlot({self.name}, state={self.state}, workers={self.engine.num_workers})"
+
+
+class FleetSupervisor:
+    """Own N engines; watch, drain, recover, autoscale."""
+
+    def __init__(
+        self,
+        devices: Optional[List[Any]] = None,
+        *,
+        engines: int = 2,
+        devices_per_engine: Optional[int] = None,
+        name: str = "fleet",
+        health_policy: Optional[HealthPolicy] = None,
+        autoscale: Optional[AutoscalePolicy] = None,
+        heartbeat_interval: float = 0.25,
+        scrape_timeout: float = 2.0,
+        scrape_over_wire: bool = True,
+        engine_kwargs: Optional[Dict[str, Any]] = None,
+    ):
+        if engines < 1:
+            raise ValueError("a fleet needs at least one engine")
+        devices = list(devices if devices is not None else jax.devices())
+        per = devices_per_engine or max(1, len(devices) // engines)
+        if per * engines > len(devices):
+            raise ValueError(
+                f"cannot cut {engines} engines of {per} devices from "
+                f"{len(devices)} devices"
+            )
+        self.name = name
+        self.health_policy = health_policy or HealthPolicy()
+        self.autoscale = autoscale or AutoscalePolicy()
+        self.heartbeat_interval = float(heartbeat_interval)
+        self.scrape_timeout = float(scrape_timeout)
+        self.scrape_over_wire = scrape_over_wire
+        self._engine_kwargs = dict(engine_kwargs or {})
+        self._devices_per_engine = per
+        self._ids = itertools.count(1)
+        self._lock = threading.RLock()
+        self._slots: Dict[str, EngineSlot] = {}
+        #: devices not currently assigned to a live engine (autoscale pool)
+        self._spare: List[Any] = devices[per * engines:]
+        #: (client core, slot name) for every fleet-admitted session
+        self._clients: List[Tuple[Any, str]] = []
+        self._probes: Dict[str, socket.socket] = {}
+        self.recovery = RecoveryPlanner()
+        self.recoveries: List[SessionRecovery] = []
+        self.heartbeats = 0
+        self.scrapes = 0
+        self.scrape_failures = 0
+        self.kills = 0
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.retired: List[str] = []
+        self._stop_evt = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        for i in range(engines):
+            self._add_slot(devices[i * per:(i + 1) * per])
+
+    # -- slot lifecycle ------------------------------------------------------
+    def _add_slot(self, devs: List[Any]) -> EngineSlot:
+        ename = f"{self.name}-e{next(self._ids)}"
+        engine = AlchemistEngine(devs, name=ename, **self._engine_kwargs)
+        server = ensure_server(engine)
+        slot = EngineSlot(ename, engine, server, EngineHealth(self.health_policy))
+        with self._lock:
+            self._slots[ename] = slot
+        return slot
+
+    @property
+    def engines(self) -> Dict[str, EngineSlot]:
+        with self._lock:
+            return dict(self._slots)
+
+    def slot(self, name: str) -> EngineSlot:
+        with self._lock:
+            return self._slots[name]
+
+    def _live_slots(self) -> List[EngineSlot]:
+        with self._lock:
+            return [s for s in self._slots.values() if s.state != DEAD]
+
+    # -- client admission ----------------------------------------------------
+    def connect(self, *, engine: Optional[str] = None, **kwargs) -> "client_mod.Session":
+        """Admit a client session on the fleet.
+
+        Picks the least-loaded live engine (most free workers; degraded
+        engines only when no healthy one exists) unless ``engine=`` names a
+        slot, builds a v2 :class:`repro.core.client.Session` on it, and
+        registers the binding so an engine death fails this client over
+        automatically. All other kwargs pass through to ``Session``
+        (placement, hbm_budget, policy, transport, ...).
+        """
+        with self._lock:
+            if engine is not None:
+                slot = self._slots[engine]
+                if slot.state == DEAD:
+                    raise RuntimeError(f"engine {engine} is dead")
+            else:
+                slot = self._pick_slot()
+        sess = client_mod.Session(slot.engine, **kwargs)
+        with self._lock:
+            self._clients.append((sess, slot.name))
+        return sess
+
+    def _pick_slot(self) -> EngineSlot:
+        # caller holds self._lock
+        live = [s for s in self._slots.values() if s.state == HEALTHY and not s.draining]
+        if not live:
+            live = [s for s in self._slots.values() if s.state == DEGRADED and not s.draining]
+        if not live:
+            raise RuntimeError(f"fleet {self.name!r} has no live engine to admit on")
+        return max(
+            live,
+            key=lambda s: (s.engine.available_workers, -s.engine.queued_connects),
+        )
+
+    def clients_of(self, slot_name: str) -> List[Any]:
+        with self._lock:
+            return [c for c, n in self._clients if n == slot_name]
+
+    def _prune_clients(self) -> None:
+        with self._lock:
+            self._clients = [(c, n) for c, n in self._clients if not c._stopped]
+
+    # -- heartbeat loop ------------------------------------------------------
+    def start(self) -> None:
+        """Run the heartbeat loop on a daemon thread until :meth:`stop`."""
+        if self._thread is not None and self._thread.is_alive():
+            return
+        self._stop_evt.clear()
+
+        def loop() -> None:
+            while not self._stop_evt.wait(self.heartbeat_interval):
+                try:
+                    self.heartbeat_once()
+                except Exception:  # noqa: BLE001 — the watcher must not die
+                    pass
+
+        self._thread = threading.Thread(
+            target=loop, name=f"{self.name}-heartbeat", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Stop the heartbeat loop (engines keep running)."""
+        self._stop_evt.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+        for sock in self._probes.values():
+            try:
+                sock.close()
+            except OSError:
+                pass
+        self._probes.clear()
+
+    def shutdown(self) -> None:
+        """Stop monitoring and tear the whole fleet down."""
+        self.stop()
+        with self._lock:
+            slots = list(self._slots.values())
+        for slot in slots:
+            slot.server.stop()
+            slot.engine.shutdown()
+
+    def heartbeat_once(self) -> Dict[str, str]:
+        """One supervision beat: scrape every non-dead engine, classify,
+        recover the newly dead, run the autoscaler. Returns the post-beat
+        state per engine (dead slots included, for observability)."""
+        self._prune_clients()
+        for slot in self._live_slots():
+            snap = self._scrape(slot)
+            if snap is None:
+                state = slot.health.miss()
+            else:
+                state = slot.health.observe(snap)
+            if state == DEAD and not slot.draining:
+                self._recover_slot(slot)
+        self._autoscale_once()
+        self.heartbeats += 1
+        with self._lock:
+            return {name: s.state for name, s in self._slots.items()}
+
+    # -- scraping ------------------------------------------------------------
+    def _scrape(self, slot: EngineSlot) -> Optional[Dict[str, Any]]:
+        """One stats scrape: the wire HEALTH verb over a cached per-slot
+        monitoring socket (the control-plane path — answered inline by the
+        server's connection loop, never queued behind data-plane workers),
+        or a direct in-process call when ``scrape_over_wire=False``."""
+        self.scrapes += 1
+        if not self.scrape_over_wire:
+            try:
+                return slot.engine.stats()
+            except Exception:  # noqa: BLE001 — a failing engine is a miss
+                self.scrape_failures += 1
+                return None
+        sock = self._probes.get(slot.name)
+        try:
+            if sock is None:
+                sock = socket.create_connection(
+                    slot.server.address, timeout=self.scrape_timeout
+                )
+                sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+                self._probes[slot.name] = sock
+            wire.send_frame(sock, wire.T_HEALTH, {})
+            ftype, reply, _ = wire.recv_frame(sock)
+            if ftype != wire.T_OK:
+                raise ConnectionError(f"HEALTH scrape got frame 0x{ftype:02x}")
+            return json.loads(str(reply["__stats_json"]))
+        except (ConnectionError, OSError, TimeoutError, KeyError, ValueError):
+            self.scrape_failures += 1
+            if sock is not None:
+                try:
+                    sock.close()
+                except OSError:
+                    pass
+            self._probes.pop(slot.name, None)
+            return None
+
+    # -- chaos + recovery ----------------------------------------------------
+    def kill(self, name: str) -> List[SessionRecovery]:
+        """Chaos hook: abruptly kill engine ``name`` — stop its server under
+        its clients (mid-flight RPCs fail, exactly like a crashed process),
+        mark it dead, and run recovery synchronously. Returns the recovery
+        records. The heartbeat path reaches the same `_recover_slot` after
+        ``miss_threshold`` failed scrapes."""
+        slot = self.slot(name)
+        self.kills += 1
+        slot.health.force_dead("killed")
+        return self._recover_slot(slot)
+
+    def _recover_slot(self, slot: EngineSlot) -> List[SessionRecovery]:
+        """Drain a dead engine and fail its clients over to survivors."""
+        with self._lock:
+            if slot.draining:
+                return []
+            slot.draining = True
+            affected = [c for c, n in self._clients if n == slot.name]
+        probe = self._probes.pop(slot.name, None)
+        if probe is not None:
+            try:
+                probe.close()
+            except OSError:
+                pass
+        self.recovery.drain(slot.engine, server=slot.server)
+        recs: List[SessionRecovery] = []
+        for core in affected:
+            if core._stopped:
+                continue
+            target = self._recovery_target()
+            rec = self.recovery.recover_client(
+                core,
+                slot.engine,
+                target.engine,
+                transport=self._transport_like(core, target),
+            )
+            recs.append(rec)
+            with self._lock:
+                self._clients = [
+                    (c, target.name if c is core else n) for c, n in self._clients
+                ]
+        with self._lock:
+            self.recoveries.extend(recs)
+            slot.draining = False
+        return recs
+
+    def _recovery_target(self) -> EngineSlot:
+        with self._lock:
+            try:
+                return self._pick_slot()
+            except RuntimeError:
+                pass
+        # No survivor: try growing one from the spare pool.
+        grown = self.scale_up()
+        if grown is None:
+            raise RuntimeError(
+                f"fleet {self.name!r}: no surviving engine and no spare "
+                "devices to grow one — sessions cannot be recovered"
+            )
+        return grown
+
+    @staticmethod
+    def _transport_like(core, target: EngineSlot):
+        """A fresh transport of the client's current flavor, aimed at the
+        target slot (a TCP client reconnects to the survivor's server; a
+        loopback client stays in-process)."""
+        if isinstance(core.transport, TcpTransport):
+            return TcpTransport(ensure_server(target.engine))
+        if core.transport is not None:
+            return type(core.transport)()
+        return None
+
+    # -- autoscaling ---------------------------------------------------------
+    def _autoscale_once(self) -> None:
+        pol = self.autoscale
+        live = self._live_slots()
+        if not live:
+            return
+        queued = sum(s.engine.queued_connects for s in live)
+        pressures = [s.health.pressure for s in live]
+        mean_pressure = sum(pressures) / len(pressures)
+        if (
+            (queued >= pol.queue_high or mean_pressure >= pol.pressure_high)
+            and len(live) < pol.max_engines
+            and len(self._spare) >= self._devices_per_engine
+        ):
+            self.scale_up()
+            return
+        # Shrink: an engine idle for idle_beats consecutive beats goes back
+        # to the spare pool (never below min_engines, never a draining one).
+        for slot in live:
+            idle = (
+                len(slot.engine.sessions) == 0
+                and slot.engine.queued_connects == 0
+                and not slot.draining
+            )
+            slot.idle_beats = slot.idle_beats + 1 if idle else 0
+        candidates = [s for s in live if s.idle_beats >= pol.idle_beats]
+        if candidates and len(live) > pol.min_engines:
+            self.scale_down(candidates[0].name)
+
+    def scale_up(self, workers: Optional[int] = None) -> Optional[EngineSlot]:
+        """Grow one engine from the spare pool; None when it can't."""
+        n = workers or self._devices_per_engine
+        with self._lock:
+            if len(self._spare) < n:
+                return None
+            devs = self._spare[:n]
+            del self._spare[:n]
+        slot = self._add_slot(devs)
+        self.scale_ups += 1
+        return slot
+
+    def scale_down(self, name: str) -> bool:
+        """Retire an *idle* engine cleanly, returning its devices to the
+        spare pool. Refuses engines with live sessions or queued connects."""
+        with self._lock:
+            slot = self._slots.get(name)
+            if slot is None or slot.draining:
+                return False
+            if len(slot.engine.sessions) or slot.engine.queued_connects:
+                return False
+            del self._slots[name]
+        probe = self._probes.pop(name, None)
+        if probe is not None:
+            try:
+                probe.close()
+            except OSError:
+                pass
+        slot.server.stop()
+        slot.engine.shutdown()
+        with self._lock:
+            self._spare.extend(slot.engine.devices)
+            self.retired.append(name)
+        self.scale_downs += 1
+        return True
+
+    # -- observability -------------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        """The fleet-level stats block (embedded by ``benchmarks/run.py
+        --json`` the same way ``engine.stats()`` is): per-engine health,
+        drains, replays, autoscale actions, spare capacity."""
+        with self._lock:
+            slots = dict(self._slots)
+            spare = len(self._spare)
+            clients = len(self._clients)
+        per_engine = {}
+        for name, slot in slots.items():
+            per_engine[name] = {
+                **slot.health.summary(),
+                "workers": slot.engine.num_workers,
+                "available_workers": slot.engine.available_workers,
+                "sessions": len(slot.engine.sessions),
+                "queued_connects": slot.engine.queued_connects,
+                "idle_beats": slot.idle_beats,
+            }
+        return {
+            "engines": per_engine,
+            "spare_devices": spare,
+            "clients": clients,
+            "heartbeats": self.heartbeats,
+            "scrapes": self.scrapes,
+            "scrape_failures": self.scrape_failures,
+            "kills": self.kills,
+            "scale_ups": self.scale_ups,
+            "scale_downs": self.scale_downs,
+            "retired": list(self.retired),
+            **self.recovery.stats(),
+        }
+
+    def __enter__(self) -> "FleetSupervisor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    def __repr__(self) -> str:
+        with self._lock:
+            states = {n: s.state for n, s in self._slots.items()}
+        return f"FleetSupervisor({self.name!r}, engines={states})"

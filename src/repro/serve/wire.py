@@ -56,6 +56,7 @@ tickets, arrays as framed bytes).
 from __future__ import annotations
 
 import itertools
+import json
 import socket
 import struct
 import threading
@@ -125,11 +126,27 @@ class _ConnState:
     connection loop interleave OK/ERR/ARRAY frames on one socket) and the
     in-flight request depth."""
 
-    def __init__(self):
+    def __init__(self, sock: Optional[socket.socket] = None):
         self.wlock = threading.RLock()
         self.inflight = 0
         self.max_inflight = 0
         self._lock = threading.Lock()
+        self.sock = sock
+
+    def shutdown(self) -> None:
+        """Tear the socket down under the peer: blocked ``recv``/``send``
+        calls in the connection loop and worker threads return immediately
+        instead of serving a stopped engine."""
+        if self.sock is None:
+            return
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
 
     def enter(self) -> int:
         with self._lock:
@@ -152,6 +169,8 @@ class EngineServer:
         self._sock = socket.create_server((host, port))
         self.address: Tuple[str, int] = self._sock.getsockname()[:2]
         self._lock = threading.Lock()
+        self._stop_lock = threading.Lock()
+        self._stopped = False
         self._bound: Dict[str, _Bound] = {}
         self._conns: List[_ConnState] = []
         self.stats = {
@@ -208,9 +227,29 @@ class EngineServer:
             return sum(c.inflight for c in self._conns)
 
     # -- lifecycle -----------------------------------------------------------
-    def close(self) -> None:
-        """Stop accepting, release every still-bound session."""
+    def stop(self) -> None:
+        """Stop accepting, release every still-bound session, and shut down
+        live per-connection sockets so mid-FETCH worker threads unblock.
+
+        Safe to call from a supervisor thread at any time, including while
+        connection loops and data-plane workers are active; a second (or
+        concurrent) stop is a no-op. The stop flag is claimed under its own
+        lock so a re-entrant call never deadlocks against ``_release`` or a
+        connection teardown holding ``self._lock``.
+        """
+        with self._stop_lock:
+            if self._stopped:
+                return
+            self._stopped = True
         self.closed = True
+        # shutdown() before close(): a thread parked in accept() holds the
+        # listening socket's open file description, so close() alone leaves
+        # the port accepting connections until that thread wakes. shutdown
+        # forces the blocked accept to return so the listener really dies.
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._sock.close()
         except OSError:
@@ -218,8 +257,15 @@ class EngineServer:
         with self._lock:
             bound = list(self._bound.values())
             self._bound.clear()
+            conns = list(self._conns)
         for b in bound:
-            self._release(b, why="server close")
+            self._release(b, why="server stop")
+        for c in conns:
+            c.shutdown()
+
+    def close(self) -> None:
+        """Alias for :meth:`stop` (historical name)."""
+        self.stop()
 
     def _release(self, b: _Bound, why: str) -> None:
         with self._lock:
@@ -250,7 +296,7 @@ class EngineServer:
 
     def _serve_connection(self, conn: socket.socket) -> None:
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        cstate = _ConnState()
+        cstate = _ConnState(conn)
         with self._lock:
             self._conns.append(cstate)
         bound: Optional[_Bound] = None
@@ -382,6 +428,26 @@ class EngineServer:
             self._reply(
                 conn, cstate, wire.T_OK,
                 {"__token": bound.token, "__sid": bound.session.id}, rid,
+            )
+            return bound, False
+
+        if ftype == wire.T_HEALTH:
+            # Control-plane scrape (DESIGN.md §14): answered inline on the
+            # connection loop — no session binding, no worker-thread spawn —
+            # so supervisor heartbeats never queue behind mid-FETCH
+            # data-plane threads. The merged stats snapshot rides as one
+            # JSON string because the ALPK codec is scalars-and-flat-lists
+            # by design; `__seq` is duplicated as a scalar so a scraper can
+            # reject stale or reordered replies without parsing the blob.
+            snap = self.engine.stats()
+            self._reply(
+                conn, cstate, wire.T_OK,
+                {
+                    "__stats_json": json.dumps(snap),
+                    "__seq": int(snap["engine"]["snapshot_seq"]),
+                    "__uptime_s": float(snap["engine"]["uptime_s"]),
+                },
+                rid,
             )
             return bound, False
 

@@ -1,0 +1,416 @@
+"""The supervised engine fleet (DESIGN.md §14).
+
+Tier-1: the health state machine, session re-admission descriptors, the
+resident store's recovery enumeration/adoption APIs, and supervisor basics
+(wire HEALTH scrapes, fleet stats). Tier-2 (the CI chaos lane): heartbeat-
+detected death, kill/recovery mid-pipeline with bit-identical replay, and
+the autoscaler. Multi-engine tests duplicate the host's device list across
+slots so they run on a single-device tier-1 environment unchanged — each
+engine's scheduler owns its *own copy* of the device handle.
+"""
+
+import json
+import socket
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro
+from repro.core import transport as wire
+from repro.core.errors import SessionError
+from repro.fleet import (
+    DEAD,
+    DEGRADED,
+    HEALTHY,
+    AutoscalePolicy,
+    EngineHealth,
+    FleetSupervisor,
+    HealthPolicy,
+    suffix_bytes,
+)
+
+ELEMENTAL = "repro.linalg.library:ElementalLib"
+
+
+def _fleet(n=2, **kw):
+    kw.setdefault("devices", list(jax.devices()) * n)
+    kw.setdefault("engines", n)
+    return FleetSupervisor(**kw)
+
+
+def _snap(seq, uptime=None, pressure=0, budget=None):
+    return {
+        "engine": {"snapshot_seq": seq, "uptime_s": uptime if uptime is not None else seq},
+        "memgov": {"pressure": pressure, "budget": budget},
+    }
+
+
+# ---------------------------------------------------------------------------
+# health state machine
+# ---------------------------------------------------------------------------
+
+
+class TestEngineHealth:
+    def test_fresh_scrapes_stay_healthy(self):
+        h = EngineHealth(HealthPolicy(miss_threshold=2))
+        assert h.observe(_snap(1)) == HEALTHY
+        assert h.observe(_snap(2)) == HEALTHY
+        assert h.heartbeats == 2 and h.misses == 0
+
+    def test_stale_or_reordered_scrape_counts_as_miss(self):
+        h = EngineHealth(HealthPolicy(miss_threshold=3))
+        h.observe(_snap(5))
+        assert h.observe(_snap(5)) == HEALTHY  # same seq: stale, 1 miss
+        assert h.observe(_snap(3)) == HEALTHY  # reordered: stale, 2 misses
+        assert h.stale == 2 and h.consecutive_misses == 2
+        assert h.observe(_snap(2)) == DEAD  # third consecutive
+
+    def test_uptime_running_backwards_is_stale(self):
+        """A restarted process answering with a fresh counter must not
+        masquerade as the engine we were monitoring."""
+        h = EngineHealth(HealthPolicy(miss_threshold=1))
+        h.observe(_snap(7, uptime=100.0))
+        assert h.observe(_snap(8, uptime=0.5)) == DEAD
+
+    def test_miss_threshold_is_consecutive(self):
+        h = EngineHealth(HealthPolicy(miss_threshold=3))
+        h.observe(_snap(1))
+        h.miss()
+        h.miss()
+        h.observe(_snap(2))  # fresh scrape resets the consecutive count
+        h.miss()
+        h.miss()
+        assert h.state == HEALTHY
+        assert h.miss() == DEAD
+
+    def test_pressure_degrades_and_recovers(self):
+        h = EngineHealth(HealthPolicy(degraded_pressure=0.8))
+        assert h.observe(_snap(1, pressure=900, budget=1000)) == DEGRADED
+        assert h.observe(_snap(2, pressure=100, budget=1000)) == HEALTHY
+        # budgetless engines never degrade on pressure
+        assert h.observe(_snap(3, pressure=10**12, budget=None)) == HEALTHY
+
+    def test_dead_is_terminal_until_revived(self):
+        h = EngineHealth(HealthPolicy(miss_threshold=1))
+        h.miss()
+        assert h.state == DEAD
+        assert h.observe(_snap(99)) == DEAD  # flapping engine stays dead
+        assert h.revive() == HEALTHY
+        assert h.observe(_snap(1)) == HEALTHY  # seq ledger was reset
+
+    def test_summary_is_json_serializable(self):
+        h = EngineHealth()
+        h.observe(_snap(1))
+        h.miss()
+        json.dumps(h.summary())
+
+
+# ---------------------------------------------------------------------------
+# session re-admission descriptors
+# ---------------------------------------------------------------------------
+
+
+class TestSessionDescriptor:
+    def test_descriptor_names_placement_and_libraries(self):
+        engine = repro.AlchemistEngine()
+        s = repro.connect(engine, name="app1")
+        s.register_library("el", ELEMENTAL)
+        d = s.session.descriptor()
+        assert d["name"] == "app1"
+        assert d["workers"] == s.session.num_workers
+        assert d["libraries"] == {"el": ELEMENTAL}
+        json.dumps(d)
+        s.close()
+
+    def test_descriptor_survives_close(self):
+        """The drain runs before the recovery reads the descriptor: the
+        fields must not be cleared by Session.close."""
+        engine = repro.AlchemistEngine()
+        s = repro.connect(engine)
+        s.register_library("el", ELEMENTAL)
+        sess = s.session
+        s.close()
+        d = sess.descriptor()
+        assert d["libraries"] == {"el": ELEMENTAL}
+        assert d["workers"] >= 1
+
+    def test_instance_registered_library_records_import_path(self):
+        from repro.linalg.library import ElementalLib
+
+        engine = repro.AlchemistEngine()
+        s = repro.connect(engine)
+        s.register_library("el", ElementalLib())
+        spec = s.session.descriptor()["libraries"]["el"]
+        assert spec == "repro.linalg.library:ElementalLib"
+        s.close()
+
+
+# ---------------------------------------------------------------------------
+# resident store: recovery enumeration + adoption
+# ---------------------------------------------------------------------------
+
+
+class TestStoreRecovery:
+    def test_recoverable_for_live_session(self):
+        engine = repro.AlchemistEngine()
+        s = repro.connect(engine)
+        a = np.arange(64, dtype=np.float32).reshape(8, 8)
+        s.send(a).materialize()
+        got = engine.residents.recoverable_for(s.session.id)
+        assert len(got) == 1
+        (entry,) = got.values()
+        np.testing.assert_array_equal(entry.payload, a)
+        s.close()
+
+    def test_recoverable_after_drain_via_former_sessions(self):
+        """The drain migrates placements out before the recovery enumerates;
+        migrated content must still be found under the dead session's id."""
+        engine = repro.AlchemistEngine()
+        s = repro.connect(engine)
+        sid = s.session.id
+        a = np.arange(64, dtype=np.float32).reshape(8, 8)
+        s.send(a).materialize()
+        s.close()  # migration-on-close: payload orphaned host-side
+        got = engine.residents.recoverable_for(sid)
+        assert len(got) == 1
+        np.testing.assert_array_equal(list(got.values())[0].payload, a)
+
+    def test_explicit_free_is_not_recoverable(self):
+        """A user free means the content is done — never resurrected."""
+        engine = repro.AlchemistEngine()
+        s = repro.connect(engine)
+        sid = s.session.id
+        la = s.send(np.ones((8, 8), dtype=np.float32))
+        la.materialize()
+        la.free()
+        assert engine.residents.recoverable_for(sid) == {}
+        s.close()
+
+    def test_adopt_seeds_attach_path_with_zero_bridge_bytes(self):
+        src = repro.AlchemistEngine()
+        dst = repro.AlchemistEngine()
+        s1 = repro.connect(src)
+        a = np.arange(256, dtype=np.float32).reshape(16, 16)
+        s1.send(a).materialize()
+        for entry in src.residents.recoverable_for(s1.session.id).values():
+            assert dst.residents.adopt(entry)
+        s1.close()
+        s2 = repro.connect(dst)
+        lb = s2.send(a)  # byte-identical content: must attach, not send
+        lb.materialize()
+        s2.wait()
+        stats = s2.stats.summary()
+        assert stats["cross_session_reuses"] == 1
+        assert stats["send_bytes"] == 0
+        s2.close()
+
+    def test_adopt_is_idempotent_and_payloadless_entries_refused(self):
+        from repro.core.resident import ResidentEntry
+
+        engine = repro.AlchemistEngine()
+        bare = ResidentEntry(("k",), (4, 4), "float32", None)
+        assert not engine.residents.adopt(bare)  # nothing to refill from
+        bare.payload = np.zeros((4, 4), dtype=np.float32)
+        assert engine.residents.adopt(bare)
+        assert not engine.residents.adopt(bare)  # second adopt: no-op
+
+
+# ---------------------------------------------------------------------------
+# supervisor basics (tier-1: single engine)
+# ---------------------------------------------------------------------------
+
+
+class TestSupervisorBasics:
+    def test_health_verb_scrapes_over_the_wire(self):
+        with _fleet(1) as sup:
+            slot = next(iter(sup.engines.values()))
+            sock = socket.create_connection(slot.server.address, timeout=5)
+            try:
+                wire.send_frame(sock, wire.T_HEALTH, {"__rid": 3})
+                ftype, reply, _ = wire.recv_frame(sock)
+                assert ftype == wire.T_OK
+                assert reply["__rid"] == 3
+                snap = json.loads(str(reply["__stats_json"]))
+                assert snap["engine"]["snapshot_seq"] >= 1
+                assert reply["__seq"] == snap["engine"]["snapshot_seq"]
+            finally:
+                sock.close()
+
+    def test_heartbeat_classifies_healthy_and_stats_serialize(self):
+        with _fleet(1) as sup:
+            states = sup.heartbeat_once()
+            assert list(states.values()) == [HEALTHY]
+            states = sup.heartbeat_once()  # seq advanced: still healthy
+            assert list(states.values()) == [HEALTHY]
+            st = sup.stats()
+            assert st["heartbeats"] == 2 and st["scrape_failures"] == 0
+            json.dumps(st)
+
+    def test_connect_places_and_registers_binding(self):
+        with _fleet(1) as sup:
+            s = sup.connect(name="app")
+            (name,) = sup.engines
+            assert sup.clients_of(name) == [s]
+            s.close()
+            sup.heartbeat_once()  # beats prune stopped clients
+            assert sup.clients_of(name) == []
+
+    def test_dead_engine_refused_for_admission(self):
+        with _fleet(1) as sup:
+            (name,) = sup.engines
+            sup.slot(name).health.force_dead()
+            with pytest.raises(RuntimeError, match="dead|no live engine"):
+                sup.connect(engine=name)
+            with pytest.raises(RuntimeError, match="no live engine"):
+                sup.connect()
+
+    def test_background_heartbeat_thread_runs(self):
+        with _fleet(1, heartbeat_interval=0.05) as sup:
+            sup.start()
+            deadline = time.monotonic() + 10
+            while sup.heartbeats < 3 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            sup.stop()
+            assert sup.heartbeats >= 3
+            assert sup.scrape_failures == 0
+
+
+# ---------------------------------------------------------------------------
+# chaos: death detection, drain, lineage-replay recovery (tier2 — CI chaos lane)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.tier2
+class TestKillRecovery:
+    def _pipeline(self, s, a, b):
+        # Every send is an input of the pre-kill collect so that all content
+        # is resident (hence host-recoverable) when the engine dies.
+        la, lb = s.send(a), s.send(b)
+        lc = s.run("el", "gemm", la, lb)
+        ld = s.run("el", "gemm", lc, lb)
+        return la, lb, lc, ld
+
+    def test_kill_mid_pipeline_replays_bit_identical(self, rng):
+        a = rng.standard_normal((48, 32)).astype(np.float32)
+        b = rng.standard_normal((32, 32)).astype(np.float32)
+        # control: the same pipeline on an unkilled fleet
+        with _fleet(1) as ctrl_sup:
+            ctrl = ctrl_sup.connect(name="ctrl")
+            ctrl.register_library("el", ELEMENTAL)
+            *_, ld = self._pipeline(ctrl, a, b)
+            ref = np.asarray(ctrl.collect(ld))
+            ctrl.close()
+        with _fleet(2) as sup:
+            victim_slot = list(sup.engines)[0]
+            s = sup.connect(name="victim", engine=victim_slot)
+            s.register_library("el", ELEMENTAL)
+            la, lb, lc, ld = self._pipeline(s, a, b)
+            np.asarray(s.collect(lc))  # materialize a prefix pre-kill
+            recs = sup.kill(victim_slot)
+            assert len(recs) == 1
+            out = np.asarray(s.collect(ld))  # forces replay on the survivor
+            np.testing.assert_array_equal(out, ref)
+            # refills attach by content key: zero bridge re-sends
+            stats = s.stats.summary()
+            assert stats["send_bytes"] == 0
+            assert stats["cross_session_reuses"] >= 1
+            # replay is bounded by the lost suffix, analytically
+            rec = recs[0]
+            sup.recovery.account_replay(rec, [la, lb, lc, ld], s.planner)
+            lost_bytes = suffix_bytes([la, lb, lc, ld], rec.lost_ids)
+            assert 0 < rec.replayed_bytes <= lost_bytes
+            s.close()
+
+    def test_heartbeat_detects_silent_death_and_recovers(self, rng):
+        """No chaos hook: the server is stopped out from under the
+        supervisor; consecutive scrape misses must classify the engine dead
+        and trigger the same drain/recover path."""
+        a = rng.standard_normal((16, 16)).astype(np.float32)
+        with _fleet(2, health_policy=HealthPolicy(miss_threshold=2)) as sup:
+            victim = list(sup.engines)[0]
+            s = sup.connect(name="app", engine=victim)
+            s.register_library("el", ELEMENTAL)
+            x = s.run("el", "gemm", s.send(a), s.send(a))
+            ref = np.asarray(s.collect(x))
+            sup.slot(victim).server.stop()  # silent death
+            for _ in range(3):
+                sup.heartbeat_once()
+            assert sup.slot(victim).state == DEAD
+            assert sup.recovery.recovered_sessions == 1
+            out = np.asarray(s.collect(x))
+            np.testing.assert_array_equal(out, ref)
+            s.close()
+
+    def test_recovery_target_grows_from_spares_when_no_survivor(self, rng):
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        devs = list(jax.devices()) * 2
+        with FleetSupervisor(devices=devs, engines=1, devices_per_engine=1) as sup:
+            (victim,) = list(sup.engines)
+            s = sup.connect(name="app")
+            s.register_library("el", ELEMENTAL)
+            x = s.run("el", "gemm", s.send(a), s.send(a))
+            ref = np.asarray(s.collect(x))
+            recs = sup.kill(victim)  # only engine dies: must scale up
+            assert len(recs) == 1 and sup.scale_ups == 1
+            np.testing.assert_array_equal(np.asarray(s.collect(x)), ref)
+            s.close()
+
+    def test_tcp_client_fails_over_to_survivor_server(self, rng):
+        """A TCP-transport client is re-pointed at the survivor's server."""
+        from repro.serve.wire import TcpTransport, server_for
+
+        a = rng.standard_normal((8, 8)).astype(np.float32)
+        with _fleet(2) as sup:
+            victim = list(sup.engines)[0]
+            vslot = sup.slot(victim)
+            s = sup.connect(
+                name="app", engine=victim, transport=TcpTransport(vslot.server)
+            )
+            s.register_library("el", ELEMENTAL)
+            x = s.run("el", "gemm", s.send(a), s.send(a))
+            ref = np.asarray(s.collect(x))
+            sup.kill(victim)
+            assert isinstance(s.transport, TcpTransport)
+            survivor = s.engine
+            assert s.transport.server is server_for(survivor)
+            np.testing.assert_array_equal(np.asarray(s.collect(x)), ref)
+            s.close()
+
+
+@pytest.mark.tier2
+class TestAutoscale:
+    def test_pressure_triggers_scale_up_from_spares(self):
+        devs = (list(jax.devices()) * 3)[:3]
+        with FleetSupervisor(
+            devices=devs, engines=2, devices_per_engine=1,
+            autoscale=AutoscalePolicy(pressure_high=0.8, idle_beats=10**6),
+        ) as sup:
+            assert sup.stats()["spare_devices"] == 1
+            for slot in sup.engines.values():
+                slot.health.pressure = 0.9  # as observed by the last beat
+            sup._autoscale_once()
+            assert sup.scale_ups == 1
+            assert len(sup.engines) == 3
+            assert sup.stats()["spare_devices"] == 0
+
+    def test_idle_engines_shrink_back_to_spares(self):
+        devs = (list(jax.devices()) * 2)[:2]
+        with FleetSupervisor(
+            devices=devs, engines=2, devices_per_engine=1,
+            autoscale=AutoscalePolicy(min_engines=1, idle_beats=2),
+        ) as sup:
+            for _ in range(4):
+                sup.heartbeat_once()
+            assert sup.scale_downs >= 1
+            assert len(sup.engines) == 1  # never below min_engines
+            assert sup.stats()["spare_devices"] == 1
+
+    def test_scale_down_refuses_busy_engine(self):
+        with _fleet(1) as sup:
+            (name,) = sup.engines
+            s = sup.connect(name="busy")
+            assert not sup.scale_down(name)
+            s.close()

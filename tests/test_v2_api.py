@@ -546,6 +546,23 @@ class TestEngineStats:
             s.send(a).data()
             json.dumps(engine.stats())
 
+    def test_snapshot_carries_supervision_anchors(self, engine):
+        """The fleet scraper's staleness fields (DESIGN.md §14): wall-clock
+        birth, monotonic uptime, and a snapshot sequence that strictly
+        advances per stats() call — all JSON-serializable."""
+        import json
+        import time as _time
+
+        first = engine.stats()["engine"]
+        assert first["snapshot_seq"] == 1
+        assert first["uptime_s"] >= 0.0
+        assert 0 < first["started_at"] <= _time.time() + 1.0
+        second = engine.stats()["engine"]
+        assert second["snapshot_seq"] == 2  # strictly advancing
+        assert second["uptime_s"] >= first["uptime_s"]  # monotonic, no drift
+        assert second["started_at"] == first["started_at"]
+        json.dumps({"engine": second})
+
 
 # ---------------------------------------------------------------------------
 # the v1 deprecation shim

@@ -322,6 +322,97 @@ class TestDisconnect:
         assert srv.stats["disconnect_releases"] == 1
         srv.close()
 
+    def test_reconnect_after_linger_expiry_gets_typed_error(self, engine):
+        """A client whose token expired must get the typed SessionError —
+        never a hang — and the worker group must already be back in the
+        pool when the error surfaces."""
+        srv = EngineServer(engine, linger=0.2)
+        transport = TcpTransport(srv)
+        s = repro.connect(engine, transport=transport)
+        s.register_library("elemental", ELEMENTAL)
+        a = np.arange(12.0, dtype=np.float32).reshape(3, 4)
+        la = s.send(a)
+        transport._sock.close()  # drop; linger window starts
+        self._wait_for_free(engine, 1)  # window expired: group back in pool
+        assert not srv.has_session(transport.token)
+        # The next RPC re-dials, finds the token unbound, and must surface
+        # the typed error at the call site.
+        with pytest.raises(SessionError, match="no longer bound"):
+            s.collect(s.run("elemental", "gemm", la, s.send(a.T.copy())))
+        assert engine.stats()["engine"]["available_workers"] == 1
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# EngineServer.stop(): idempotent, re-entrant, unblocks live connections
+# ---------------------------------------------------------------------------
+
+
+class TestServerStop:
+    def test_double_stop_is_a_noop(self, engine):
+        srv = EngineServer(engine)
+        s = _session(engine, transport=TcpTransport(srv))
+        srv.stop()
+        srv.stop()  # second stop: no error, no double release
+        srv.close()  # historical alias routes through the same guard
+        assert engine.stats()["engine"]["available_workers"] == 1
+        assert s  # keep the session referenced until after the stops
+
+    def test_concurrent_stop_from_many_threads(self, engine):
+        srv = EngineServer(engine)
+        _session(engine, transport=TcpTransport(srv))
+        errs = []
+
+        def stop():
+            try:
+                srv.stop()
+            except Exception as exc:  # noqa: BLE001 — the test is the catch
+                errs.append(exc)
+
+        threads = [threading.Thread(target=stop) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(10)
+        assert errs == []
+        assert engine.stats()["engine"]["available_workers"] == 1
+
+    def test_stop_unblocks_connection_mid_fetch(self, engine):
+        """A supervisor-thread stop() while a per-connection worker is
+        mid-FETCH must not deadlock or leak: the blocked client RPC fails
+        with a connection-level error promptly and the group frees."""
+        srv = EngineServer(engine)
+        transport = TcpTransport(srv)
+        s = _session(engine, transport=transport)
+        la = s.send(np.ones((256, 256), dtype=np.float32))
+        fut = s.collect_async(la.materialize())
+        fut.result(30)  # value ready engine-side; FETCH traffic still flows
+        done = threading.Event()
+        outcome = {}
+
+        def fetch_forever():
+            try:
+                for _ in range(50):
+                    s.collect(la)
+                outcome["ok"] = True
+            except (SessionError, ConnectionError, OSError) as exc:
+                outcome["err"] = exc
+            finally:
+                done.set()
+
+        t = threading.Thread(target=fetch_forever, daemon=True)
+        t.start()
+        time.sleep(0.05)  # let some FETCHes get in flight
+        srv.stop()
+        assert done.wait(15), "client thread hung after server stop"
+        # either the loop finished before the stop landed, or it got a
+        # typed/connection error — never a hang
+        assert outcome.get("ok") or "err" in outcome
+        deadline = time.monotonic() + 10
+        while engine.available_workers != 1 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert engine.available_workers == 1
+
 
 # ---------------------------------------------------------------------------
 # the v2 streaming data plane (DESIGN.md §13)
